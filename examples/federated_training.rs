@@ -1,0 +1,130 @@
+//! **End-to-end driver** (DESIGN.md §4, row "E2E"): federated training of
+//! the MLP classifier with AVQ-compressed gradient uplinks, exercising all
+//! three layers:
+//!
+//! * **L1** — the Pallas `sq`/`hist` kernels are inside the lowered HLO;
+//! * **L2** — `model_grad` / `model_eval` artifacts computed by JAX,
+//!   executed via PJRT from Rust (Python never runs here);
+//! * **L3** — the Rust parameter server, workers, router, codec and
+//!   aggregator over real loopback TCP.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example federated_training
+//! ```
+//!
+//! Prints the loss curve (recorded in EXPERIMENTS.md) plus compression
+//! accounting, and finishes with a held-out evaluation through the
+//! `model_eval` artifact.
+
+use std::time::Duration;
+
+use anyhow::Context;
+use quiver::coordinator::router::Router;
+use quiver::coordinator::server::{Server, ServerConfig};
+use quiver::coordinator::tasks::{RuntimeGradSource, SyntheticTask, MODEL_DIM};
+use quiver::coordinator::worker::{run_worker, WorkerConfig};
+use quiver::runtime::{RuntimeHandle, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let workers = 4usize;
+    let rounds = 200u64;
+    let s = 16usize;
+    let lr = 0.08f32;
+    let artifacts = std::env::var("QUIVER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    let runtime = RuntimeHandle::spawn(&artifacts)
+        .context("starting PJRT runtime — did you run `make artifacts`?")?;
+    println!("PJRT platform: {}", runtime.platform()?);
+    runtime.warmup("model_grad")?;
+    runtime.warmup("model_eval")?;
+
+    // Initial parameters ship as a blob (see aot.py for why not an
+    // artifact: jax.random lowers to backend-defined rng HLO).
+    let init = std::fs::read(std::path::Path::new(&artifacts).join("model_init.bin"))?;
+    let params: Vec<f32> = init
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    anyhow::ensure!(params.len() == MODEL_DIM);
+
+    let server = Server::bind(ServerConfig {
+        workers,
+        rounds,
+        dim: MODEL_DIM,
+        lr,
+        round_timeout: Duration::from_secs(300),
+        ..Default::default()
+    })?;
+    let addr = server.addr()?;
+    println!("leader on {addr}; {workers} workers, {rounds} rounds, s={s}, lr={lr}");
+
+    let mut joins = vec![];
+    for w in 0..workers {
+        let addr = addr.clone();
+        let rt = runtime.clone();
+        joins.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                id: w as u64,
+                s,
+                router: Router::default(),
+                seed: 9000 + w as u64,
+            };
+            // Same teacher (1234) across workers = a common learning task;
+            // different stream seeds = heterogeneous local batches.
+            let source = RuntimeGradSource::new(rt, 1234, 100 + w as u64);
+            run_worker(&addr, cfg, source)
+        }));
+    }
+
+    let t0 = std::time::Instant::now();
+    let (final_params, log) = server.run(params)?;
+    let wall = t0.elapsed();
+    let stats: Vec<_> = joins
+        .into_iter()
+        .map(|j| j.join().unwrap())
+        .collect::<Result<Vec<_>, _>>()?;
+
+    println!("\nloss curve (every 10 rounds):");
+    for r in &log.rounds {
+        if r.round % 10 == 0 || r.round + 1 == rounds {
+            println!(
+                "  round {:>4}  loss {:.4}  uplink {:>8}B  round time {:?}",
+                r.round, r.mean_loss, r.bytes_up, r.elapsed
+            );
+        }
+    }
+    let first = log.rounds.first().unwrap().mean_loss;
+    let last = log.rounds.last().unwrap().mean_loss;
+    let (c, raw) = log.totals();
+    println!("\ntrained {rounds} rounds in {wall:?}");
+    println!("loss: {first:.4} -> {last:.4}");
+    println!(
+        "uplink: {c} bytes compressed vs {raw} raw  ({:.2}x saved)",
+        raw as f64 / c as f64
+    );
+    for st in &stats {
+        assert_eq!(st.rounds, rounds);
+    }
+
+    // Held-out evaluation through the model_eval artifact.
+    let mut test_task = SyntheticTask::new(1234, 777_777);
+    let mut acc_sum = 0f32;
+    let mut loss_sum = 0f32;
+    let batches = 16;
+    for _ in 0..batches {
+        let (xb, yb) = test_task.batch();
+        let out = runtime.call(
+            "model_eval",
+            vec![Tensor::F32(final_params.clone()), Tensor::F32(xb), Tensor::I32(yb)],
+        )?;
+        loss_sum += out[0].scalar_f32()?;
+        acc_sum += out[1].scalar_f32()?;
+    }
+    println!(
+        "held-out: loss {:.4}, accuracy {:.1}% over {batches} fresh batches",
+        loss_sum / batches as f32,
+        100.0 * acc_sum / batches as f32
+    );
+    anyhow::ensure!(last < first * 0.8, "training should reduce the loss");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Domain example: adaptive quantization of an LLM KV-cache-like tensor
+//! stream (§1 cites KV-cache quantization as an AVQ consumer).
+//!
+//! Synthesizes per-head key/value activations with realistic structure
+//! (heads have different scales; values are heavy-tailed), then compares
+//! three policies per head:
+//!
+//! * global uniform quantization (one grid for the whole layer),
+//! * per-head uniform quantization,
+//! * per-head **adaptive** (QUIVER-Hist) quantization.
+//!
+//! ```bash
+//! cargo run --release --example kv_cache_compress
+//! ```
+
+use quiver::avq::histogram::{solve_hist, HistConfig};
+use quiver::baselines::uniform;
+use quiver::benchfw::Table;
+use quiver::dist::Dist;
+use quiver::metrics::vnmse;
+use quiver::util::rng::Xoshiro256pp;
+
+const HEADS: usize = 8;
+const SEQ: usize = 512;
+const HEAD_DIM: usize = 128;
+const S: usize = 16; // 4-bit KV cache
+
+/// One head's worth of cache values: heavy-tailed with a per-head scale.
+fn head_tensor(head: usize, rng_seed: u64) -> Vec<f64> {
+    let scale = 0.25 * (1.0 + head as f64); // heads differ by up to 8x
+    let dist = Dist::LogNormal { mu: 0.0, sigma: 0.7 };
+    let mut rng = Xoshiro256pp::seed_from_u64(rng_seed);
+    dist.sample_vec(SEQ * HEAD_DIM, rng_seed)
+        .into_iter()
+        .map(|v| {
+            // Symmetrize: activations are signed.
+            let sign = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+            sign * v * scale
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "KV-cache compression: {HEADS} heads x {SEQ} tokens x {HEAD_DIM} dims, s={S} (4-bit)"
+    );
+    let heads: Vec<Vec<f64>> = (0..HEADS).map(|h| head_tensor(h, 40 + h as u64)).collect();
+
+    // Global uniform grid across the concatenated layer.
+    let mut all: Vec<f64> = heads.iter().flatten().copied().collect();
+    all.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let q_global = uniform::solve(&all, S);
+
+    let mut table = Table::new(
+        "per-head vNMSE",
+        &["head", "global-uniform", "per-head-uniform", "per-head-adaptive"],
+    );
+    let (mut g_acc, mut u_acc, mut a_acc) = (0.0, 0.0, 0.0);
+    for (h, data) in heads.iter().enumerate() {
+        let mut sorted = data.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let v_global = vnmse(&sorted, &q_global);
+        let v_unif = vnmse(&sorted, &uniform::solve(&sorted, S));
+        let q_adapt = solve_hist(data, S, &HistConfig::fixed(400))?.q;
+        let v_adapt = vnmse(&sorted, &q_adapt);
+        g_acc += v_global;
+        u_acc += v_unif;
+        a_acc += v_adapt;
+        table.row(vec![
+            h.to_string(),
+            format!("{v_global:.4e}"),
+            format!("{v_unif:.4e}"),
+            format!("{v_adapt:.4e}"),
+        ]);
+    }
+    table.row(vec![
+        "mean".into(),
+        format!("{:.4e}", g_acc / HEADS as f64),
+        format!("{:.4e}", u_acc / HEADS as f64),
+        format!("{:.4e}", a_acc / HEADS as f64),
+    ]);
+    table.print();
+
+    println!(
+        "\nadaptive vs global-uniform error reduction: {:.1}x (same 4-bit budget)",
+        g_acc / a_acc
+    );
+    anyhow::ensure!(a_acc < u_acc && u_acc <= g_acc * 1.0001, "adaptive must win");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Quickstart: solve the AVQ problem on a skewed vector with every method
+//! in the repo and compare error + runtime.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use quiver::avq::histogram::{solve_hist, HistConfig};
+use quiver::avq::{self, Prefix, SolverKind};
+use quiver::baselines::Method;
+use quiver::benchfw::{fmt_duration, Table};
+use quiver::dist::Dist;
+use quiver::metrics::vnmse;
+use quiver::sq;
+use quiver::util::rng::Xoshiro256pp;
+
+fn main() -> anyhow::Result<()> {
+    // 64K LogNormal coordinates — the paper's default workload (DNN
+    // gradients are near-lognormal, §1).
+    let d = 1 << 16;
+    let s = 16;
+    let dist = Dist::LogNormal { mu: 0.0, sigma: 1.0 };
+    let xs = dist.sample_sorted(d, 42);
+    let p = Prefix::unweighted(&xs);
+
+    println!("QUIVER quickstart: d={d}, s={s}, dist={}", dist.name());
+
+    // --- Exact solvers: identical (optimal) error, different runtimes. ---
+    let mut table = Table::new("exact solvers", &["solver", "vNMSE", "runtime"]);
+    for kind in [
+        SolverKind::ZipMl,
+        SolverKind::BinSearch,
+        SolverKind::Quiver,
+        SolverKind::QuiverAccel,
+    ] {
+        if kind == SolverKind::ZipMl && d > (1 << 13) {
+            table.row(vec![kind.name().into(), "(skipped: O(s·d²))".into(), "-".into()]);
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let sol = avq::solve(&p, s, kind)?;
+        let dt = t0.elapsed();
+        table.row(vec![
+            kind.name().into(),
+            format!("{:.4e}", vnmse(&xs, &sol.q)),
+            fmt_duration(dt),
+        ]);
+    }
+    table.print();
+
+    // --- Near-optimal + baselines. ---
+    let mut table = Table::new("approximate methods", &["method", "vNMSE", "runtime"]);
+    for method in [
+        Method::QuiverHist { m: 400 },
+        Method::ZipMlCpUniform { m: 400 },
+        Method::ZipMlCpQuantile { m: 400 },
+        Method::ZipMl2Apx,
+        Method::Alq { iters: 10 },
+        Method::UniformSq,
+    ] {
+        let t0 = std::time::Instant::now();
+        let q = method.quantization_values(&xs, s);
+        let dt = t0.elapsed();
+        table.row(vec![
+            method.name(),
+            format!("{:.4e}", vnmse(&xs, &q)),
+            fmt_duration(dt),
+        ]);
+    }
+    table.print();
+
+    // --- The full compression pipeline. ---
+    let sol = solve_hist(&xs, s, &HistConfig::fixed(400))?;
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let compressed = sq::compress(&xs, &sol.q, &mut rng);
+    println!(
+        "\npipeline: {} raw bytes -> {} compressed ({:.2}x); decode is a table lookup",
+        d * 4,
+        compressed.wire_size(),
+        compressed.ratio_vs_f32()
+    );
+    let back = sq::decompress(&compressed);
+    let err: f64 = back
+        .iter()
+        .zip(&xs)
+        .map(|(b, x)| (b - x) * (b - x))
+        .sum::<f64>()
+        / p.norm2_sq();
+    println!(
+        "one-shot empirical vNMSE {err:.4e} (analytic optimum {:.4e})",
+        sol.mse / p.norm2_sq()
+    );
+    Ok(())
+}

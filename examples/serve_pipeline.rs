@@ -1,0 +1,98 @@
+//! Serving example: run the AVQ compression service and drive it with a
+//! closed-loop load generator, reporting latency/throughput and
+//! backpressure behaviour — the paper's "quantizing on the fly" deployment
+//! as an actual microservice.
+//!
+//! ```bash
+//! cargo run --release --example serve_pipeline
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use quiver::coordinator::protocol::Msg;
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::service::{compress_remote, Service, ServiceConfig};
+use quiver::dist::Dist;
+
+fn main() -> anyhow::Result<()> {
+    let service = Service::start(ServiceConfig {
+        threads: 4,
+        queue_capacity: 128,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        router: Router::new(RouterConfig { exact_max_d: 1 << 14, hist_m: 400, seed: 3 }),
+        ..Default::default()
+    })?;
+    let addr = service.addr().to_string();
+    println!("compression service on {addr} (4 solver threads, queue 128)");
+
+    // Closed-loop load: 8 clients, mixed request sizes, 5 seconds.
+    let clients = 8usize;
+    let run_for = Duration::from_secs(5);
+    let done = Arc::new(AtomicU64::new(0));
+    let busy = Arc::new(AtomicU64::new(0));
+    let mut joins = vec![];
+    let t0 = Instant::now();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let done = done.clone();
+        let busy = busy.clone();
+        joins.push(std::thread::spawn(move || {
+            let dist = Dist::LogNormal { mu: 0.0, sigma: 1.0 };
+            let mut lat_us: Vec<u64> = vec![];
+            let mut i = 0u64;
+            while t0.elapsed() < run_for {
+                // Size mix: 70% small (exact route), 30% large (hist route).
+                let d = if i % 10 < 7 { 8_192 } else { 262_144 };
+                let data: Vec<f32> = dist
+                    .sample_vec(d, c as u64 * 1000 + i)
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect();
+                let t = Instant::now();
+                match compress_remote(&addr, i, 16, &data) {
+                    Ok(Msg::CompressReply { .. }) => {
+                        lat_us.push(t.elapsed().as_micros() as u64);
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(Msg::Busy { .. }) => {
+                        busy.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(5)); // retry backoff
+                    }
+                    Ok(other) => panic!("unexpected {other:?}"),
+                    Err(e) => panic!("client {c}: {e:#}"),
+                }
+                i += 1;
+            }
+            lat_us
+        }));
+    }
+    let mut all_lat: Vec<u64> = vec![];
+    for j in joins {
+        all_lat.extend(j.join().unwrap());
+    }
+    let elapsed = t0.elapsed();
+    all_lat.sort_unstable();
+    let total = done.load(Ordering::Relaxed);
+    let rejected = busy.load(Ordering::Relaxed);
+    let pct = |p: f64| all_lat[((all_lat.len() as f64 * p) as usize).min(all_lat.len() - 1)];
+    println!("\n--- load test over {elapsed:?} ---");
+    println!(
+        "completed {total} requests ({:.1} req/s), {rejected} busy-rejections",
+        total as f64 / elapsed.as_secs_f64()
+    );
+    if !all_lat.is_empty() {
+        println!(
+            "client-observed latency: p50 {}µs  p90 {}µs  p99 {}µs  max {}µs",
+            pct(0.50),
+            pct(0.90),
+            pct(0.99),
+            all_lat.last().unwrap()
+        );
+    }
+    println!("service metrics: {}", service.metrics.summary());
+    service.shutdown();
+    Ok(())
+}

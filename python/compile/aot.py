@@ -1,0 +1,190 @@
+"""AOT compiler: lower every L2 graph to HLO **text** in ``artifacts/``.
+
+Interchange is HLO text, not serialized ``HloModuleProto`` — jax >= 0.5
+emits protos with 64-bit instruction ids that the xla_extension 0.5.1 the
+Rust ``xla`` crate links against rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<name>.hlo.txt      one per graph (see ARTIFACTS below)
+  artifacts/manifest.txt        name|file|in=...|out=... lines for Rust
+  artifacts/golden/*.bin        raw little-endian dumps for the Rust
+                                integration tests (inputs + expected
+                                outputs of the small sq/hist graphs and a
+                                model_grad step)
+
+Run via ``make artifacts`` (skipped when inputs are unchanged).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+
+# Pipeline dimensions: the serving-pipeline artifacts use a 64K vector; the
+# federated path uses the model's parameter count (85,002 = 6 * 14,167).
+PIPE_D = 1 << 16
+PIPE_BLOCK = 4096
+GRAD_D = M.param_count()
+GRAD_BLOCK = GRAD_D // 6
+TEST_D = 1024
+HIST_M = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dtype_tag(dtype) -> str:
+    name = np.dtype(dtype).name
+    return {"float32": "f32", "int32": "i32"}[name]
+
+
+def describe(specs) -> str:
+    out = []
+    for s in specs:
+        dims = "x".join(str(x) for x in s.shape)
+        out.append(f"{dtype_tag(s.dtype)}[{dims}]")
+    return ",".join(out)
+
+
+def artifacts():
+    """(name, fn, input_specs, output_specs) for every graph we ship."""
+    n = M.param_count()
+    b = M.BATCH
+    din = M.ARCH[0]
+
+    def sq(d, s, block):
+        return (
+            f"sq_d{d}_s{s}",
+            functools.partial(M.quantize_fn, block=block),
+            [spec((d,)), spec((s,)), spec((d,))],
+            [spec((d,)), spec((d,), jnp.int32)],
+        )
+
+    def hist(d, m, block):
+        return (
+            f"hist_d{d}_m{m}",
+            functools.partial(M.hist_fn, m=m, block=block),
+            [spec((d,)), spec((d,))],
+            [spec((m + 1,)), spec((1,)), spec((1,))],
+        )
+
+    return [
+        sq(TEST_D, 8, TEST_D),
+        sq(PIPE_D, 4, PIPE_BLOCK),
+        sq(PIPE_D, 16, PIPE_BLOCK),
+        hist(PIPE_D, HIST_M, PIPE_BLOCK),
+        sq(GRAD_D, 16, GRAD_BLOCK),
+        hist(GRAD_D, HIST_M, GRAD_BLOCK),
+        # NOTE: no "model_init" artifact — jax.random lowers to an
+        # `rng-bit-generator` HLO whose DEFAULT algorithm is backend-defined,
+        # so the xla_extension 0.5.1 runtime would produce different values
+        # than jaxlib. Initial parameters ship as artifacts/model_init.bin
+        # (raw f32) instead; see write_params().
+        (
+            "model_grad",
+            M.grad_fn,
+            [spec((n,)), spec((b, din)), spec((b,), jnp.int32)],
+            [spec(()), spec((n,))],
+        ),
+        (
+            "model_eval",
+            M.eval_fn,
+            [spec((n,)), spec((b, din)), spec((b,), jnp.int32)],
+            [spec(()), spec(())],
+        ),
+    ]
+
+
+def write_params(outdir):
+    """Canonical initial parameters for the Rust training driver."""
+    flat = M.init_params(seed=0)
+    np.asarray(flat, dtype=np.float32).tofile(os.path.join(outdir, "model_init.bin"))
+
+
+def write_golden(outdir):
+    """Deterministic input/expected-output dumps for the Rust tests."""
+    g = os.path.join(outdir, "golden")
+    os.makedirs(g, exist_ok=True)
+
+    def dump(name, arr):
+        np.asarray(arr).tofile(os.path.join(g, name + ".bin"))
+
+    # --- sq_d1024_s8 ---
+    rng = np.random.default_rng(12345)
+    x = rng.lognormal(0.0, 1.0, TEST_D).astype(np.float32)
+    qs = np.quantile(x, np.linspace(0, 1, 8)).astype(np.float32)
+    qs[0], qs[-1] = x.min(), x.max()
+    u = rng.random(TEST_D).astype(np.float32)
+    xhat, idx = ref.sq_ref(jnp.asarray(x), jnp.asarray(qs), jnp.asarray(u))
+    dump("sq_x", x)
+    dump("sq_qs", qs)
+    dump("sq_u", u)
+    dump("sq_xhat", xhat)
+    dump("sq_idx", np.asarray(idx, dtype=np.int32))
+
+    # --- hist over the pipeline dim ---
+    xh = rng.normal(0.0, 1.0, PIPE_D).astype(np.float32)
+    uh = rng.random(PIPE_D).astype(np.float32)
+    w = ref.hist_ref(jnp.asarray(xh), jnp.asarray(uh), float(xh.min()), float(xh.max()), HIST_M)
+    dump("hist_x", xh)
+    dump("hist_u", uh)
+    dump("hist_w", w)
+    dump("hist_lohi", np.array([xh.min(), xh.max()], dtype=np.float32))
+
+    # --- model: one grad step on a fixed batch ---
+    flat = M.init_params(seed=0)
+    xb = jnp.asarray(rng.normal(0, 1, (M.BATCH, M.ARCH[0])).astype(np.float32))
+    yb = jnp.asarray(rng.integers(0, M.ARCH[-1], M.BATCH).astype(np.int32))
+    loss, grad = M.grad_fn(flat, xb, yb)
+    dump("model_flat", flat)
+    dump("model_xb", xb)
+    dump("model_yb", np.asarray(yb, dtype=np.int32))
+    dump("model_loss", np.asarray(loss, dtype=np.float32))
+    dump("model_grad", grad)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = []
+    for name, fn, in_specs, out_specs in artifacts():
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"{name}|{fname}|in={describe(in_specs)}|out={describe(out_specs)}")
+        print(f"  lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    write_params(outdir)
+    write_golden(outdir)
+    print(f"wrote {len(manifest)} artifacts + manifest + golden to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: stochastically-rounded histogram build (paper §6/§8).
+
+The §6 near-optimal pipeline starts by rounding every coordinate onto an
+(M+1)-point uniform grid — an O(d) single pass that §8 explicitly calls
+GPU-friendly ("by offloading it to GPU [...] the time complexity of the
+CPU implementation can reduce to O(s·M), i.e., sublinear in the input").
+This kernel is that offload; the Rust coordinator then runs the weighted
+DP on the returned (M+1)-sized weight vector.
+
+TPU design notes:
+  * X and U stream through VMEM in blocks; the (M+1)-bin accumulator
+    stays resident in VMEM across all grid steps (output revisiting via a
+    constant index map — the standard TPU histogram scheme).
+  * Binning is the branchless one-hot compare against a broadcasted iota;
+    the (block × M+1) one-hot sum is a VPU reduction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(x_ref, u_ref, lo_ref, hi_ref, w_ref, *, m):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    x = x_ref[...]
+    u = u_ref[...]
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    span = hi - lo
+    safe_span = jnp.where(span > 0, span, 1.0)
+    t = (x - lo) * (m / safe_span)
+    low_bin = jnp.clip(jnp.floor(t), 0, m - 1).astype(jnp.int32)
+    frac = jnp.clip(t - low_bin.astype(jnp.float32), 0.0, 1.0)
+    bin_idx = low_bin + (u < frac).astype(jnp.int32)
+    bin_idx = jnp.where(span > 0, bin_idx, 0)
+    one_hot = (bin_idx[:, None] == jnp.arange(m + 1)[None, :]).astype(jnp.float32)
+    w_ref[...] += jnp.sum(one_hot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block"))
+def hist_pallas(x, u, lo, hi, *, m, block=4096):
+    """Histogram ``x`` onto the uniform (m+1)-point grid over ``[lo, hi]``.
+
+    ``lo``/``hi`` arrive as ``f32[1]`` arrays (computed by the caller — see
+    :func:`compile.model.hist_fn`, which fuses the min/max reduction).
+    Returns ``f32[m+1]`` weights; matches :func:`..kernels.ref.hist_ref`.
+    """
+    d = x.shape[0]
+    block = min(block, d)
+    assert d % block == 0, f"d={d} must be a multiple of block={block}"
+    grid = (d // block,)
+    kernel = functools.partial(_hist_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m + 1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m + 1,), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        u.astype(jnp.float32),
+        lo.astype(jnp.float32),
+        hi.astype(jnp.float32),
+    )

@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness contracts: ``python/tests/test_kernels.py``
+(hypothesis) asserts the Pallas kernels reproduce these bit-for-bit given
+the same inputs (including the same pre-drawn uniforms ``u``), and the
+Rust integration tests compare PJRT-executed artifacts against dumps of
+these functions.
+"""
+
+import jax.numpy as jnp
+
+
+def sq_ref(x, qs, u):
+    """Stochastic quantization of ``x`` onto sorted values ``qs``.
+
+    Each coordinate with bracketing values ``a <= x <= b`` rounds up to
+    ``b`` iff ``u < (x - a) / (b - a)`` (so ``E[out] = x``).
+
+    Args:
+      x: ``f32[d]`` input coordinates, each within ``[qs[0], qs[-1]]``.
+      qs: ``f32[s]`` sorted quantization values.
+      u: ``f32[d]`` uniforms in ``[0, 1)``.
+
+    Returns:
+      ``(xhat f32[d], idx i32[d])`` — quantized values and value indices.
+    """
+    x = x.astype(jnp.float32)
+    qs = qs.astype(jnp.float32)
+    cmp = x[:, None] >= qs[None, :]  # (d, s): value_j <= x
+    # Largest value <= x (falls back to qs[0] for x below the range).
+    a = jnp.max(jnp.where(cmp, qs[None, :], qs[0]), axis=1)
+    # Smallest value > x (falls back to `a` at/above the top value).
+    b_raw = jnp.min(jnp.where(cmp, jnp.inf, qs[None, :]), axis=1)
+    b = jnp.where(jnp.isfinite(b_raw), b_raw, a)
+    p_up = jnp.where(b > a, (x - a) / (b - a), 0.0)
+    up = u < p_up
+    xhat = jnp.where(up, b, a)
+    cnt = jnp.sum(cmp.astype(jnp.int32), axis=1)  # #values <= x, in [0, s]
+    idx_a = jnp.clip(cnt - 1, 0, qs.shape[0] - 1)
+    idx_b = jnp.clip(cnt, 0, qs.shape[0] - 1)
+    idx = jnp.where(up, idx_b, idx_a).astype(jnp.int32)
+    return xhat, idx
+
+
+def hist_ref(x, u, lo, hi, m):
+    """Stochastically-rounded histogram of ``x`` on the uniform grid
+    ``{lo + l*(hi-lo)/m : l in 0..m}`` (paper §6).
+
+    Mirrors ``quiver::avq::histogram::GridHistogram::build``: each
+    coordinate lands in bin ``floor(t)`` or ``floor(t)+1`` with probability
+    equal to the fractional part (unbiased in the grid value).
+
+    Args:
+      x: ``f32[d]`` inputs.
+      u: ``f32[d]`` uniforms in ``[0, 1)``.
+      lo/hi: scalars (input min/max).
+      m: static number of grid intervals.
+
+    Returns:
+      ``f32[m+1]`` bin weights summing to ``d``.
+    """
+    x = x.astype(jnp.float32)
+    span = hi - lo
+    # Degenerate range: all mass in bin 0 (matches the Rust builder).
+    safe_span = jnp.where(span > 0, span, 1.0)
+    t = (x - lo) * (m / safe_span)
+    low_bin = jnp.clip(jnp.floor(t), 0, m - 1).astype(jnp.int32)
+    frac = jnp.clip(t - low_bin.astype(jnp.float32), 0.0, 1.0)
+    bin_idx = low_bin + (u < frac).astype(jnp.int32)
+    bin_idx = jnp.where(span > 0, bin_idx, 0)
+    one_hot = (bin_idx[:, None] == jnp.arange(m + 1)[None, :]).astype(jnp.float32)
+    return jnp.sum(one_hot, axis=0)
+
+
+def prefix_moments_ref(grid, w):
+    """Cumulative moment arrays (alpha, beta, gamma) over a weighted grid —
+    the §3/App-A pre-processing, exposed for the GPU-offload story."""
+    w = w.astype(jnp.float32)
+    grid = grid.astype(jnp.float32)
+    alpha = jnp.cumsum(w)
+    beta = jnp.cumsum(w * grid)
+    gamma = jnp.cumsum(w * grid * grid)
+    return alpha, beta, gamma

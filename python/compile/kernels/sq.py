@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: stochastic quantization of a vector onto a value set.
+
+This is the device-side half of the paper's pipeline (§8: "the
+quantization [...] can be done on the GPU and is rarely the bottleneck"):
+after the Rust coordinator computes the quantization values Q with an AVQ
+solver, this kernel applies the unbiased rounding to the full vector.
+
+TPU design notes (DESIGN.md §Hardware-Adaptation):
+  * X, U and the outputs are tiled into VMEM blocks of ``block`` elements
+    (``BlockSpec((block,), lambda i: (i,))``); the (small) value table Q is
+    mapped whole into VMEM for every grid step.
+  * The bracketing search is the branchless broadcast compare
+    ``x[:, None] >= q[None, :]`` — a (block × s) VPU op; no gather is
+    needed (max/min reductions recover the bracketing values), keeping the
+    kernel a single HBM pass: bandwidth-bound, which *is* its roofline.
+  * ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+    Mosaic custom-calls; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sq_kernel(x_ref, q_ref, u_ref, xhat_ref, idx_ref):
+    x = x_ref[...]
+    qs = q_ref[...]
+    u = u_ref[...]
+    s = qs.shape[0]
+    cmp = x[:, None] >= qs[None, :]
+    a = jnp.max(jnp.where(cmp, qs[None, :], qs[0]), axis=1)
+    b_raw = jnp.min(jnp.where(cmp, jnp.inf, qs[None, :]), axis=1)
+    b = jnp.where(jnp.isfinite(b_raw), b_raw, a)
+    p_up = jnp.where(b > a, (x - a) / (b - a), 0.0)
+    up = u < p_up
+    xhat_ref[...] = jnp.where(up, b, a)
+    cnt = jnp.sum(cmp.astype(jnp.int32), axis=1)
+    idx_a = jnp.clip(cnt - 1, 0, s - 1)
+    idx_b = jnp.clip(cnt, 0, s - 1)
+    idx_ref[...] = jnp.where(up, idx_b, idx_a).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sq_pallas(x, qs, u, *, block=4096):
+    """Quantize ``x`` onto ``qs`` using uniforms ``u``.
+
+    Returns ``(xhat f32[d], idx i32[d])`` — identical to
+    :func:`..kernels.ref.sq_ref` for the same inputs.
+    """
+    d = x.shape[0]
+    s = qs.shape[0]
+    block = min(block, d)
+    assert d % block == 0, f"d={d} must be a multiple of block={block}"
+    grid = (d // block,)
+    return pl.pallas_call(
+        _sq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.int32),
+        ],
+        interpret=True,
+    )(x.astype(jnp.float32), qs.astype(jnp.float32), u.astype(jnp.float32))

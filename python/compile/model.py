@@ -1,0 +1,105 @@
+"""L2: the JAX compute graphs that get AOT-compiled into ``artifacts/``.
+
+Three graph families, all executed from Rust via PJRT (Python never runs
+on the request path):
+
+* **Training demo model** — an MLP classifier over flat parameters
+  (``init_params`` / ``grad_fn`` / ``eval_fn``) used by
+  ``examples/federated_training.rs``: workers run ``grad_fn`` through the
+  runtime, compress the returned flat gradient with an AVQ solver, and the
+  coordinator aggregates.
+* **Histogram build** (``hist_fn``) — fused min/max reduction + the Pallas
+  histogram kernel (§6's O(d) device pass).
+* **Quantize apply** (``quantize_fn``) — the Pallas stochastic-quantization
+  kernel (§8's device-side rounding, given Q from the Rust DP).
+
+Everything is f32 on the wire; the MLP is sized so a full federated demo
+runs in seconds on CPU while still exercising every layer seam.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hist import hist_pallas
+from .kernels.sq import sq_pallas
+
+# MLP architecture: 64 -> 256 -> 256 -> 10 classifier (85,002 parameters).
+ARCH = (64, 256, 256, 10)
+BATCH = 128
+
+
+def param_count(arch=ARCH):
+    """Total number of parameters in the flat vector."""
+    return sum(arch[i] * arch[i + 1] + arch[i + 1] for i in range(len(arch) - 1))
+
+
+def unflatten(flat, arch=ARCH):
+    """Split the flat parameter vector into ``[(W, b), ...]`` layers."""
+    layers = []
+    off = 0
+    for i in range(len(arch) - 1):
+        din, dout = arch[i], arch[i + 1]
+        w = flat[off : off + din * dout].reshape(din, dout)
+        off += din * dout
+        b = flat[off : off + dout]
+        off += dout
+        layers.append((w, b))
+    return layers
+
+
+def init_params(seed=0, arch=ARCH):
+    """He-initialized flat parameter vector (f32)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for i in range(len(arch) - 1):
+        key, wk = jax.random.split(key)
+        din, dout = arch[i], arch[i + 1]
+        w = jax.random.normal(wk, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        chunks.append(w.reshape(-1))
+        chunks.append(jnp.zeros((dout,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def forward(flat, xb, arch=ARCH):
+    """MLP forward pass: ReLU hidden layers, linear head."""
+    h = xb
+    layers = unflatten(flat, arch)
+    for w, b in layers[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = layers[-1]
+    return h @ w + b
+
+
+def loss_fn(flat, xb, yb, arch=ARCH):
+    """Mean softmax cross-entropy."""
+    logits = forward(flat, xb, arch)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+
+def grad_fn(flat, xb, yb):
+    """``(loss, flat_gradient)`` — the worker-side artifact."""
+    loss, g = jax.value_and_grad(loss_fn)(flat, xb, yb)
+    return loss, g
+
+
+def eval_fn(flat, xb, yb):
+    """``(loss, accuracy)`` — the evaluation artifact."""
+    logits = forward(flat, xb)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == yb).astype(jnp.float32))
+    return loss, acc
+
+
+def hist_fn(x, u, *, m, block=4096):
+    """Fused min/max + Pallas histogram: ``(w f32[m+1], lo f32[1], hi f32[1])``."""
+    lo = jnp.min(x)[None]
+    hi = jnp.max(x)[None]
+    w = hist_pallas(x, u, lo, hi, m=m, block=block)
+    return w, lo, hi
+
+
+def quantize_fn(x, qs, u, *, block=4096):
+    """Pallas stochastic quantize: ``(xhat f32[d], idx i32[d])``."""
+    return sq_pallas(x, qs, u, block=block)

@@ -1,0 +1,185 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes, block sizes, value-set sizes and input ranges;
+every Pallas kernel must agree with its pure-jnp oracle exactly (same
+inputs include the same pre-drawn uniforms, so outputs are deterministic).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.hist import hist_pallas
+from compile.kernels.ref import hist_ref, prefix_moments_ref, sq_ref
+from compile.kernels.sq import sq_pallas
+
+
+def make_inputs(d, s, seed, lo=-3.0, hi=3.0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(lo, hi, d).astype(np.float32)
+    # Covering, sorted value set with exact endpoints.
+    qs = np.sort(rng.uniform(lo, hi, s)).astype(np.float32)
+    qs[0], qs[-1] = x.min(), x.max()
+    qs = np.sort(qs)
+    u = rng.random(d).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(qs), jnp.asarray(u)
+
+
+# ---------------------------------------------------------------- sq kernel
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dpow=st.integers(min_value=4, max_value=12),
+    s=st.integers(min_value=2, max_value=33),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_sq_kernel_matches_ref(dpow, s, seed):
+    d = 1 << dpow
+    x, qs, u = make_inputs(d, s, seed)
+    ref_vals, ref_idx = sq_ref(x, qs, u)
+    got_vals, got_idx = sq_pallas(x, qs, u, block=min(d, 1024))
+    np.testing.assert_allclose(got_vals, ref_vals, rtol=0, atol=0)
+    np.testing.assert_array_equal(got_idx, ref_idx)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    blockpow=st.integers(min_value=2, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_sq_kernel_block_size_invariant(blockpow, seed):
+    # The grid decomposition must not change the numbers.
+    d = 1 << 10
+    x, qs, u = make_inputs(d, 8, seed)
+    full, fidx = sq_pallas(x, qs, u, block=d)
+    blocked, bidx = sq_pallas(x, qs, u, block=1 << blockpow)
+    np.testing.assert_array_equal(full, blocked)
+    np.testing.assert_array_equal(fidx, bidx)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_sq_outputs_are_bracketing_values(seed):
+    d, s = 512, 7
+    x, qs, u = make_inputs(d, s, seed)
+    vals, idx = sq_pallas(x, qs, u, block=d)
+    qs_np = np.asarray(qs)
+    vals_np = np.asarray(vals)
+    idx_np = np.asarray(idx)
+    # Every output is a quantization value, consistent with its index.
+    np.testing.assert_allclose(vals_np, qs_np[idx_np], atol=0)
+    # And is one of the two bracketing values.
+    x_np = np.asarray(x)
+    for xi, vi in zip(x_np, vals_np):
+        below = qs_np[qs_np <= xi]
+        above = qs_np[qs_np >= xi]
+        assert (below.size and np.isclose(vi, below.max())) or (
+            above.size and np.isclose(vi, above.min())
+        )
+
+
+def test_sq_unbiasedness_statistical():
+    # Mean over many uniform draws approaches x.
+    d, s = 256, 5
+    x, qs, _ = make_inputs(d, s, 7)
+    rng = np.random.default_rng(99)
+    acc = np.zeros(d, dtype=np.float64)
+    trials = 600
+    for _ in range(trials):
+        u = jnp.asarray(rng.random(d).astype(np.float32))
+        vals, _ = sq_pallas(x, qs, u, block=d)
+        acc += np.asarray(vals, dtype=np.float64)
+    est = acc / trials
+    span = float(np.asarray(qs)[-1] - np.asarray(qs)[0])
+    np.testing.assert_allclose(est, np.asarray(x), atol=0.15 * span)
+
+
+def test_sq_exact_on_values():
+    qs = jnp.asarray(np.array([0.0, 1.0, 2.0], np.float32))
+    x = jnp.asarray(np.array([0.0, 1.0, 2.0, 1.0], np.float32))
+    u = jnp.asarray(np.array([0.9, 0.9, 0.9, 0.0], np.float32))
+    vals, idx = sq_pallas(x, qs, u, block=4)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1, 2, 1])
+
+
+# -------------------------------------------------------------- hist kernel
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dpow=st.integers(min_value=4, max_value=12),
+    m=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hist_kernel_matches_ref(dpow, m, seed):
+    d = 1 << dpow
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 2, d).astype(np.float32))
+    u = jnp.asarray(rng.random(d).astype(np.float32))
+    lo = jnp.asarray([float(np.asarray(x).min())], jnp.float32)
+    hi = jnp.asarray([float(np.asarray(x).max())], jnp.float32)
+    want = hist_ref(x, u, lo[0], hi[0], m)
+    got = hist_pallas(x, u, lo, hi, m=m, block=min(d, 1024))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_hist_mass_conservation(seed):
+    d, m = 2048, 64
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.lognormal(0, 1, d).astype(np.float32))
+    u = jnp.asarray(rng.random(d).astype(np.float32))
+    lo = jnp.asarray([float(np.asarray(x).min())], jnp.float32)
+    hi = jnp.asarray([float(np.asarray(x).max())], jnp.float32)
+    w = hist_pallas(x, u, lo, hi, m=m, block=512)
+    assert float(jnp.sum(w)) == d
+
+
+def test_hist_unbiased_grid_mean():
+    # E[sum_l w_l * grid_l] = sum(x).
+    d, m = 4096, 128
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 1, d).astype(np.float32)
+    xs = jnp.asarray(x)
+    lo = jnp.asarray([x.min()], jnp.float32)
+    hi = jnp.asarray([x.max()], jnp.float32)
+    grid = np.linspace(x.min(), x.max(), m + 1)
+    acc = 0.0
+    trials = 200
+    for t in range(trials):
+        u = jnp.asarray(rng.random(d).astype(np.float32))
+        w = np.asarray(hist_pallas(xs, u, lo, hi, m=m, block=1024))
+        acc += float(w @ grid)
+    est = acc / trials
+    # Rounding variance per coordinate is <= (span/m)^2/4, so the stderr of
+    # the estimated total over `trials` runs is ~sqrt(d/trials)*span/(2m).
+    stderr = np.sqrt(d / trials) * float(x.max() - x.min()) / (2 * m)
+    np.testing.assert_allclose(est, float(x.sum()), atol=5 * stderr)
+
+
+def test_hist_degenerate_constant_input():
+    d, m = 256, 16
+    x = jnp.ones((d,), jnp.float32) * 5.0
+    u = jnp.zeros((d,), jnp.float32)
+    lo = jnp.asarray([5.0], jnp.float32)
+    hi = jnp.asarray([5.0], jnp.float32)
+    w = np.asarray(hist_pallas(x, u, lo, hi, m=m, block=d))
+    assert w[0] == d
+    assert w[1:].sum() == 0
+
+
+# ---------------------------------------------------------------- moments
+
+def test_prefix_moments_ref():
+    grid = jnp.asarray(np.array([0.0, 1.0, 2.0], np.float32))
+    w = jnp.asarray(np.array([2.0, 1.0, 3.0], np.float32))
+    a, b, g = prefix_moments_ref(grid, w)
+    np.testing.assert_allclose(np.asarray(a), [2, 3, 6])
+    np.testing.assert_allclose(np.asarray(b), [0, 1, 7])
+    np.testing.assert_allclose(np.asarray(g), [0, 1, 13])
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

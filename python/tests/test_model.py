@@ -1,0 +1,119 @@
+"""L2 model graph tests: shapes, gradient correctness, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def batch(seed=0):
+    rng = np.random.default_rng(seed)
+    xb = jnp.asarray(rng.normal(0, 1, (M.BATCH, M.ARCH[0])).astype(np.float32))
+    yb = jnp.asarray(rng.integers(0, M.ARCH[-1], M.BATCH).astype(np.int32))
+    return xb, yb
+
+
+def test_param_count_matches_flat_vector():
+    flat = M.init_params(seed=0)
+    assert flat.shape == (M.param_count(),)
+    assert flat.dtype == jnp.float32
+
+
+def test_unflatten_roundtrip_shapes():
+    flat = M.init_params(seed=1)
+    layers = M.unflatten(flat)
+    assert len(layers) == len(M.ARCH) - 1
+    total = 0
+    for (w, b), din, dout in zip(layers, M.ARCH[:-1], M.ARCH[1:]):
+        assert w.shape == (din, dout)
+        assert b.shape == (dout,)
+        total += w.size + b.size
+    assert total == M.param_count()
+
+
+def test_grad_fn_shapes_and_finiteness():
+    flat = M.init_params(seed=0)
+    xb, yb = batch()
+    loss, g = M.grad_fn(flat, xb, yb)
+    assert loss.shape == ()
+    assert g.shape == flat.shape
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # Untrained loss should be in the ballpark of ln(10) (He init inflates
+    # logits somewhat above the uniform-prediction value).
+    assert 1.5 < float(loss) < 6.0
+
+
+def test_grad_matches_finite_differences_on_slice():
+    flat = M.init_params(seed=2)
+    xb, yb = batch(2)
+    _, g = M.grad_fn(flat, xb, yb)
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    idxs = rng.choice(M.param_count(), 10, replace=False)
+    for i in idxs:
+        e = jnp.zeros_like(flat).at[i].set(eps)
+        lp = M.loss_fn(flat + e, xb, yb)
+        lm = M.loss_fn(flat - e, xb, yb)
+        fd = float(lp - lm) / (2 * eps)
+        np.testing.assert_allclose(float(g[i]), fd, atol=5e-3)
+
+
+def test_sgd_reduces_loss():
+    flat = M.init_params(seed=3)
+    xb, yb = batch(3)
+    l0, g = M.grad_fn(flat, xb, yb)
+    for _ in range(20):
+        loss, g = M.grad_fn(flat, xb, yb)
+        flat = flat - 0.1 * g
+    l1, _ = M.grad_fn(flat, xb, yb)
+    assert float(l1) < float(l0) * 0.8, f"{float(l0)} -> {float(l1)}"
+
+
+def test_eval_fn_consistency():
+    flat = M.init_params(seed=4)
+    xb, yb = batch(4)
+    loss_e, acc = M.eval_fn(flat, xb, yb)
+    loss_g, _ = M.grad_fn(flat, xb, yb)
+    np.testing.assert_allclose(float(loss_e), float(loss_g), rtol=1e-5)
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_hist_fn_fused_minmax():
+    rng = np.random.default_rng(5)
+    d = 4096
+    x = jnp.asarray(rng.normal(0, 1, d).astype(np.float32))
+    u = jnp.asarray(rng.random(d).astype(np.float32))
+    w, lo, hi = M.hist_fn(x, u, m=64, block=1024)
+    assert w.shape == (65,)
+    assert float(jnp.sum(w)) == d
+    np.testing.assert_allclose(float(lo[0]), float(jnp.min(x)))
+    np.testing.assert_allclose(float(hi[0]), float(jnp.max(x)))
+
+
+def test_quantize_fn_agrees_with_kernel_path():
+    from compile.kernels.ref import sq_ref
+
+    rng = np.random.default_rng(6)
+    d = 2048
+    x = jnp.asarray(rng.normal(0, 1, d).astype(np.float32))
+    qs = jnp.asarray(
+        np.sort(np.concatenate([[np.asarray(x).min(), np.asarray(x).max()],
+                                rng.normal(0, 1, 6)])).astype(np.float32)
+    )
+    u = jnp.asarray(rng.random(d).astype(np.float32))
+    want_vals, want_idx = sq_ref(x, qs, u)
+    got_vals, got_idx = M.quantize_fn(x, qs, u, block=512)
+    np.testing.assert_array_equal(np.asarray(got_vals), np.asarray(want_vals))
+    np.testing.assert_array_equal(np.asarray(got_idx), np.asarray(want_idx))
+
+
+def test_grad_dim_divisible_by_aot_block():
+    # aot.py tiles the gradient-sized pallas calls with GRAD_D // 6.
+    assert M.param_count() % 6 == 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,38 @@
+//! `cargo bench --bench bench_approx` — approximate methods (paper Fig. 2,
+//! Fig. 3 and Appendix D figures 9–13).
+//!
+//! QUIVER-Hist vs ZipML-CP (U/Q), ZipML 2-Apx and ALQ: dimension, s and M
+//! sweeps, plus the histogram-size/guarantee study. `QUIVER_MAX_POW`
+//! extends the sweeps (default 18; the paper's largest is 2^22).
+
+use quiver::dist::Dist;
+use quiver::figures::{self, FigOpts};
+
+fn main() {
+    let max_pow: u32 = std::env::var("QUIVER_MAX_POW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(18);
+    let out = std::path::PathBuf::from("results");
+    for (i, (name, dist)) in Dist::paper_suite().into_iter().enumerate() {
+        let opts = FigOpts {
+            dist,
+            max_pow: if i == 0 { max_pow } else { max_pow.saturating_sub(4).max(12) },
+            seeds: if i == 0 { 5 } else { 3 },
+            time_samples: 3,
+        };
+        println!("\n########## distribution: {name} ##########");
+        let ids: &[&str] = if i == 0 {
+            &["2", "3a", "3b", "3c", "3d"]
+        } else {
+            &["3a", "3c"] // appendix subset per distribution
+        };
+        for id in ids {
+            for t in figures::run(id, &opts).expect("figure") {
+                t.print();
+                let p = t.save_csv(&out).expect("csv");
+                println!("saved {}", p.display());
+            }
+        }
+    }
+}

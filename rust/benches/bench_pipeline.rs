@@ -1,0 +1,86 @@
+//! `cargo bench --bench bench_pipeline` — system-level numbers:
+//!
+//! * Appendix C (Fig. 4): sort + quantize timings (incl. the PJRT-executed
+//!   Pallas `sq` artifact when `make artifacts` has run);
+//! * §7 headline: 1M optimal / 133M near-optimal timings;
+//! * coordinator micro-benches: codec, batcher, end-to-end service RPC.
+
+use std::time::Duration;
+
+use quiver::benchfw::{self, Table};
+use quiver::coordinator::protocol::Msg;
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::service::{compress_remote, Service, ServiceConfig};
+use quiver::dist::Dist;
+use quiver::figures::{self, FigOpts};
+use quiver::sq;
+
+fn main() {
+    let out = std::path::PathBuf::from("results");
+    let opts = FigOpts::default();
+
+    for id in ["4", "headline"] {
+        for t in figures::run(id, &opts).expect("figure") {
+            t.print();
+            let p = t.save_csv(&out).expect("csv");
+            println!("saved {}", p.display());
+        }
+    }
+
+    // --- Coordinator micro-benches. ---
+    let mut t = Table::new("coordinator micro-benches", &["op", "median", "spread"]);
+    // Codec: pack/unpack a 1M-coordinate gradient at 4 bits.
+    let qs: Vec<f64> = (0..16).map(|i| i as f64).collect();
+    let idx: Vec<u32> = (0..1 << 20).map(|i| (i % 16) as u32).collect();
+    let st = benchfw::bench("encode 1M@4b", 2, 10, || sq::encode(&idx, &qs));
+    t.row(vec![st.name.clone(), benchfw::fmt_duration(st.median()), benchfw::fmt_duration(st.mad())]);
+    let packed = sq::encode(&idx, &qs);
+    let st = benchfw::bench("decode 1M@4b", 2, 10, || sq::decode(&packed));
+    t.row(vec![st.name.clone(), benchfw::fmt_duration(st.median()), benchfw::fmt_duration(st.mad())]);
+    // Frame roundtrip.
+    let msg = Msg::CompressRequest {
+        request_id: 1,
+        s: 16,
+        data: vec![0.5f32; 1 << 16],
+    };
+    let st = benchfw::bench("frame 64K req", 2, 20, || {
+        let f = msg.to_frame();
+        Msg::from_body(&f[4..]).unwrap()
+    });
+    t.row(vec![st.name.clone(), benchfw::fmt_duration(st.median()), benchfw::fmt_duration(st.mad())]);
+    t.print();
+
+    // --- End-to-end service RPC latency (loopback). ---
+    let service = Service::start(ServiceConfig {
+        threads: 2,
+        queue_capacity: 64,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        router: Router::new(RouterConfig { exact_max_d: 1 << 14, hist_m: 400, seed: 3 }),
+        ..Default::default()
+    })
+    .expect("service");
+    let addr = service.addr().to_string();
+    let mut t = Table::new("service RPC (loopback)", &["request", "median", "spread"]);
+    for (label, d) in [("8K exact", 8_192usize), ("256K hist", 262_144)] {
+        let data: Vec<f32> = Dist::LogNormal { mu: 0.0, sigma: 1.0 }
+            .sample_vec(d, 7)
+            .into_iter()
+            .map(|x| x as f32)
+            .collect();
+        let st = benchfw::bench(label, 2, 10, || {
+            match compress_remote(&addr, 1, 16, &data).expect("rpc") {
+                Msg::CompressReply { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        });
+        t.row(vec![
+            st.name.clone(),
+            benchfw::fmt_duration(st.median()),
+            benchfw::fmt_duration(st.mad()),
+        ]);
+    }
+    t.print();
+    println!("service metrics: {}", service.metrics.summary());
+    service.shutdown();
+}

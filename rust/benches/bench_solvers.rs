@@ -1,0 +1,39 @@
+//! `cargo bench --bench bench_solvers` — exact solvers (paper Fig. 1 and
+//! Appendix D figures 5–8, all five distributions).
+//!
+//! Prints the same rows the paper plots: runtime vs d at s ∈ {4, 16} and
+//! runtime+vNMSE vs s at d ∈ {2^12, 2^16}. Pass `--max-pow N` via
+//! `QUIVER_MAX_POW` to extend the sweep (default 18 keeps a run in
+//! minutes; the paper goes to 2^20+).
+
+use quiver::dist::Dist;
+use quiver::figures::{self, FigOpts};
+
+fn main() {
+    let max_pow: u32 = std::env::var("QUIVER_MAX_POW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(18);
+    let out = std::path::PathBuf::from("results");
+    // Main-body figure: LogNormal; appendix: the other four distributions
+    // at a reduced sweep to keep `cargo bench` bounded.
+    for (i, (name, dist)) in Dist::paper_suite().into_iter().enumerate() {
+        let opts = FigOpts {
+            dist,
+            max_pow: if i == 0 { max_pow } else { max_pow.saturating_sub(4).max(12) },
+            seeds: if i == 0 { 5 } else { 3 },
+            time_samples: 3,
+        };
+        println!("\n########## distribution: {name} ##########");
+        for id in ["1a", "1b", "1c"] {
+            for t in figures::run(id, &opts).expect("figure") {
+                t.print();
+                let p = t.save_csv(&out).expect("csv");
+                println!("saved {}", p.display());
+            }
+            if i > 0 {
+                break; // appendix dists: dimension sweep only
+            }
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Accelerated QUIVER (paper §5, Algorithm 4): place **two** quantization
+//! values per DP layer using the closed-form optimal middle value.
+//!
+//! `C₂[k,j] = C[k, b*] + C[b*, j]` is computable in O(1)
+//! ([`Prefix::cost2`]) and satisfies the quadrangle inequality (Lemma 5.3),
+//! so the same Concave-1D/SMAWK machinery applies while halving the number
+//! of layers:
+//!
+//! ```text
+//! MSE[i,j] = min_k MSE[i−2,k] + C₂[k,j]    (i > 3)
+//! MSE[3,j] = C₂[1,j],   MSE[2,j] = C[1,j]
+//! ```
+
+use super::smawk::{infeasible, smawk_with_values};
+use super::{Prefix, Solution};
+
+/// Solve via the two-values-per-layer DP. Caller guarantees `2 ≤ s < d` and
+/// a non-degenerate range (see [`super::solve`]).
+pub fn solve(p: &Prefix, s: usize) -> Solution {
+    let n = p.len();
+    debug_assert!(s >= 2 && s < n);
+    // Base layer: level 2 (s even) uses C, level 3 (s odd) uses C₂.
+    let odd = s % 2 == 1;
+    let base_level = if odd { 3 } else { 2 };
+    let mut prev: Vec<f64> = if odd {
+        (0..n).map(|j| p.cost2(0, j)).collect()
+    } else {
+        (0..n).map(|j| p.cost(0, j)).collect()
+    };
+    // Number of C₂ transition layers after the base.
+    let steps = (s - base_level) / 2;
+    let mut parents: Vec<Vec<u32>> = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let minima = {
+            let prev_ref = &prev;
+            let mut f = |j: usize, k: usize| {
+                if k > j {
+                    infeasible(k)
+                } else {
+                    prev_ref[k] + p.cost2(k, j)
+                }
+            };
+            smawk_with_values(n, n, &mut f)
+        };
+        let mut cur = vec![0.0f64; n];
+        let mut par = vec![0u32; n];
+        for (j, &(k, v)) in minima.iter().enumerate() {
+            cur[j] = v;
+            par[j] = k as u32;
+        }
+        prev = cur;
+        parents.push(par);
+    }
+    // Traceback: each C₂ transition contributes the endpoint j *and* the
+    // closed-form middle value b*(k, j).
+    let mut idx = Vec::with_capacity(s);
+    let mut j = n - 1;
+    for row in parents.iter().rev() {
+        let k = row[j] as usize;
+        idx.push(j);
+        idx.push(p.b_star(k, j));
+        j = k;
+    }
+    idx.push(j);
+    if odd {
+        idx.push(p.b_star(0, j));
+    }
+    idx.push(0);
+    Solution::from_indices(p, idx, prev[n - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::{exhaustive, quiver, zipml};
+    use crate::dist::Dist;
+
+    #[test]
+    fn agrees_with_exhaustive_small_even_and_odd_s() {
+        for seed in 0..30 {
+            let d = 6 + (seed as usize % 8);
+            let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(d, seed);
+            let p = Prefix::unweighted(&xs);
+            for s in 2..d {
+                let a = solve(&p, s);
+                let b = exhaustive::solve(&p, s);
+                assert!(
+                    crate::util::approx_eq(a.mse, b.mse, 1e-9, 1e-12),
+                    "seed={seed} d={d} s={s}: accel={} exhaustive={}",
+                    a.mse,
+                    b.mse
+                );
+                // Traceback must reproduce the claimed MSE.
+                assert!(
+                    (a.recompute_mse(&p) - a.mse).abs() < 1e-9 * a.mse.max(1e-12),
+                    "seed={seed} s={s}: traceback mismatch {} vs {}",
+                    a.recompute_mse(&p),
+                    a.mse
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_quiver_medium_all_distributions() {
+        for (seed, (name, dist)) in Dist::paper_suite().into_iter().enumerate() {
+            let xs = dist.sample_sorted(500, seed as u64 + 7);
+            let p = Prefix::unweighted(&xs);
+            for s in [2, 3, 4, 5, 8, 9, 16, 17, 32, 33] {
+                let a = solve(&p, s);
+                let b = quiver::solve(&p, s);
+                assert!(
+                    crate::util::approx_eq(a.mse, b.mse, 1e-9, 1e-12),
+                    "dist={name} s={s}: accel={} quiver={}",
+                    a.mse,
+                    b.mse
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_integral_agrees_with_zipml() {
+        use crate::util::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let ys: Vec<f64> = (0..120).map(|i| (i as f64).sqrt() * 0.7).collect();
+        let ws: Vec<f64> = (0..120).map(|_| rng.next_below(50) as f64).collect();
+        let p = Prefix::weighted(&ys, &ws);
+        for s in [2, 3, 4, 6, 8, 11, 16] {
+            let a = solve(&p, s);
+            let b = zipml::solve(&p, s);
+            assert!(
+                crate::util::approx_eq(a.mse, b.mse, 1e-9, 1e-12),
+                "s={s}: accel={} zipml={}",
+                a.mse,
+                b.mse
+            );
+        }
+    }
+
+    #[test]
+    fn q_size_respects_budget() {
+        let xs = Dist::Exponential { lambda: 1.0 }.sample_sorted(200, 5);
+        let p = Prefix::unweighted(&xs);
+        for s in 2..20 {
+            let sol = solve(&p, s);
+            assert!(sol.q_idx.len() <= s, "s={s} produced {} values", sol.q_idx.len());
+            assert_eq!(sol.q_idx.first(), Some(&0));
+            assert_eq!(sol.q_idx.last(), Some(&199));
+        }
+    }
+}

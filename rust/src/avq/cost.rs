@@ -1,0 +1,571 @@
+//! The O(1) interval-cost engine (paper §3 + Appendix A).
+//!
+//! Given a *sorted* input (optionally weighted), [`Prefix`] precomputes the
+//! cumulative moment arrays
+//!
+//! ```text
+//! α_j = Σ_{ℓ ≤ j} w_ℓ        (cumulative weight; α ≡ count when unweighted)
+//! β_j = Σ_{ℓ ≤ j} w_ℓ·y_ℓ    (cumulative first moment)
+//! γ_j = Σ_{ℓ ≤ j} w_ℓ·y_ℓ²   (cumulative second moment)
+//! ```
+//!
+//! in O(d) time/space, after which the stochastic-quantization interval cost
+//!
+//! ```text
+//! C[k,j] = Σ_{ℓ ∈ (k, j]} w_ℓ (y_j − y_ℓ)(y_ℓ − y_k)
+//! ```
+//!
+//! is evaluated in O(1), as is the *two-interval* cost `C₂[k,j]` via the
+//! closed-form optimal middle value `b*_{k,j}` (paper §5).
+//!
+//! ### Memory layout (performance)
+//!
+//! The DP solvers evaluate `C`/`C₂` at *scattered* `(k, j)` pairs over
+//! million-entry inputs, so the constant factor is dominated by cache-line
+//! traffic, not arithmetic. The moments are therefore stored **interleaved**
+//! (`Entry { y, α, β, γ }` = 32 bytes): one `C[k,j]` touches exactly two
+//! cache lines (one per endpoint) instead of six with separate arrays, and
+//! the fused [`Prefix::cost2`] reuses the endpoint loads across `b*` and
+//! both sub-costs (~3 lines total). This layout change alone is worth ~2×
+//! end-to-end on the d = 2^20 solves (see EXPERIMENTS.md §Perf).
+//!
+//! ### Note on the paper's printed formulas
+//!
+//! Expanding `(y_j − y)(y − y_k) = (y_j + y_k)·y − y² − y_j·y_k` gives
+//!
+//! ```text
+//! C[k,j] = (y_j + y_k)(β_j − β_k) − (γ_j − γ_k) − y_j·y_k·(α_j − α_k)
+//! ```
+//!
+//! The paper's §3 prints `x_j·x_k·(j−k) + (x_j − x_k)(β_j − β_k) − …`,
+//! which does not reproduce the single-element case; we implement the
+//! algebraically correct expansion above (verified against direct summation
+//! in the tests). Similarly, Appendix A's weighted `b*` threshold
+//! `(y_j α_j − y_k α_k + (β_j−β_k)) / (y_j + y_k)` re-derives to
+//! `(y_j α_j − y_k α_k − (β_j−β_k)) / (y_j − y_k)`, which is what we use
+//! (it specializes to the unweighted §5 formula when w ≡ 1).
+
+/// One input position's value + *inclusive* cumulative moments.
+#[derive(Clone, Copy, Debug, Default)]
+#[repr(C)]
+struct Entry {
+    y: f64,
+    /// Σ w over positions 0..=i.
+    alpha: f64,
+    /// Σ w·y over positions 0..=i.
+    beta: f64,
+    /// Σ w·y² over positions 0..=i.
+    gamma: f64,
+}
+
+/// Prefix-moment arrays over a sorted, (optionally) weighted input.
+///
+/// All public indices are **0-based positions** into the sorted input.
+#[derive(Clone, Debug)]
+pub struct Prefix {
+    /// `data[i]` holds `y_i` and the inclusive moments through position i.
+    data: Vec<Entry>,
+    /// The sorted values, kept separately for the `values()` API.
+    ys: Vec<f64>,
+    /// Whether the input was built unweighted (α_i = i+1 exactly).
+    unit_weights: bool,
+    /// When all weights are non-negative integers (the histogram use case),
+    /// `alpha_inv[t] = min{ i : α_i ≥ t }` for `t ∈ 0..=total_weight`,
+    /// enabling O(1) `b*` lookups (Appendix A).
+    alpha_inv: Option<Vec<u32>>,
+}
+
+impl Prefix {
+    /// Build from a sorted unweighted vector (w ≡ 1). O(d).
+    pub fn unweighted(sorted: &[f64]) -> Self {
+        debug_assert!(crate::util::is_sorted(sorted), "input must be sorted");
+        let n = sorted.len();
+        let mut data = Vec::with_capacity(n);
+        let (mut beta, mut gamma) = (0.0f64, 0.0f64);
+        for (i, &y) in sorted.iter().enumerate() {
+            beta += y;
+            gamma += y * y;
+            data.push(Entry { y, alpha: (i + 1) as f64, beta, gamma });
+        }
+        Self { data, ys: sorted.to_vec(), unit_weights: true, alpha_inv: None }
+    }
+
+    /// Build from a sorted weighted vector. Weights must be non-negative and
+    /// finite; zero weights are allowed (empty histogram bins). O(d).
+    ///
+    /// When every weight is integral (the histogram case), the `α⁻¹` inverse
+    /// array is also built, making [`Prefix::b_star`] O(1) as in Appendix A.
+    pub fn weighted(sorted_vals: &[f64], weights: &[f64]) -> Self {
+        assert_eq!(sorted_vals.len(), weights.len());
+        debug_assert!(crate::util::is_sorted(sorted_vals), "values must be sorted");
+        debug_assert!(weights.iter().all(|&w| w.is_finite() && w >= 0.0));
+        let n = sorted_vals.len();
+        let mut data = Vec::with_capacity(n);
+        let (mut alpha, mut beta, mut gamma) = (0.0f64, 0.0f64, 0.0f64);
+        let mut integral = true;
+        for i in 0..n {
+            let (y, w) = (sorted_vals[i], weights[i]);
+            integral &= w.fract() == 0.0;
+            alpha += w;
+            beta += w * y;
+            gamma += w * y * y;
+            data.push(Entry { y, alpha, beta, gamma });
+        }
+        let total = alpha;
+        // The explicit α⁻¹ array costs O(total weight) space (Appendix A
+        // stores exactly this). For the histogram use case total = d, which
+        // at d = 10⁸ would dwarf the (M+1)-point problem itself — past a
+        // size cap the O(log M) binary-search fallback is both faster to
+        // build and effectively free per query.
+        let worthwhile = total <= (1usize << 20).max(64 * n) as f64;
+        let alpha_inv = if integral && worthwhile && total <= u32::MAX as f64 {
+            // alpha_inv[t] = min{ i : α_i >= t }, t in 0..=total.
+            let total_u = total as usize;
+            let mut inv = vec![0u32; total_u + 1];
+            let mut i = 0usize;
+            for (t, slot) in inv.iter_mut().enumerate().skip(1) {
+                while data[i].alpha < t as f64 {
+                    i += 1;
+                }
+                *slot = i as u32;
+            }
+            Some(inv)
+        } else {
+            None
+        };
+        Self { data, ys: sorted_vals.to_vec(), unit_weights: false, alpha_inv }
+    }
+
+    /// Number of (distinct positions of) input points.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True iff the input is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// The sorted values.
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.ys
+    }
+
+    /// The value at position `i`.
+    #[inline]
+    pub fn value(&self, i: usize) -> f64 {
+        self.data[i].y
+    }
+
+    /// Total weight (`= d` for unweighted inputs).
+    #[inline]
+    pub fn total_weight(&self) -> f64 {
+        self.data.last().map_or(0.0, |e| e.alpha)
+    }
+
+    /// Weighted squared L2 norm `Σ w_ℓ y_ℓ²` of the input.
+    #[inline]
+    pub fn norm2_sq(&self) -> f64 {
+        self.data.last().map_or(0.0, |e| e.gamma)
+    }
+
+    /// Interval cost `C[k,j]` — the sum of SQ variances of all points in
+    /// positions `(k, j]` when quantized between `y_k` and `y_j`. O(1).
+    #[inline]
+    pub fn cost(&self, k: usize, j: usize) -> f64 {
+        debug_assert!(k <= j && j < self.data.len());
+        let ek = &self.data[k];
+        let ej = &self.data[j];
+        let da = ej.alpha - ek.alpha;
+        let db = ej.beta - ek.beta;
+        let dg = ej.gamma - ek.gamma;
+        // Clamp tiny negative float residue: the exact quantity is ≥ 0.
+        ((ej.y + ek.y) * db - dg - ej.y * ek.y * da).max(0.0)
+    }
+
+    /// Generalized interval cost with *arbitrary real endpoints*:
+    /// `Σ_{ℓ ∈ [lo, hi]} w_ℓ (b − y_ℓ)(y_ℓ − a)` over positions `lo..=hi`,
+    /// requiring `a ≤ y_lo` and `y_hi ≤ b`. Used by the candidate-point
+    /// baselines (Appendix B) where quantization values need not be input
+    /// points. O(1).
+    #[inline]
+    pub fn cost_endpoints(&self, a: f64, b: f64, lo: usize, hi: usize) -> f64 {
+        if lo > hi {
+            return 0.0;
+        }
+        debug_assert!(a <= self.data[lo].y + 1e-12 && self.data[hi].y <= b + 1e-12);
+        let ehi = &self.data[hi];
+        // Exclusive lower bound: moments through lo−1 (zero at lo == 0).
+        let (la, lb, lg) = if lo == 0 {
+            (0.0, 0.0, 0.0)
+        } else {
+            let e = &self.data[lo - 1];
+            (e.alpha, e.beta, e.gamma)
+        };
+        let da = ehi.alpha - la;
+        let db = ehi.beta - lb;
+        let dg = ehi.gamma - lg;
+        ((a + b) * db - dg - a * b * da).max(0.0)
+    }
+
+    /// The closed-form optimal middle quantization position `b*_{k,j}`
+    /// (paper §5 / Appendix A): the position `b ∈ [k, j]` minimizing
+    /// `C[k,b] + C[b,j]`.
+    ///
+    /// O(1) for unweighted and integral-weight inputs; O(log d) otherwise
+    /// (binary search over the monotone α).
+    #[inline]
+    pub fn b_star(&self, k: usize, j: usize) -> usize {
+        let ek = &self.data[k];
+        let ej = &self.data[j];
+        self.b_star_from(k, j, ek, ej)
+    }
+
+    /// `b*` with the endpoint entries already loaded (fused path).
+    #[inline]
+    fn b_star_from(&self, k: usize, j: usize, ek: &Entry, ej: &Entry) -> usize {
+        debug_assert!(k <= j && j < self.data.len());
+        if ej.y <= ek.y {
+            // Degenerate interval: every point equals the endpoints; C = 0.
+            return k;
+        }
+        // b* = min{ b ∈ [k,j] : α_b > thr }, where
+        // thr = (y_j α_j − y_k α_k − (β_j − β_k)) / (y_j − y_k).
+        let thr = (ej.y * ej.alpha - ek.y * ek.alpha - (ej.beta - ek.beta)) / (ej.y - ek.y);
+        if self.unit_weights {
+            // α_b = b + 1, so the first b with α_b > thr is exactly ⌊thr⌋:
+            // ⌊thr⌋+1 > thr always, and (⌊thr⌋−1)+1 = ⌊thr⌋ ≤ thr always —
+            // no fix-up scan needed (and none of its extra cache traffic).
+            return (thr.floor() as usize).clamp(k, j);
+        }
+        let mut b = if let Some(inv) = &self.alpha_inv {
+            // Integral weights: α_b > thr ⟺ α_b ≥ ⌊thr⌋ + 1.
+            let t = (thr.floor() + 1.0).clamp(0.0, self.total_weight());
+            (inv[t as usize] as usize).clamp(k, j)
+        } else {
+            // General weights: binary search over α in (k..=j).
+            let mut lo = k;
+            let mut hi = j;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if self.data[mid].alpha <= thr {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo
+        };
+        // Float-robust fix-up: enforce the exact first-crossing condition
+        // (the closed-form guess can be off by one near ties).
+        while b > k && self.data[b - 1].alpha > thr {
+            b -= 1;
+        }
+        while b < j && self.data[b].alpha <= thr {
+            b += 1;
+        }
+        b
+    }
+
+    /// Two-interval cost `C₂[k,j] = min_b C[k,b] + C[b,j]` via the
+    /// closed-form `b*`. O(1); fused so the endpoint entries are loaded
+    /// once (see the module docs on layout).
+    #[inline]
+    pub fn cost2(&self, k: usize, j: usize) -> f64 {
+        let ek = &self.data[k];
+        let ej = &self.data[j];
+        let b = self.b_star_from(k, j, ek, ej);
+        let eb = &self.data[b];
+        let left = {
+            let da = eb.alpha - ek.alpha;
+            let db = eb.beta - ek.beta;
+            let dg = eb.gamma - ek.gamma;
+            ((eb.y + ek.y) * db - dg - eb.y * ek.y * da).max(0.0)
+        };
+        let right = {
+            let da = ej.alpha - eb.alpha;
+            let db = ej.beta - eb.beta;
+            let dg = ej.gamma - eb.gamma;
+            ((ej.y + eb.y) * db - dg - ej.y * eb.y * da).max(0.0)
+        };
+        left + right
+    }
+
+    /// `b*` by brute force — test oracle for [`Prefix::b_star`].
+    pub fn b_star_naive(&self, k: usize, j: usize) -> usize {
+        (k..=j)
+            .min_by(|&b1, &b2| {
+                let c1 = self.cost(k, b1) + self.cost(b1, j);
+                let c2 = self.cost(k, b2) + self.cost(b2, j);
+                c1.partial_cmp(&c2).unwrap()
+            })
+            .unwrap()
+    }
+
+    /// Interval cost by direct summation — test oracle for [`Prefix::cost`].
+    pub fn cost_naive(&self, k: usize, j: usize) -> f64 {
+        let (yk, yj) = (self.data[k].y, self.data[j].y);
+        (k + 1..=j)
+            .map(|l| {
+                let w = self.data[l].alpha - self.data[l - 1].alpha;
+                w * (yj - self.data[l].y) * (self.data[l].y - yk)
+            })
+            .sum()
+    }
+
+    /// Whether the α⁻¹ fast path is active (testing hook).
+    #[cfg(test)]
+    pub(crate) fn has_alpha_inv(&self) -> bool {
+        self.alpha_inv.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn lognormal(n: usize, seed: u64) -> Vec<f64> {
+        Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(n, seed)
+    }
+
+    #[test]
+    fn cost_matches_direct_summation_unweighted() {
+        let xs = lognormal(64, 1);
+        let p = Prefix::unweighted(&xs);
+        for k in 0..xs.len() {
+            for j in k..xs.len() {
+                let fast = p.cost(k, j);
+                let slow = p.cost_naive(k, j);
+                assert!(
+                    crate::util::approx_eq(fast, slow, 1e-9, 1e-9),
+                    "C[{k},{j}] fast={fast} slow={slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cost_matches_direct_summation_weighted() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let ys = lognormal(40, 3);
+        let ws: Vec<f64> = (0..40).map(|_| rng.next_f64() * 5.0).collect();
+        let p = Prefix::weighted(&ys, &ws);
+        for k in 0..ys.len() {
+            for j in k..ys.len() {
+                let fast = p.cost(k, j);
+                let slow = p.cost_naive(k, j);
+                assert!(
+                    crate::util::approx_eq(fast, slow, 1e-9, 1e-9),
+                    "C[{k},{j}] fast={fast} slow={slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cost_zero_on_trivial_intervals() {
+        let xs = lognormal(32, 4);
+        let p = Prefix::unweighted(&xs);
+        for k in 0..32 {
+            assert_eq!(p.cost(k, k), 0.0);
+            if k + 1 < 32 {
+                // Adjacent points: the open interval (k, k+1] contains only
+                // position k+1, whose value equals the right endpoint.
+                assert!(p.cost(k, k + 1).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cost_nonnegative_and_monotone_in_interval_width() {
+        let xs = lognormal(128, 5);
+        let p = Prefix::unweighted(&xs);
+        for k in 0..xs.len() {
+            let mut prev = 0.0;
+            for j in k..xs.len() {
+                let c = p.cost(k, j);
+                assert!(c >= 0.0);
+                assert!(c + 1e-12 >= prev, "C[{k},{j}]={c} < C[{k},{}]={prev}", j - 1);
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn quadrangle_inequality_for_cost() {
+        // Lemma 5.2: C[a,c] + C[b,d] ≤ C[a,d] + C[b,c] for a ≤ b ≤ c ≤ d.
+        let xs = lognormal(48, 6);
+        let p = Prefix::unweighted(&xs);
+        for a in 0..48 {
+            for b in a..48 {
+                for c in b..48 {
+                    for dd in c..48 {
+                        let lhs = p.cost(a, c) + p.cost(b, dd);
+                        let rhs = p.cost(a, dd) + p.cost(b, c);
+                        assert!(
+                            lhs <= rhs + 1e-9 * rhs.abs().max(1.0),
+                            "QI violated at ({a},{b},{c},{dd}): {lhs} > {rhs}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quadrangle_inequality_for_cost2() {
+        // Lemma 5.3 on a weighted (histogram-like) input.
+        let ys: Vec<f64> = (0..24).map(|i| i as f64 * 0.37).collect();
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let ws: Vec<f64> = (0..24).map(|_| rng.next_below(9) as f64).collect();
+        let p = Prefix::weighted(&ys, &ws);
+        for a in 0..24 {
+            for b in a..24 {
+                for c in b..24 {
+                    for dd in c..24 {
+                        let lhs = p.cost2(a, c) + p.cost2(b, dd);
+                        let rhs = p.cost2(a, dd) + p.cost2(b, c);
+                        assert!(
+                            lhs <= rhs + 1e-9 * rhs.abs().max(1.0),
+                            "C2 QI violated at ({a},{b},{c},{dd}): {lhs} > {rhs}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn b_star_matches_brute_force_unweighted() {
+        let xs = lognormal(80, 8);
+        let p = Prefix::unweighted(&xs);
+        for k in 0..xs.len() {
+            for j in k..xs.len() {
+                let fast = p.b_star(k, j);
+                let slow = p.b_star_naive(k, j);
+                let cf = p.cost(k, fast) + p.cost(fast, j);
+                let cs = p.cost(k, slow) + p.cost(slow, j);
+                assert!(
+                    crate::util::approx_eq(cf, cs, 1e-9, 1e-12),
+                    "b*[{k},{j}]: fast={fast}({cf}) slow={slow}({cs})"
+                );
+                // The fused cost2 must equal the two-cost composition.
+                assert!(crate::util::approx_eq(p.cost2(k, j), cf, 1e-12, 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn b_star_matches_brute_force_weighted_integral() {
+        let ys = lognormal(50, 9);
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let ws: Vec<f64> = (0..50).map(|_| rng.next_below(7) as f64).collect();
+        let p = Prefix::weighted(&ys, &ws);
+        assert!(p.has_alpha_inv(), "integral weights should build α⁻¹");
+        for k in 0..ys.len() {
+            for j in k..ys.len() {
+                let fast = p.b_star(k, j);
+                let slow = p.b_star_naive(k, j);
+                let cf = p.cost(k, fast) + p.cost(fast, j);
+                let cs = p.cost(k, slow) + p.cost(slow, j);
+                assert!(
+                    crate::util::approx_eq(cf, cs, 1e-9, 1e-12),
+                    "b*[{k},{j}]: fast={fast}({cf}) slow={slow}({cs})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn b_star_matches_brute_force_weighted_real() {
+        let ys = lognormal(50, 11);
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let ws: Vec<f64> = (0..50).map(|_| rng.next_f64() * 3.0).collect();
+        let p = Prefix::weighted(&ys, &ws);
+        assert!(!p.has_alpha_inv());
+        for k in 0..ys.len() {
+            for j in k..ys.len() {
+                let fast = p.b_star(k, j);
+                let cf = p.cost(k, fast) + p.cost(fast, j);
+                let slow = p.b_star_naive(k, j);
+                let cs = p.cost(k, slow) + p.cost(slow, j);
+                assert!(
+                    crate::util::approx_eq(cf, cs, 1e-9, 1e-12),
+                    "b*[{k},{j}]: fast={fast}({cf}) slow={slow}({cs})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cost_endpoints_generalizes_cost() {
+        let xs = lognormal(64, 13);
+        let p = Prefix::unweighted(&xs);
+        for k in 0..20 {
+            for j in k..30 {
+                if k + 1 <= j {
+                    let a = p.cost_endpoints(xs[k], xs[j], k + 1, j);
+                    let b = p.cost(k, j);
+                    assert!(crate::util::approx_eq(a, b, 1e-9, 1e-12), "{a} vs {b}");
+                }
+            }
+        }
+        // Arbitrary endpoints straddling the data.
+        let c = p.cost_endpoints(xs[0] - 1.0, xs[63] + 2.0, 0, 63);
+        let direct: f64 = xs
+            .iter()
+            .map(|&y| (xs[63] + 2.0 - y) * (y - (xs[0] - 1.0)))
+            .sum();
+        assert!(crate::util::approx_eq(c, direct, 1e-9, 1e-9));
+    }
+
+    #[test]
+    fn duplicate_values_handled() {
+        let xs = vec![1.0, 1.0, 1.0, 2.0, 2.0, 5.0, 5.0, 5.0];
+        let p = Prefix::unweighted(&xs);
+        assert_eq!(p.cost(0, 2), 0.0); // all equal
+        assert!(p.cost(0, 7) > 0.0);
+        for k in 0..8 {
+            for j in k..8 {
+                let fast = p.b_star(k, j);
+                let cf = p.cost(k, fast) + p.cost(fast, j);
+                let slow = p.b_star_naive(k, j);
+                let cs = p.cost(k, slow) + p.cost(slow, j);
+                assert!(crate::util::approx_eq(cf, cs, 1e-9, 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weight_bins_are_tolerated() {
+        let ys: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let mut ws = vec![0.0; 16];
+        ws[0] = 3.0;
+        ws[7] = 2.0;
+        ws[15] = 5.0;
+        let p = Prefix::weighted(&ys, &ws);
+        let c = p.cost(0, 15);
+        // Only position 7 contributes: w=2, (15−7)(7−0) = 56 → 112.
+        assert!((c - 112.0).abs() < 1e-9, "c={c}");
+        let b = p.b_star(0, 15);
+        let cb = p.cost(0, b) + p.cost(b, 15);
+        assert!(
+            cb <= 1e-9,
+            "placing the middle value at the mass point zeroes the cost; b={b} cb={cb}"
+        );
+    }
+
+    #[test]
+    fn total_weight_and_norms() {
+        let xs = lognormal(100, 14);
+        let p = Prefix::unweighted(&xs);
+        assert_eq!(p.total_weight(), 100.0);
+        let n2: f64 = xs.iter().map(|x| x * x).sum();
+        assert!(crate::util::approx_eq(p.norm2_sq(), n2, 1e-12, 1e-12));
+    }
+}

@@ -1,0 +1,156 @@
+//! Brute-force AVQ: enumerate every `Q ⊆ X` with `|Q| = s` and
+//! `min, max ∈ Q` (§2: some optimal solution has this form).
+//!
+//! `O(C(d−2, s−2) · s)` time — the ground-truth oracle the DP solvers are
+//! tested against on small inputs. Works for weighted inputs too
+//! (everything goes through [`Prefix::cost`]).
+
+use super::{Prefix, Solution};
+
+/// Solve by exhaustive enumeration. Caller guarantees `2 ≤ s < d` and a
+/// non-degenerate range (see [`super::solve`]).
+pub fn solve(p: &Prefix, s: usize) -> Solution {
+    let n = p.len();
+    debug_assert!(s >= 2 && s < n);
+    let inner = s - 2;
+    let mut cur: Vec<usize> = Vec::with_capacity(inner);
+    let mut best_idx: Vec<usize> = Vec::new();
+    let mut best_mse = f64::INFINITY;
+    // Enumerate strictly-increasing interior positions from 1..n−1.
+    // `acc` carries the cost of the prefix segments, so each leaf costs O(1)
+    // beyond the enumeration itself.
+    fn rec(
+        p: &Prefix,
+        n: usize,
+        inner: usize,
+        start: usize,
+        prev: usize,
+        acc: f64,
+        cur: &mut Vec<usize>,
+        best_mse: &mut f64,
+        best_idx: &mut Vec<usize>,
+    ) {
+        if acc >= *best_mse {
+            return; // branch-and-bound: costs only grow
+        }
+        if cur.len() == inner {
+            let total = acc + p.cost(prev, n - 1);
+            if total < *best_mse {
+                *best_mse = total;
+                *best_idx = cur.clone();
+            }
+            return;
+        }
+        let remaining = inner - cur.len();
+        // Leave room for the remaining interior picks.
+        for c in start..=(n - 1 - remaining) {
+            cur.push(c);
+            rec(p, n, inner, c + 1, c, acc + p.cost(prev, c), cur, best_mse, best_idx);
+            cur.pop();
+        }
+    }
+    rec(p, n, inner, 1, 0, 0.0, &mut cur, &mut best_mse, &mut best_idx);
+    let mut idx = vec![0];
+    idx.extend_from_slice(&best_idx);
+    idx.push(n - 1);
+    Solution::from_indices(p, idx, best_mse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::{solve as solve_checked, SolverKind};
+
+    #[test]
+    fn two_values_is_full_interval_cost() {
+        let xs = [0.0, 1.0, 3.0, 7.0];
+        let p = Prefix::unweighted(&xs);
+        let sol = solve(&p, 2);
+        assert_eq!(sol.q_idx, vec![0, 3]);
+        assert!((sol.mse - p.cost(0, 3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hand_checkable_three_values() {
+        let xs = [0.0, 1.0, 2.0, 10.0];
+        let p = Prefix::unweighted(&xs);
+        let sol = solve(&p, 3);
+        // Interior at 1: C(0,1) + C(1,3) = 0 + (10−2)(2−1) = 8.
+        // Interior at 2: C(0,2) + C(2,3) = (2−1)(1−0) + 0 = 1.  ← optimal
+        assert_eq!(sol.q_idx, vec![0, 2, 3]);
+        assert!((sol.mse - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_independent_dp_on_random_instances() {
+        // Cross-check against a simple, obviously-correct O(s·d²) DP written
+        // independently of the production solvers.
+        for seed in 0..20 {
+            let xs = crate::dist::Dist::LogNormal { mu: 0.0, sigma: 1.0 }
+                .sample_sorted(11, seed);
+            let p = Prefix::unweighted(&xs);
+            for s in 2..10 {
+                let sol = solve(&p, s);
+                let want = simple_dp(&p, s);
+                assert!(
+                    (sol.mse - want).abs() < 1e-9 * want.max(1.0),
+                    "seed={seed} s={s}: exhaustive={} dp={want}",
+                    sol.mse
+                );
+                assert!((sol.recompute_mse(&p) - sol.mse).abs() < 1e-9);
+                assert_eq!(sol.q_idx.first(), Some(&0));
+                assert_eq!(sol.q_idx.last(), Some(&(p.len() - 1)));
+            }
+        }
+    }
+
+    /// Textbook DP, no tricks: MSE[i][j] over all i, j.
+    fn simple_dp(p: &Prefix, s: usize) -> f64 {
+        let n = p.len();
+        let mut prev: Vec<f64> = (0..n).map(|j| p.cost(0, j)).collect();
+        for _level in 3..=s {
+            let mut cur = vec![f64::INFINITY; n];
+            for j in 0..n {
+                for k in 0..=j {
+                    let v = prev[k] + p.cost(k, j);
+                    if v < cur[j] {
+                        cur[j] = v;
+                    }
+                }
+            }
+            prev = cur;
+        }
+        prev[n - 1]
+    }
+
+    #[test]
+    fn weighted_exhaustive() {
+        let ys = [0.0, 1.0, 2.0, 5.0, 9.0];
+        let ws = [1.0, 3.0, 1.0, 2.0, 1.0];
+        let p = Prefix::weighted(&ys, &ws);
+        let sol = solve(&p, 3);
+        assert_eq!(sol.q_idx.first(), Some(&0));
+        assert_eq!(sol.q_idx.last(), Some(&4));
+        assert!((sol.recompute_mse(&p) - sol.mse).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goes_through_checked_entry() {
+        let xs = crate::dist::Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_sorted(10, 7);
+        let p = Prefix::unweighted(&xs);
+        let sol = solve_checked(&p, 4, SolverKind::Exhaustive).unwrap();
+        assert_eq!(sol.q_idx.len(), 4);
+    }
+
+    #[test]
+    fn mse_nonincreasing_in_s() {
+        let xs = crate::dist::Dist::Exponential { lambda: 1.0 }.sample_sorted(12, 9);
+        let p = Prefix::unweighted(&xs);
+        let mut prev = f64::INFINITY;
+        for s in 2..12 {
+            let sol = solve(&p, s);
+            assert!(sol.mse <= prev + 1e-12, "s={s}: {} > {prev}", sol.mse);
+            prev = sol.mse;
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! QUIVER-Hist (paper §6): near-optimal AVQ in `O(d + s·M)` time via a
+//! stochastically-rounded histogram.
+//!
+//! 1. Round each coordinate *unbiasedly* onto the uniform (M+1)-point grid
+//!    `S = { min + ℓ·(max−min)/M }`.
+//! 2. Solve the **weighted** AVQ problem on the resulting frequency vector
+//!    `W` with any exact solver (default: Accelerated QUIVER, whose `b*`
+//!    lookup is O(1) here because the weights are integral — Appendix A).
+//! 3. Use the returned grid values as the quantization values for `X`.
+//!
+//! Guarantee (§6): sum of variances ≤ `opt·(1 + d/2M²) + d‖X‖²/2M²`; with
+//! `M = ω(√d)` this is `opt·(1+o(1)) + o(‖X‖²)`.
+//!
+//! Unlike the exact solvers, **the input need not be sorted** — the
+//! histogram build is a single O(d) pass, which is what makes this the
+//! "quantize on the fly" variant (and the part §8 offloads to accelerators;
+//! see `python/compile/kernels/hist.py` for the Pallas twin of the build).
+
+use super::{AvqError, Prefix, Solution, SolverKind};
+use crate::util::rng::Xoshiro256pp;
+
+/// A stochastically-rounded histogram of an input vector on a uniform grid.
+#[derive(Debug, Clone)]
+pub struct GridHistogram {
+    /// Grid values `S` (length M+1, uniform from `lo` to `hi`).
+    pub grid: Vec<f64>,
+    /// Integral bin weights; `Σ weights = d`.
+    pub weights: Vec<f64>,
+    /// Input min / max.
+    pub lo: f64,
+    pub hi: f64,
+    /// Original input dimension.
+    pub d: usize,
+    /// Squared L2 norm of the *original* input (for vNMSE reporting).
+    pub norm2_sq: f64,
+}
+
+impl GridHistogram {
+    /// Build in one O(d) pass with unbiased stochastic rounding.
+    ///
+    /// Returns `Err(AvqError::EmptyInput)` for empty input and
+    /// `Err(AvqError::NonFinite)` if any coordinate is non-finite.
+    pub fn build(xs: &[f64], m: usize, rng: &mut Xoshiro256pp) -> Result<Self, AvqError> {
+        if xs.is_empty() {
+            return Err(AvqError::EmptyInput);
+        }
+        assert!(m >= 1, "need at least one bin");
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut norm2 = 0.0;
+        for &x in xs {
+            if !x.is_finite() {
+                return Err(AvqError::NonFinite);
+            }
+            lo = lo.min(x);
+            hi = hi.max(x);
+            norm2 += x * x;
+        }
+        let mut weights = vec![0.0f64; m + 1];
+        if hi == lo {
+            // Degenerate range: all mass in bin 0 on a single-point grid.
+            weights[0] = xs.len() as f64;
+            return Ok(Self {
+                grid: (0..=m).map(|_| lo).collect(),
+                weights,
+                lo,
+                hi,
+                d: xs.len(),
+                norm2_sq: norm2,
+            });
+        }
+        let delta = (hi - lo) / m as f64;
+        let inv_delta = m as f64 / (hi - lo);
+        for &x in xs {
+            // Position on the grid in units of Δ.
+            let t = (x - lo) * inv_delta;
+            let f = t.floor();
+            let low_bin = (f as usize).min(m - 1); // guard x == hi
+            let frac = (t - low_bin as f64).clamp(0.0, 1.0);
+            // Round up with probability frac — unbiased.
+            let bin = if rng.next_f64() < frac { low_bin + 1 } else { low_bin };
+            weights[bin] += 1.0;
+        }
+        let mut grid: Vec<f64> = (0..=m).map(|l| lo + l as f64 * delta).collect();
+        // Pin the endpoints exactly: lo + m·Δ can round below `hi`, which
+        // would leave the max input outside the quantizer's range.
+        grid[0] = lo;
+        grid[m] = hi;
+        Ok(Self { grid, weights, lo, hi, d: xs.len(), norm2_sq: norm2 })
+    }
+
+    /// The rounded vector's weighted prefix moments (for the solver).
+    pub fn prefix(&self) -> Prefix {
+        Prefix::weighted(&self.grid, &self.weights)
+    }
+
+    /// Total mass (must equal `d`).
+    pub fn total(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+}
+
+/// Configuration for the near-optimal histogram solver.
+#[derive(Debug, Clone, Copy)]
+pub struct HistConfig {
+    /// Number of grid intervals M (grid has M+1 points). The paper's
+    /// guarantee wants `M = ω(√d)`, e.g. `√d·log d`; its experiments show
+    /// `M ∈ [100, 1000]` already near-optimal (§7).
+    pub m: usize,
+    /// Which exact solver to run on the weighted histogram.
+    pub inner: SolverKind,
+    /// Seed for the stochastic rounding.
+    pub seed: u64,
+}
+
+impl HistConfig {
+    /// The paper's theory-guided default: `M = √d·log₂ d`, Accelerated
+    /// QUIVER inner solver.
+    pub fn theory(d: usize) -> Self {
+        let m = ((d as f64).sqrt() * (d as f64).log2()).ceil() as usize;
+        Self { m: m.max(2), inner: SolverKind::QuiverAccel, seed: 0x9157 }
+    }
+
+    /// Fixed-M variant (the paper's practical setting, M ∈ [100, 1000]).
+    pub fn fixed(m: usize) -> Self {
+        Self { m, inner: SolverKind::QuiverAccel, seed: 0x9157 }
+    }
+}
+
+/// Near-optimal solve: histogram + weighted exact solve. `O(d + s·M)`.
+///
+/// The input does **not** need to be sorted. The returned [`Solution`]'s
+/// `q` are grid values; `q_idx` indexes the grid; `mse` is the optimum *for
+/// the histogram* (evaluate against the original vector with
+/// [`crate::metrics::sum_variances`] for the true error, as the figures do).
+pub fn solve_hist(xs: &[f64], s: usize, cfg: &HistConfig) -> Result<Solution, AvqError> {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let h = GridHistogram::build(xs, cfg.m, &mut rng)?;
+    solve_on(&h, s, cfg.inner)
+}
+
+/// Solve on a prebuilt histogram (used when the histogram arrives from the
+/// accelerator path — see `runtime`).
+pub fn solve_on(h: &GridHistogram, s: usize, inner: SolverKind) -> Result<Solution, AvqError> {
+    let p = h.prefix();
+    super::solve(&p, s, inner)
+}
+
+/// The paper's §6 error upper bound for quantizing X with the histogram
+/// solution: `opt_W·(1 + d/2M²) + d·‖X‖²/2M²` (used by Figure 2's
+/// "theoretical guarantee" series, with opt_W replaced by the measured
+/// histogram optimum).
+pub fn theory_bound(hist_opt_mse: f64, d: usize, m: usize, norm2_sq: f64) -> f64 {
+    let a = d as f64 / (2.0 * (m * m) as f64);
+    hist_opt_mse * (1.0 + a) + a * norm2_sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::metrics::sum_variances;
+
+    #[test]
+    fn histogram_conserves_mass_and_range() {
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(10_000, 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let h = GridHistogram::build(&xs, 128, &mut rng).unwrap();
+        assert_eq!(h.total(), 10_000.0);
+        assert_eq!(h.grid.len(), 129);
+        assert!((h.grid[0] - h.lo).abs() < 1e-12);
+        assert!((h.grid[128] - h.hi).abs() < 1e-12);
+        // End bins hold the min/max points.
+        assert!(h.weights[0] >= 1.0);
+    }
+
+    #[test]
+    fn rounding_is_unbiased() {
+        // The expected rounded mean equals the true mean.
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(20_000, 5);
+        let true_mean: f64 = xs.iter().sum::<f64>() / xs.len() as f64;
+        let mut acc = 0.0;
+        let trials = 32;
+        for t in 0..trials {
+            let mut rng = Xoshiro256pp::seed_from_u64(100 + t);
+            let h = GridHistogram::build(&xs, 64, &mut rng).unwrap();
+            let m: f64 = h
+                .grid
+                .iter()
+                .zip(&h.weights)
+                .map(|(g, w)| g * w)
+                .sum::<f64>()
+                / xs.len() as f64;
+            acc += m;
+        }
+        let est = acc / trials as f64;
+        assert!(
+            (est - true_mean).abs() < 5e-4,
+            "rounded mean {est} vs true {true_mean}"
+        );
+    }
+
+    #[test]
+    fn hist_solution_near_optimal_for_large_m() {
+        let d = 4096;
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 7);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = Prefix::unweighted(&sorted);
+        let s = 8;
+        let opt = super::super::solve(&p, s, SolverKind::QuiverAccel).unwrap();
+        let opt_err = sum_variances(&sorted, &opt.q);
+        let cfg = HistConfig::theory(d); // M = √d·log d ≈ 768
+        let hist = solve_hist(&xs, s, &cfg).unwrap();
+        let hist_err = sum_variances(&sorted, &hist.q);
+        assert!(
+            hist_err <= 1.10 * opt_err + 1e-9,
+            "hist {hist_err} should be within 10% of optimal {opt_err} at M={}",
+            cfg.m
+        );
+        // And must respect the paper's theoretical bound.
+        let bound = theory_bound(hist.mse, d, cfg.m, p.norm2_sq());
+        assert!(
+            hist_err <= bound + 1e-9,
+            "hist err {hist_err} exceeds theory bound {bound}"
+        );
+    }
+
+    #[test]
+    fn hist_error_decreases_with_m() {
+        let d = 4096;
+        let xs = Dist::Exponential { lambda: 1.0 }.sample_vec(d, 11);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let errs: Vec<f64> = [8usize, 64, 512]
+            .iter()
+            .map(|&m| {
+                let sol = solve_hist(&xs, 8, &HistConfig::fixed(m)).unwrap();
+                sum_variances(&sorted, &sol.q)
+            })
+            .collect();
+        assert!(
+            errs[0] > errs[2],
+            "error should drop substantially from M=8 to M=512: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn unsorted_input_is_fine() {
+        let mut xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(2000, 13);
+        // Deliberately unsorted (sample_vec is unsorted already; shuffle more).
+        let mut rng = Xoshiro256pp::seed_from_u64(14);
+        rng.shuffle(&mut xs);
+        let sol = solve_hist(&xs, 4, &HistConfig::fixed(200)).unwrap();
+        assert_eq!(sol.q.len(), 4);
+        let (lo, hi) = xs.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| {
+            (l.min(x), h.max(x))
+        });
+        assert!((sol.q[0] - lo).abs() < 1e-12, "min must be a quantization value");
+        assert!((sol.q[3] - hi).abs() < 1e-12, "max must be a quantization value");
+    }
+
+    #[test]
+    fn degenerate_constant_input() {
+        let xs = vec![3.3; 100];
+        let sol = solve_hist(&xs, 4, &HistConfig::fixed(16)).unwrap();
+        assert_eq!(sol.mse, 0.0);
+        assert_eq!(sol.q, vec![3.3]);
+    }
+
+    #[test]
+    fn weighted_inner_solvers_agree_on_histogram() {
+        let xs = Dist::Weibull { shape: 1.0, scale: 1.0 }.sample_vec(5000, 17);
+        let mut rng = Xoshiro256pp::seed_from_u64(18);
+        let h = GridHistogram::build(&xs, 300, &mut rng).unwrap();
+        let s = 16;
+        let a = solve_on(&h, s, SolverKind::ZipMl).unwrap();
+        let b = solve_on(&h, s, SolverKind::BinSearch).unwrap();
+        let c = solve_on(&h, s, SolverKind::Quiver).unwrap();
+        let d = solve_on(&h, s, SolverKind::QuiverAccel).unwrap();
+        for (name, sol) in [("binsearch", &b), ("quiver", &c), ("accel", &d)] {
+            assert!(
+                crate::util::approx_eq(a.mse, sol.mse, 1e-9, 1e-12),
+                "{name}: {} vs zipml {}",
+                sol.mse,
+                a.mse
+            );
+        }
+    }
+}

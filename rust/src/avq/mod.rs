@@ -1,0 +1,272 @@
+//! Adaptive Vector Quantization solvers — the paper's core contribution.
+//!
+//! Given a sorted (optionally weighted) vector and a budget of `s`
+//! quantization values, find `Q` (with `min, max ∈ Q`, `Q ⊆ X`) minimizing
+//! the sum of stochastic-quantization variances (§2).
+//!
+//! Solver lineup (all return *optimal* solutions; complexities for input
+//! size `d`):
+//!
+//! | Solver | Paper | Time | Space |
+//! |---|---|---|---|
+//! | [`exhaustive`] | §2 (naive) | `O(C(d−2, s−2)·d)` | `O(d)` |
+//! | [`zipml`] | Zhang et al. 2017 | `O(s·d²)` | `O(s·d)` |
+//! | [`binsearch`] | §4, Alg. 2 | `O(s·d·log d)` | `O(s·d)` |
+//! | [`quiver`] | §5, Alg. 3 | `O(s·d)` | `O(s·d)` |
+//! | [`accel`] | §5, Alg. 4 | `O(s·d)`, ~half the Concave-1D calls | `O(s·d)` |
+//!
+//! plus the near-optimal [`histogram`] reduction (§6): `O(d + s·M)` with a
+//! `1+o(1)` multiplicative guarantee for `M = ω(√d)`.
+
+pub mod accel;
+pub mod binsearch;
+pub mod cost;
+pub mod exhaustive;
+pub mod histogram;
+pub mod quiver;
+pub mod smawk;
+pub mod zipml;
+
+pub use cost::Prefix;
+
+use std::fmt;
+
+/// Errors reported by the solvers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AvqError {
+    /// The input vector is empty.
+    EmptyInput,
+    /// `s < 2` with a non-degenerate value range (stochastic quantization
+    /// needs at least the min and max as quantization values).
+    BudgetTooSmall { s: usize },
+    /// The input is not sorted ascending (exact solvers require sorted
+    /// input; see `histogram` / `pipeline` for unsorted entry points).
+    NotSorted,
+    /// Non-finite value encountered.
+    NonFinite,
+}
+
+impl fmt::Display for AvqError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AvqError::EmptyInput => write!(f, "input vector is empty"),
+            AvqError::BudgetTooSmall { s } => {
+                write!(f, "s = {s} < 2 quantization values cannot cover a non-degenerate range")
+            }
+            AvqError::NotSorted => write!(f, "input must be sorted ascending"),
+            AvqError::NonFinite => write!(f, "input contains non-finite values"),
+        }
+    }
+}
+
+impl std::error::Error for AvqError {}
+
+/// An AVQ solution: the chosen quantization positions/values and the
+/// achieved objective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Solution {
+    /// Positions of the quantization values in the sorted input, strictly
+    /// increasing, `q_idx[0] == 0` and `q_idx.last() == d−1`.
+    pub q_idx: Vec<usize>,
+    /// The quantization values themselves (`values[q_idx]`), increasing.
+    pub q: Vec<f64>,
+    /// The optimal (weighted) sum of stochastic-quantization variances.
+    pub mse: f64,
+}
+
+impl Solution {
+    fn from_indices(p: &Prefix, mut idx: Vec<usize>, mse: f64) -> Self {
+        idx.sort_unstable();
+        idx.dedup();
+        let q = idx.iter().map(|&i| p.value(i)).collect();
+        Solution { q_idx: idx, q, mse: mse.max(0.0) }
+    }
+
+    /// Recompute the objective from the chosen positions — used by tests to
+    /// confirm `mse` matches the reported quantization values.
+    pub fn recompute_mse(&self, p: &Prefix) -> f64 {
+        self.q_idx
+            .windows(2)
+            .map(|w| p.cost(w[0], w[1]))
+            .sum()
+    }
+}
+
+/// Which exact solver to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Brute-force enumeration (test oracle; tiny inputs only).
+    Exhaustive,
+    /// ZipML dynamic program, `O(s·d²)`.
+    ZipMl,
+    /// Divide-and-conquer over DP rows, `O(s·d·log d)` (Alg. 2).
+    BinSearch,
+    /// SMAWK/Concave-1D per row, `O(s·d)` (Alg. 3).
+    Quiver,
+    /// Accelerated QUIVER: two values per layer via `C₂` (Alg. 4).
+    QuiverAccel,
+}
+
+impl SolverKind {
+    /// All exact solvers, cheapest-asymptotics last.
+    pub const ALL: [SolverKind; 5] = [
+        SolverKind::Exhaustive,
+        SolverKind::ZipMl,
+        SolverKind::BinSearch,
+        SolverKind::Quiver,
+        SolverKind::QuiverAccel,
+    ];
+
+    /// Display name used in figures/CLI (matches the paper's legends).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Exhaustive => "exhaustive",
+            SolverKind::ZipMl => "zipml",
+            SolverKind::BinSearch => "binsearch",
+            SolverKind::Quiver => "quiver",
+            SolverKind::QuiverAccel => "quiver-accel",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(name: &str) -> Option<SolverKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == name)
+    }
+}
+
+/// Solve the AVQ problem over a prebuilt [`Prefix`].
+///
+/// Handles the degenerate cases uniformly (empty input, constant vectors,
+/// `s ≥ d`) and dispatches to the requested solver otherwise.
+pub fn solve(p: &Prefix, s: usize, kind: SolverKind) -> Result<Solution, AvqError> {
+    if let Some(sol) = trivial(p, s)? {
+        return Ok(sol);
+    }
+    let s = s.min(p.len());
+    Ok(match kind {
+        SolverKind::Exhaustive => exhaustive::solve(p, s),
+        SolverKind::ZipMl => zipml::solve(p, s),
+        SolverKind::BinSearch => binsearch::solve(p, s),
+        SolverKind::Quiver => quiver::solve(p, s),
+        SolverKind::QuiverAccel => accel::solve(p, s),
+    })
+}
+
+/// Convenience: sort-if-needed then solve. `O(d log d + solver)`.
+pub fn solve_unsorted(xs: &[f64], s: usize, kind: SolverKind) -> Result<Solution, AvqError> {
+    if xs.iter().any(|x| !x.is_finite()) {
+        return Err(AvqError::NonFinite);
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = Prefix::unweighted(&v);
+    solve(&p, s, kind)
+}
+
+/// Common degenerate-case handling shared by every solver entry point.
+fn trivial(p: &Prefix, s: usize) -> Result<Option<Solution>, AvqError> {
+    let n = p.len();
+    if n == 0 {
+        return Err(AvqError::EmptyInput);
+    }
+    if !p.values().iter().all(|v| v.is_finite()) {
+        return Err(AvqError::NonFinite);
+    }
+    let (lo, hi) = (p.value(0), p.value(n - 1));
+    if lo == hi {
+        // Constant vector: a single value quantizes exactly.
+        return Ok(Some(Solution::from_indices(p, vec![0], 0.0)));
+    }
+    if s < 2 {
+        return Err(AvqError::BudgetTooSmall { s });
+    }
+    if s >= n {
+        // One value per point: zero error.
+        return Ok(Some(Solution::from_indices(p, (0..n).collect(), 0.0)));
+    }
+    Ok(None)
+}
+
+/// Shared DP traceback for the single-step solvers (`zipml`, `binsearch`,
+/// `quiver`): `parents[t][j]` is the argmin `k` for level `t + 3` at
+/// position `j`.
+pub(crate) fn traceback_single(p: &Prefix, parents: &[Vec<u32>], mse: f64) -> Solution {
+    let n = p.len();
+    let mut idx = Vec::with_capacity(parents.len() + 2);
+    let mut j = n - 1;
+    idx.push(j);
+    for row in parents.iter().rev() {
+        j = row[j] as usize;
+        idx.push(j);
+    }
+    idx.push(0);
+    Solution::from_indices(p, idx, mse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    #[test]
+    fn trivial_empty_errors() {
+        let p = Prefix::unweighted(&[]);
+        assert_eq!(solve(&p, 4, SolverKind::Quiver), Err(AvqError::EmptyInput));
+    }
+
+    #[test]
+    fn trivial_constant_vector() {
+        let p = Prefix::unweighted(&[2.5; 10]);
+        let sol = solve(&p, 1, SolverKind::Quiver).unwrap();
+        assert_eq!(sol.q, vec![2.5]);
+        assert_eq!(sol.mse, 0.0);
+    }
+
+    #[test]
+    fn trivial_s_too_small() {
+        let p = Prefix::unweighted(&[1.0, 2.0]);
+        assert!(matches!(
+            solve(&p, 1, SolverKind::Quiver),
+            Err(AvqError::BudgetTooSmall { s: 1 })
+        ));
+    }
+
+    #[test]
+    fn trivial_s_ge_d_zero_error() {
+        let xs = [1.0, 2.0, 4.0, 9.0];
+        let p = Prefix::unweighted(&xs);
+        for s in 4..8 {
+            let sol = solve(&p, s, SolverKind::ZipMl).unwrap();
+            assert_eq!(sol.mse, 0.0);
+            assert_eq!(sol.q, xs.to_vec());
+        }
+    }
+
+    #[test]
+    fn nonfinite_rejected() {
+        assert_eq!(
+            solve_unsorted(&[1.0, f64::NAN], 2, SolverKind::Quiver),
+            Err(AvqError::NonFinite)
+        );
+    }
+
+    #[test]
+    fn solve_unsorted_matches_sorted() {
+        let d = Dist::Normal { mu: 0.0, sigma: 1.0 };
+        let xs = d.sample_vec(200, 3);
+        let a = solve_unsorted(&xs, 5, SolverKind::Quiver).unwrap();
+        let sorted = d.sample_sorted(200, 3);
+        let p = Prefix::unweighted(&sorted);
+        let b = solve(&p, 5, SolverKind::Quiver).unwrap();
+        assert_eq!(a.q, b.q);
+        assert!((a.mse - b.mse).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_kind_parse_roundtrip() {
+        for k in SolverKind::ALL {
+            assert_eq!(SolverKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SolverKind::parse("magic"), None);
+    }
+}

@@ -1,0 +1,253 @@
+//! SMAWK (Shor–Moran–Aggarwal–Wilber–Klawe): all row minima of an
+//! implicitly-defined *totally monotone* matrix in `O(rows + cols)`
+//! evaluations.
+//!
+//! This is the Concave-1D engine of QUIVER (paper §5): each DP layer
+//! `MSE[i,j] = min_k MSE[i−1,k] + C[k,j]` is the row-minima problem of the
+//! matrix `A[j][k] = MSE[i−1,k] + C[k,j]`, which is totally monotone because
+//! `C` (and `C₂`) satisfy the quadrangle inequality (Lemmas 5.2/5.3). The
+//! original QUIVER paper cites Galil & Park's Concave-1D; SMAWK solves the
+//! same offline problem with the same `O(d)` bound (the DP here is offline
+//! per layer — row `i` depends only on the fully-known row `i−1`).
+//!
+//! The DP is a "staircase": only `k ≤ j` is feasible. Infeasible entries are
+//! padded with huge finite values that *increase with the column index*,
+//! which preserves total monotonicity (see `pad` below).
+//!
+//! Performance notes (§Perf): index slices are `u32` (halving scratch
+//! bandwidth), and [`smawk_with_values`] returns the row-minimum *values*
+//! alongside the argmins so DP layers don't re-evaluate the cost at each
+//! winner.
+
+/// Value used for infeasible (k > j) entries. Strictly increasing in the
+/// column index so that padded regions cannot break total monotonicity,
+/// while staying far above any real objective value.
+#[inline]
+pub fn infeasible(col: usize) -> f64 {
+    1e300 * (1.0 + col as f64 * 1e-9)
+}
+
+/// Compute the (leftmost) argmin column of every row of an `n_rows × n_cols`
+/// totally monotone matrix given by `f(row, col)`.
+///
+/// Returns `argmin[row] = col`. `f` is called `O(n_rows + n_cols)` times.
+pub fn smawk(n_rows: usize, n_cols: usize, f: &mut impl FnMut(usize, usize) -> f64) -> Vec<usize> {
+    smawk_with_values(n_rows, n_cols, f)
+        .into_iter()
+        .map(|(c, _)| c)
+        .collect()
+}
+
+/// Like [`smawk`] but also returns the minimum value per row (saves the DP
+/// layers one extra evaluation per row).
+pub fn smawk_with_values(
+    n_rows: usize,
+    n_cols: usize,
+    f: &mut impl FnMut(usize, usize) -> f64,
+) -> Vec<(usize, f64)> {
+    let mut ans: Vec<(usize, f64)> = vec![(0, f64::INFINITY); n_rows];
+    if n_rows == 0 || n_cols == 0 {
+        return ans;
+    }
+    let rows: Vec<u32> = (0..n_rows as u32).collect();
+    let cols: Vec<u32> = (0..n_cols as u32).collect();
+    rec(&rows, &cols, f, &mut ans);
+    ans
+}
+
+fn rec(rows: &[u32], cols: &[u32], f: &mut impl FnMut(usize, usize) -> f64, ans: &mut [(usize, f64)]) {
+    if rows.is_empty() {
+        return;
+    }
+    // REDUCE: prune columns that cannot be the minimum of any row, keeping
+    // at most |rows| survivors. Ties keep the earlier (leftmost) column.
+    //
+    // `vals[i]` memoizes `f(rows[i], stack[i])` (NaN = not yet computed):
+    // the (row, col) pair at a given stack depth is fixed until that entry
+    // is popped, so the "top" side of every comparison is a lookup — this
+    // halves REDUCE's cost evaluations (§Perf).
+    let mut stack: Vec<u32> = Vec::with_capacity(rows.len());
+    let mut vals: Vec<f64> = Vec::with_capacity(rows.len());
+    for &c in cols {
+        loop {
+            let len = stack.len();
+            if len == 0 {
+                break;
+            }
+            let r = rows[len - 1] as usize;
+            let top_val = if vals[len - 1].is_nan() {
+                let v = f(r, stack[len - 1] as usize);
+                vals[len - 1] = v;
+                v
+            } else {
+                vals[len - 1]
+            };
+            if top_val <= f(r, c as usize) {
+                break;
+            }
+            stack.pop();
+            vals.pop();
+        }
+        if stack.len() < rows.len() {
+            stack.push(c);
+            vals.push(f64::NAN);
+        }
+    }
+    // Recurse on the odd-indexed rows with the surviving columns.
+    let odd: Vec<u32> = rows.iter().copied().skip(1).step_by(2).collect();
+    rec(&odd, &stack, f, ans);
+    // INTERPOLATE: fill even-indexed rows; by total monotonicity the argmin
+    // of rows[i] lies between the argmins of rows[i−1] and rows[i+1], so a
+    // single monotone pointer over the surviving columns suffices.
+    let mut idx = 0usize;
+    let mut i = 0usize;
+    while i < rows.len() {
+        let r = rows[i] as usize;
+        let stop_col = if i + 1 < rows.len() {
+            ans[rows[i + 1] as usize].0 as u32
+        } else {
+            *stack.last().unwrap()
+        };
+        let mut best_col = stack[idx] as usize;
+        let mut best_val = f(r, best_col);
+        while stack[idx] != stop_col {
+            idx += 1;
+            let c = stack[idx] as usize;
+            let v = f(r, c);
+            if v < best_val {
+                best_val = v;
+                best_col = c;
+            }
+        }
+        ans[r] = (best_col, best_val);
+        i += 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Brute-force row minima (leftmost argmin).
+    fn brute(n_rows: usize, n_cols: usize, f: &mut impl FnMut(usize, usize) -> f64) -> Vec<usize> {
+        (0..n_rows)
+            .map(|r| {
+                let mut best = f64::INFINITY;
+                let mut arg = 0;
+                for c in 0..n_cols {
+                    let v = f(r, c);
+                    if v < best {
+                        best = v;
+                        arg = c;
+                    }
+                }
+                arg
+            })
+            .collect()
+    }
+
+    /// Random totally monotone matrix: A[i][j] = D[j] + w(j, i) where w is
+    /// a Monge cost built from a convex function of (i − j).
+    fn monge_matrix(m: usize, seed: u64) -> impl FnMut(usize, usize) -> f64 {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let d: Vec<f64> = (0..m).map(|_| rng.next_f64() * 10.0).collect();
+        move |i: usize, j: usize| {
+            let diff = i as f64 - j as f64;
+            d[j] + diff * diff * 0.37 + (i as f64) * 0.11
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_on_monge_matrices() {
+        for seed in 0..20 {
+            let (n, m) = (1 + (seed as usize * 7) % 40, 1 + (seed as usize * 13) % 40);
+            let mut f1 = monge_matrix(m, seed);
+            let mut f2 = monge_matrix(m, seed);
+            let fast = smawk(n, m, &mut f1);
+            let slow = brute(n, m, &mut f2);
+            assert_eq!(fast, slow, "seed={seed} n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn values_match_argmins() {
+        let n = 50;
+        let mut f = monge_matrix(n, 7);
+        let with_vals = smawk_with_values(n, n, &mut f);
+        let mut f2 = monge_matrix(n, 7);
+        for (r, &(c, v)) in with_vals.iter().enumerate() {
+            assert_eq!(v, f2(r, c), "row {r}");
+        }
+    }
+
+    #[test]
+    fn staircase_padding_preserves_monotonicity() {
+        for seed in 0..10 {
+            let n = 30;
+            let mk = |seed: u64| {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed);
+                let d: Vec<f64> = (0..n).map(|_| rng.next_f64() * 5.0).collect();
+                move |i: usize, j: usize| {
+                    if j > i {
+                        infeasible(j)
+                    } else {
+                        let diff = (i - j) as f64;
+                        d[j] + diff * diff
+                    }
+                }
+            };
+            let mut f = mk(seed);
+            let mut f2 = mk(seed);
+            let fast = smawk(n, n, &mut f);
+            let slow = brute(n, n, &mut f2);
+            assert_eq!(fast, slow, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn single_row_and_single_col() {
+        let mut f = |_r: usize, c: usize| (c as f64 - 2.3).abs();
+        assert_eq!(smawk(1, 6, &mut f), vec![2]);
+        let mut g = |r: usize, _c: usize| r as f64;
+        assert_eq!(smawk(4, 1, &mut g), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn evaluation_count_is_linear() {
+        // The SMAWK contract: O(rows + cols) evaluations, not O(rows·cols).
+        let n = 4096;
+        let mut count = 0usize;
+        let mut f = |i: usize, j: usize| {
+            count += 1;
+            if j > i {
+                infeasible(j)
+            } else {
+                let diff = (i - j) as f64;
+                diff * diff + (j as f64) * 0.5
+            }
+        };
+        let _ = smawk(n, n, &mut f);
+        assert!(
+            count < 40 * n,
+            "evaluation count {count} is not O(n) for n={n}"
+        );
+    }
+
+    #[test]
+    fn argmin_is_nondecreasing() {
+        let n = 100;
+        let mut f = |i: usize, j: usize| {
+            if j > i {
+                infeasible(j)
+            } else {
+                let diff = (i - j) as f64 - 3.0;
+                diff * diff
+            }
+        };
+        let ans = smawk(n, n, &mut f);
+        for w in ans.windows(2) {
+            assert!(w[1] >= w[0], "argmins must be monotone: {ans:?}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! The ZipML dynamic program (Zhang et al., 2017) — the paper's exact
+//! baseline: `O(s·d²)` time.
+//!
+//! Two upgrades over the original are kept so the comparison is about the
+//! *algorithm*, not incidental engineering (and match how the paper ran
+//! it): the O(1) prefix-sum interval cost from §3 replaces the `O(d²)`
+//! precomputed cost matrix (so memory is `O(s·d)` for the traceback
+//! parents, not `O(d²)` — the original's memory wall was what stopped it at
+//! `d = 2^17` in the paper), and rows are computed in-place with two
+//! buffers.
+
+use super::{traceback_single, Prefix, Solution};
+
+/// Solve via the quadratic DP. Caller guarantees `2 ≤ s < d` and a
+/// non-degenerate range (see [`super::solve`]).
+pub fn solve(p: &Prefix, s: usize) -> Solution {
+    let n = p.len();
+    debug_assert!(s >= 2 && s < n);
+    // Level 2: MSE[2][j] = C[0, j].
+    let mut prev: Vec<f64> = (0..n).map(|j| p.cost(0, j)).collect();
+    let mut cur = vec![0.0f64; n];
+    let mut parents: Vec<Vec<u32>> = Vec::with_capacity(s.saturating_sub(2));
+    for _level in 3..=s {
+        let mut par = vec![0u32; n];
+        for j in 0..n {
+            let mut best = f64::INFINITY;
+            let mut arg = 0u32;
+            for k in 0..=j {
+                let v = prev[k] + p.cost(k, j);
+                if v < best {
+                    best = v;
+                    arg = k as u32;
+                }
+            }
+            cur[j] = best;
+            par[j] = arg;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        parents.push(par);
+    }
+    traceback_single(p, &parents, prev[n - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::exhaustive;
+    use crate::dist::Dist;
+
+    #[test]
+    fn agrees_with_exhaustive_on_random_instances() {
+        for seed in 0..30 {
+            let d = 6 + (seed as usize % 7);
+            let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(d, seed);
+            let p = Prefix::unweighted(&xs);
+            for s in 2..d {
+                let a = solve(&p, s);
+                let b = exhaustive::solve(&p, s);
+                assert!(
+                    crate::util::approx_eq(a.mse, b.mse, 1e-9, 1e-12),
+                    "seed={seed} d={d} s={s}: zipml={} exhaustive={}",
+                    a.mse,
+                    b.mse
+                );
+                assert!((a.recompute_mse(&p) - a.mse).abs() < 1e-9 * a.mse.max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn endpoints_always_included() {
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_sorted(50, 5);
+        let p = Prefix::unweighted(&xs);
+        for s in 2..10 {
+            let sol = solve(&p, s);
+            assert_eq!(sol.q_idx.first(), Some(&0));
+            assert_eq!(sol.q_idx.last(), Some(&49));
+            assert!(sol.q_idx.len() <= s);
+        }
+    }
+
+    #[test]
+    fn weighted_agrees_with_exhaustive() {
+        use crate::util::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        for seed in 0..10 {
+            let ys = Dist::Exponential { lambda: 1.0 }.sample_sorted(9, seed + 100);
+            let ws: Vec<f64> = (0..9).map(|_| 1.0 + rng.next_below(5) as f64).collect();
+            let p = Prefix::weighted(&ys, &ws);
+            for s in 2..8 {
+                let a = solve(&p, s);
+                let b = exhaustive::solve(&p, s);
+                assert!(
+                    crate::util::approx_eq(a.mse, b.mse, 1e-9, 1e-12),
+                    "seed={seed} s={s}: zipml={} exhaustive={}",
+                    a.mse,
+                    b.mse
+                );
+            }
+        }
+    }
+}

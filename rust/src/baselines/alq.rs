@@ -1,0 +1,187 @@
+//! ALQ (Faghri et al., 2020) as described in the paper's Appendix B:
+//!
+//! * Normalize the input by its L2 norm.
+//! * Fit a **truncated normal** to the normalized coordinates.
+//! * Iteratively optimize the quantization levels for the *fitted
+//!   distribution* (ten iterations, per the ALQ authors' suggestion).
+//!
+//! The level update is exact coordinate descent: with neighbours
+//! `q_{i−1}, q_{i+1}` fixed, the expected-variance contribution of `q_i`,
+//!
+//! ```text
+//! E(q) = ∫_{q_{i−1}}^{q} (q − x)(x − q_{i−1}) f(x) dx
+//!      + ∫_{q}^{q_{i+1}} (q_{i+1} − x)(x − q) f(x) dx,
+//! ```
+//!
+//! has derivative `g(q) = ∫_{q_{i−1}}^{q} (x − q_{i−1}) f − ∫_{q}^{q_{i+1}}
+//! (q_{i+1} − x) f`, which is non-decreasing in `q`; the root is found by
+//! bisection over truncated-normal partial moments (closed form via
+//! [`crate::util::erf`]).
+//!
+//! Complexity: `O(d)` for the fit + `O(iters · s · log(1/ε))` — independent
+//! of `d` after the moment pass, which is why ALQ is fast but only as good
+//! as its distributional assumption (exactly the behaviour in Fig. 3).
+
+use crate::util::erf::{truncnorm_mass, truncnorm_partial_mean};
+
+/// Compute ALQ quantization values for sorted input `xs` and budget `s`.
+pub fn solve(xs: &[f64], s: usize, iters: usize) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    assert!(s >= 2);
+    let d = xs.len() as f64;
+    let lo = xs[0];
+    let hi = *xs.last().unwrap();
+    if hi == lo {
+        return vec![lo];
+    }
+    // ---- Fit a truncated normal to the norm-normalized vector. ----
+    let norm = xs.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let scale = if norm > 0.0 { norm } else { 1.0 };
+    let v: Vec<f64> = xs.iter().map(|x| x / scale).collect();
+    let mean = v.iter().sum::<f64>() / d;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / d;
+    let sigma = var.sqrt().max(1e-12);
+    let (a, b) = (lo / scale, hi / scale); // truncation = observed range
+    // ---- Initialize levels at equally spaced positions. ----
+    let mut q: Vec<f64> = (0..s)
+        .map(|i| a + (b - a) * i as f64 / (s - 1) as f64)
+        .collect();
+    // ---- Ten fixed-point sweeps of exact coordinate descent. ----
+    for _ in 0..iters {
+        for i in 1..s - 1 {
+            q[i] = optimal_between(mean, sigma, q[i - 1], q[i + 1]);
+        }
+    }
+    // Map back to the input scale; endpoints are the observed min/max so
+    // the set covers X exactly.
+    let mut out: Vec<f64> = q.iter().map(|qi| qi * scale).collect();
+    out[0] = lo;
+    out[s - 1] = hi;
+    // Enforce monotonicity against float jitter.
+    for i in 1..s {
+        if out[i] < out[i - 1] {
+            out[i] = out[i - 1];
+        }
+    }
+    out.dedup();
+    out
+}
+
+/// Root of `g(q)` on `[lo, hi]` for the fitted N(mu, sigma²):
+/// `g(q) = [M1(lo,q) − lo·F(lo,q)] − [hi·F(q,hi) − M1(q,hi)]`.
+fn optimal_between(mu: f64, sigma: f64, lo: f64, hi: f64) -> f64 {
+    if hi <= lo {
+        return lo;
+    }
+    let g = |q: f64| -> f64 {
+        let left = truncnorm_partial_mean(mu, sigma, lo, q) - lo * truncnorm_mass(mu, sigma, lo, q);
+        let right =
+            hi * truncnorm_mass(mu, sigma, q, hi) - truncnorm_partial_mean(mu, sigma, q, hi);
+        left - right
+    };
+    // g is non-decreasing, g(lo) ≤ 0 ≤ g(hi): bisect.
+    let (mut l, mut r) = (lo, hi);
+    for _ in 0..60 {
+        let m = 0.5 * (l + r);
+        if g(m) > 0.0 {
+            r = m;
+        } else {
+            l = m;
+        }
+    }
+    0.5 * (l + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use crate::metrics::vnmse;
+
+    #[test]
+    fn near_optimal_on_gaussian_input() {
+        // On actually-normal data the fitted model is correct, so ALQ should
+        // land close to the true optimum.
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_sorted(8192, 1);
+        let q = solve(&xs, 8, 10);
+        let p = crate::avq::Prefix::unweighted(&xs);
+        let opt = crate::avq::solve(&p, 8, crate::avq::SolverKind::QuiverAccel).unwrap();
+        let e_alq = vnmse(&xs, &q);
+        let e_opt = opt.mse / xs.iter().map(|x| x * x).sum::<f64>();
+        assert!(
+            e_alq <= 1.5 * e_opt,
+            "ALQ on Gaussian should be near-optimal: {e_alq} vs {e_opt}"
+        );
+    }
+
+    #[test]
+    fn worse_than_optimal_on_lognormal() {
+        // On skewed data the normal fit is wrong — ALQ must lose to the
+        // exact solver (the gap Fig. 3 shows).
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(8192, 2);
+        let q = solve(&xs, 8, 10);
+        let p = crate::avq::Prefix::unweighted(&xs);
+        let opt = crate::avq::solve(&p, 8, crate::avq::SolverKind::QuiverAccel).unwrap();
+        let e_alq = crate::metrics::sum_variances(&xs, &q);
+        assert!(e_alq >= opt.mse, "ALQ can't beat the optimum");
+        assert!(
+            e_alq > 1.05 * opt.mse,
+            "expected a visible gap on LogNormal: alq={e_alq} opt={}",
+            opt.mse
+        );
+    }
+
+    #[test]
+    fn levels_sorted_and_covering() {
+        for (seed, (_, dist)) in Dist::paper_suite().into_iter().enumerate() {
+            let xs = dist.sample_sorted(2000, 40 + seed as u64);
+            for s in [2, 4, 16] {
+                let q = solve(&xs, s, 10);
+                assert!(crate::util::is_sorted(&q));
+                assert_eq!(q[0], xs[0]);
+                assert_eq!(*q.last().unwrap(), *xs.last().unwrap());
+                assert!(q.len() <= s);
+            }
+        }
+    }
+
+    #[test]
+    fn iterations_monotonically_refine() {
+        // More fixed-point iterations should not make the expected error
+        // (w.r.t. the input) dramatically worse; typically they improve it.
+        let xs = Dist::Normal { mu: 1.0, sigma: 2.0 }.sample_sorted(4096, 3);
+        let e1 = vnmse(&xs, &solve(&xs, 8, 1));
+        let e10 = vnmse(&xs, &solve(&xs, 8, 10));
+        assert!(e10 <= e1 * 1.05, "iter1={e1} iter10={e10}");
+    }
+
+    #[test]
+    fn interior_update_is_stationary_point() {
+        // The bisection root must satisfy g(q*) ≈ 0.
+        let (mu, sigma, lo, hi) = (0.2, 0.9, -1.0, 1.5);
+        let q = optimal_between(mu, sigma, lo, hi);
+        let eps = 1e-5;
+        let e = |qq: f64| {
+            // numeric E(q) via quadrature
+            let n = 4000;
+            let mut acc = 0.0;
+            for seg in 0..2 {
+                let (a, b) = if seg == 0 { (lo, qq) } else { (qq, hi) };
+                let h = (b - a) / n as f64;
+                for i in 0..n {
+                    let x = a + (i as f64 + 0.5) * h;
+                    let f = crate::util::erf::normal_pdf((x - mu) / sigma) / sigma;
+                    acc += if seg == 0 {
+                        (qq - x) * (x - lo) * f * h
+                    } else {
+                        (hi - x) * (x - qq) * f * h
+                    };
+                }
+            }
+            acc
+        };
+        let (e_minus, e_at, e_plus) = (e(q - eps), e(q), e(q + eps));
+        assert!(e_at <= e_minus + 1e-9 && e_at <= e_plus + 1e-9,
+            "q*={q} not a local min: {e_minus} {e_at} {e_plus}");
+    }
+}

@@ -1,0 +1,58 @@
+//! Distribution-agnostic uniform stochastic quantization: `s` evenly
+//! spaced values over `[min X, max X]`.
+//!
+//! This is the classic non-adaptive scheme (QSGD-style without norm
+//! bucketing) the paper's introduction contrasts with; it serves as the
+//! sanity floor in our figures — any adaptive method should beat it on the
+//! skewed distributions the paper targets.
+
+/// Evenly spaced quantization values covering the input range.
+pub fn solve(xs: &[f64], s: usize) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    assert!(s >= 2);
+    let lo = xs[0];
+    let hi = *xs.last().unwrap();
+    if hi == lo {
+        return vec![lo];
+    }
+    let step = (hi - lo) / (s - 1) as f64;
+    let mut q: Vec<f64> = (0..s).map(|i| lo + i as f64 * step).collect();
+    // Exact endpoints despite float rounding.
+    q[0] = lo;
+    q[s - 1] = hi;
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    #[test]
+    fn evenly_spaced_and_covering() {
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_sorted(1000, 1);
+        let q = solve(&xs, 5);
+        assert_eq!(q.len(), 5);
+        assert_eq!(q[0], xs[0]);
+        assert_eq!(q[4], *xs.last().unwrap());
+        let gaps: Vec<f64> = q.windows(2).map(|w| w[1] - w[0]).collect();
+        for g in &gaps {
+            assert!((g - gaps[0]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn matches_optimal_on_uniform_grid_input() {
+        // For input that IS a uniform grid, uniform quantization with s
+        // values where (d−1) divisible by (s−1) hits points exactly.
+        let xs: Vec<f64> = (0..9).map(|i| i as f64).collect();
+        let q = solve(&xs, 5);
+        assert_eq!(q, vec![0.0, 2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn degenerate_constant() {
+        let q = solve(&[2.0, 2.0], 4);
+        assert_eq!(q, vec![2.0]);
+    }
+}

@@ -1,0 +1,165 @@
+//! ZipML-CP: the candidate-points heuristic from Zhang et al. (2017), as
+//! described in the paper's Appendix B.
+//!
+//! Restrict the DP to `M+1` *candidate* quantization values (not
+//! necessarily input points) and solve optimally over those candidates,
+//! with the interval cost still summed over **all** of `X` (via the
+//! generalized O(1) endpoint cost, [`crate::avq::Prefix::cost_endpoints`]).
+//!
+//! Two candidate choices, as in Appendix B:
+//! * **Uniform**: `{ x_1 + ℓ·(x_d − x_1)/M }`.
+//! * **Quantile**: `{ x_{⌊1 + ℓ·(d−1)/M⌋} }`.
+//!
+//! Complexity: `O(d + s·M²)` (quadratic DP over candidates — the heuristic
+//! as ZipML ran it; the point of QUIVER-Hist is to beat this).
+
+use crate::avq::Prefix;
+
+/// Candidate-point selection rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Candidates {
+    Uniform,
+    Quantile,
+}
+
+/// Solve the candidate-restricted AVQ problem. `xs` must be sorted.
+/// Returns a sorted, covering set of ≤ `s` values.
+pub fn solve(xs: &[f64], s: usize, m: usize, rule: Candidates) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    assert!(s >= 2 && m >= 1);
+    let d = xs.len();
+    let lo = xs[0];
+    let hi = xs[d - 1];
+    if hi == lo {
+        return vec![lo];
+    }
+    // Build candidates (sorted, deduped, endpoints included).
+    let mut cands: Vec<f64> = match rule {
+        Candidates::Uniform => (0..=m)
+            .map(|l| lo + l as f64 * (hi - lo) / m as f64)
+            .collect(),
+        Candidates::Quantile => (0..=m)
+            .map(|l| xs[(l * (d - 1)) / m])
+            .collect(),
+    };
+    cands[0] = lo;
+    let last = cands.len() - 1;
+    cands[last] = hi;
+    cands.dedup();
+    let mc = cands.len();
+    if s >= mc {
+        return cands;
+    }
+    // pos[i] = number of input points ≤ cands[i] (so points in
+    // (cands[k], cands[j]] occupy positions pos[k] .. pos[j]−1).
+    let pos: Vec<usize> = cands
+        .iter()
+        .map(|&c| xs.partition_point(|&x| x <= c))
+        .collect();
+    let p = Prefix::unweighted(xs);
+    let cost = |k: usize, j: usize| -> f64 {
+        if pos[k] >= pos[j] {
+            0.0
+        } else {
+            p.cost_endpoints(cands[k], cands[j], pos[k], pos[j] - 1)
+        }
+    };
+    // Quadratic DP over candidates with parent traceback.
+    let mut prev: Vec<f64> = (0..mc).map(|j| cost(0, j)).collect();
+    let mut parents: Vec<Vec<u32>> = Vec::new();
+    for _level in 3..=s {
+        let mut cur = vec![f64::INFINITY; mc];
+        let mut par = vec![0u32; mc];
+        for j in 0..mc {
+            for k in 0..=j {
+                let v = prev[k] + cost(k, j);
+                if v < cur[j] {
+                    cur[j] = v;
+                    par[j] = k as u32;
+                }
+            }
+        }
+        prev = cur;
+        parents.push(par);
+    }
+    let mut idx = vec![mc - 1];
+    let mut j = mc - 1;
+    for par in parents.iter().rev() {
+        j = par[j] as usize;
+        idx.push(j);
+    }
+    idx.push(0);
+    idx.sort_unstable();
+    idx.dedup();
+    idx.into_iter().map(|i| cands[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::{self, SolverKind};
+    use crate::dist::Dist;
+    use crate::metrics::vnmse;
+
+    #[test]
+    fn quantile_candidates_with_m_eq_d_recover_optimal() {
+        // With M = d−1 the quantile candidates are exactly X, so the
+        // restricted DP equals the unrestricted optimum.
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(200, 1);
+        let p = avq::Prefix::unweighted(&xs);
+        for s in [3, 4, 8] {
+            let opt = avq::solve(&p, s, SolverKind::ZipMl).unwrap();
+            let q = solve(&xs, s, xs.len() - 1, Candidates::Quantile);
+            let err = crate::metrics::sum_variances(&xs, &q);
+            assert!(
+                crate::util::approx_eq(err, opt.mse, 1e-9, 1e-9),
+                "s={s}: cp={err} opt={}",
+                opt.mse
+            );
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_more_candidates() {
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(4000, 2);
+        let e20 = vnmse(&xs, &solve(&xs, 8, 20, Candidates::Uniform));
+        let e500 = vnmse(&xs, &solve(&xs, 8, 500, Candidates::Uniform));
+        assert!(
+            e500 <= e20 * (1.0 + 1e-9),
+            "more candidates can't hurt: M=20 → {e20}, M=500 → {e500}"
+        );
+    }
+
+    #[test]
+    fn never_better_than_optimal() {
+        let xs = Dist::Weibull { shape: 1.0, scale: 1.0 }.sample_sorted(2000, 3);
+        let p = avq::Prefix::unweighted(&xs);
+        let opt = avq::solve(&p, 8, SolverKind::QuiverAccel).unwrap();
+        for rule in [Candidates::Uniform, Candidates::Quantile] {
+            let q = solve(&xs, 8, 300, rule);
+            let err = crate::metrics::sum_variances(&xs, &q);
+            assert!(err + 1e-9 >= opt.mse, "{rule:?}: {err} < optimal {}", opt.mse);
+        }
+    }
+
+    #[test]
+    fn covers_range_for_both_rules() {
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_sorted(999, 4);
+        for rule in [Candidates::Uniform, Candidates::Quantile] {
+            for m in [7, 64, 1000] {
+                let q = solve(&xs, 4, m, rule);
+                assert!(q[0] <= xs[0] && *q.last().unwrap() >= *xs.last().unwrap());
+                assert!(q.len() <= 4 || q.len() <= m + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicated_input_quantiles() {
+        let xs = vec![1.0; 50].into_iter().chain(vec![2.0; 50]).collect::<Vec<_>>();
+        let q = solve(&xs, 4, 10, Candidates::Quantile);
+        assert!(q.len() >= 2);
+        assert_eq!(q[0], 1.0);
+        assert_eq!(*q.last().unwrap(), 2.0);
+    }
+}

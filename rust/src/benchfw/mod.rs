@@ -1,0 +1,207 @@
+//! In-tree micro-benchmark framework (criterion is unavailable offline).
+//!
+//! Warmup + fixed sample count, reporting min/median/mean/max and median
+//! absolute deviation; plus a table printer and CSV writer shared by the
+//! figure harnesses (`quiver figure …`) and `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over one benchmark's samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    pub fn median(&self) -> Duration {
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        v[v.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    pub fn max(&self) -> Duration {
+        *self.samples.iter().max().unwrap()
+    }
+
+    pub fn mean(&self) -> Duration {
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> Duration {
+        let med = self.median();
+        let mut devs: Vec<Duration> = self
+            .samples
+            .iter()
+            .map(|s| if *s > med { *s - med } else { med - *s })
+            .collect();
+        devs.sort_unstable();
+        devs[devs.len() / 2]
+    }
+
+    /// `median ± mad` as a human string.
+    pub fn human(&self) -> String {
+        format!("{} ± {}", fmt_duration(self.median()), fmt_duration(self.mad()))
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `samples` measured iterations.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Stats {
+    assert!(samples >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed());
+    }
+    Stats { name: name.to_string(), samples: out }
+}
+
+/// Format a duration with sensible units.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// A printable/CSV-able results table (one paper figure series).
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render aligned to stdout.
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+
+    /// CSV serialization (figures can be re-plotted elsewhere).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under `dir/<slug>.csv`.
+    pub fn save_csv(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = self
+            .title
+            .to_lowercase()
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = dir.join(format!("{slug}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let st = bench("noop", 2, 10, || 1 + 1);
+        assert_eq!(st.samples.len(), 10);
+        assert!(st.median() <= st.max());
+        assert!(st.min() <= st.median());
+    }
+
+    #[test]
+    fn bench_detects_slower_work() {
+        // Data-dependent loops so release-mode LLVM can't closed-form them.
+        let small = vec![1u64; 100];
+        let big = vec![1u64; 2_000_000];
+        let fast = bench("fast", 1, 5, || {
+            std::hint::black_box(&small).iter().sum::<u64>()
+        });
+        let slow = bench("slow", 1, 5, || {
+            std::hint::black_box(&big).iter().sum::<u64>()
+        });
+        assert!(slow.median() > fast.median());
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12ns");
+        assert!(fmt_duration(Duration::from_micros(15)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(15)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn table_round_trip() {
+        let mut t = Table::new("Fig X", &["d", "runtime"]);
+        t.row(vec!["1024".into(), "5ms".into()]);
+        t.row(vec!["2048".into(), "9ms".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("d,runtime\n1024,5ms\n"));
+        t.print(); // smoke
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Configuration: `key = value` files with CLI `--key value` overrides
+//! (no serde/toml offline; this covers everything the binaries need).
+//!
+//! ```text
+//! # quiver.conf
+//! s = 16
+//! hist_m = 400
+//! exact_max_d = 65536
+//! addr = 127.0.0.1:7071
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed configuration: ordered key → value strings with typed getters.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `key = value` lines; `#` comments and blank lines ignored.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", no + 1))?;
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Apply `--key value` style overrides (e.g. from the CLI tail).
+    pub fn apply_overrides(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --key, got {:?}", args[i]))?;
+            let v = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("--{k} needs a value"))?;
+            self.values.insert(k.replace('-', "_"), v.clone());
+            i += 2;
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, k: &str, v: impl ToString) {
+        self.values.insert(k.to_string(), v.to_string());
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.values.get(k).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{k}={v} is not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, k: &str, default: u64) -> Result<u64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{k}={v} is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, k: &str, default: f64) -> Result<f64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{k}={v} is not a number")),
+        }
+    }
+
+    pub fn bool_or(&self, k: &str, default: bool) -> Result<bool> {
+        match self.get(k) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => anyhow::bail!("{k}={v} is not a bool"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_typed_getters() {
+        let c = Config::parse(
+            "# comment\n s = 16 \nhist_m=400\naddr = 127.0.0.1:7071 # inline\nlr = 0.25\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.usize_or("s", 0).unwrap(), 16);
+        assert_eq!(c.usize_or("hist_m", 0).unwrap(), 400);
+        assert_eq!(c.get_or("addr", ""), "127.0.0.1:7071");
+        assert_eq!(c.f64_or("lr", 0.0).unwrap(), 0.25);
+        assert!(c.bool_or("flag", false).unwrap());
+        assert_eq!(c.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(Config::parse("novalue\n").is_err());
+        let c = Config::parse("s = x\n").unwrap();
+        assert!(c.usize_or("s", 0).is_err());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("s = 4\n").unwrap();
+        c.apply_overrides(&["--s".into(), "32".into(), "--hist-m".into(), "777".into()])
+            .unwrap();
+        assert_eq!(c.usize_or("s", 0).unwrap(), 32);
+        assert_eq!(c.usize_or("hist_m", 0).unwrap(), 777);
+        assert!(c.apply_overrides(&["oops".into()]).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Gradient aggregation: decode workers' AVQ-compressed gradients and
+//! average them (the server side of distributed mean estimation — the
+//! paper's headline application, §1).
+//!
+//! Because every worker's quantization is *unbiased*, the mean of the
+//! decoded gradients is an unbiased estimate of the mean gradient, with
+//! variance equal to the mean of the per-worker AVQ objectives divided by
+//! n² — which is exactly why minimizing the sum of variances (the AVQ
+//! objective) minimizes the aggregation error.
+
+use anyhow::{bail, Result};
+
+use crate::sq::{self, CompressedVec};
+
+/// Result of aggregating one round.
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    /// Mean of the decoded gradient estimates.
+    pub mean: Vec<f32>,
+    /// Mean of the workers' reported local losses.
+    pub mean_loss: f32,
+    /// Number of submissions aggregated.
+    pub n: usize,
+    /// Total compressed payload bytes received this round.
+    pub bytes: usize,
+}
+
+/// Decode and average `(loss, compressed-gradient)` submissions.
+pub fn aggregate(submissions: &[(f32, CompressedVec)]) -> Result<Aggregate> {
+    if submissions.is_empty() {
+        bail!("no submissions to aggregate");
+    }
+    let d = submissions[0].1.d as usize;
+    let mut mean = vec![0f64; d];
+    let mut loss_acc = 0f64;
+    let mut bytes = 0usize;
+    for (loss, c) in submissions {
+        if c.d as usize != d {
+            bail!("dimension mismatch: {} vs {d}", c.d);
+        }
+        bytes += c.wire_size();
+        loss_acc += *loss as f64;
+        let decoded = sq::decompress(c);
+        for (m, v) in mean.iter_mut().zip(decoded) {
+            *m += v;
+        }
+    }
+    let n = submissions.len();
+    let inv = 1.0 / n as f64;
+    Ok(Aggregate {
+        mean: mean.into_iter().map(|v| (v * inv) as f32).collect(),
+        mean_loss: (loss_acc * inv) as f32,
+        n,
+        bytes,
+    })
+}
+
+/// In-place SGD step: `params -= lr * grad`.
+pub fn sgd_step(params: &mut [f32], grad: &[f32], lr: f32) {
+    debug_assert_eq!(params.len(), grad.len());
+    for (p, g) in params.iter_mut().zip(grad) {
+        *p -= lr * g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::histogram::{solve_hist, HistConfig};
+    use crate::dist::Dist;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn compress_vec(xs: &[f64], s: usize, seed: u64) -> CompressedVec {
+        let sol = solve_hist(xs, s, &HistConfig::fixed(256)).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        sq::compress(xs, &sol.q, &mut rng)
+    }
+
+    #[test]
+    fn aggregate_is_unbiased_mean() {
+        // Average many compressed copies of the same vector: converges to it.
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(2000, 1);
+        let subs: Vec<(f32, CompressedVec)> = (0..64)
+            .map(|i| (1.0, compress_vec(&xs, 16, 100 + i)))
+            .collect();
+        let agg = aggregate(&subs).unwrap();
+        assert_eq!(agg.n, 64);
+        let mut worst = 0f64;
+        for (m, x) in agg.mean.iter().zip(&xs) {
+            worst = worst.max((*m as f64 - x).abs());
+        }
+        // Single-copy quantization error shrinks ~√64 when averaged.
+        let span = 6.0; // ~N(0,1) range
+        assert!(worst < span / 16.0 * 3.0, "worst deviation {worst}");
+        assert!((agg.mean_loss - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let a = compress_vec(&[1.0, 2.0, 3.0, 4.0], 2, 1);
+        let b = compress_vec(&[1.0, 2.0, 3.0], 2, 2);
+        assert!(aggregate(&[(0.0, a), (0.0, b)]).is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let xs = Dist::Exponential { lambda: 1.0 }.sample_vec(1000, 3);
+        let c = compress_vec(&xs, 16, 7);
+        let expected = c.wire_size() * 3;
+        let subs = vec![(0.5, c.clone()), (0.5, c.clone()), (0.5, c)];
+        let agg = aggregate(&subs).unwrap();
+        assert_eq!(agg.bytes, expected);
+    }
+
+    #[test]
+    fn sgd_step_basic() {
+        let mut p = vec![1.0f32, 2.0, 3.0];
+        sgd_step(&mut p, &[1.0, 1.0, -1.0], 0.5);
+        assert_eq!(p, vec![0.5, 1.5, 3.5]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Bounded job queue with batching and backpressure — the admission-control
+//! stage of the compression service.
+//!
+//! Producers ([`Batcher::submit`] / [`Batcher::try_submit`]) enqueue jobs;
+//! a pool of solver threads pulls *batches* ([`Batcher::next_batch`]):
+//! up to `max_batch` jobs, waiting at most `max_wait` after the first
+//! arrival (classic size-or-timeout dynamic batching, as in serving
+//! systems). A full queue blocks (`submit`) or rejects (`try_submit` →
+//! protocol `Busy`) — backpressure instead of unbounded memory.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bounded multi-producer multi-consumer batching queue.
+pub struct Batcher<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Batcher<T> {
+    /// `capacity`: max queued jobs; `max_batch`: jobs per pull;
+    /// `max_wait`: max linger after the first job of a batch arrives.
+    pub fn new(capacity: usize, max_batch: usize, max_wait: Duration) -> Self {
+        assert!(capacity >= 1 && max_batch >= 1);
+        Self {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+            max_batch,
+            max_wait,
+        }
+    }
+
+    /// Blocking submit; returns `false` if the queue is closed.
+    pub fn submit(&self, job: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.queue.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(job);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Non-blocking submit; `Err(job)` when full or closed (caller replies
+    /// `Busy`).
+    pub fn try_submit(&self, job: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.queue.len() >= self.capacity {
+            return Err(job);
+        }
+        g.queue.push_back(job);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pull the next batch (blocking). `None` when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        // Wait for the first job.
+        while g.queue.is_empty() {
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        // Linger up to max_wait for the batch to fill.
+        let deadline = Instant::now() + self.max_wait;
+        while g.queue.len() < self.max_batch && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (gg, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = gg;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.queue.len().min(self.max_batch);
+        let batch: Vec<T> = g.queue.drain(..take).collect();
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current depth (for metrics).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let b = Batcher::new(64, 4, Duration::from_millis(1));
+        for i in 0..10 {
+            b.submit(i).then_some(()).unwrap();
+        }
+        let mut seen = vec![];
+        while seen.len() < 10 {
+            let batch = b.next_batch().unwrap();
+            assert!(batch.len() <= 4 && !batch.is_empty());
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>(), "FIFO order");
+    }
+
+    #[test]
+    fn try_submit_backpressure() {
+        let b = Batcher::new(2, 2, Duration::from_millis(1));
+        assert!(b.try_submit(1).is_ok());
+        assert!(b.try_submit(2).is_ok());
+        assert_eq!(b.try_submit(3), Err(3), "full queue rejects");
+        assert_eq!(b.depth(), 2);
+        let _ = b.next_batch().unwrap();
+        assert!(b.try_submit(3).is_ok());
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(8, 8, Duration::from_millis(1));
+        b.submit(1);
+        b.submit(2);
+        b.close();
+        assert!(!b.submit(3), "submit after close fails");
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_no_loss_no_dup() {
+        let b = Arc::new(Batcher::new(16, 5, Duration::from_millis(2)));
+        let producers = 4;
+        let per = 500;
+        let mut handles = vec![];
+        for p in 0..producers {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    assert!(b.submit(p * per + i));
+                }
+            }));
+        }
+        let consumers = 3;
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut chandles = vec![];
+        for _ in 0..consumers {
+            let b = b.clone();
+            let seen = seen.clone();
+            chandles.push(std::thread::spawn(move || {
+                while let Some(batch) = b.next_batch() {
+                    seen.lock().unwrap().extend(batch);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Wait until everything is consumed, then close.
+        while seen.lock().unwrap().len() < producers * per {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        b.close();
+        for h in chandles {
+            h.join().unwrap();
+        }
+        let mut all = seen.lock().unwrap().clone();
+        all.sort_unstable();
+        assert_eq!(all, (0..producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn linger_collects_stragglers() {
+        let b = Arc::new(Batcher::new(64, 8, Duration::from_millis(50)));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            for i in 0..4 {
+                b2.submit(i);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let batch = b.next_batch().unwrap();
+        t.join().unwrap();
+        // The 50ms linger should have collected all 4 jobs arriving 5ms apart.
+        assert_eq!(batch.len(), 4, "linger should batch stragglers: {batch:?}");
+    }
+}

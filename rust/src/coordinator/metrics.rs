@@ -1,0 +1,157 @@
+//! Coordinator metrics: lock-free counters + a fixed-bucket latency
+//! histogram, snapshotted for the CLI/examples to print.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Microsecond latency histogram with power-of-two buckets from 1µs to
+/// ~67s (27 buckets).
+#[derive(Debug, Default)]
+pub struct LatencyHisto {
+    buckets: [AtomicU64; 27],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHisto {
+    pub fn record_us(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(26);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket counts (upper bucket bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 27
+    }
+}
+
+/// Service-wide counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted into the queue.
+    pub accepted: AtomicU64,
+    /// Requests rejected with `Busy` (backpressure).
+    pub rejected: AtomicU64,
+    /// Requests completed.
+    pub completed: AtomicU64,
+    /// Raw input bytes received.
+    pub bytes_in: AtomicU64,
+    /// Compressed bytes produced.
+    pub bytes_out: AtomicU64,
+    /// End-to-end service latency.
+    pub latency: LatencyHisto,
+    /// Solver-only latency.
+    pub solve_latency: LatencyHisto,
+}
+
+impl Metrics {
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Effective compression ratio so far.
+    pub fn ratio(&self) -> f64 {
+        let out = self.bytes_out.load(Ordering::Relaxed);
+        if out == 0 {
+            0.0
+        } else {
+            self.bytes_in.load(Ordering::Relaxed) as f64 / out as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "accepted={} rejected={} completed={} ratio={:.2}x mean={:.0}µs p50={}µs p99={}µs solve_mean={:.0}µs",
+            self.accepted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.ratio(),
+            self.latency.mean_us(),
+            self.latency.quantile_us(0.5),
+            self.latency.quantile_us(0.99),
+            self.solve_latency.mean_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_buckets_and_quantiles() {
+        let h = LatencyHisto::default();
+        for us in [1u64, 2, 4, 100, 100, 100, 10_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.mean_us() > 0.0);
+        let p50 = h.quantile_us(0.5);
+        assert!((64..=256).contains(&p50), "p50={p50}");
+        let p99 = h.quantile_us(0.99);
+        assert!(p99 >= 8192, "p99={p99}");
+    }
+
+    #[test]
+    fn zero_count_is_safe() {
+        let h = LatencyHisto::default();
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn metrics_ratio() {
+        let m = Metrics::default();
+        m.add(&m.bytes_in, 4000);
+        m.add(&m.bytes_out, 500);
+        assert!((m.ratio() - 8.0).abs() < 1e-12);
+        assert!(m.summary().contains("ratio=8.00x"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(Metrics::default());
+        let mut hs = vec![];
+        for _ in 0..8 {
+            let m = m.clone();
+            hs.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    m.add(&m.completed, 1);
+                    m.latency.record_us(i % 500 + 1);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.completed.load(Ordering::Relaxed), 8000);
+        assert_eq!(m.latency.count(), 8000);
+    }
+}

@@ -1,0 +1,25 @@
+//! Layer 3: the Rust coordinator.
+//!
+//! Two deployments of the paper's algorithms as a *system*:
+//!
+//! * **Federated parameter server** ([`server`], [`worker`],
+//!   [`aggregator`], [`tasks`]): synchronous-round training where workers
+//!   compress gradient uplinks with AVQ. Gradients come from the
+//!   AOT-compiled `model_grad` artifact through [`crate::runtime`] —
+//!   Python never runs on the request path.
+//! * **Compression service** ([`service`], [`batcher`], [`router`]): an
+//!   on-demand vector-quantization microservice with dynamic batching,
+//!   bounded-queue backpressure and size-based solver routing.
+//!
+//! Shared plumbing: binary [`codec`], framed [`protocol`], [`metrics`].
+
+pub mod aggregator;
+pub mod batcher;
+pub mod codec;
+pub mod metrics;
+pub mod protocol;
+pub mod router;
+pub mod server;
+pub mod service;
+pub mod tasks;
+pub mod worker;

@@ -1,0 +1,257 @@
+//! The coordinator wire protocol: length-prefixed, tagged binary frames
+//! over TCP (or any `Read + Write` transport).
+//!
+//! ```text
+//! frame  := len:u32 tag:u8 payload[len-1]
+//! ```
+//!
+//! Two services share the framing:
+//!
+//! * **Federated parameter server** (`Hello`/`Welcome`/`RoundStart`/
+//!   `GradSubmit`/`RoundResult`/`Shutdown`) — workers pull parameters,
+//!   push AVQ-compressed gradients.
+//! * **Compression service** (`CompressRequest`/`CompressReply`) — clients
+//!   submit raw vectors, the service returns the compressed form plus
+//!   solver statistics (the "AVQ as a microservice" deployment §1
+//!   motivates for, e.g., KV-cache or dataset quantization).
+
+use std::io::{Read, Write};
+
+use super::codec::{DecodeError, Reader, Writer};
+use crate::sq::CompressedVec;
+
+/// Hard cap on frame size (guards the server against bogus lengths).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker → server: join the training job.
+    Hello { worker_id: u64 },
+    /// Server → worker: admission + job shape.
+    Welcome { worker_id: u64, dim: u64, rounds: u64 },
+    /// Server → worker: new round with current parameters.
+    RoundStart { round: u64, params: Vec<f32> },
+    /// Worker → server: compressed gradient for `round`.
+    GradSubmit { worker_id: u64, round: u64, loss: f32, grad: CompressedVec },
+    /// Server → worker: round accepted (ack with aggregate train loss).
+    RoundResult { round: u64, mean_loss: f32 },
+    /// Server → worker: training finished.
+    Shutdown,
+    /// Client → compression service: quantize `data` to `s` values.
+    CompressRequest { request_id: u64, s: u32, data: Vec<f32> },
+    /// Compression service → client.
+    CompressReply {
+        request_id: u64,
+        compressed: CompressedVec,
+        /// Which solver the router picked (figure-legend name).
+        solver: String,
+        /// Solver wall time in microseconds.
+        solve_us: u64,
+    },
+    /// Either side: service is overloaded, retry later (backpressure).
+    Busy { request_id: u64 },
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::Welcome { .. } => 2,
+            Msg::RoundStart { .. } => 3,
+            Msg::GradSubmit { .. } => 4,
+            Msg::RoundResult { .. } => 5,
+            Msg::Shutdown => 6,
+            Msg::CompressRequest { .. } => 7,
+            Msg::CompressReply { .. } => 8,
+            Msg::Busy { .. } => 9,
+        }
+    }
+
+    /// Serialize to a full frame (length prefix included).
+    pub fn to_frame(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(64);
+        w.u8(self.tag());
+        match self {
+            Msg::Hello { worker_id } => {
+                w.u64(*worker_id);
+            }
+            Msg::Welcome { worker_id, dim, rounds } => {
+                w.u64(*worker_id).u64(*dim).u64(*rounds);
+            }
+            Msg::RoundStart { round, params } => {
+                w.u64(*round).f32s(params);
+            }
+            Msg::GradSubmit { worker_id, round, loss, grad } => {
+                w.u64(*worker_id).u64(*round).f32(*loss).bytes(&grad.to_bytes());
+            }
+            Msg::RoundResult { round, mean_loss } => {
+                w.u64(*round).f32(*mean_loss);
+            }
+            Msg::Shutdown => {}
+            Msg::CompressRequest { request_id, s, data } => {
+                w.u64(*request_id).u32(*s).f32s(data);
+            }
+            Msg::CompressReply { request_id, compressed, solver, solve_us } => {
+                w.u64(*request_id)
+                    .bytes(&compressed.to_bytes())
+                    .string(solver)
+                    .u64(*solve_us);
+            }
+            Msg::Busy { request_id } => {
+                w.u64(*request_id);
+            }
+        }
+        let body = w.finish();
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse a frame body (after the length prefix was consumed).
+    pub fn from_body(body: &[u8]) -> Result<Msg, DecodeError> {
+        let mut r = Reader::new(body);
+        let tag = r.u8()?;
+        let msg = match tag {
+            1 => Msg::Hello { worker_id: r.u64()? },
+            2 => Msg::Welcome { worker_id: r.u64()?, dim: r.u64()?, rounds: r.u64()? },
+            3 => Msg::RoundStart { round: r.u64()?, params: r.f32s()? },
+            4 => {
+                let worker_id = r.u64()?;
+                let round = r.u64()?;
+                let loss = r.f32()?;
+                let blob = r.bytes()?;
+                let grad = CompressedVec::from_bytes(&blob)
+                    .ok_or(DecodeError("malformed compressed vector"))?;
+                Msg::GradSubmit { worker_id, round, loss, grad }
+            }
+            5 => Msg::RoundResult { round: r.u64()?, mean_loss: r.f32()? },
+            6 => Msg::Shutdown,
+            7 => Msg::CompressRequest { request_id: r.u64()?, s: r.u32()?, data: r.f32s()? },
+            8 => {
+                let request_id = r.u64()?;
+                let blob = r.bytes()?;
+                let compressed = CompressedVec::from_bytes(&blob)
+                    .ok_or(DecodeError("malformed compressed vector"))?;
+                let solver = r.string()?;
+                let solve_us = r.u64()?;
+                Msg::CompressReply { request_id, compressed, solver, solve_us }
+            }
+            9 => Msg::Busy { request_id: r.u64()? },
+            _ => return Err(DecodeError("unknown message tag")),
+        };
+        r.expect_end()?;
+        Ok(msg)
+    }
+}
+
+/// Write one frame to a stream.
+pub fn send(stream: &mut impl Write, msg: &Msg) -> std::io::Result<()> {
+    stream.write_all(&msg.to_frame())?;
+    stream.flush()
+}
+
+/// Read one frame from a stream (blocking). Returns `Ok(None)` on clean EOF
+/// at a frame boundary.
+pub fn recv(stream: &mut impl Read) -> std::io::Result<Option<Msg>> {
+    let mut len_buf = [0u8; 4];
+    match stream.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body)?;
+    Msg::from_body(&body)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sq::codec::encode;
+
+    fn sample_compressed() -> CompressedVec {
+        encode(&[0, 1, 2, 3, 2, 1], &[0.0, 0.5, 1.0, 2.0])
+    }
+
+    fn roundtrip(msg: Msg) {
+        let frame = msg.to_frame();
+        let got = Msg::from_body(&frame[4..]).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Hello { worker_id: 3 });
+        roundtrip(Msg::Welcome { worker_id: 3, dim: 85002, rounds: 100 });
+        roundtrip(Msg::RoundStart { round: 9, params: vec![1.0, -2.0, 0.5] });
+        roundtrip(Msg::GradSubmit {
+            worker_id: 1,
+            round: 9,
+            loss: 2.5,
+            grad: sample_compressed(),
+        });
+        roundtrip(Msg::RoundResult { round: 9, mean_loss: 1.25 });
+        roundtrip(Msg::Shutdown);
+        roundtrip(Msg::CompressRequest { request_id: 77, s: 16, data: vec![0.0; 100] });
+        roundtrip(Msg::CompressReply {
+            request_id: 77,
+            compressed: sample_compressed(),
+            solver: "quiver-hist(M=400)".into(),
+            solve_us: 1234,
+        });
+        roundtrip(Msg::Busy { request_id: 77 });
+    }
+
+    #[test]
+    fn stream_send_recv() {
+        let mut buf: Vec<u8> = Vec::new();
+        let messages = vec![
+            Msg::Hello { worker_id: 1 },
+            Msg::RoundStart { round: 0, params: vec![0.5; 10] },
+            Msg::Shutdown,
+        ];
+        for m in &messages {
+            send(&mut buf, m).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(buf);
+        for m in &messages {
+            let got = recv(&mut cur).unwrap().unwrap();
+            assert_eq!(&got, m);
+        }
+        assert!(recv(&mut cur).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        // Unknown tag.
+        assert!(Msg::from_body(&[42]).is_err());
+        // Trailing garbage.
+        let mut frame = Msg::Hello { worker_id: 5 }.to_frame();
+        frame.push(0);
+        let body = &frame[4..];
+        assert!(Msg::from_body(body).is_err());
+        // Oversized frame length.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut cur = std::io::Cursor::new(bad);
+        assert!(recv(&mut cur).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_io_error() {
+        let frame = Msg::RoundStart { round: 1, params: vec![1.0; 8] }.to_frame();
+        let mut cur = std::io::Cursor::new(frame[..10].to_vec());
+        assert!(recv(&mut cur).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Solver routing policy: which AVQ algorithm serves a given request.
+//!
+//! The paper's own guidance (§7–§8): exact Accelerated QUIVER is feasible
+//! on the fly up to ~1M coordinates (≈250 ms), while the histogram variant
+//! handles 100M+ within a millisecond at near-optimal error. The router
+//! encodes that crossover, plus a latency-budget override so operators can
+//! trade error for tail latency per deployment.
+
+use crate::avq::histogram::{solve_hist, HistConfig};
+use crate::avq::{self, Prefix, Solution, SolverKind};
+
+/// Routing policy configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Inputs up to this size are solved exactly (sorted + Acc-QUIVER).
+    pub exact_max_d: usize,
+    /// Histogram bins for the near-optimal path (paper: 100–1000).
+    pub hist_m: usize,
+    /// Seed for the histogram's stochastic rounding.
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        // 64K crossover keeps worst-case service latency in the low
+        // milliseconds on this hardware while staying exactly optimal for
+        // the bulk of gradient-sized requests.
+        Self { exact_max_d: 1 << 16, hist_m: 400, seed: 0xA11CE }
+    }
+}
+
+/// The routing decision for one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    /// Sort + exact Accelerated QUIVER.
+    Exact,
+    /// O(d + s·M) histogram path (no sort needed).
+    Hist { m: usize },
+}
+
+impl Route {
+    /// Figure/metrics label.
+    pub fn label(&self) -> String {
+        match self {
+            Route::Exact => "quiver-accel".into(),
+            Route::Hist { m } => format!("quiver-hist(M={m})"),
+        }
+    }
+}
+
+/// Stateless router (cheap to copy into worker threads).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Router {
+    pub cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Decide the route for a `d`-dimensional request.
+    pub fn route(&self, d: usize) -> Route {
+        if d <= self.cfg.exact_max_d {
+            Route::Exact
+        } else {
+            Route::Hist { m: self.cfg.hist_m }
+        }
+    }
+
+    /// Execute the routed solve: returns the solution and the route taken.
+    ///
+    /// Input need not be sorted (the exact path sorts internally; the
+    /// histogram path never needs to).
+    pub fn solve(&self, xs: &[f64], s: usize) -> Result<(Solution, Route), avq::AvqError> {
+        let route = self.route(xs.len());
+        let sol = match route {
+            Route::Exact => {
+                let mut v = xs.to_vec();
+                v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                let p = Prefix::unweighted(&v);
+                avq::solve(&p, s, SolverKind::QuiverAccel)?
+            }
+            Route::Hist { m } => {
+                let cfg = HistConfig { m, inner: SolverKind::QuiverAccel, seed: self.cfg.seed };
+                solve_hist(xs, s, &cfg)?
+            }
+        };
+        Ok((sol, route))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    #[test]
+    fn crossover_at_exact_max_d() {
+        let r = Router::new(RouterConfig { exact_max_d: 1000, hist_m: 100, seed: 1 });
+        assert_eq!(r.route(1000), Route::Exact);
+        assert_eq!(r.route(1001), Route::Hist { m: 100 });
+        assert_eq!(r.route(1), Route::Exact);
+    }
+
+    #[test]
+    fn exact_route_is_optimal() {
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(512, 3);
+        let r = Router::default();
+        let (sol, route) = r.solve(&xs, 8).unwrap();
+        assert_eq!(route, Route::Exact);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = Prefix::unweighted(&sorted);
+        let opt = avq::solve(&p, 8, SolverKind::QuiverAccel).unwrap();
+        assert!((sol.mse - opt.mse).abs() < 1e-9 * opt.mse.max(1.0));
+    }
+
+    #[test]
+    fn hist_route_near_optimal() {
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(100_000, 4);
+        let r = Router::new(RouterConfig { exact_max_d: 1 << 10, hist_m: 512, seed: 2 });
+        let (sol, route) = r.solve(&xs, 8).unwrap();
+        assert_eq!(route, Route::Hist { m: 512 });
+        let mut sorted = xs.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let err = crate::metrics::sum_variances(&sorted, &sol.q);
+        let p = Prefix::unweighted(&sorted);
+        let opt = avq::solve(&p, 8, SolverKind::QuiverAccel).unwrap();
+        assert!(err <= 1.1 * opt.mse, "hist err {err} vs opt {}", opt.mse);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Route::Exact.label(), "quiver-accel");
+        assert_eq!(Route::Hist { m: 400 }.label(), "quiver-hist(M=400)");
+    }
+}

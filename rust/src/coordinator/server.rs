@@ -1,0 +1,247 @@
+//! The federated parameter server (leader): synchronous-round training
+//! with AVQ-compressed uplink gradients.
+//!
+//! Topology: one leader, `workers` TCP clients. Each round the leader
+//! broadcasts the parameters, collects every worker's compressed gradient
+//! (with a straggler timeout), aggregates ([`super::aggregator`]), applies
+//! the update, and acks. Python never runs here — workers obtain
+//! gradients through the PJRT runtime artifacts.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::aggregator::{aggregate, sgd_step};
+use super::protocol::{recv, send, Msg};
+
+/// Leader configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; use port 0 for an ephemeral port (tests).
+    pub addr: String,
+    /// Number of workers to admit before training starts.
+    pub workers: usize,
+    /// Number of synchronous rounds.
+    pub rounds: u64,
+    /// Model dimension (validated against submissions).
+    pub dim: usize,
+    /// SGD learning rate applied to the aggregated gradient.
+    pub lr: f32,
+    /// Per-round straggler timeout.
+    pub round_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            rounds: 50,
+            dim: 0,
+            lr: 0.1,
+            round_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Per-round statistics recorded by the leader.
+#[derive(Debug, Clone)]
+pub struct RoundStats {
+    pub round: u64,
+    pub mean_loss: f32,
+    /// Compressed uplink bytes this round (all workers).
+    pub bytes_up: usize,
+    /// What uncompressed f32 uplink would have cost.
+    pub bytes_up_raw: usize,
+    pub submissions: usize,
+    pub elapsed: Duration,
+}
+
+/// Full training log returned by [`Server::run`].
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub rounds: Vec<RoundStats>,
+}
+
+impl TrainLog {
+    /// Total compressed / raw uplink bytes.
+    pub fn totals(&self) -> (usize, usize) {
+        self.rounds
+            .iter()
+            .fold((0, 0), |(c, r), s| (c + s.bytes_up, r + s.bytes_up_raw))
+    }
+}
+
+/// A bound leader, ready to admit workers.
+pub struct Server {
+    cfg: ServerConfig,
+    listener: TcpListener,
+}
+
+impl Server {
+    /// Bind the listener (so tests can learn the ephemeral port before
+    /// spawning workers).
+    pub fn bind(cfg: ServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        Ok(Self { cfg, listener })
+    }
+
+    /// The actual bound address.
+    pub fn addr(&self) -> Result<String> {
+        Ok(self.listener.local_addr()?.to_string())
+    }
+
+    /// Run the full training job; returns the final parameters and log.
+    pub fn run(self, mut params: Vec<f32>) -> Result<(Vec<f32>, TrainLog)> {
+        let cfg = self.cfg;
+        if cfg.dim != 0 && params.len() != cfg.dim {
+            bail!("params have {} elements, config says {}", params.len(), cfg.dim);
+        }
+        let dim = params.len();
+        // ---- Admission: accept exactly cfg.workers clients. ----
+        let mut writers: HashMap<u64, TcpStream> = HashMap::new();
+        let (sub_tx, sub_rx) = mpsc::channel::<(u64, u64, f32, crate::sq::CompressedVec)>();
+        let mut reader_joins = Vec::new();
+        for _ in 0..cfg.workers {
+            let (stream, peer) = self.listener.accept().context("accept")?;
+            stream.set_nodelay(true).ok();
+            let mut rd = BufReader::new(stream.try_clone()?);
+            let hello = recv(&mut rd)?
+                .ok_or_else(|| anyhow!("{peer}: closed before Hello"))?;
+            let Msg::Hello { worker_id } = hello else {
+                bail!("{peer}: expected Hello, got {hello:?}");
+            };
+            if writers.contains_key(&worker_id) {
+                bail!("duplicate worker id {worker_id}");
+            }
+            let mut ws = stream.try_clone()?;
+            send(
+                &mut ws,
+                &Msg::Welcome { worker_id, dim: dim as u64, rounds: cfg.rounds },
+            )?;
+            writers.insert(worker_id, stream);
+            // Reader thread: forward this worker's submissions.
+            let tx = sub_tx.clone();
+            reader_joins.push(std::thread::spawn(move || {
+                loop {
+                    match recv(&mut rd) {
+                        Ok(Some(Msg::GradSubmit { worker_id, round, loss, grad })) => {
+                            if tx.send((worker_id, round, loss, grad)).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(Some(other)) => {
+                            eprintln!("worker {peer}: unexpected {other:?}");
+                        }
+                        Ok(None) | Err(_) => break,
+                    }
+                }
+            }));
+        }
+        drop(sub_tx);
+
+        // ---- Synchronous rounds (cleanup runs on every exit path: the
+        // reader threads hold socket dups, so an explicit shutdown is the
+        // only way to unblock remote workers when we abort). ----
+        let mut log = TrainLog::default();
+        let result = Self::run_rounds(&cfg, dim, &mut writers, &sub_rx, &mut params, &mut log);
+        for stream in writers.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        drop(writers);
+        for j in reader_joins {
+            let _ = j.join();
+        }
+        result?;
+        Ok((params, log))
+    }
+
+    fn run_rounds(
+        cfg: &ServerConfig,
+        dim: usize,
+        writers: &mut HashMap<u64, TcpStream>,
+        sub_rx: &mpsc::Receiver<(u64, u64, f32, crate::sq::CompressedVec)>,
+        params: &mut Vec<f32>,
+        log: &mut TrainLog,
+    ) -> Result<()> {
+        for round in 0..cfg.rounds {
+            let t0 = Instant::now();
+            for stream in writers.values_mut() {
+                send(stream, &Msg::RoundStart { round, params: params.clone() })?;
+            }
+            // Collect one submission per worker (straggler timeout).
+            let mut subs: Vec<(f32, crate::sq::CompressedVec)> = Vec::new();
+            let mut seen: HashMap<u64, ()> = HashMap::new();
+            let deadline = Instant::now() + cfg.round_timeout;
+            while seen.len() < cfg.workers {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match sub_rx.recv_timeout(deadline - now) {
+                    Ok((wid, r, loss, grad)) => {
+                        if r != round {
+                            // Stale submission from a slow worker; ignore.
+                            continue;
+                        }
+                        if seen.insert(wid, ()).is_none() {
+                            subs.push((loss, grad));
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        bail!("all workers disconnected at round {round}");
+                    }
+                }
+            }
+            if subs.is_empty() {
+                bail!("round {round}: no submissions before timeout");
+            }
+            let agg = aggregate(&subs)?;
+            sgd_step(params, &agg.mean, cfg.lr);
+            for stream in writers.values_mut() {
+                send(stream, &Msg::RoundResult { round, mean_loss: agg.mean_loss })?;
+            }
+            log.rounds.push(RoundStats {
+                round,
+                mean_loss: agg.mean_loss,
+                bytes_up: agg.bytes,
+                bytes_up_raw: agg.n * dim * 4,
+                submissions: agg.n,
+                elapsed: t0.elapsed(),
+            });
+        }
+        // ---- Graceful shutdown. ----
+        for stream in writers.values_mut() {
+            let _ = send(stream, &Msg::Shutdown);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_ephemeral_reports_addr() {
+        let s = Server::bind(ServerConfig::default()).unwrap();
+        let addr = s.addr().unwrap();
+        assert!(addr.starts_with("127.0.0.1:"));
+        assert!(!addr.ends_with(":0"));
+    }
+
+    #[test]
+    fn rejects_mismatched_dim() {
+        let cfg = ServerConfig { dim: 10, workers: 0, rounds: 0, ..Default::default() };
+        let s = Server::bind(cfg).unwrap();
+        assert!(s.run(vec![0.0; 5]).is_err());
+    }
+    // Full loopback train loops are exercised in
+    // rust/tests/coordinator_integration.rs.
+}

@@ -1,0 +1,257 @@
+//! The AVQ compression service: a TCP microservice that quantizes vectors
+//! on demand (the "quantize on the fly" deployment the paper's abstract
+//! promises).
+//!
+//! Architecture (vLLM-router-like, scaled to this problem):
+//!
+//! ```text
+//! conn threads ──try_submit──▶ Batcher (bounded, linger) ──▶ solver pool
+//!      ▲                            │ full → Busy               │
+//!      └────────── CompressReply ◀──┴───────────────────────────┘
+//! ```
+//!
+//! * Admission control: a full queue answers `Busy` instead of queueing
+//!   unboundedly (backpressure).
+//! * Routing: [`super::router::Router`] — exact Acc-QUIVER below the size
+//!   crossover, QUIVER-Hist above it.
+//! * Metrics: counters + latency histograms ([`super::metrics`]).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::protocol::{recv, send, Msg};
+use super::router::Router;
+use crate::sq;
+use crate::util::rng::Xoshiro256pp;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub addr: String,
+    /// Solver pool size.
+    pub threads: usize,
+    /// Bounded queue capacity (admission control).
+    pub queue_capacity: usize,
+    /// Batch pull size.
+    pub max_batch: usize,
+    /// Batch linger.
+    pub max_wait: Duration,
+    pub router: Router,
+    /// Seed for the service's quantization randomness.
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            threads: 2,
+            queue_capacity: 256,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            router: Router::default(),
+            seed: 0x5E71CE,
+        }
+    }
+}
+
+struct Job {
+    request_id: u64,
+    s: u32,
+    data: Vec<f32>,
+    accepted_at: Instant,
+    reply: Arc<Mutex<TcpStream>>,
+}
+
+/// Handle to a running service.
+pub struct Service {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    pub metrics: Arc<Metrics>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    batcher: Arc<Batcher<Job>>,
+}
+
+impl Service {
+    /// Bind and start the accept loop + solver pool.
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Arc::new(Batcher::new(cfg.queue_capacity, cfg.max_batch, cfg.max_wait));
+        let mut joins = Vec::new();
+
+        // Solver pool.
+        for t in 0..cfg.threads.max(1) {
+            let batcher = batcher.clone();
+            let metrics = metrics.clone();
+            let router = cfg.router;
+            let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ (t as u64).wrapping_mul(0x9E37));
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("avq-solver-{t}"))
+                    .spawn(move || {
+                        while let Some(batch) = batcher.next_batch() {
+                            for job in batch {
+                                serve_job(job, &router, &metrics, &mut rng);
+                            }
+                        }
+                    })
+                    .expect("spawn solver"),
+            );
+        }
+
+        // Accept loop (nonblocking poll so shutdown is prompt).
+        {
+            let stop = stop.clone();
+            let batcher = batcher.clone();
+            let metrics = metrics.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name("avq-accept".into())
+                    .spawn(move || loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                stream.set_nodelay(true).ok();
+                                stream.set_nonblocking(false).ok();
+                                let batcher = batcher.clone();
+                                let metrics = metrics.clone();
+                                let stop = stop.clone();
+                                std::thread::spawn(move || {
+                                    handle_conn(stream, &batcher, &metrics, &stop);
+                                });
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn accept"),
+            );
+        }
+
+        Ok(Self { addr, stop, metrics, joins, batcher })
+    }
+
+    /// Bound address (`host:port`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting, drain the queue, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.batcher.close();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    batcher: &Batcher<Job>,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+) {
+    let reply = Arc::new(Mutex::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    }));
+    let mut rd = std::io::BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match recv(&mut rd) {
+            Ok(Some(Msg::CompressRequest { request_id, s, data })) => {
+                metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
+                let job = Job {
+                    request_id,
+                    s,
+                    data,
+                    accepted_at: Instant::now(),
+                    reply: reply.clone(),
+                };
+                // Count *before* submitting: once queued, a solver thread
+                // may reply (and the client observe metrics) before this
+                // thread runs again.
+                metrics.add(&metrics.accepted, 1);
+                match batcher.try_submit(job) {
+                    Ok(()) => {}
+                    Err(job) => {
+                        metrics.accepted.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                        metrics.add(&metrics.rejected, 1);
+                        let mut w = job.reply.lock().unwrap();
+                        let _ = send(&mut *w, &Msg::Busy { request_id: job.request_id });
+                    }
+                }
+            }
+            Ok(Some(other)) => {
+                eprintln!("compression service: unexpected {other:?}");
+            }
+            Ok(None) | Err(_) => break,
+        }
+    }
+}
+
+fn serve_job(job: Job, router: &Router, metrics: &Metrics, rng: &mut Xoshiro256pp) {
+    let t0 = Instant::now();
+    let xs: Vec<f64> = job.data.iter().map(|&x| x as f64).collect();
+    let reply = match router.solve(&xs, job.s.max(1) as usize) {
+        Ok((sol, route)) => {
+            let solve_us = t0.elapsed().as_micros() as u64;
+            let compressed = sq::compress(&xs, &sol.q, rng);
+            metrics.add(&metrics.bytes_out, compressed.wire_size() as u64);
+            metrics.solve_latency.record_us(solve_us.max(1));
+            Msg::CompressReply {
+                request_id: job.request_id,
+                compressed,
+                solver: route.label(),
+                solve_us,
+            }
+        }
+        Err(_) => Msg::Busy { request_id: job.request_id },
+    };
+    let mut w = job.reply.lock().unwrap();
+    let _ = send(&mut *w, &reply);
+    metrics.add(&metrics.completed, 1);
+    metrics
+        .latency
+        .record_us(job.accepted_at.elapsed().as_micros().max(1) as u64);
+}
+
+/// Blocking client helper: compress `data` remotely.
+pub fn compress_remote(addr: &str, request_id: u64, s: u32, data: &[f32]) -> Result<Msg> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    send(&mut stream, &Msg::CompressRequest { request_id, s, data: data.to_vec() })?;
+    let mut rd = std::io::BufReader::new(stream);
+    recv(&mut rd)?.context("service closed the connection")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = ServiceConfig::default();
+        assert!(c.threads >= 1);
+        assert!(c.queue_capacity >= c.max_batch);
+    }
+    // Live service round-trips are tested in
+    // rust/tests/coordinator_integration.rs.
+}

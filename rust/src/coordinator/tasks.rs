@@ -1,0 +1,191 @@
+//! Gradient sources for the federated demo and tests.
+//!
+//! * [`RuntimeGradSource`] — the production path: a synthetic 10-class
+//!   classification task whose batches are generated in Rust and whose
+//!   loss/gradient come from the AOT-compiled `model_grad` artifact via
+//!   PJRT (so the training demo exercises L1+L2+L3 end to end).
+//! * [`QuadraticToy`] — a dependency-free convex task for fast tests:
+//!   `f(p) = ½‖p − p*‖²`, gradient `p − p*`.
+
+use anyhow::{bail, Result};
+
+use super::worker::GradSource;
+use crate::runtime::{RuntimeHandle, Tensor};
+use crate::util::rng::Xoshiro256pp;
+
+/// The model artifact's input geometry (must match `python/compile/model.py`).
+pub const MODEL_DIM: usize = 85_002;
+pub const MODEL_BATCH: usize = 128;
+pub const MODEL_IN: usize = 64;
+pub const MODEL_CLASSES: usize = 10;
+
+/// Synthetic-classification batches: inputs are standard normal; labels
+/// come from a fixed random *teacher* linear map (identical across
+/// workers — same teacher seed — so the federation learns a common task;
+/// batches differ per worker/round).
+pub struct SyntheticTask {
+    teacher: Vec<f32>, // MODEL_IN × MODEL_CLASSES
+    rng: Xoshiro256pp,
+}
+
+impl SyntheticTask {
+    pub fn new(teacher_seed: u64, stream_seed: u64) -> Self {
+        let mut trng = Xoshiro256pp::seed_from_u64(teacher_seed);
+        let teacher = (0..MODEL_IN * MODEL_CLASSES)
+            .map(|_| trng.next_normal() as f32)
+            .collect();
+        Self { teacher, rng: Xoshiro256pp::seed_from_u64(stream_seed) }
+    }
+
+    /// Draw one `(features, labels)` batch.
+    pub fn batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let mut xb = Vec::with_capacity(MODEL_BATCH * MODEL_IN);
+        let mut yb = Vec::with_capacity(MODEL_BATCH);
+        for _ in 0..MODEL_BATCH {
+            let x: Vec<f32> = (0..MODEL_IN).map(|_| self.rng.next_normal() as f32).collect();
+            // Teacher logits: argmax over classes of xᵀW.
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for c in 0..MODEL_CLASSES {
+                let mut logit = 0f32;
+                for (i, xi) in x.iter().enumerate() {
+                    logit += xi * self.teacher[i * MODEL_CLASSES + c];
+                }
+                if logit > best.1 {
+                    best = (c, logit);
+                }
+            }
+            xb.extend_from_slice(&x);
+            yb.push(best.0 as i32);
+        }
+        (xb, yb)
+    }
+}
+
+/// Gradient source backed by the `model_grad` PJRT artifact.
+pub struct RuntimeGradSource {
+    runtime: RuntimeHandle,
+    task: SyntheticTask,
+}
+
+impl RuntimeGradSource {
+    pub fn new(runtime: RuntimeHandle, teacher_seed: u64, stream_seed: u64) -> Self {
+        Self { runtime, task: SyntheticTask::new(teacher_seed, stream_seed) }
+    }
+}
+
+impl GradSource for RuntimeGradSource {
+    fn grad(&mut self, params: &[f32], _round: u64) -> Result<(f32, Vec<f32>)> {
+        if params.len() != MODEL_DIM {
+            bail!("params len {} != MODEL_DIM {MODEL_DIM}", params.len());
+        }
+        let (xb, yb) = self.task.batch();
+        let out = self.runtime.call(
+            "model_grad",
+            vec![Tensor::F32(params.to_vec()), Tensor::F32(xb), Tensor::I32(yb)],
+        )?;
+        let loss = out[0].scalar_f32()?;
+        let grad = out[1].clone().into_f32()?;
+        Ok((loss, grad))
+    }
+}
+
+/// Convex toy task: minimize `½‖p − p*‖²` (tests converge in a few rounds
+/// with no artifacts required).
+pub struct QuadraticToy {
+    pub target: Vec<f32>,
+    /// Per-worker gradient noise (simulates local data heterogeneity).
+    pub noise: f32,
+    rng: Xoshiro256pp,
+}
+
+impl QuadraticToy {
+    pub fn new(target: Vec<f32>, noise: f32, seed: u64) -> Self {
+        Self { target, noise, rng: Xoshiro256pp::seed_from_u64(seed) }
+    }
+}
+
+impl GradSource for QuadraticToy {
+    fn grad(&mut self, params: &[f32], _round: u64) -> Result<(f32, Vec<f32>)> {
+        if params.len() != self.target.len() {
+            bail!("dim mismatch");
+        }
+        let mut loss = 0f32;
+        let grad: Vec<f32> = params
+            .iter()
+            .zip(&self.target)
+            .map(|(p, t)| {
+                let g = p - t;
+                loss += 0.5 * g * g;
+                g + self.noise * self.rng.next_normal() as f32
+            })
+            .collect();
+        Ok((loss, grad))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_batches_have_consistent_labels_across_streams() {
+        // Same teacher, different streams → same labeling function.
+        let mut a = SyntheticTask::new(7, 1);
+        let b = SyntheticTask::new(7, 2);
+        let (xa, ya) = a.batch();
+        assert_eq!(xa.len(), MODEL_BATCH * MODEL_IN);
+        assert_eq!(ya.len(), MODEL_BATCH);
+        assert!(ya.iter().all(|&y| (0..MODEL_CLASSES as i32).contains(&y)));
+        // Classify a's batch with b's teacher: identical labels.
+        let mut same = 0;
+        for r in 0..MODEL_BATCH {
+            let x = &xa[r * MODEL_IN..(r + 1) * MODEL_IN];
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for c in 0..MODEL_CLASSES {
+                let mut logit = 0f32;
+                for (i, xi) in x.iter().enumerate() {
+                    logit += xi * b.teacher[i * MODEL_CLASSES + c];
+                }
+                if logit > best.1 {
+                    best = (c, logit);
+                }
+            }
+            if best.0 as i32 == ya[r] {
+                same += 1;
+            }
+        }
+        assert_eq!(same, MODEL_BATCH);
+    }
+
+    #[test]
+    fn labels_are_not_degenerate() {
+        let mut t = SyntheticTask::new(3, 4);
+        let (_, y) = t.batch();
+        let distinct: std::collections::HashSet<i32> = y.into_iter().collect();
+        assert!(distinct.len() >= 3, "teacher should produce varied labels");
+    }
+
+    #[test]
+    fn quadratic_toy_gradient_points_at_target() {
+        let mut toy = QuadraticToy::new(vec![1.0, -2.0], 0.0, 1);
+        let (loss, g) = toy.grad(&[0.0, 0.0], 0).unwrap();
+        assert_eq!(g, vec![-1.0, 2.0]);
+        assert!((loss - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quadratic_descent_converges() {
+        let target: Vec<f32> = (0..100).map(|i| (i as f32 * 0.1).sin()).collect();
+        let mut toy = QuadraticToy::new(target.clone(), 0.0, 2);
+        let mut p = vec![0f32; 100];
+        for r in 0..50 {
+            let (_, g) = toy.grad(&p, r).unwrap();
+            for (pi, gi) in p.iter_mut().zip(&g) {
+                *pi -= 0.3 * gi;
+            }
+        }
+        for (pi, ti) in p.iter().zip(&target) {
+            assert!((pi - ti).abs() < 1e-4);
+        }
+    }
+}

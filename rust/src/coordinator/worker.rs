@@ -1,0 +1,143 @@
+//! Worker client: pulls parameters, computes a local gradient (through the
+//! PJRT runtime or any [`GradSource`]), compresses it with the routed AVQ
+//! solver, and submits.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::protocol::{recv, send, Msg};
+use super::router::Router;
+use crate::sq;
+use crate::util::rng::Xoshiro256pp;
+
+/// Produces local gradients for a given parameter vector. Implementations:
+/// [`crate::coordinator::tasks::RuntimeGradSource`] (the real path through
+/// the `model_grad` artifact) and [`crate::coordinator::tasks::QuadraticToy`]
+/// (dependency-free, for tests).
+pub trait GradSource: Send {
+    /// Return `(local loss, gradient)` at `params` for round `round`.
+    fn grad(&mut self, params: &[f32], round: u64) -> Result<(f32, Vec<f32>)>;
+}
+
+/// Worker configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub id: u64,
+    /// Quantization budget per gradient.
+    pub s: usize,
+    /// Solver routing (exact vs histogram crossover).
+    pub router: Router,
+    /// Seed for the stochastic quantization stream.
+    pub seed: u64,
+}
+
+/// Worker-side statistics.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub rounds: u64,
+    pub bytes_sent: usize,
+    pub bytes_raw: usize,
+    pub last_loss: f32,
+}
+
+/// Run a worker until the server shuts the job down.
+pub fn run_worker(
+    addr: &str,
+    cfg: WorkerConfig,
+    mut source: impl GradSource,
+) -> Result<WorkerStats> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut wr = stream.try_clone()?;
+    let mut rd = BufReader::new(stream);
+    send(&mut wr, &Msg::Hello { worker_id: cfg.id })?;
+    let welcome = recv(&mut rd)?.ok_or_else(|| anyhow!("server closed before Welcome"))?;
+    let Msg::Welcome { dim, .. } = welcome else {
+        bail!("expected Welcome, got {welcome:?}");
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let mut stats = WorkerStats::default();
+    loop {
+        match recv(&mut rd)? {
+            Some(Msg::RoundStart { round, params }) => {
+                if params.len() != dim as usize {
+                    bail!("round {round}: got {} params, expected {dim}", params.len());
+                }
+                let (loss, grad) = source.grad(&params, round)?;
+                let compressed = compress_gradient(&grad, cfg.s, &cfg.router, &mut rng)?;
+                stats.bytes_sent += compressed.wire_size();
+                stats.bytes_raw += grad.len() * 4;
+                stats.last_loss = loss;
+                send(
+                    &mut wr,
+                    &Msg::GradSubmit { worker_id: cfg.id, round, loss, grad: compressed },
+                )?;
+            }
+            Some(Msg::RoundResult { .. }) => {
+                stats.rounds += 1;
+            }
+            Some(Msg::Shutdown) | None => break,
+            Some(other) => bail!("unexpected message: {other:?}"),
+        }
+    }
+    Ok(stats)
+}
+
+/// Compress one gradient: route to a solver for Q, then stochastically
+/// quantize and bit-pack. This is the full client-side hot path.
+pub fn compress_gradient(
+    grad: &[f32],
+    s: usize,
+    router: &Router,
+    rng: &mut Xoshiro256pp,
+) -> Result<sq::CompressedVec> {
+    let xs: Vec<f64> = grad.iter().map(|&g| g as f64).collect();
+    let (sol, _route) = router.solve(&xs, s).map_err(|e| anyhow!("AVQ solve: {e}"))?;
+    Ok(sq::compress(&xs, &sol.q, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::RouterConfig;
+
+    #[test]
+    fn compress_gradient_roundtrip_error_is_bounded() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let grad: Vec<f32> = (0..4096)
+            .map(|i| ((i as f32) * 0.37).sin() * ((i % 97) as f32 * 0.1))
+            .collect();
+        let router = Router::new(RouterConfig::default());
+        let c = compress_gradient(&grad, 16, &router, &mut rng).unwrap();
+        assert_eq!(c.d, 4096);
+        assert!(c.wire_size() < grad.len() * 4 / 4, "4-bit codes ≈ 8x smaller");
+        let back = sq::decompress(&c);
+        // Unbiased quantization: element error bounded by the largest gap.
+        let (lo, hi) = grad
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &g| (l.min(g), h.max(g)));
+        for (b, g) in back.iter().zip(&grad) {
+            assert!((*b as f32 - g).abs() <= hi - lo);
+        }
+    }
+
+    #[test]
+    fn connect_failure_is_clean_error() {
+        struct Nope;
+        impl GradSource for Nope {
+            fn grad(&mut self, _p: &[f32], _r: u64) -> Result<(f32, Vec<f32>)> {
+                unreachable!()
+            }
+        }
+        let cfg = WorkerConfig {
+            id: 0,
+            s: 4,
+            router: Router::default(),
+            seed: 0,
+        };
+        // Port 1 is never listening.
+        assert!(run_worker("127.0.0.1:1", cfg, Nope).is_err());
+    }
+}

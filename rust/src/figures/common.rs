@@ -1,0 +1,88 @@
+//! Shared helpers for the figure harnesses.
+
+use std::time::Duration;
+
+use crate::avq::{self, Prefix, SolverKind};
+use crate::benchfw;
+use crate::dist::Dist;
+use crate::metrics::{mean_stderr, vnmse};
+
+/// Per-seed base (paper averages over 5 seeds).
+pub const SEED_BASE: u64 = 0xF1_60_00;
+
+/// Generate the sorted input for `(dist, d, seed_index)`.
+pub fn input(dist: Dist, d: usize, seed_idx: usize) -> Vec<f64> {
+    dist.sample_sorted(d, SEED_BASE + seed_idx as u64)
+}
+
+/// Median runtime of `f` over `samples` runs (1 warmup).
+pub fn time_median(samples: usize, mut f: impl FnMut()) -> Duration {
+    let st = benchfw::bench("x", 1, samples.max(1), &mut f);
+    st.median()
+}
+
+/// `mean ± stderr` vNMSE of an exact solver across seeds.
+pub fn vnmse_exact(
+    dist: Dist,
+    d: usize,
+    s: usize,
+    kind: SolverKind,
+    seeds: usize,
+) -> (f64, f64) {
+    let vals: Vec<f64> = (0..seeds)
+        .map(|i| {
+            let xs = input(dist, d, i);
+            let p = Prefix::unweighted(&xs);
+            let sol = avq::solve(&p, s, kind).expect("solve");
+            sol.mse / p.norm2_sq()
+        })
+        .collect();
+    mean_stderr(&vals)
+}
+
+/// `mean ± stderr` vNMSE of an arbitrary value-set method across seeds.
+pub fn vnmse_method(
+    dist: Dist,
+    d: usize,
+    _s: usize,
+    seeds: usize,
+    f: impl Fn(&[f64]) -> Vec<f64>,
+) -> (f64, f64) {
+    let vals: Vec<f64> = (0..seeds)
+        .map(|i| {
+            let xs = input(dist, d, i);
+            let q = f(&xs);
+            vnmse(&xs, &q)
+        })
+        .collect();
+    mean_stderr(&vals)
+}
+
+/// Format `mean ± stderr` in compact scientific notation.
+pub fn fmt_pm(mean: f64, se: f64) -> String {
+    format!("{mean:.3e}±{se:.1e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inputs_are_seeded_and_sorted() {
+        let d = Dist::LogNormal { mu: 0.0, sigma: 1.0 };
+        let a = input(d, 100, 0);
+        let b = input(d, 100, 0);
+        let c = input(d, 100, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(crate::util::is_sorted(&a));
+    }
+
+    #[test]
+    fn vnmse_exact_decreases_with_s() {
+        let d = Dist::LogNormal { mu: 0.0, sigma: 1.0 };
+        let (v4, _) = vnmse_exact(d, 1 << 10, 4, SolverKind::QuiverAccel, 2);
+        let (v16, _) = vnmse_exact(d, 1 << 10, 16, SolverKind::QuiverAccel, 2);
+        assert!(v16 < v4, "{v16} !< {v4}");
+    }
+}

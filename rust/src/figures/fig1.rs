@@ -1,0 +1,118 @@
+//! Figure 1 (+ Appendix D figures 5–8): exact solvers.
+//!
+//! (a) runtime vs dimension for s ∈ {4, 16};
+//! (b,c) vNMSE and runtime vs number of quantization values at fixed d.
+//!
+//! Expected shape (paper): ZipML's quadratic slope separates quickly;
+//! Bin-Search ~d·log d; QUIVER and Acc-QUIVER linear with Acc-QUIVER the
+//! fastest; vNMSE decays exponentially in b = log₂ s and is identical
+//! across solvers (they are all exact).
+
+use super::common::*;
+use super::FigOpts;
+use crate::avq::{self, Prefix, SolverKind};
+use crate::benchfw::{fmt_duration, Table};
+
+/// ZipML's quadratic DP is capped here (time, not memory — our
+/// implementation already uses the paper's O(1)-cost trick); the paper
+/// itself could not run it past 2^17 (memory).
+const ZIPML_MAX_POW: u32 = 13;
+
+/// Figure 1(a): runtime vs d, s ∈ {4, 16}.
+pub fn dimension_sweep(opts: &FigOpts) -> Table {
+    let mut t = Table::new(
+        format!("Fig 1(a) runtime vs d [{}]", opts.dist.name()),
+        &["d", "s", "zipml", "binsearch", "quiver", "accel"],
+    );
+    for pow in (8..=opts.max_pow).step_by(2) {
+        let d = 1usize << pow;
+        for &s in &[4usize, 16] {
+            let xs = input(opts.dist, d, 0);
+            let p = Prefix::unweighted(&xs);
+            let mut cells = vec![d.to_string(), s.to_string()];
+            for kind in [
+                SolverKind::ZipMl,
+                SolverKind::BinSearch,
+                SolverKind::Quiver,
+                SolverKind::QuiverAccel,
+            ] {
+                if kind == SolverKind::ZipMl && pow > ZIPML_MAX_POW {
+                    cells.push("-".into());
+                    continue;
+                }
+                let dt = time_median(opts.time_samples, || {
+                    std::hint::black_box(avq::solve(&p, s, kind).unwrap());
+                });
+                cells.push(fmt_duration(dt));
+            }
+            t.row(cells);
+        }
+    }
+    t
+}
+
+/// Figures 1(b)/1(c): vNMSE + runtime vs s = 2^b at d = 2^pow.
+pub fn s_sweep(opts: &FigOpts, pow: u32) -> Table {
+    let d = 1usize << pow;
+    let mut t = Table::new(
+        format!("Fig 1(b/c) s-sweep at d=2^{pow} [{}]", opts.dist.name()),
+        &["s", "vNMSE(optimal)", "zipml", "binsearch", "quiver", "accel"],
+    );
+    for b in 1..=6u32 {
+        let s = 1usize << b;
+        let (v, se) = vnmse_exact(opts.dist, d, s, SolverKind::QuiverAccel, opts.seeds);
+        let xs = input(opts.dist, d, 0);
+        let p = Prefix::unweighted(&xs);
+        let mut cells = vec![s.to_string(), fmt_pm(v, se)];
+        for kind in [
+            SolverKind::ZipMl,
+            SolverKind::BinSearch,
+            SolverKind::Quiver,
+            SolverKind::QuiverAccel,
+        ] {
+            if kind == SolverKind::ZipMl && pow > ZIPML_MAX_POW {
+                cells.push("-".into());
+                continue;
+            }
+            let dt = time_median(opts.time_samples, || {
+                std::hint::black_box(avq::solve(&p, s, kind).unwrap());
+            });
+            cells.push(fmt_duration(dt));
+        }
+        t.row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    fn tiny_opts() -> FigOpts {
+        FigOpts {
+            dist: Dist::LogNormal { mu: 0.0, sigma: 1.0 },
+            max_pow: 10,
+            seeds: 2,
+            time_samples: 1,
+        }
+    }
+
+    #[test]
+    fn dimension_sweep_has_expected_shape() {
+        let t = dimension_sweep(&tiny_opts());
+        // pows 8 and 10, two s values each.
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.columns.len(), 6);
+    }
+
+    #[test]
+    fn s_sweep_vnmse_decays() {
+        let t = s_sweep(&tiny_opts(), 10);
+        assert_eq!(t.rows.len(), 6);
+        // vNMSE column strictly decays from s=2 to s=64.
+        let first: f64 = t.rows[0][1].split('±').next().unwrap().parse().unwrap();
+        let last: f64 = t.rows[5][1].split('±').next().unwrap().parse().unwrap();
+        assert!(last < first / 10.0, "vNMSE should decay: {first} -> {last}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Figure 3 (+ Appendix D figures 9–13): approximate solutions.
+//!
+//! QUIVER-Hist vs ZipML-CP (Uniform / Quantile), ZipML 2-Apx, and ALQ,
+//! sweeping dimension, quantization-value count and bin count.
+//!
+//! Expected shape: QUIVER-Hist is both the most accurate approximation
+//! (near-optimal) and the fastest as d grows; ALQ is fast but visibly less
+//! accurate off-Gaussian; ZipML-CP sits between; 2-Apx trades accuracy for
+//! simplicity.
+
+use super::common::*;
+use super::FigOpts;
+use crate::baselines::Method;
+use crate::benchfw::{fmt_duration, Table};
+
+fn methods(_s: usize, m: usize) -> Vec<Method> {
+    vec![
+        Method::QuiverHist { m },
+        Method::ZipMlCpUniform { m },
+        Method::ZipMlCpQuantile { m },
+        Method::ZipMl2Apx,
+        Method::Alq { iters: 10 },
+    ]
+}
+
+fn sweep_rows(
+    t: &mut Table,
+    opts: &FigOpts,
+    points: &[(usize, usize, usize)], // (d, s, m)
+) {
+    for &(d, s, m) in points {
+        let mut cells = vec![d.to_string(), s.to_string(), m.to_string()];
+        // vNMSE (mean ± stderr over seeds) per method.
+        for method in methods(s, m) {
+            let (v, se) = vnmse_method(opts.dist, d, s, opts.seeds, |xs| {
+                method.quantization_values(xs, s)
+            });
+            cells.push(fmt_pm(v, se));
+        }
+        // Runtime per method on the seed-0 instance.
+        let xs = input(opts.dist, d, 0);
+        for method in methods(s, m) {
+            let dt = time_median(opts.time_samples, || {
+                std::hint::black_box(method.quantization_values(&xs, s));
+            });
+            cells.push(fmt_duration(dt));
+        }
+        t.row(cells);
+    }
+}
+
+fn columns() -> Vec<&'static str> {
+    vec![
+        "d",
+        "s",
+        "M",
+        "v:hist",
+        "v:cp-unif",
+        "v:cp-quant",
+        "v:2apx",
+        "v:alq",
+        "t:hist",
+        "t:cp-unif",
+        "t:cp-quant",
+        "t:2apx",
+        "t:alq",
+    ]
+}
+
+/// Figures 3(a)/3(b): dimension sweep at fixed (s, M).
+pub fn dim_sweep(opts: &FigOpts, s: usize, m: usize) -> Table {
+    let mut t = Table::new(
+        format!("Fig 3(a/b) approx dim-sweep s={s} M={m} [{}]", opts.dist.name()),
+        &columns(),
+    );
+    let points: Vec<(usize, usize, usize)> = (10..=opts.max_pow)
+        .step_by(2)
+        .map(|p| (1usize << p, s, m))
+        .collect();
+    sweep_rows(&mut t, opts, &points);
+    t
+}
+
+/// Figure 3(c): s sweep at d = 2^max_pow, M = 1000.
+pub fn s_sweep(opts: &FigOpts, m: usize) -> Table {
+    let d = 1usize << opts.max_pow;
+    let mut t = Table::new(
+        format!("Fig 3(c) approx s-sweep d=2^{} M={m} [{}]", opts.max_pow, opts.dist.name()),
+        &columns(),
+    );
+    let points: Vec<(usize, usize, usize)> =
+        (1..=6u32).map(|b| (d, 1usize << b, m)).collect();
+    sweep_rows(&mut t, opts, &points);
+    t
+}
+
+/// Figure 3(d): M sweep at d = 2^max_pow, s = 32.
+pub fn m_sweep(opts: &FigOpts, s: usize) -> Table {
+    let d = 1usize << opts.max_pow;
+    let mut t = Table::new(
+        format!("Fig 3(d) approx M-sweep d=2^{} s={s} [{}]", opts.max_pow, opts.dist.name()),
+        &columns(),
+    );
+    let points: Vec<(usize, usize, usize)> = [100usize, 200, 400, 700, 1000]
+        .iter()
+        .map(|&m| (d, s, m))
+        .collect();
+    sweep_rows(&mut t, opts, &points);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    fn tiny() -> FigOpts {
+        FigOpts {
+            dist: Dist::LogNormal { mu: 0.0, sigma: 1.0 },
+            max_pow: 12,
+            seeds: 2,
+            time_samples: 1,
+        }
+    }
+
+    #[test]
+    fn dim_sweep_shape_and_hist_wins() {
+        let t = dim_sweep(&tiny(), 4, 100);
+        assert_eq!(t.rows.len(), 2); // 2^10, 2^12
+        // On LogNormal, QUIVER-Hist should beat ALQ at every point.
+        for row in &t.rows {
+            let hist: f64 = row[3].split('±').next().unwrap().parse().unwrap();
+            let alq: f64 = row[7].split('±').next().unwrap().parse().unwrap();
+            assert!(hist < alq, "hist {hist} should beat alq {alq}");
+        }
+    }
+
+    #[test]
+    fn s_sweep_decays() {
+        let t = s_sweep(&tiny(), 200);
+        let first: f64 = t.rows[0][3].split('±').next().unwrap().parse().unwrap();
+        let last: f64 = t.rows[5][3].split('±').next().unwrap().parse().unwrap();
+        assert!(last < first, "hist vNMSE decays in s");
+    }
+
+    #[test]
+    fn m_sweep_improves_hist() {
+        let t = m_sweep(&tiny(), 8);
+        let m100: f64 = t.rows[0][3].split('±').next().unwrap().parse().unwrap();
+        let m1000: f64 = t.rows[4][3].split('±').next().unwrap().parse().unwrap();
+        assert!(m1000 <= m100 * 1.1);
+    }
+}

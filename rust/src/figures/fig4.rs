@@ -1,0 +1,94 @@
+//! Figure 4 (Appendix C): sort and quantize times vs dimension.
+//!
+//! The paper measured these on a T4 GPU to argue the non-solver stages are
+//! never the bottleneck. Here (CPU-only) we report the Rust `pdqsort` and
+//! the Rust stochastic-quantize pass, plus — when artifacts are present —
+//! the PJRT-executed Pallas `sq` kernel (the actual device path at the
+//! artifact's fixed 64K shape).
+
+use super::common::*;
+use super::FigOpts;
+use crate::avq::histogram::{solve_hist, HistConfig};
+use crate::benchfw::{fmt_duration, Table};
+use crate::runtime::{Runtime, Tensor};
+use crate::sq;
+use crate::util::rng::Xoshiro256pp;
+
+pub fn sort_and_quantize(opts: &FigOpts) -> Table {
+    let mut t = Table::new(
+        format!("Fig 4 sort+quantize vs d [{}]", opts.dist.name()),
+        &["d", "sort", "quantize(rust)", "pallas-sq(PJRT)"],
+    );
+    // Load the runtime once if artifacts exist (the sq artifact has a
+    // fixed 64K shape; only that row gets a PJRT number).
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = if artifacts.join("manifest.txt").exists() {
+        Runtime::new(&artifacts).ok()
+    } else {
+        None
+    };
+    for pow in (12..=opts.max_pow).step_by(2) {
+        let d = 1usize << pow;
+        let unsorted = opts.dist.sample_vec(d, SEED_BASE);
+        let sort_t = time_median(opts.time_samples, || {
+            let mut v = unsorted.clone();
+            v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            std::hint::black_box(v);
+        });
+        // Q from the fast near-optimal path, then time the quantize pass.
+        let sol = solve_hist(&unsorted, 16, &HistConfig::fixed(256)).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let quant_t = time_median(opts.time_samples, || {
+            std::hint::black_box(sq::quantize(&unsorted, &sol.q, &mut rng));
+        });
+        let pjrt_cell = match (&runtime, d) {
+            (Some(rt), 65_536) => {
+                let x: Vec<f32> = unsorted.iter().map(|&v| v as f32).collect();
+                let qs: Vec<f32> = sol.q.iter().map(|&v| v as f32).collect();
+                let mut r2 = Xoshiro256pp::seed_from_u64(8);
+                let u: Vec<f32> = (0..d).map(|_| r2.next_f32()).collect();
+                let dt = time_median(opts.time_samples, || {
+                    std::hint::black_box(
+                        rt.call(
+                            "sq_d65536_s16",
+                            &[
+                                Tensor::F32(x.clone()),
+                                Tensor::F32(qs.clone()),
+                                Tensor::F32(u.clone()),
+                            ],
+                        )
+                        .unwrap(),
+                    );
+                });
+                fmt_duration(dt)
+            }
+            _ => "-".into(),
+        };
+        t.row(vec![
+            d.to_string(),
+            fmt_duration(sort_t),
+            fmt_duration(quant_t),
+            pjrt_cell,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    #[test]
+    fn fig4_reports_rows() {
+        let opts = FigOpts {
+            dist: Dist::Normal { mu: 0.0, sigma: 1.0 },
+            max_pow: 14,
+            seeds: 1,
+            time_samples: 1,
+        };
+        let t = sort_and_quantize(&opts);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.rows[0][1].contains('s')); // has a unit suffix
+    }
+}

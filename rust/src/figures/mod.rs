@@ -1,0 +1,73 @@
+//! Figure harnesses: regenerate every table/figure of the paper's
+//! evaluation (§7, Appendices C–D). See DESIGN.md §4 for the experiment
+//! index. Each harness returns [`crate::benchfw::Table`]s that are printed
+//! and saved as CSV by the CLI (`quiver figure <id> [--dist D]`).
+//!
+//! Absolute numbers are hardware-specific; what must reproduce is the
+//! *shape*: complexity slopes on the d-sweeps, exponential vNMSE decay in
+//! b = log₂ s, near-optimality of QUIVER-Hist, and the ordering of the
+//! baselines.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod headline;
+
+use crate::benchfw::Table;
+use crate::dist::Dist;
+
+/// Options shared by all figure harnesses.
+#[derive(Debug, Clone, Copy)]
+pub struct FigOpts {
+    /// Input distribution (paper default: LogNormal(0,1); Appendix D
+    /// sweeps the rest).
+    pub dist: Dist,
+    /// Cap on log₂(d) for dimension sweeps (paper goes to 2^22; default a
+    /// notch lower to keep a full run in minutes — pass --max-pow 22 to
+    /// match the paper exactly).
+    pub max_pow: u32,
+    /// Seeds per point (paper: 5).
+    pub seeds: usize,
+    /// Timed samples per runtime measurement.
+    pub time_samples: usize,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self {
+            dist: Dist::LogNormal { mu: 0.0, sigma: 1.0 },
+            max_pow: 20,
+            seeds: 5,
+            time_samples: 3,
+        }
+    }
+}
+
+/// Run a figure harness by id. Known ids: `1a 1b 1c 2 3a 3b 3c 3d 4
+/// headline all`.
+pub fn run(id: &str, opts: &FigOpts) -> anyhow::Result<Vec<Table>> {
+    Ok(match id {
+        "1a" => vec![fig1::dimension_sweep(opts)],
+        "1b" => vec![fig1::s_sweep(opts, 12)],
+        "1c" => vec![fig1::s_sweep(opts, 16)],
+        "2" => vec![fig2::m_effect(opts)],
+        "3a" => vec![fig3::dim_sweep(opts, 4, 100)],
+        "3b" => vec![fig3::dim_sweep(opts, 16, 400)],
+        "3c" => vec![fig3::s_sweep(opts, 1000)],
+        "3d" => vec![fig3::m_sweep(opts, 32)],
+        "4" => vec![fig4::sort_and_quantize(opts)],
+        "headline" => vec![headline::headline(opts)],
+        "all" => {
+            let mut out = vec![];
+            for id in ["1a", "1b", "1c", "2", "3a", "3b", "3c", "3d", "4", "headline"] {
+                out.extend(run(id, opts)?);
+            }
+            out
+        }
+        other => anyhow::bail!(
+            "unknown figure {other:?} (expected 1a|1b|1c|2|3a|3b|3c|3d|4|headline|all)"
+        ),
+    })
+}

@@ -1,0 +1,52 @@
+//! # QUIVER — Optimal and Near-Optimal Adaptive Vector Quantization
+//!
+//! A production-grade reproduction of *"Optimal and Near-Optimal Adaptive
+//! Vector Quantization"* (Ben Basat, Ben-Itzhak, Mitzenmacher, Vargaftik,
+//! 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **[`avq`]** — the paper's algorithms: the O(1) prefix-moment interval
+//!   cost, the ZipML `O(s·d²)` baseline DP, Bin-Search `O(s·d log d)`,
+//!   QUIVER `O(s·d)` (SMAWK/Concave-1D), Accelerated QUIVER (closed-form
+//!   `C₂`), and the `O(d + s·M)` near-optimal histogram variant.
+//! * **[`baselines`]** — the paper's comparison points: ZipML-CP
+//!   (uniform/quantile candidate points), ZipML 2-Apx, ALQ, uniform SQ.
+//! * **[`sq`]** — the stochastic-quantization substrate: unbiased encoding
+//!   of a vector onto a value set, bit-packed wire format.
+//! * **[`coordinator`]** — Layer 3: a gradient-compression parameter server
+//!   and AVQ compression service (router, batcher, aggregator) with Python
+//!   never on the request path.
+//! * **[`runtime`]** — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`).
+//! * **[`figures`]** — regenerates every table/figure of the paper's
+//!   evaluation (see DESIGN.md §4 for the index).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use quiver::avq::{self, SolverKind};
+//! use quiver::dist::Dist;
+//!
+//! // 4K LogNormal coordinates, 16 quantization values, optimal solve:
+//! let x = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(1 << 12, 42);
+//! let p = avq::Prefix::unweighted(&x);
+//! let sol = avq::solve(&p, 16, SolverKind::QuiverAccel).unwrap();
+//! assert_eq!(sol.q.len(), 16);
+//!
+//! // Near-optimal on-the-fly variant (unsorted input, O(d + s·M)):
+//! let approx =
+//!     avq::histogram::solve_hist(&x, 16, &avq::histogram::HistConfig::fixed(400)).unwrap();
+//! assert!(approx.mse <= sol.mse * 1.5);
+//! ```
+
+pub mod avq;
+pub mod baselines;
+pub mod benchfw;
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod figures;
+pub mod metrics;
+pub mod runtime;
+pub mod sq;
+pub mod testutil;
+pub mod util;

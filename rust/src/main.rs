@@ -1,0 +1,248 @@
+//! `quiver` — the CLI entry point for the QUIVER reproduction.
+//!
+//! ```text
+//! quiver solve   --d 65536 --s 16 [--dist lognormal] [--solver quiver-accel]
+//! quiver figure  <1a|1b|1c|2|3a|3b|3c|3d|4|headline|all> [--dist D] [--max-pow N]
+//! quiver serve   [--addr 127.0.0.1:7071] [--threads 2] [--exact-max-d 65536]
+//! quiver client  --addr HOST:PORT --d 100000 --s 16
+//! quiver train   [--workers 4] [--rounds 50] [--s 16] [--lr 0.05]
+//! ```
+//!
+//! Every subcommand accepts `--config FILE` (`key = value` lines) with CLI
+//! flags overriding file values.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use quiver::avq::{self, SolverKind};
+use quiver::config::Config;
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::server::{Server, ServerConfig};
+use quiver::coordinator::service::{compress_remote, Service, ServiceConfig};
+use quiver::coordinator::tasks::{RuntimeGradSource, MODEL_DIM};
+use quiver::coordinator::worker::{run_worker, WorkerConfig};
+use quiver::dist::Dist;
+use quiver::figures::{self, FigOpts};
+use quiver::metrics::vnmse;
+use quiver::runtime::RuntimeHandle;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: quiver <solve|figure|serve|client|train> [--key value ...]\n\
+         see rust/src/main.rs docs or README.md for per-command flags"
+    );
+    std::process::exit(2);
+}
+
+fn run() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args.remove(0);
+    // `figure` takes a positional id before the flags.
+    let mut positional = None;
+    if !args.is_empty() && !args[0].starts_with("--") {
+        positional = Some(args.remove(0));
+    }
+    let mut cfg = Config::new();
+    // --config FILE first, then the remaining flags override.
+    if let Some(pos) = args.iter().position(|a| a == "--config") {
+        let path = args.get(pos + 1).context("--config needs a path")?.clone();
+        cfg = Config::load(&path)?;
+        args.drain(pos..pos + 2);
+    }
+    cfg.apply_overrides(&args)?;
+
+    match cmd.as_str() {
+        "solve" => cmd_solve(&cfg),
+        "figure" => cmd_figure(positional.as_deref().unwrap_or("all"), &cfg),
+        "serve" => cmd_serve(&cfg),
+        "client" => cmd_client(&cfg),
+        "train" => cmd_train(&cfg),
+        _ => usage(),
+    }
+}
+
+fn parse_dist(cfg: &Config) -> Result<Dist> {
+    let name = cfg.get_or("dist", "lognormal");
+    Dist::parse(&name).with_context(|| format!("unknown distribution {name:?}"))
+}
+
+/// One-shot solve + report (the quickest way to poke at the library).
+fn cmd_solve(cfg: &Config) -> Result<()> {
+    let d = cfg.usize_or("d", 1 << 16)?;
+    let s = cfg.usize_or("s", 16)?;
+    let dist = parse_dist(cfg)?;
+    let solver = {
+        let name = cfg.get_or("solver", "quiver-accel");
+        SolverKind::parse(&name).with_context(|| format!("unknown solver {name:?}"))?
+    };
+    let seed = cfg.u64_or("seed", 42)?;
+    let xs = dist.sample_sorted(d, seed);
+    let p = avq::Prefix::unweighted(&xs);
+    let t0 = std::time::Instant::now();
+    let sol = avq::solve(&p, s, solver)?;
+    let dt = t0.elapsed();
+    println!(
+        "{} d={d} s={s} dist={}: mse={:.6e} vNMSE={:.6e} in {}",
+        solver.name(),
+        dist.name(),
+        sol.mse,
+        vnmse(&xs, &sol.q),
+        quiver::benchfw::fmt_duration(dt)
+    );
+    println!("Q = {:?}", sol.q);
+    Ok(())
+}
+
+/// Regenerate paper figures (tables + CSV under results/).
+fn cmd_figure(id: &str, cfg: &Config) -> Result<()> {
+    let opts = FigOpts {
+        dist: parse_dist(cfg)?,
+        max_pow: cfg.usize_or("max_pow", 20)? as u32,
+        seeds: cfg.usize_or("seeds", 5)?,
+        time_samples: cfg.usize_or("time_samples", 3)?,
+    };
+    let out_dir = std::path::PathBuf::from(cfg.get_or("out", "results"));
+    for table in figures::run(id, &opts)? {
+        table.print();
+        let path = table.save_csv(&out_dir)?;
+        println!("saved {}", path.display());
+    }
+    Ok(())
+}
+
+/// Run the AVQ compression service until killed.
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let service = Service::start(ServiceConfig {
+        addr: cfg.get_or("addr", "127.0.0.1:7071"),
+        threads: cfg.usize_or("threads", 2)?,
+        queue_capacity: cfg.usize_or("queue_capacity", 256)?,
+        max_batch: cfg.usize_or("max_batch", 8)?,
+        max_wait: Duration::from_millis(cfg.u64_or("max_wait_ms", 2)?),
+        router: Router::new(RouterConfig {
+            exact_max_d: cfg.usize_or("exact_max_d", 1 << 16)?,
+            hist_m: cfg.usize_or("hist_m", 400)?,
+            seed: cfg.u64_or("seed", 0xA11CE)?,
+        }),
+        seed: cfg.u64_or("sq_seed", 0x5E71CE)?,
+    })?;
+    println!("quiver compression service listening on {}", service.addr());
+    let period = cfg.u64_or("stats_secs", 10)?;
+    loop {
+        std::thread::sleep(Duration::from_secs(period));
+        println!("{}", service.metrics.summary());
+    }
+}
+
+/// Fire one request at a running service.
+fn cmd_client(cfg: &Config) -> Result<()> {
+    let addr = cfg.get_or("addr", "127.0.0.1:7071");
+    let d = cfg.usize_or("d", 100_000)?;
+    let s = cfg.usize_or("s", 16)? as u32;
+    let dist = parse_dist(cfg)?;
+    let data: Vec<f32> = dist
+        .sample_vec(d, cfg.u64_or("seed", 1)?)
+        .into_iter()
+        .map(|x| x as f32)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let reply = compress_remote(&addr, 1, s, &data)?;
+    let rtt = t0.elapsed();
+    match reply {
+        quiver::coordinator::protocol::Msg::CompressReply {
+            compressed, solver, solve_us, ..
+        } => {
+            println!(
+                "compressed d={d} with {solver}: {} -> {} bytes ({:.2}x), solve {}µs, rtt {}",
+                d * 4,
+                compressed.wire_size(),
+                compressed.ratio_vs_f32(),
+                solve_us,
+                quiver::benchfw::fmt_duration(rtt)
+            );
+        }
+        quiver::coordinator::protocol::Msg::Busy { .. } => {
+            println!("service busy (backpressure) — retry later");
+        }
+        other => bail!("unexpected reply {other:?}"),
+    }
+    Ok(())
+}
+
+/// Federated-training driver: leader + in-process workers over loopback,
+/// gradients via the PJRT `model_grad` artifact. (The example binary
+/// `examples/federated_training.rs` is the annotated version of this.)
+fn cmd_train(cfg: &Config) -> Result<()> {
+    let workers = cfg.usize_or("workers", 4)?;
+    let rounds = cfg.u64_or("rounds", 50)?;
+    let s = cfg.usize_or("s", 16)?;
+    let lr = cfg.f64_or("lr", 0.05)? as f32;
+    let artifacts = cfg.get_or("artifacts", "artifacts");
+
+    let runtime = RuntimeHandle::spawn(&artifacts)?;
+    runtime.warmup("model_grad")?;
+    let init = std::fs::read(std::path::Path::new(&artifacts).join("model_init.bin"))
+        .context("model_init.bin (run `make artifacts`)")?;
+    let params: Vec<f32> = init
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    anyhow::ensure!(params.len() == MODEL_DIM, "bad model_init.bin");
+
+    let server = Server::bind(ServerConfig {
+        workers,
+        rounds,
+        dim: MODEL_DIM,
+        lr,
+        round_timeout: Duration::from_secs(120),
+        ..Default::default()
+    })?;
+    let addr = server.addr()?;
+    let mut joins = vec![];
+    for w in 0..workers {
+        let addr = addr.clone();
+        let rt = runtime.clone();
+        joins.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                id: w as u64,
+                s,
+                router: Router::default(),
+                seed: 7000 + w as u64,
+            };
+            let source = RuntimeGradSource::new(rt, 1234, 500 + w as u64);
+            run_worker(&addr, cfg, source)
+        }));
+    }
+    let (final_params, log) = server.run(params)?;
+    for j in joins {
+        j.join().unwrap()?;
+    }
+    for r in &log.rounds {
+        if r.round % 10 == 0 || r.round + 1 == rounds {
+            println!(
+                "round {:>4}  loss {:.4}  uplink {}B (raw {}B)  {:?}",
+                r.round, r.mean_loss, r.bytes_up, r.bytes_up_raw, r.elapsed
+            );
+        }
+    }
+    let (c, raw) = log.totals();
+    println!(
+        "trained {} rounds; final loss {:.4}; uplink saved {:.2}x ({} vs {} bytes); ‖params‖={:.3}",
+        log.rounds.len(),
+        log.rounds.last().map(|r| r.mean_loss).unwrap_or(f32::NAN),
+        raw as f64 / c as f64,
+        c,
+        raw,
+        final_params.iter().map(|p| (p * p) as f64).sum::<f64>().sqrt()
+    );
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Error metrics: exact sum of stochastic-quantization variances for an
+//! arbitrary quantization-value set, and the paper's normalized vNMSE.
+
+/// Exact sum of variances `Σ_x (b_x − x)(x − a_x)` of stochastically
+/// quantizing `xs` (sorted ascending) with values `qs` (sorted ascending).
+///
+/// Requires `qs[0] ≤ xs[0]` and `xs.last() ≤ qs.last()` — a quantizer that
+/// does not cover the input range cannot be unbiased. Runs in
+/// `O(d + s)` via a merge scan.
+pub fn sum_variances(xs: &[f64], qs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    assert!(!qs.is_empty(), "empty quantization set");
+    assert!(
+        qs[0] <= xs[0] + 1e-12 && *xs.last().unwrap() <= *qs.last().unwrap() + 1e-12,
+        "quantization values must cover the input range: q=[{}, {}], x=[{}, {}]",
+        qs[0],
+        qs.last().unwrap(),
+        xs[0],
+        xs.last().unwrap()
+    );
+    debug_assert!(crate::util::is_sorted(xs));
+    debug_assert!(crate::util::is_sorted(qs));
+    let mut total = 0.0;
+    let mut hi = 1usize; // index of the current upper quantization value
+    if qs.len() == 1 {
+        // Degenerate single-value quantizer: only exact if all xs equal it.
+        return xs.iter().map(|&x| (x - qs[0]) * (x - qs[0])).sum();
+    }
+    for &x in xs {
+        while hi + 1 < qs.len() && qs[hi] < x {
+            hi += 1;
+        }
+        let (a, b) = (qs[hi - 1].min(x), qs[hi].max(x));
+        total += (b - x) * (x - a);
+    }
+    total.max(0.0)
+}
+
+/// vNMSE (§7): sum of variances normalized by `‖X‖²` — the paper's
+/// dimension- and distribution-comparable error measure.
+pub fn vnmse(xs_sorted: &[f64], qs: &[f64]) -> f64 {
+    let n2: f64 = xs_sorted.iter().map(|x| x * x).sum();
+    if n2 == 0.0 {
+        return 0.0;
+    }
+    sum_variances(xs_sorted, qs) / n2
+}
+
+/// Mean and sample standard error over per-seed measurements (the figures
+/// report mean ± stderr over 5 seeds, as the paper does).
+pub fn mean_stderr(samples: &[f64]) -> (f64, f64) {
+    let n = samples.len() as f64;
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = samples.iter().sum::<f64>() / n;
+    if samples.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / (n - 1.0);
+    (mean, (var / n).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::{solve, Prefix, SolverKind};
+    use crate::dist::Dist;
+
+    #[test]
+    fn matches_solver_objective() {
+        // The solver's reported MSE must equal the independently computed
+        // sum of variances of its Q on the same input.
+        for (seed, (_, dist)) in Dist::paper_suite().into_iter().enumerate() {
+            let xs = dist.sample_sorted(777, seed as u64);
+            let p = Prefix::unweighted(&xs);
+            for s in [2, 4, 16] {
+                let sol = solve(&p, s, SolverKind::Quiver).unwrap();
+                let direct = sum_variances(&xs, &sol.q);
+                assert!(
+                    crate::util::approx_eq(sol.mse, direct, 1e-9, 1e-9),
+                    "s={s}: solver={} direct={direct}",
+                    sol.mse
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_values_not_in_x() {
+        // Arbitrary covering Q (e.g. from ALQ): hand check on 3 points.
+        let xs = [1.0, 2.0, 3.0];
+        let qs = [0.0, 2.5, 4.0];
+        // x=1: (2.5−1)(1−0) = 1.5;  x=2: (2.5−2)(2−0) = 1.0;
+        // x=3: (4−3)(3−2.5) = 0.5.  total = 3.0
+        assert!((sum_variances(&xs, &qs) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_when_all_points_are_values() {
+        let xs = [1.0, 2.0, 5.0];
+        assert_eq!(sum_variances(&xs, &[1.0, 2.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the input range")]
+    fn panics_when_not_covering() {
+        sum_variances(&[0.0, 10.0], &[1.0, 9.0]);
+    }
+
+    #[test]
+    fn vnmse_scale_invariant() {
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(500, 3);
+        let p = Prefix::unweighted(&xs);
+        let sol = solve(&p, 8, SolverKind::QuiverAccel).unwrap();
+        let v1 = vnmse(&xs, &sol.q);
+        // Scale input and Q by 7: vNMSE unchanged.
+        let xs7: Vec<f64> = xs.iter().map(|x| x * 7.0).collect();
+        let q7: Vec<f64> = sol.q.iter().map(|q| q * 7.0).collect();
+        let v2 = vnmse(&xs7, &q7);
+        assert!((v1 - v2).abs() < 1e-12 * v1.max(1.0));
+    }
+
+    #[test]
+    fn mean_stderr_basics() {
+        let (m, se) = mean_stderr(&[1.0, 1.0, 1.0]);
+        assert_eq!(m, 1.0);
+        assert_eq!(se, 0.0);
+        let (m, se) = mean_stderr(&[0.0, 2.0]);
+        assert_eq!(m, 1.0);
+        assert!(se > 0.0);
+    }
+}

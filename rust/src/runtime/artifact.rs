@@ -1,0 +1,213 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one line
+//! per compiled graph:
+//!
+//! ```text
+//! name|file.hlo.txt|in=f32[65536],f32[16],f32[65536]|out=f32[65536],i32[65536]
+//! ```
+//!
+//! The manifest is the runtime's source of truth for input/output dtypes
+//! and shapes (used to validate call sites before handing buffers to
+//! PJRT, where shape errors become opaque).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor on the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "i32" => Some(Dtype::I32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dtype::F32 => write!(f, "f32"),
+            Dtype::I32 => write!(f, "i32"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Parse `f32[128x64]` / `i32[128]` / `f32[]` (scalar).
+    fn parse(s: &str) -> Option<Self> {
+        let open = s.find('[')?;
+        let dtype = Dtype::parse(&s[..open])?;
+        let inner = s.get(open + 1..s.len().checked_sub(1)?)?;
+        if !s.ends_with(']') {
+            return None;
+        }
+        let dims = if inner.is_empty() {
+            vec![]
+        } else {
+            inner
+                .split('x')
+                .map(|d| d.parse::<usize>().ok())
+                .collect::<Option<Vec<_>>>()?
+        };
+        Some(TensorSpec { dtype, dims })
+    }
+}
+
+impl fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", self.dtype, dims.join("x"))
+    }
+}
+
+/// One compiled graph: name, HLO file, and its I/O signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed `manifest.txt`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.txt` from the artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for unit testing).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 4 {
+                anyhow::bail!("manifest line {}: expected 4 |-fields, got {}", lineno + 1, parts.len());
+            }
+            let parse_specs = |field: &str, prefix: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                let body = field
+                    .strip_prefix(prefix)
+                    .ok_or_else(|| anyhow::anyhow!("manifest line {}: missing {prefix}", lineno + 1))?;
+                if body.is_empty() {
+                    return Ok(vec![]);
+                }
+                body.split(',')
+                    .map(|s| {
+                        TensorSpec::parse(s)
+                            .ok_or_else(|| anyhow::anyhow!("manifest line {}: bad spec {s:?}", lineno + 1))
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: parts[0].to_string(),
+                file: dir.join(parts[1]),
+                inputs: parse_specs(parts[2], "in=")?,
+                outputs: parse_specs(parts[3], "out=")?,
+            });
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tensor_specs() {
+        let t = TensorSpec::parse("f32[128x64]").unwrap();
+        assert_eq!(t.dtype, Dtype::F32);
+        assert_eq!(t.dims, vec![128, 64]);
+        assert_eq!(t.len(), 8192);
+        let s = TensorSpec::parse("f32[]").unwrap();
+        assert_eq!(s.dims, Vec::<usize>::new());
+        assert_eq!(s.len(), 1);
+        let i = TensorSpec::parse("i32[7]").unwrap();
+        assert_eq!(i.dtype, Dtype::I32);
+        assert!(TensorSpec::parse("f64[3]").is_none());
+        assert!(TensorSpec::parse("f32[3").is_none());
+        assert!(TensorSpec::parse("f32[a]").is_none());
+    }
+
+    #[test]
+    fn parse_manifest_lines() {
+        let text = "\
+# comment
+sq_d1024_s8|sq_d1024_s8.hlo.txt|in=f32[1024],f32[8],f32[1024]|out=f32[1024],i32[1024]
+model_grad|model_grad.hlo.txt|in=f32[85002],f32[128x64],i32[128]|out=f32[],f32[85002]
+model_init|model_init.hlo.txt|in=|out=f32[85002]
+";
+        let m = Manifest::parse(text, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.get("sq_d1024_s8").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.outputs[1].dtype, Dtype::I32);
+        let init = m.get("model_init").unwrap();
+        assert!(init.inputs.is_empty());
+        assert_eq!(init.file, PathBuf::from("/tmp/a/model_init.hlo.txt"));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn reject_malformed() {
+        assert!(Manifest::parse("just|three|fields", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a|b|in=f32[|out=", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration hook: when `make artifacts` has run, validate it.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("model_grad").is_some());
+            assert!(m.get("sq_d1024_s8").is_some());
+            for a in &m.artifacts {
+                assert!(a.file.exists(), "missing {}", a.file.display());
+            }
+        }
+    }
+}

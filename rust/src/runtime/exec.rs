@@ -1,0 +1,345 @@
+//! Compile-and-execute layer over the `xla` crate's PJRT CPU client.
+//!
+//! Two entry points:
+//!
+//! * [`Runtime`] — single-threaded owner of the PJRT client and the
+//!   compiled-executable cache (the `xla` handles wrap raw C pointers and
+//!   are not `Send`).
+//! * [`RuntimeHandle`] — a cloneable, `Send` handle backed by a dedicated
+//!   executor thread; this is what the multi-threaded coordinator and the
+//!   worker clients use. Requests are serialized through a channel, which
+//!   is also the right execution model for a single CPU PJRT device.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+/// A host tensor crossing the artifact boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(_) => Dtype::F32,
+            Tensor::I32(_) => Dtype::I32,
+        }
+    }
+
+    /// Unwrap as f32 data.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    /// Unwrap as i32 data.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    /// Consume as f32 data.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    /// Scalar f32 convenience accessor.
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+/// The PJRT runtime: client + manifest + executable cache (single thread).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The manifest (artifact signatures).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile `name` into the cache (so first-request latency excludes
+    /// XLA compilation; the coordinator warms up at startup).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.with_executable(name, |_| Ok(()))
+    }
+
+    fn with_executable<T>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
+    ) -> Result<T> {
+        if !self.cache.borrow().contains_key(name) {
+            let spec = self.manifest.get(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown artifact {name:?} (manifest has: {:?})",
+                    self.manifest.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()
+                )
+            })?;
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.borrow_mut().insert(name.to_string(), exe);
+        }
+        let cache = self.cache.borrow();
+        f(cache.get(name).unwrap())
+    }
+
+    /// Execute artifact `name` with `inputs`, validating the signature
+    /// against the manifest. Returns the flattened output tuple.
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        validate_inputs(&spec, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(t, s)| to_literal(t, s))
+            .collect::<Result<_>>()?;
+        let result = self.with_executable(name, |exe| {
+            exe.execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {name}: {e:?}"))
+        })?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let elems = out
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing {name} tuple: {e:?}"))?;
+        if elems.len() != spec.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, executable returned {}",
+                spec.outputs.len(),
+                elems.len()
+            );
+        }
+        elems
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| from_literal(lit, s).context("decoding output"))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded service handle
+// ---------------------------------------------------------------------------
+
+enum Request {
+    Call {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    Warmup {
+        name: String,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Platform {
+        reply: mpsc::Sender<String>,
+    },
+}
+
+/// Cloneable, `Send` handle to a [`Runtime`] running on its own executor
+/// thread. All coordinator/worker threads share one handle; calls are
+/// serialized (one CPU PJRT device ⇒ that is also the throughput-optimal
+/// schedule).
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the executor thread. Fails fast if the manifest is missing.
+    pub fn spawn(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        // Validate the manifest on the caller thread for a crisp error.
+        Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        eprintln!("runtime thread failed to start: {e:#}");
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Call { name, inputs, reply } => {
+                            let _ = reply.send(rt.call(&name, &inputs));
+                        }
+                        Request::Warmup { name, reply } => {
+                            let _ = reply.send(rt.warmup(&name));
+                        }
+                        Request::Platform { reply } => {
+                            let _ = reply.send(rt.platform());
+                        }
+                    }
+                }
+            })
+            .expect("spawn pjrt-runtime thread");
+        Ok(Self { tx })
+    }
+
+    /// Execute an artifact (blocking).
+    pub fn call(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Call { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("runtime thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped the request"))?
+    }
+
+    /// Pre-compile an artifact.
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warmup { name: name.to_string(), reply })
+            .map_err(|_| anyhow!("runtime thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped the request"))?
+    }
+
+    /// Platform name.
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Platform { reply })
+            .map_err(|_| anyhow!("runtime thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped the request"))
+    }
+}
+
+fn validate_inputs(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.dtype() != s.dtype {
+            bail!("{} input {i}: expected {}, got {:?}", spec.name, s, t.dtype());
+        }
+        if t.len() != s.len() {
+            bail!(
+                "{} input {i}: expected {} elements ({}), got {}",
+                spec.name,
+                s.len(),
+                s,
+                t.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn to_literal(t: &Tensor, spec: &TensorSpec) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32(v) => xla::Literal::vec1(v),
+        Tensor::I32(v) => xla::Literal::vec1(v),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape to {spec}: {e:?}"))
+}
+
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    Ok(match spec.dtype {
+        Dtype::F32 => Tensor::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),
+        Dtype::I32 => Tensor::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::F32(vec![1.0, 2.0]);
+        assert_eq!(t.len(), 2);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert!(t.scalar_f32().is_err());
+        assert_eq!(Tensor::F32(vec![3.5]).scalar_f32().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn validate_checks_arity_dtype_len() {
+        let spec = ArtifactSpec {
+            name: "t".into(),
+            file: PathBuf::from("/nonexistent"),
+            inputs: vec![
+                TensorSpec { dtype: Dtype::F32, dims: vec![4] },
+                TensorSpec { dtype: Dtype::I32, dims: vec![2] },
+            ],
+            outputs: vec![],
+        };
+        let ok = [Tensor::F32(vec![0.0; 4]), Tensor::I32(vec![0; 2])];
+        assert!(validate_inputs(&spec, &ok).is_ok());
+        assert!(validate_inputs(&spec, &ok[..1]).is_err());
+        let wrong_dtype = [Tensor::I32(vec![0; 4]), Tensor::I32(vec![0; 2])];
+        assert!(validate_inputs(&spec, &wrong_dtype).is_err());
+        let wrong_len = [Tensor::F32(vec![0.0; 3]), Tensor::I32(vec![0; 2])];
+        assert!(validate_inputs(&spec, &wrong_len).is_err());
+    }
+}

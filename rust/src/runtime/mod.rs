@@ -1,0 +1,16 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The Rust coordinator is self-contained after `make artifacts`: Python
+//! lowers the L2 graphs once to HLO **text** (`artifacts/*.hlo.txt` — text,
+//! not serialized protos, because xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit instruction ids), and this module loads them through the `xla`
+//! crate (`PjRtClient::cpu → HloModuleProto::from_text_file →
+//! client.compile → execute`).
+//!
+//! Executables are compiled once and cached per artifact name.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use exec::{Runtime, RuntimeHandle, Tensor};

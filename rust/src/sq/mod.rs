@@ -1,0 +1,211 @@
+//! The stochastic-quantization substrate: unbiased rounding of a vector
+//! onto a quantization-value set, bit-packed encoding, and the wire format
+//! used by the coordinator.
+//!
+//! This is the part of the pipeline that runs *after* an AVQ solver picks
+//! `Q` (§2.1): each coordinate `x ∈ [a, b]` (with `a, b` adjacent in `Q`)
+//! rounds to `b` with probability `(x − a)/(b − a)` and to `a` otherwise,
+//! so `E[x̂] = x` and `Var[x̂] = (b − x)(x − a)`.
+//!
+//! The GPU/TPU twin of [`quantize`] is the Pallas kernel
+//! `python/compile/kernels/sq.py`, AOT-compiled into `artifacts/` and
+//! executed from [`crate::runtime`].
+
+pub mod codec;
+
+pub use codec::{decode, encode, CompressedVec};
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Stochastically quantize `xs` onto `qs` (sorted ascending, covering the
+/// input range). Returns the index into `qs` chosen for each coordinate.
+///
+/// Unbiased: `E[qs[out[i]]] = xs[i]`. O(d·log s) (binary search per
+/// coordinate; for sorted inputs use [`quantize_sorted`] which is O(d + s)).
+pub fn quantize(xs: &[f64], qs: &[f64], rng: &mut Xoshiro256pp) -> Vec<u32> {
+    assert!(qs.len() >= 1);
+    debug_assert!(crate::util::is_sorted(qs));
+    xs.iter()
+        .map(|&x| {
+            let (lo, hi) = bracket(qs, x);
+            pick(qs, lo, hi, x, rng)
+        })
+        .collect()
+}
+
+/// [`quantize`] specialized for sorted inputs: a single merge scan, O(d + s).
+pub fn quantize_sorted(xs: &[f64], qs: &[f64], rng: &mut Xoshiro256pp) -> Vec<u32> {
+    assert!(qs.len() >= 1);
+    debug_assert!(crate::util::is_sorted(xs));
+    debug_assert!(crate::util::is_sorted(qs));
+    let mut hi = 0usize;
+    xs.iter()
+        .map(|&x| {
+            while hi + 1 < qs.len() && qs[hi] < x {
+                hi += 1;
+            }
+            // Mirror `bracket` exactly (incl. RNG-draw behaviour on exact
+            // hits) so both paths produce identical streams per seed.
+            let lo = if qs[hi] <= x { hi } else { hi.saturating_sub(1) };
+            pick(qs, lo, hi, x, rng)
+        })
+        .collect()
+}
+
+/// Find `(lo, hi)` with `qs[lo] ≤ x ≤ qs[hi]`, `hi − lo ≤ 1`.
+#[inline]
+fn bracket(qs: &[f64], x: f64) -> (usize, usize) {
+    debug_assert!(
+        qs[0] <= x + 1e-12 && x <= qs[qs.len() - 1] + 1e-12,
+        "x={x} outside quantizer range [{}, {}]",
+        qs[0],
+        qs[qs.len() - 1]
+    );
+    // First index with qs[i] >= x.
+    let hi = qs.partition_point(|&q| q < x).min(qs.len() - 1);
+    let lo = hi.saturating_sub(1);
+    (if qs[hi] <= x { hi } else { lo }, hi)
+}
+
+/// Stochastic choice between bracket endpoints.
+#[inline]
+fn pick(qs: &[f64], lo: usize, hi: usize, x: f64, rng: &mut Xoshiro256pp) -> u32 {
+    let (a, b) = (qs[lo], qs[hi]);
+    if b <= a {
+        return lo as u32;
+    }
+    let p_up = ((x - a) / (b - a)).clamp(0.0, 1.0);
+    if rng.next_f64() < p_up {
+        hi as u32
+    } else {
+        lo as u32
+    }
+}
+
+/// Reconstruct the (unbiased estimate of the) vector from indices.
+pub fn dequantize(idx: &[u32], qs: &[f64]) -> Vec<f64> {
+    idx.iter().map(|&i| qs[i as usize]).collect()
+}
+
+/// One-shot unbiased compression: quantize + bit-pack.
+pub fn compress(xs: &[f64], qs: &[f64], rng: &mut Xoshiro256pp) -> CompressedVec {
+    let idx = quantize(xs, qs, rng);
+    encode(&idx, qs)
+}
+
+/// Decompress back to value estimates.
+pub fn decompress(c: &CompressedVec) -> Vec<f64> {
+    let (idx, qs) = decode(c);
+    dequantize(&idx, &qs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    #[test]
+    fn outputs_are_bracketing_values() {
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(5000, 1);
+        let (lo, hi) = xs
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+        let qs = vec![lo, lo + (hi - lo) / 3.0, lo + 2.0 * (hi - lo) / 3.0, hi];
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let idx = quantize(&xs, &qs, &mut rng);
+        for (&x, &i) in xs.iter().zip(&idx) {
+            let q = qs[i as usize];
+            // The chosen value is one of the two bracketing values.
+            let hi_i = qs.partition_point(|&v| v < x).min(qs.len() - 1);
+            let lo_i = hi_i.saturating_sub(1);
+            assert!(
+                (q - qs[lo_i]).abs() < 1e-12 || (q - qs[hi_i]).abs() < 1e-12,
+                "x={x} got q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn unbiasedness_statistical() {
+        let xs = [0.1, 0.25, 0.5, 0.77, 0.9];
+        let qs = [0.0, 0.5, 1.0];
+        let trials = 40_000;
+        let mut sums = [0.0f64; 5];
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for _ in 0..trials {
+            let idx = quantize(&xs, &qs, &mut rng);
+            for (s, &i) in sums.iter_mut().zip(&idx) {
+                *s += qs[i as usize];
+            }
+        }
+        for (i, &x) in xs.iter().enumerate() {
+            let mean = sums[i] / trials as f64;
+            assert!(
+                (mean - x).abs() < 6e-3,
+                "coordinate {i}: mean {mean} vs x {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_variance_matches_formula() {
+        let x = 0.3;
+        let qs = [0.0, 1.0];
+        let want = (1.0 - x) * x; // (b−x)(x−a)
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let trials = 100_000;
+        let mut sum2 = 0.0;
+        for _ in 0..trials {
+            let i = quantize(&[x], &qs, &mut rng)[0];
+            let e = qs[i as usize] - x;
+            sum2 += e * e;
+        }
+        let got = sum2 / trials as f64;
+        assert!((got - want).abs() < 5e-3, "empirical {got} vs formula {want}");
+    }
+
+    #[test]
+    fn sorted_and_unsorted_paths_agree_in_distribution() {
+        let xs = Dist::Exponential { lambda: 1.0 }.sample_sorted(2000, 5);
+        let qs = {
+            let p = crate::avq::Prefix::unweighted(&xs);
+            crate::avq::solve(&p, 8, crate::avq::SolverKind::QuiverAccel)
+                .unwrap()
+                .q
+        };
+        // Same seed → same uniforms → identical picks.
+        let mut r1 = Xoshiro256pp::seed_from_u64(6);
+        let mut r2 = Xoshiro256pp::seed_from_u64(6);
+        let a = quantize(&xs, &qs, &mut r1);
+        let b = quantize_sorted(&xs, &qs, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn exact_on_quantization_values() {
+        let qs = [1.0, 2.0, 4.0];
+        let xs = [1.0, 2.0, 4.0, 2.0];
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let out = dequantize(&quantize(&xs, &qs, &mut rng), &qs);
+        assert_eq!(out, xs.to_vec());
+    }
+
+    #[test]
+    fn compress_roundtrip_shape() {
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(1000, 8);
+        let sol = crate::avq::histogram::solve_hist(
+            &xs,
+            16,
+            &crate::avq::histogram::HistConfig::fixed(100),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let c = compress(&xs, &sol.q, &mut rng);
+        let back = decompress(&c);
+        assert_eq!(back.len(), xs.len());
+        // Every reconstructed value is a quantization value.
+        for v in &back {
+            assert!(sol.q.iter().any(|q| (q - v).abs() < 1e-12));
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! In-tree property-testing framework (the offline build has no proptest).
+//!
+//! Seeded, reproducible random-case generation with first-failure
+//! reporting and simple shrinking for vector inputs:
+//!
+//! ```
+//! use quiver::testutil::{forall, Gen};
+//! forall(100, 0xFEED, |g, case_seed| {
+//!     let v = g.vec_f64(1..50, -10.0..10.0);
+//!     if v.iter().all(|x| x.abs() <= 10.0) {
+//!         Ok(())
+//!     } else {
+//!         Err(format!("case {case_seed}: out of range"))
+//!     }
+//! });
+//! ```
+
+use crate::dist::Dist;
+use crate::util::rng::Xoshiro256pp;
+use std::ops::Range;
+
+/// Random value generator handed to each property case.
+pub struct Gen {
+    rng: Xoshiro256pp,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256pp::seed_from_u64(seed) }
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(!r.is_empty());
+        r.start + self.rng.next_below((r.end - r.start) as u64) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        r.start + (r.end - r.start) * self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Random-length f64 vector with entries in `vals`.
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(vals.clone())).collect()
+    }
+
+    /// Sorted random vector (arbitrary distribution pick from the paper's
+    /// suite), deduplication optional.
+    pub fn sorted_vec(&mut self, len: Range<usize>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        let suite = Dist::paper_suite();
+        let (_, dist) = suite[self.usize_in(0..suite.len())];
+        let mut v = dist.sample_vec(n, self.u64());
+        v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Non-negative integral weights (histogram-like), possibly zero.
+    pub fn weights(&mut self, n: usize, max_w: u64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.next_below(max_w + 1) as f64).collect()
+    }
+}
+
+/// Run `cases` property cases. On failure, panics with the failing case
+/// seed so `reproduce(seed)` can replay it.
+pub fn forall(cases: usize, seed: u64, prop: impl Fn(&mut Gen, u64) -> Result<(), String>) {
+    let mut root = Xoshiro256pp::seed_from_u64(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g, case_seed) {
+            panic!("property failed at case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Property over a generated vector with shrinking: on failure, tries
+/// halves and truncations of the input to report a minimal-ish
+/// counterexample.
+pub fn forall_vec(
+    cases: usize,
+    seed: u64,
+    gen: impl Fn(&mut Gen) -> Vec<f64>,
+    prop: impl Fn(&[f64]) -> Result<(), String>,
+) {
+    let mut root = Xoshiro256pp::seed_from_u64(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen::new(case_seed);
+        let input = gen(&mut g);
+        if let Err(first) = prop(&input) {
+            let minimal = shrink(input, &prop);
+            panic!(
+                "property failed at case {case} (seed {case_seed:#x}): {first}\n\
+                 shrunk counterexample ({} elems): {:?}",
+                minimal.len(),
+                &minimal[..minimal.len().min(32)]
+            );
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly try dropping the first/second half and
+/// truncating one element while the property still fails.
+fn shrink(mut cur: Vec<f64>, prop: &impl Fn(&[f64]) -> Result<(), String>) -> Vec<f64> {
+    loop {
+        let mut advanced = false;
+        let n = cur.len();
+        if n <= 1 {
+            break;
+        }
+        let candidates: Vec<Vec<f64>> = vec![
+            cur[n / 2..].to_vec(),
+            cur[..n / 2].to_vec(),
+            cur[..n - 1].to_vec(),
+        ];
+        for cand in candidates {
+            if !cand.is_empty() && prop(&cand).is_err() {
+                cur = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, 1, |g, _| {
+            let x = g.f64_in(0.0..1.0);
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err("range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(50, 2, |g, _| {
+            if g.usize_in(0..10) < 9 {
+                Ok(())
+            } else {
+                Err("hit".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: "no element > 100". Seed a long vector with one bad
+        // element; the shrinker should cut it down hard.
+        let bad = {
+            let mut v = vec![1.0; 64];
+            v[40] = 200.0;
+            v
+        };
+        let minimal = shrink(bad, &|v: &[f64]| {
+            if v.iter().all(|&x| x <= 100.0) {
+                Ok(())
+            } else {
+                Err("big".into())
+            }
+        });
+        assert!(minimal.len() <= 2, "shrunk to {} elems", minimal.len());
+        assert!(minimal.iter().any(|&x| x > 100.0));
+    }
+
+    #[test]
+    fn generators_are_reproducible() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        assert_eq!(a.vec_f64(5..6, 0.0..1.0), b.vec_f64(5..6, 0.0..1.0));
+        assert_eq!(a.sorted_vec(10..20), b.sorted_vec(10..20));
+    }
+}

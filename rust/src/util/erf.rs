@@ -1,0 +1,293 @@
+//! Special functions: `erf`/`erfc`, standard-normal pdf/cdf/quantile, and
+//! truncated-normal partial moments.
+//!
+//! The Rust standard library has no `erf`; ALQ (Appendix B) and the
+//! truncated-normal sampler need high-quality normal CDFs and partial first
+//! moments, so we implement them here.
+//!
+//! `erf` uses the rational approximations from W. J. Cody,
+//! *"Rational Chebyshev approximation for the error function"* (1969) — the
+//! same scheme used by glibc — accurate to ~1e-15 over the full range.
+
+/// The error function `erf(x) = 2/√π ∫₀ˣ e^{−t²} dt`.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// The complementary error function `erfc(x) = 1 − erf(x)`.
+pub fn erfc(x: f64) -> f64 {
+    let ax = x.abs();
+    let v = if ax < 0.5 {
+        // erf via rational approx on |x| < 0.5; erfc = 1 - erf.
+        return 1.0 - erf_small(x);
+    } else if ax < 4.0 {
+        erfc_mid(ax)
+    } else {
+        erfc_large(ax)
+    };
+    if x < 0.0 {
+        2.0 - v
+    } else {
+        v
+    }
+}
+
+/// erf on |x| < 0.5 (Cody's first rational form).
+fn erf_small(x: f64) -> f64 {
+    const A: [f64; 5] = [
+        3.16112374387056560e0,
+        1.13864154151050156e2,
+        3.77485237685302021e2,
+        3.20937758913846947e3,
+        1.85777706184603153e-1,
+    ];
+    const B: [f64; 4] = [
+        2.36012909523441209e1,
+        2.44024637934444173e2,
+        1.28261652607737228e3,
+        2.84423683343917062e3,
+    ];
+    let z = x * x;
+    let num = ((((A[4] * z + A[0]) * z + A[1]) * z + A[2]) * z + A[3]) * x;
+    let den = (((z + B[0]) * z + B[1]) * z + B[2]) * z + B[3];
+    num / den
+}
+
+/// erfc on 0.5 ≤ x < 4 (Cody's second rational form).
+fn erfc_mid(x: f64) -> f64 {
+    const C: [f64; 9] = [
+        5.64188496988670089e-1,
+        8.88314979438837594e0,
+        6.61191906371416295e1,
+        2.98635138197400131e2,
+        8.81952221241769090e2,
+        1.71204761263407058e3,
+        2.05107837782607147e3,
+        1.23033935479799725e3,
+        2.15311535474403846e-8,
+    ];
+    const D: [f64; 8] = [
+        1.57449261107098347e1,
+        1.17693950891312499e2,
+        5.37181101862009858e2,
+        1.62138957456669019e3,
+        3.29079923573345963e3,
+        4.36261909014324716e3,
+        3.43936767414372164e3,
+        1.23033935480374942e3,
+    ];
+    let mut num = C[8] * x;
+    let mut den = x;
+    for i in 0..7 {
+        num = (num + C[i]) * x;
+        den = (den + D[i]) * x;
+    }
+    let r = (num + C[7]) / (den + D[7]);
+    let z = (x * 16.0).floor() / 16.0;
+    let del = (x - z) * (x + z);
+    (-z * z).exp() * (-del).exp() * r
+}
+
+/// erfc on x ≥ 4 (Cody's third rational form, asymptotic).
+fn erfc_large(x: f64) -> f64 {
+    const P: [f64; 6] = [
+        3.05326634961232344e-1,
+        3.60344899949804439e-1,
+        1.25781726111229246e-1,
+        1.60837851487422766e-2,
+        6.58749161529837803e-4,
+        1.63153871373020978e-2,
+    ];
+    const Q: [f64; 5] = [
+        2.56852019228982242e0,
+        1.87295284992346047e0,
+        5.27905102951428412e-1,
+        6.05183413124413191e-2,
+        2.33520497626869185e-3,
+    ];
+    if x >= 26.5 {
+        return 0.0;
+    }
+    let z = 1.0 / (x * x);
+    let mut num = P[5] * z;
+    let mut den = z;
+    for i in 0..4 {
+        num = (num + P[i]) * z;
+        den = (den + Q[i]) * z;
+    }
+    let r = z * (num + P[4]) / (den + Q[4]);
+    const SQRPI: f64 = 5.6418958354775628695e-1; // 1/√π
+    let r = (SQRPI - r) / x;
+    let zz = (x * 16.0).floor() / 16.0;
+    let del = (x - zz) * (x + zz);
+    (-zz * zz).exp() * (-del).exp() * r
+}
+
+/// Standard normal probability density function.
+#[inline]
+pub fn normal_pdf(x: f64) -> f64 {
+    const INV_SQRT_2PI: f64 = 0.3989422804014327;
+    INV_SQRT_2PI * (-0.5 * x * x).exp()
+}
+
+/// Standard normal cumulative distribution function.
+#[inline]
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Standard normal quantile (inverse CDF), Acklam's algorithm refined with
+/// one Halley step; |relative error| < 1e-13 on (0,1).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile domain: p in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One Halley refinement step.
+    let e = normal_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Truncated-normal helper: the probability mass of `N(mu, sigma²)` on
+/// `[lo, hi]`.
+pub fn truncnorm_mass(mu: f64, sigma: f64, lo: f64, hi: f64) -> f64 {
+    let a = (lo - mu) / sigma;
+    let b = (hi - mu) / sigma;
+    (normal_cdf(b) - normal_cdf(a)).max(0.0)
+}
+
+/// Truncated-normal helper: partial first moment
+/// `∫_{lo}^{hi} x · φ_{mu,σ}(x) dx` (unnormalized — divide by the mass to get
+/// the conditional mean).
+pub fn truncnorm_partial_mean(mu: f64, sigma: f64, lo: f64, hi: f64) -> f64 {
+    let a = (lo - mu) / sigma;
+    let b = (hi - mu) / sigma;
+    // ∫ x φ = mu (Φ(b) − Φ(a)) + σ (φ(a) − φ(b))
+    mu * (normal_cdf(b) - normal_cdf(a)) + sigma * (normal_pdf(a) - normal_pdf(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// High-accuracy reference values (computed with mpmath).
+    const ERF_TABLE: &[(f64, f64)] = &[
+        (0.0, 0.0),
+        (0.1, 0.1124629160182849),
+        (0.5, 0.5204998778130465),
+        (1.0, 0.8427007929497149),
+        (1.5, 0.9661051464753107),
+        (2.0, 0.9953222650189527),
+        (3.0, 0.9999779095030014),
+        (4.5, 0.9999999998033839),
+        (-1.0, -0.8427007929497149),
+        (-2.5, -0.999593047982555),
+    ];
+
+    #[test]
+    fn erf_matches_reference() {
+        for &(x, want) in ERF_TABLE {
+            let got = erf(x);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "erf({x}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn erfc_complement_identity() {
+        for x in [-5.0, -2.0, -0.3, 0.0, 0.2, 0.7, 1.3, 3.7, 6.0] {
+            assert!((erf(x) + erfc(x) - 1.0).abs() < 1e-13, "x={x}");
+        }
+    }
+
+    #[test]
+    fn normal_cdf_reference() {
+        // Φ(1.96) ≈ 0.9750021048517795
+        assert!((normal_cdf(1.96) - 0.9750021048517795).abs() < 1e-12);
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-15);
+        assert!((normal_cdf(-1.6448536269514722) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        for p in [1e-6, 0.01, 0.1, 0.3, 0.5, 0.77, 0.95, 0.999, 1.0 - 1e-6] {
+            let x = normal_quantile(p);
+            assert!(
+                (normal_cdf(x) - p).abs() < 1e-10,
+                "p={p} x={x} cdf={}",
+                normal_cdf(x)
+            );
+        }
+    }
+
+    #[test]
+    fn truncnorm_mass_full_range_is_one() {
+        assert!((truncnorm_mass(0.3, 2.0, -1e6, 1e6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncnorm_partial_mean_symmetric_is_mu_weighted() {
+        // Symmetric interval around mu: conditional mean = mu.
+        let mass = truncnorm_mass(1.5, 0.7, 0.5, 2.5);
+        let pm = truncnorm_partial_mean(1.5, 0.7, 0.5, 2.5);
+        assert!((pm / mass - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncnorm_partial_mean_matches_numeric_integration() {
+        let (mu, sigma, lo, hi) = (0.4, 1.3, -0.2, 2.0);
+        let n = 200_000;
+        let h = (hi - lo) / n as f64;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let x = lo + (i as f64 + 0.5) * h;
+            acc += x * normal_pdf((x - mu) / sigma) / sigma * h;
+        }
+        let got = truncnorm_partial_mean(mu, sigma, lo, hi);
+        assert!((got - acc).abs() < 1e-6, "got={got} numeric={acc}");
+    }
+}

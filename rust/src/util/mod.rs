@@ -1,0 +1,61 @@
+//! Shared low-level utilities: RNG, special functions, timing.
+
+pub mod erf;
+pub mod rng;
+pub mod timer;
+
+/// Returns `true` if `a` and `b` are within `rel` relative tolerance
+/// (with an absolute floor of `abs` for values near zero).
+#[inline]
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+/// Kahan (compensated) summation over a slice. Used wherever long float
+/// reductions feed correctness-critical comparisons.
+pub fn kahan_sum(xs: &[f64]) -> f64 {
+    let mut sum = 0.0;
+    let mut c = 0.0;
+    for &x in xs {
+        let y = x - c;
+        let t = sum + y;
+        c = (t - sum) - y;
+        sum = t;
+    }
+    sum
+}
+
+/// `is_sorted` for f64 slices (non-decreasing; NaN rejected).
+pub fn is_sorted(xs: &[f64]) -> bool {
+    xs.iter().all(|x| x.is_finite()) && xs.windows(2).all(|w| w[0] <= w[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kahan_beats_naive_on_adversarial_input() {
+        // 1.0 followed by many tiny values that naive summation drops.
+        let mut xs = vec![1.0];
+        xs.extend(std::iter::repeat(1e-16).take(1_000_000));
+        let k = kahan_sum(&xs);
+        assert!((k - (1.0 + 1e-10)).abs() < 1e-12, "kahan={k}");
+    }
+
+    #[test]
+    fn approx_eq_basics() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!approx_eq(1.0, 1.01, 1e-9, 0.0));
+        assert!(approx_eq(0.0, 1e-15, 1e-9, 1e-12));
+    }
+
+    #[test]
+    fn is_sorted_cases() {
+        assert!(is_sorted(&[1.0, 1.0, 2.0]));
+        assert!(!is_sorted(&[2.0, 1.0]));
+        assert!(!is_sorted(&[0.0, f64::NAN]));
+        assert!(is_sorted(&[]));
+    }
+}

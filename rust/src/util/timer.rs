@@ -1,0 +1,68 @@
+//! Minimal wall-clock timing helpers used by the bench framework and the
+//! figure harnesses.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall-clock duration of `f`, returning `(result, elapsed)`.
+#[inline]
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// A cheap scope timer that accumulates into a named bucket; used for
+/// coarse phase breakdowns in the coordinator metrics.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    entries: Vec<(&'static str, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and record it under `name`.
+    pub fn phase<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_it(f);
+        self.entries.push((name, dt));
+        out
+    }
+
+    /// Total accumulated time under `name`.
+    pub fn total(&self, name: &str) -> Duration {
+        self.entries
+            .iter()
+            .filter(|(n, _)| *n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    /// All recorded `(phase, duration)` pairs in insertion order.
+    pub fn entries(&self) -> &[(&'static str, Duration)] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, dt) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.phase("a", || std::thread::sleep(Duration::from_millis(1)));
+        t.phase("a", || std::thread::sleep(Duration::from_millis(1)));
+        t.phase("b", || {});
+        assert!(t.total("a") >= Duration::from_millis(2));
+        assert_eq!(t.entries().len(), 3);
+    }
+}

@@ -1,0 +1,240 @@
+//! Loopback integration tests for the L3 coordinator: a real TCP
+//! parameter-server round-trip with AVQ-compressed gradients, and the
+//! compression microservice under concurrent load.
+
+use std::time::Duration;
+
+use quiver::coordinator::protocol::Msg;
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::server::{Server, ServerConfig};
+use quiver::coordinator::service::{compress_remote, Service, ServiceConfig};
+use quiver::coordinator::tasks::QuadraticToy;
+use quiver::coordinator::worker::{run_worker, WorkerConfig};
+use quiver::sq;
+
+/// Federated training over loopback TCP: 4 workers on a convex toy task.
+/// The loss must collapse and the uplink must be ~8× smaller than raw.
+#[test]
+fn federated_round_trip_converges() {
+    let dim = 400;
+    let workers = 4;
+    let rounds = 40;
+    let target: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.05).sin() * 3.0).collect();
+
+    let server = Server::bind(ServerConfig {
+        workers,
+        rounds,
+        dim,
+        lr: 0.3,
+        round_timeout: Duration::from_secs(20),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().unwrap();
+
+    let mut joins = vec![];
+    for w in 0..workers {
+        let addr = addr.clone();
+        let target = target.clone();
+        joins.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                id: w as u64,
+                s: 16,
+                router: Router::default(),
+                seed: 1000 + w as u64,
+            };
+            let toy = QuadraticToy::new(target, 0.01, 2000 + w as u64);
+            run_worker(&addr, cfg, toy).expect("worker")
+        }));
+    }
+
+    let (final_params, log) = server.run(vec![0f32; dim]).expect("server run");
+    let stats: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    // Convergence: the quadratic's loss collapses by orders of magnitude.
+    let first = log.rounds.first().unwrap().mean_loss;
+    let last = log.rounds.last().unwrap().mean_loss;
+    assert!(
+        last < first * 0.01,
+        "loss should collapse: {first} -> {last}"
+    );
+    for (p, t) in final_params.iter().zip(&target) {
+        assert!((p - t).abs() < 0.1, "{p} vs {t}");
+    }
+    // Compression accounting: 4-bit codes ≈ 8× smaller than f32.
+    let (compressed, raw) = log.totals();
+    assert!(
+        raw > 0 && compressed * 4 < raw,
+        "ratio {}x",
+        raw as f64 / compressed as f64
+    );
+    // Every round got all submissions.
+    for r in &log.rounds {
+        assert_eq!(r.submissions, workers);
+    }
+    for s in &stats {
+        assert_eq!(s.rounds, rounds);
+        assert!(s.bytes_sent * 4 < s.bytes_raw);
+    }
+}
+
+/// A worker that vanishes after admission: the server must fail cleanly
+/// (no hang) once sends fail or the round times out.
+#[test]
+fn server_survives_dead_worker_with_timeout() {
+    let dim = 50;
+    let server = Server::bind(ServerConfig {
+        workers: 2,
+        rounds: 5,
+        dim,
+        lr: 0.1,
+        round_timeout: Duration::from_millis(300),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().unwrap();
+
+    // Worker 0: healthy.
+    let a0 = addr.clone();
+    let healthy = std::thread::spawn(move || {
+        let cfg = WorkerConfig { id: 0, s: 4, router: Router::default(), seed: 1 };
+        let toy = QuadraticToy::new(vec![1.0; 50], 0.0, 2);
+        // May error when the server aborts early — either way it must return.
+        let _ = run_worker(&a0, cfg, toy);
+    });
+    // Worker 1: says hello, then disappears.
+    let a1 = addr.clone();
+    let ghost = std::thread::spawn(move || {
+        use quiver::coordinator::protocol::{recv, send};
+        let mut s = std::net::TcpStream::connect(&a1).unwrap();
+        send(&mut s, &Msg::Hello { worker_id: 1 }).unwrap();
+        let mut rd = std::io::BufReader::new(s.try_clone().unwrap());
+        let _ = recv(&mut rd); // Welcome
+        drop(s); // vanish
+    });
+
+    let started = std::time::Instant::now();
+    // With one healthy worker the server still makes progress (aggregates
+    // the submissions it has) or errors cleanly — it must not hang.
+    let result = server.run(vec![0f32; dim]);
+    assert!(started.elapsed() < Duration::from_secs(10), "server hung");
+    match result {
+        Ok((_, log)) => {
+            assert!(!log.rounds.is_empty());
+            for r in &log.rounds {
+                assert!(r.submissions >= 1);
+            }
+        }
+        Err(e) => {
+            // Acceptable: broken pipe to the ghost. Must be an error, not a hang.
+            eprintln!("server errored as expected: {e:#}");
+        }
+    }
+    healthy.join().unwrap();
+    ghost.join().unwrap();
+}
+
+/// Compression service: concurrent clients, mixed sizes (exact + hist
+/// routes), valid unbiased compressions, consistent metrics.
+#[test]
+fn compression_service_concurrent_clients() {
+    let service = Service::start(ServiceConfig {
+        threads: 3,
+        queue_capacity: 64,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        router: Router::new(RouterConfig { exact_max_d: 4096, hist_m: 256, seed: 9 }),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = service.addr().to_string();
+
+    let mut joins = vec![];
+    for c in 0..8u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            // Alternate small (exact) and large (hist) requests.
+            let d = if c % 2 == 0 { 1024 } else { 20_000 };
+            let data: Vec<f32> = (0..d)
+                .map(|i| ((i as f32 * 0.01 + c as f32).sin() * 2.0).exp())
+                .collect();
+            let reply = compress_remote(&addr, c, 16, &data).expect("rpc");
+            match reply {
+                Msg::CompressReply { request_id, compressed, solver, .. } => {
+                    assert_eq!(request_id, c);
+                    assert_eq!(compressed.d as usize, d);
+                    if d <= 4096 {
+                        assert_eq!(solver, "quiver-accel");
+                    } else {
+                        assert_eq!(solver, "quiver-hist(M=256)");
+                    }
+                    // Decode: all estimates within the data range.
+                    let back = sq::decompress(&compressed);
+                    let (lo, hi) = data.iter().fold(
+                        (f32::INFINITY, f32::NEG_INFINITY),
+                        |(l, h), &x| (l.min(x), h.max(x)),
+                    );
+                    for v in back {
+                        assert!(v >= lo as f64 - 1e-5 && v <= hi as f64 + 1e-5);
+                    }
+                }
+                other => panic!("expected reply, got {other:?}"),
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    let m = &service.metrics;
+    let accepted = m.accepted.load(std::sync::atomic::Ordering::Relaxed);
+    let completed = m.completed.load(std::sync::atomic::Ordering::Relaxed);
+    let rejected = m.rejected.load(std::sync::atomic::Ordering::Relaxed);
+    eprintln!("DBG accepted={accepted} completed={completed} rejected={rejected}");
+    assert_eq!(accepted, 8);
+    assert_eq!(completed, 8);
+    assert!(m.ratio() > 4.0, "compression ratio {}", m.ratio());
+    service.shutdown();
+}
+
+/// Backpressure: a single slow solver thread and a depth-1 queue must turn
+/// excess load into `Busy` replies, never into unbounded queueing.
+#[test]
+fn compression_service_backpressure() {
+    let service = Service::start(ServiceConfig {
+        threads: 1,
+        queue_capacity: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        // Exact route for large-ish vectors = deliberately slow.
+        router: Router::new(RouterConfig { exact_max_d: 1 << 22, hist_m: 256, seed: 9 }),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = service.addr().to_string();
+
+    let n = 12u64;
+    let mut joins = vec![];
+    for c in 0..n {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let data: Vec<f32> = (0..60_000).map(|i| (i as f32 * 0.001).sin()).collect();
+            match compress_remote(&addr, c, 8, &data).expect("rpc") {
+                Msg::CompressReply { .. } => 0u64,
+                Msg::Busy { request_id } => {
+                    assert_eq!(request_id, c);
+                    1u64
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }));
+    }
+    let rejected: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let m = &service.metrics;
+    let acc = m.accepted.load(std::sync::atomic::Ordering::Relaxed);
+    let rej = m.rejected.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(acc + rej, n, "every request is either accepted or rejected");
+    assert_eq!(rej, rejected);
+    assert!(rej > 0, "flooding a depth-1 queue must shed load");
+    service.shutdown();
+}

@@ -1,0 +1,297 @@
+//! Property-based tests over the paper's invariants (in-tree framework —
+//! see `quiver::testutil`).
+
+use quiver::avq::{self, Prefix, SolverKind};
+use quiver::metrics::sum_variances;
+use quiver::sq;
+use quiver::testutil::{forall, forall_vec, Gen};
+use quiver::util::approx_eq;
+
+/// Lemma 5.2: the interval cost satisfies the quadrangle inequality —
+/// random (possibly weighted) inputs, random index quadruples.
+#[test]
+fn prop_quadrangle_inequality_c_and_c2() {
+    forall(60, 0xA1, |g: &mut Gen, _| {
+        let ys = g.sorted_vec(8..64);
+        let n = ys.len();
+        let p = if g.bool() {
+            let ws = g.weights(n, 9);
+            Prefix::weighted(&ys, &ws)
+        } else {
+            Prefix::unweighted(&ys)
+        };
+        for _ in 0..50 {
+            let mut ix = [
+                g.usize_in(0..n),
+                g.usize_in(0..n),
+                g.usize_in(0..n),
+                g.usize_in(0..n),
+            ];
+            ix.sort_unstable();
+            let [a, b, c, d] = ix;
+            let (l1, r1) = (p.cost(a, c) + p.cost(b, d), p.cost(a, d) + p.cost(b, c));
+            if l1 > r1 + 1e-9 * r1.abs().max(1.0) {
+                return Err(format!("C QI violated at {ix:?}: {l1} > {r1}"));
+            }
+            let (l2, r2) = (p.cost2(a, c) + p.cost2(b, d), p.cost2(a, d) + p.cost2(b, c));
+            if l2 > r2 + 1e-9 * r2.abs().max(1.0) {
+                return Err(format!("C2 QI violated at {ix:?}: {l2} > {r2}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Proposition 4.1: the DP argmin is monotone in j for any valid D row.
+#[test]
+fn prop_argmin_monotone() {
+    forall(30, 0xA2, |g: &mut Gen, _| {
+        let ys = g.sorted_vec(10..80);
+        let n = ys.len();
+        let p = Prefix::unweighted(&ys);
+        // A valid previous row: MSE[2][k] = C[0,k].
+        let prev: Vec<f64> = (0..n).map(|k| p.cost(0, k)).collect();
+        let mut last = 0usize;
+        for j in 0..n {
+            let mut best = f64::INFINITY;
+            let mut arg = 0usize;
+            for k in 0..=j {
+                let v = prev[k] + p.cost(k, j);
+                if v < best {
+                    best = v;
+                    arg = k;
+                }
+            }
+            if arg < last {
+                return Err(format!("argmin regressed at j={j}: {arg} < {last}"));
+            }
+            last = arg;
+        }
+        Ok(())
+    });
+}
+
+/// The headline cross-check: every exact solver returns the same optimal
+/// MSE as the exhaustive oracle, on every paper distribution, weighted or
+/// not, and the traceback reproduces the claimed objective.
+#[test]
+fn prop_all_solvers_agree_with_oracle() {
+    forall(60, 0xA3, |g: &mut Gen, _| {
+        let ys = {
+            let mut v = g.sorted_vec(5..13);
+            // Occasionally inject duplicates to stress tie handling.
+            if g.bool() && v.len() >= 4 {
+                let dup = v[1];
+                v[2] = dup;
+            }
+            v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        };
+        let n = ys.len();
+        let p = if g.bool() {
+            Prefix::weighted(&ys, &g.weights(n, 6))
+        } else {
+            Prefix::unweighted(&ys)
+        };
+        let s = g.usize_in(2..n.max(3));
+        let oracle = avq::solve(&p, s, SolverKind::Exhaustive).map_err(|e| e.to_string())?;
+        for kind in [SolverKind::ZipMl, SolverKind::BinSearch, SolverKind::Quiver, SolverKind::QuiverAccel] {
+            let sol = avq::solve(&p, s, kind).map_err(|e| e.to_string())?;
+            if !approx_eq(sol.mse, oracle.mse, 1e-9, 1e-12) {
+                return Err(format!(
+                    "{} disagrees: {} vs oracle {} (d={n}, s={s})",
+                    kind.name(),
+                    sol.mse,
+                    oracle.mse
+                ));
+            }
+            let recomputed = sol.recompute_mse(&p);
+            if !approx_eq(recomputed, sol.mse, 1e-9, 1e-12) {
+                return Err(format!(
+                    "{} traceback mismatch: {} vs {}",
+                    kind.name(),
+                    recomputed,
+                    sol.mse
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Optimal MSE is non-increasing in the budget s.
+#[test]
+fn prop_mse_monotone_in_s() {
+    forall(25, 0xA4, |g: &mut Gen, _| {
+        let ys = g.sorted_vec(20..200);
+        let p = Prefix::unweighted(&ys);
+        let mut prev = f64::INFINITY;
+        for s in 2..10 {
+            let sol = avq::solve(&p, s, SolverKind::QuiverAccel).map_err(|e| e.to_string())?;
+            if sol.mse > prev + 1e-9 * prev.max(1.0) {
+                return Err(format!("MSE increased at s={s}: {} > {prev}", sol.mse));
+            }
+            prev = sol.mse;
+        }
+        Ok(())
+    });
+}
+
+/// The solver-reported objective equals the independently computed sum of
+/// variances of its Q over the input.
+#[test]
+fn prop_solution_mse_matches_metric() {
+    forall(30, 0xA5, |g: &mut Gen, _| {
+        let ys = g.sorted_vec(10..300);
+        let p = Prefix::unweighted(&ys);
+        let s = g.usize_in(2..9);
+        let sol = avq::solve(&p, s, SolverKind::Quiver).map_err(|e| e.to_string())?;
+        let direct = sum_variances(&ys, &sol.q);
+        if !approx_eq(direct, sol.mse, 1e-9, 1e-9) {
+            return Err(format!("metric {direct} vs solver {}", sol.mse));
+        }
+        Ok(())
+    });
+}
+
+/// Histogram path: mass conservation, covering Q, and the §6 bound
+/// relative to the histogram optimum.
+#[test]
+fn prop_histogram_invariants() {
+    use quiver::avq::histogram::{solve_hist, theory_bound, GridHistogram, HistConfig};
+    use quiver::util::rng::Xoshiro256pp;
+    forall(25, 0xA6, |g: &mut Gen, case| {
+        let xs = g.vec_f64(50..2000, -5.0..20.0);
+        let m = g.usize_in(2..500);
+        let mut rng = Xoshiro256pp::seed_from_u64(case);
+        let h = GridHistogram::build(&xs, m, &mut rng).map_err(|e| e.to_string())?;
+        if h.total() != xs.len() as f64 {
+            return Err(format!("mass {} != d {}", h.total(), xs.len()));
+        }
+        let s = g.usize_in(2..9);
+        let sol = solve_hist(&xs, s, &HistConfig { m, inner: SolverKind::QuiverAccel, seed: case })
+            .map_err(|e| e.to_string())?;
+        let (lo, hi) = xs
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h2), &x| (l.min(x), h2.max(x)));
+        if sol.q[0] > lo || *sol.q.last().unwrap() < hi {
+            return Err("hist Q does not cover the input".into());
+        }
+        // True error respects the paper's bound (vs the histogram optimum).
+        let mut sorted = xs.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let err = sum_variances(&sorted, &sol.q);
+        let norm2: f64 = xs.iter().map(|x| x * x).sum();
+        let bound = theory_bound(sol.mse, xs.len(), m, norm2);
+        if err > bound * (1.0 + 1e-9) + 1e-9 {
+            return Err(format!("error {err} exceeds §6 bound {bound} (m={m})"));
+        }
+        Ok(())
+    });
+}
+
+/// Bit-packing codec: lossless roundtrip for arbitrary (idx, qs).
+#[test]
+fn prop_codec_roundtrip() {
+    forall(60, 0xA7, |g: &mut Gen, _| {
+        let s = g.usize_in(1..70);
+        let d = g.usize_in(0..3000);
+        let qs: Vec<f64> = (0..s).map(|i| i as f64 * 0.25).collect();
+        let idx: Vec<u32> = (0..d).map(|_| g.usize_in(0..s) as u32).collect();
+        let c = sq::encode(&idx, &qs);
+        let bytes = c.to_bytes();
+        let c2 = sq::CompressedVec::from_bytes(&bytes).ok_or("parse failed")?;
+        let (idx2, qs2) = sq::decode(&c2);
+        if idx2 != idx || qs2 != qs {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// Unbiased SQ: for any covering Q, decoded estimates stay within the
+/// bracketing values of each coordinate.
+#[test]
+fn prop_sq_outputs_bracket() {
+    forall(40, 0xA8, |g: &mut Gen, case| {
+        use quiver::util::rng::Xoshiro256pp;
+        let xs = g.vec_f64(1..500, -3.0..3.0);
+        let (lo, hi) = xs
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+        let s = g.usize_in(2..10);
+        let mut qs: Vec<f64> = (0..s).map(|_| g.f64_in(lo..hi + 1e-9)).collect();
+        qs[0] = lo;
+        qs[s - 1] = hi;
+        qs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut rng = Xoshiro256pp::seed_from_u64(case);
+        let idx = sq::quantize(&xs, &qs, &mut rng);
+        for (&x, &i) in xs.iter().zip(&idx) {
+            let v = qs[i as usize];
+            // v must be a neighbour of x in qs.
+            let pos = qs.partition_point(|&q| q < x);
+            let lo_q = qs[pos.saturating_sub(1)];
+            let hi_q = qs[pos.min(s - 1)];
+            if (v - lo_q).abs() > 1e-12 && (v - hi_q).abs() > 1e-12 {
+                return Err(format!("x={x} quantized to non-neighbour {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Shrinking smoke test: a deliberately strict property on vectors finds
+/// minimal counterexamples (framework self-check at integration level).
+#[test]
+fn prop_vec_shrinking_framework() {
+    // Property that always holds — must not panic.
+    forall_vec(
+        20,
+        0xA9,
+        |g| g.vec_f64(0..100, -1.0..1.0),
+        |v| {
+            if v.iter().all(|x| x.abs() <= 1.0) {
+                Ok(())
+            } else {
+                Err("range".into())
+            }
+        },
+    );
+}
+
+/// Fuzz the wire decoders: arbitrary bytes must never panic — only return
+/// errors (the server parses untrusted input).
+#[test]
+fn prop_decoders_never_panic_on_garbage() {
+    use quiver::coordinator::protocol::Msg;
+    forall(300, 0xAA, |g: &mut Gen, _| {
+        let len = g.usize_in(0..512);
+        let bytes: Vec<u8> = (0..len).map(|_| g.usize_in(0..256) as u8).collect();
+        let _ = Msg::from_body(&bytes); // must not panic
+        let _ = sq::CompressedVec::from_bytes(&bytes); // must not panic
+        Ok(())
+    });
+}
+
+/// Bit-flip corruption of valid frames: decode either fails or yields a
+/// structurally valid message — never panics, never over-allocates.
+#[test]
+fn prop_decoders_survive_bitflips() {
+    use quiver::coordinator::protocol::Msg;
+    forall(200, 0xAB, |g: &mut Gen, _| {
+        let msg = Msg::CompressRequest {
+            request_id: g.u64(),
+            s: g.usize_in(1..64) as u32,
+            data: (0..g.usize_in(0..64)).map(|i| i as f32).collect(),
+        };
+        let mut frame = msg.to_frame();
+        let body_len = frame.len() - 4;
+        if body_len > 0 {
+            let pos = 4 + g.usize_in(0..body_len);
+            let bit = g.usize_in(0..8);
+            frame[pos] ^= 1 << bit;
+        }
+        let _ = Msg::from_body(&frame[4..]); // must not panic either way
+        Ok(())
+    });
+}

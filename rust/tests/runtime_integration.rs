@@ -1,0 +1,219 @@
+//! Integration: PJRT-executed artifacts must reproduce the golden dumps
+//! written by `python/compile/aot.py` (which themselves are the pure-jnp
+//! oracle outputs). This is the cross-language seam test: jax/Pallas
+//! lowering → HLO text → xla-crate parse/compile/execute.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are missing
+//! so `cargo test` stays runnable from a clean checkout.
+
+use quiver::runtime::{Runtime, Tensor};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn golden_f32(name: &str) -> Vec<f32> {
+    let path = artifacts_dir().join("golden").join(format!("{name}.bin"));
+    let bytes = std::fs::read(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn golden_i32(name: &str) -> Vec<i32> {
+    let path = artifacts_dir().join("golden").join(format!("{name}.bin"));
+    let bytes = std::fs::read(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(artifacts_dir()).expect("runtime"))
+}
+
+#[test]
+fn sq_artifact_matches_golden() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let x = golden_f32("sq_x");
+    let qs = golden_f32("sq_qs");
+    let u = golden_f32("sq_u");
+    let out = rt
+        .call("sq_d1024_s8", &[Tensor::F32(x), Tensor::F32(qs), Tensor::F32(u)])
+        .expect("execute sq");
+    let xhat = out[0].as_f32().unwrap();
+    let idx = out[1].as_i32().unwrap();
+    let want_xhat = golden_f32("sq_xhat");
+    let want_idx = golden_i32("sq_idx");
+    assert_eq!(xhat.len(), 1024);
+    for i in 0..1024 {
+        assert_eq!(xhat[i], want_xhat[i], "xhat[{i}]");
+        assert_eq!(idx[i], want_idx[i], "idx[{i}]");
+    }
+}
+
+#[test]
+fn hist_artifact_matches_golden() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let x = golden_f32("hist_x");
+    let u = golden_f32("hist_u");
+    let lohi = golden_f32("hist_lohi");
+    let out = rt
+        .call("hist_d65536_m256", &[Tensor::F32(x), Tensor::F32(u)])
+        .expect("execute hist");
+    let w = out[0].as_f32().unwrap();
+    let lo = out[1].as_f32().unwrap();
+    let hi = out[2].as_f32().unwrap();
+    let want_w = golden_f32("hist_w");
+    assert_eq!(w.len(), 257);
+    assert_eq!(w, &want_w[..], "weights");
+    assert_eq!(lo[0], lohi[0]);
+    assert_eq!(hi[0], lohi[1]);
+    let total: f32 = w.iter().sum();
+    assert_eq!(total, 65536.0);
+}
+
+#[test]
+fn model_grad_matches_golden() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let flat = golden_f32("model_flat");
+    let xb = golden_f32("model_xb");
+    let yb = golden_i32("model_yb");
+    let out = rt
+        .call("model_grad", &[Tensor::F32(flat), Tensor::F32(xb), Tensor::I32(yb)])
+        .expect("execute model_grad");
+    let loss = out[0].scalar_f32().unwrap();
+    let grad = out[1].as_f32().unwrap();
+    let want_loss = golden_f32("model_loss")[0];
+    let want_grad = golden_f32("model_grad");
+    assert!(
+        (loss - want_loss).abs() < 1e-5 * want_loss.abs().max(1.0),
+        "loss {loss} vs {want_loss}"
+    );
+    assert_eq!(grad.len(), want_grad.len());
+    let mut max_abs = 0f32;
+    for (g, w) in grad.iter().zip(&want_grad) {
+        max_abs = max_abs.max((g - w).abs());
+    }
+    assert!(max_abs < 1e-5, "max grad deviation {max_abs}");
+}
+
+#[test]
+fn model_init_blob_matches_golden_params() {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        return;
+    }
+    let bytes = std::fs::read(artifacts_dir().join("model_init.bin")).expect("model_init.bin");
+    let init: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    assert!(init.iter().all(|v| v.is_finite()));
+    let flat = golden_f32("model_flat");
+    assert_eq!(init, flat);
+}
+
+#[test]
+fn model_eval_runs_and_is_consistent() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let flat = golden_f32("model_flat");
+    let xb = golden_f32("model_xb");
+    let yb = golden_i32("model_yb");
+    let out = rt
+        .call("model_eval", &[Tensor::F32(flat), Tensor::F32(xb), Tensor::I32(yb)])
+        .expect("execute model_eval");
+    let loss = out[0].scalar_f32().unwrap();
+    let acc = out[1].scalar_f32().unwrap();
+    let want_loss = golden_f32("model_loss")[0];
+    assert!((loss - want_loss).abs() < 1e-5 * want_loss.abs().max(1.0));
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn call_validates_signatures() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // Wrong arity.
+    assert!(rt.call("sq_d1024_s8", &[]).is_err());
+    // Wrong dtype.
+    let bad = rt.call(
+        "sq_d1024_s8",
+        &[
+            Tensor::I32(vec![0; 1024]),
+            Tensor::F32(vec![0.0; 8]),
+            Tensor::F32(vec![0.0; 1024]),
+        ],
+    );
+    assert!(bad.is_err());
+    // Unknown artifact.
+    assert!(rt.call("nope", &[]).is_err());
+}
+
+#[test]
+fn runtime_handle_service_thread() {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        return;
+    }
+    let h = quiver::runtime::exec::RuntimeHandle::spawn(artifacts_dir()).expect("spawn");
+    assert_eq!(h.platform().unwrap(), "cpu");
+    h.warmup("sq_d1024_s8").unwrap();
+    // Concurrent callers through clones of the handle.
+    let mut joins = vec![];
+    for t in 0..4 {
+        let h = h.clone();
+        joins.push(std::thread::spawn(move || {
+            let x = golden_f32("sq_x");
+            let qs = golden_f32("sq_qs");
+            let u = golden_f32("sq_u");
+            let out = h
+                .call("sq_d1024_s8", vec![Tensor::F32(x), Tensor::F32(qs), Tensor::F32(u)])
+                .unwrap_or_else(|e| panic!("thread {t}: {e:#}"));
+            out[0].as_f32().unwrap().to_vec()
+        }));
+    }
+    let results: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let want = golden_f32("sq_xhat");
+    for r in results {
+        assert_eq!(r, want);
+    }
+}
+
+#[test]
+fn unbiasedness_through_the_full_stack() {
+    // Statistical seam test: executing the sq artifact with many uniform
+    // draws generated in Rust must average back to x.
+    let Some(rt) = runtime_or_skip() else { return };
+    use quiver::util::rng::Xoshiro256pp;
+    let x = golden_f32("sq_x");
+    let qs = golden_f32("sq_qs");
+    let mut rng = Xoshiro256pp::seed_from_u64(4242);
+    let trials = 64;
+    let mut acc = vec![0f64; x.len()];
+    for _ in 0..trials {
+        let u: Vec<f32> = (0..x.len()).map(|_| rng.next_f32()).collect();
+        let out = rt
+            .call(
+                "sq_d1024_s8",
+                &[Tensor::F32(x.clone()), Tensor::F32(qs.clone()), Tensor::F32(u)],
+            )
+            .unwrap();
+        for (a, v) in acc.iter_mut().zip(out[0].as_f32().unwrap()) {
+            *a += *v as f64;
+        }
+    }
+    let span = (qs[qs.len() - 1] - qs[0]) as f64;
+    let mut worst = 0.0f64;
+    for (a, &xi) in acc.iter().zip(&x) {
+        let mean = a / trials as f64;
+        worst = worst.max((mean - xi as f64).abs());
+    }
+    assert!(
+        worst < 0.2 * span,
+        "worst per-coordinate deviation {worst} vs span {span}"
+    );
+}

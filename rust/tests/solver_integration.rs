@@ -1,0 +1,161 @@
+//! Cross-module integration: the full compression pipeline
+//! (solve → quantize → encode → decode → measure) at realistic sizes, and
+//! larger-scale solver cross-agreement than the unit tests cover.
+
+use quiver::avq::histogram::{solve_hist, HistConfig};
+use quiver::avq::{self, Prefix, SolverKind};
+use quiver::dist::Dist;
+use quiver::metrics::{sum_variances, vnmse};
+use quiver::sq;
+use quiver::util::rng::Xoshiro256pp;
+
+/// Empirical MSE of repeated stochastic quantization converges to the
+/// analytic sum of variances the solver optimizes — the whole point of the
+/// objective.
+#[test]
+fn empirical_mse_matches_analytic_objective() {
+    let d = 4096;
+    let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(d, 11);
+    let p = Prefix::unweighted(&xs);
+    let sol = avq::solve(&p, 8, SolverKind::QuiverAccel).unwrap();
+    let analytic = sol.mse;
+    let mut rng = Xoshiro256pp::seed_from_u64(123);
+    let trials = 300;
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let idx = sq::quantize_sorted(&xs, &sol.q, &mut rng);
+        let err: f64 = xs
+            .iter()
+            .zip(&idx)
+            .map(|(&x, &i)| {
+                let e = sol.q[i as usize] - x;
+                e * e
+            })
+            .sum();
+        acc += err;
+    }
+    let empirical = acc / trials as f64;
+    let rel = (empirical - analytic).abs() / analytic;
+    assert!(
+        rel < 0.05,
+        "empirical {empirical} vs analytic {analytic} (rel {rel})"
+    );
+}
+
+/// All four production solvers agree at d = 20_000 on every paper
+/// distribution (exhaustive can't go here; they check each other).
+#[test]
+fn solvers_agree_at_scale() {
+    for (seed, (name, dist)) in Dist::paper_suite().into_iter().enumerate() {
+        let xs = dist.sample_sorted(20_000, 50 + seed as u64);
+        let p = Prefix::unweighted(&xs);
+        for s in [4, 16] {
+            let quiver = avq::solve(&p, s, SolverKind::Quiver).unwrap();
+            let bins = avq::solve(&p, s, SolverKind::BinSearch).unwrap();
+            let accel = avq::solve(&p, s, SolverKind::QuiverAccel).unwrap();
+            assert!(
+                (quiver.mse - bins.mse).abs() < 1e-9 * quiver.mse.max(1e-12),
+                "{name} s={s}: quiver={} binsearch={}",
+                quiver.mse,
+                bins.mse
+            );
+            assert!(
+                (quiver.mse - accel.mse).abs() < 1e-9 * quiver.mse.max(1e-12),
+                "{name} s={s}: quiver={} accel={}",
+                quiver.mse,
+                accel.mse
+            );
+        }
+    }
+}
+
+/// Figure-2 behaviour: vNMSE of the histogram solution approaches the
+/// optimum as M grows, and M = √d·log d is already within a few percent.
+#[test]
+fn hist_vnmse_converges_to_optimal_in_m() {
+    let d = 1 << 14;
+    let xs_raw = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 77);
+    let mut xs = xs_raw.clone();
+    xs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = Prefix::unweighted(&xs);
+    let s = 8;
+    let opt = avq::solve(&p, s, SolverKind::QuiverAccel).unwrap();
+    let v_opt = opt.mse / p.norm2_sq();
+    let mut last = f64::INFINITY;
+    for m in [16usize, 64, 256, 1024] {
+        let sol = solve_hist(&xs_raw, s, &HistConfig::fixed(m)).unwrap();
+        let v = vnmse(&xs, &sol.q);
+        assert!(v + 1e-12 >= v_opt, "approx can't beat optimal");
+        // Not strictly monotone (stochastic rounding), but the trend must
+        // hold across 4x steps.
+        assert!(v < last * 1.5, "vNMSE blew up at M={m}: {v} vs {last}");
+        last = v;
+    }
+    assert!(
+        last <= v_opt * 1.05,
+        "M=1024 should be within 5%: {last} vs optimal {v_opt}"
+    );
+}
+
+/// End-to-end compression pipeline at 1M coordinates through the
+/// histogram path (the paper's "on the fly" regime): solve, quantize,
+/// pack, unpack, and verify both the error and the wire size.
+#[test]
+fn million_coordinate_pipeline() {
+    let d = 1 << 20;
+    let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 99);
+    let s = 16;
+    let t0 = std::time::Instant::now();
+    let sol = solve_hist(&xs, s, &HistConfig::fixed(400)).unwrap();
+    let solve_time = t0.elapsed();
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let c = sq::compress(&xs, &sol.q, &mut rng);
+    assert_eq!(c.d as usize, d);
+    assert_eq!(c.bits, 4);
+    // 4 bits/coord + header.
+    assert!(c.wire_size() < d / 2 + 1024);
+    let back = sq::decompress(&c);
+    assert_eq!(back.len(), d);
+    // vNMSE sanity for s=16 on a normal vector. (Unbiased SQ pays for the
+    // ±5σ range at d=1M; the optimum here is ~2-3%, far below 1-bit's ~30%.)
+    let mut sorted = xs.clone();
+    sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let v = vnmse(&sorted, &sol.q);
+    assert!(v < 0.05, "vNMSE {v}");
+    // Generous wall-clock budget (debug builds are slow; release is ~ms).
+    assert!(
+        solve_time.as_secs_f64() < 30.0,
+        "hist solve took {solve_time:?}"
+    );
+}
+
+/// Baselines never beat the optimum and respect their documented
+/// guarantees at realistic scale.
+#[test]
+fn baselines_bounded_by_optimum_at_scale() {
+    use quiver::baselines::Method;
+    let xs = Dist::Weibull { shape: 1.0, scale: 1.0 }.sample_sorted(1 << 14, 13);
+    let p = Prefix::unweighted(&xs);
+    let s = 8;
+    let opt = avq::solve(&p, s, SolverKind::QuiverAccel).unwrap();
+    for m in [
+        Method::QuiverHist { m: 400 },
+        Method::ZipMlCpUniform { m: 400 },
+        Method::ZipMlCpQuantile { m: 400 },
+        Method::Alq { iters: 10 },
+        Method::UniformSq,
+    ] {
+        let q = m.quantization_values(&xs, s);
+        let err = sum_variances(&xs, &q);
+        assert!(
+            err + 1e-9 >= opt.mse,
+            "{} beat the optimum: {err} < {}",
+            m.name(),
+            opt.mse
+        );
+    }
+    // 2-Apx uses 2s values; bounded by twice the s-optimal.
+    let q2 = Method::ZipMl2Apx.quantization_values(&xs, s);
+    let err2 = sum_variances(&xs, &q2);
+    assert!(err2 <= 2.0 * opt.mse + 1e-9, "2apx {err2} vs 2*opt {}", 2.0 * opt.mse);
+}
