@@ -1,0 +1,22 @@
+# Convenience targets. `make artifacts` is what the Rust runtime docs and
+# error hints refer to: it AOT-lowers the JAX/Pallas graphs to HLO text +
+# manifest + golden dumps under rust/artifacts/ (requires jax; see
+# python/compile/aot.py).
+
+.PHONY: artifacts build test bench clean
+
+artifacts:
+	cd python/compile && python3 aot.py --out ../../rust/artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench --bench bench_solvers && cargo bench --bench bench_approx && cargo bench --bench bench_pipeline
+
+clean:
+	cd rust && cargo clean
+	rm -rf rust/artifacts results rust/results

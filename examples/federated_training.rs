@@ -1,6 +1,5 @@
-//! **End-to-end driver** (DESIGN.md §4, row "E2E"): federated training of
-//! the MLP classifier with AVQ-compressed gradient uplinks, exercising all
-//! three layers:
+//! **End-to-end driver**: federated training of the MLP classifier with
+//! AVQ-compressed gradient uplinks, exercising all three layers:
 //!
 //! * **L1** — the Pallas `sq`/`hist` kernels are inside the lowered HLO;
 //! * **L2** — `model_grad` / `model_eval` artifacts computed by JAX,
@@ -12,9 +11,8 @@
 //! make artifacts && cargo run --release --example federated_training
 //! ```
 //!
-//! Prints the loss curve (recorded in EXPERIMENTS.md) plus compression
-//! accounting, and finishes with a held-out evaluation through the
-//! `model_eval` artifact.
+//! Prints the loss curve plus compression accounting, and finishes with a
+//! held-out evaluation through the `model_eval` artifact.
 
 use std::time::Duration;
 

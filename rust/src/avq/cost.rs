@@ -27,7 +27,8 @@
 //! cache lines (one per endpoint) instead of six with separate arrays, and
 //! the fused [`Prefix::cost2`] reuses the endpoint loads across `b*` and
 //! both sub-costs (~3 lines total). This layout change alone is worth ~2×
-//! end-to-end on the d = 2^20 solves (see EXPERIMENTS.md §Perf).
+//! end-to-end on the d = 2^20 solves (measure with
+//! `cargo bench --bench bench_solvers`).
 //!
 //! ### Note on the paper's printed formulas
 //!

@@ -22,7 +22,9 @@ use crate::util::rng::Xoshiro256pp;
 /// A stochastically-rounded histogram of an input vector on a uniform grid.
 #[derive(Debug, Clone)]
 pub struct GridHistogram {
-    /// Grid values `S` (length M+1, uniform from `lo` to `hi`).
+    /// Grid values `S` (length M+1, uniform from `lo` to `hi`; a single
+    /// point when the input range is degenerate — see
+    /// [`GridHistogram::build`]).
     pub grid: Vec<f64>,
     /// Integral bin weights; `Σ weights = d`.
     pub weights: Vec<f64>,
@@ -56,19 +58,22 @@ impl GridHistogram {
             hi = hi.max(x);
             norm2 += x * x;
         }
-        let mut weights = vec![0.0f64; m + 1];
         if hi == lo {
-            // Degenerate range: all mass in bin 0 on a single-point grid.
-            weights[0] = xs.len() as f64;
+            // Degenerate range (constant input): an (M+1)-point grid would
+            // be M+1 duplicates of the same value. Collapse to a true
+            // single-point grid so downstream `Prefix::weighted` + solvers
+            // see one position, take the constant-vector fast path, and
+            // return Q = {lo} with exactly zero MSE.
             return Ok(Self {
-                grid: (0..=m).map(|_| lo).collect(),
-                weights,
+                grid: vec![lo],
+                weights: vec![xs.len() as f64],
                 lo,
                 hi,
                 d: xs.len(),
                 norm2_sq: norm2,
             });
         }
+        let mut weights = vec![0.0f64; m + 1];
         let delta = (hi - lo) / m as f64;
         let inv_delta = m as f64 / (hi - lo);
         for &x in xs {
@@ -266,6 +271,40 @@ mod tests {
         let sol = solve_hist(&xs, 4, &HistConfig::fixed(16)).unwrap();
         assert_eq!(sol.mse, 0.0);
         assert_eq!(sol.q, vec![3.3]);
+    }
+
+    #[test]
+    fn degenerate_range_builds_single_point_grid() {
+        // Regression: the degenerate path used to emit an (M+1)-point grid
+        // of identical values; it must collapse to one grid point with all
+        // the mass, conserving the histogram invariants.
+        let xs = vec![-7.25; 640];
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let h = GridHistogram::build(&xs, 128, &mut rng).unwrap();
+        assert_eq!(h.grid, vec![-7.25]);
+        assert_eq!(h.weights, vec![640.0]);
+        assert_eq!(h.total(), 640.0);
+        assert_eq!((h.lo, h.hi), (-7.25, -7.25));
+        assert_eq!(h.d, 640);
+        let p = h.prefix();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.total_weight(), 640.0);
+    }
+
+    #[test]
+    fn degenerate_range_zero_mse_for_every_inner_solver() {
+        // Regression: no duplicated quantization values and no spurious
+        // nonzero MSE on a constant input, whatever the inner solver.
+        let xs = vec![2.5; 50];
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let h = GridHistogram::build(&xs, 32, &mut rng).unwrap();
+        for kind in SolverKind::ALL {
+            let sol = solve_on(&h, 4, kind).unwrap();
+            assert_eq!(sol.q, vec![2.5], "{}", kind.name());
+            assert_eq!(sol.q_idx, vec![0], "{}", kind.name());
+            assert_eq!(sol.mse, 0.0, "{}", kind.name());
+            assert_eq!(sol.recompute_mse(&h.prefix()), 0.0, "{}", kind.name());
+        }
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!
 //! This paper does not restate the construction, so we implement the
 //! standard parametric threshold-greedy that achieves the same bicriteria
-//! flavour (documented as substitution #4 in DESIGN.md):
+//! flavour (a documented substitution, not a transcription of ZipML's
+//! unstated construction):
 //!
 //! 1. `greedy(T)`: sweep left→right, each time extending the current
 //!    interval maximally subject to `C[prev, j] ≤ T` (exponential + binary

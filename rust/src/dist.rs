@@ -1,0 +1,470 @@
+//! Input distributions for the paper's evaluation (§7, Appendix D) and the
+//! test/bench harnesses: deterministic, seedable samplers with exact
+//! moments as test oracles and a CLI parser for the figure harness.
+//!
+//! ## Seeding contract
+//!
+//! `sample_vec(d, seed)` is a pure function of `(self, d, seed)`: the same
+//! triple always yields the same vector. All randomness comes from
+//! [`Xoshiro256pp`] (an in-tree, bit-exact generator) and the transforms
+//! use ordinary `f64` arithmetic plus the in-tree [`crate::util::erf`]
+//! special functions, so the streams do not depend on platform libm
+//! quirks. `sample_sorted(d, seed)` is exactly `sample_vec(d, seed)`
+//! sorted ascending — the two share one stream, so mixed use stays
+//! reproducible.
+//!
+//! The suite mirrors the paper's input families: DNN gradients are
+//! near-lognormal (§1), and the comparison points (ZipML, ALQ) were
+//! evaluated on Normal / TruncNorm / Exponential inputs; Weibull with
+//! `shape < 1` is the heavy-tailed stressor.
+
+use crate::util::erf::{normal_cdf, normal_pdf, normal_quantile};
+use crate::util::rng::Xoshiro256pp;
+
+/// An input distribution with fixed parameters.
+///
+/// `Copy` on purpose: figure options, routers and test generators pass
+/// these around by value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dist {
+    /// Uniform on `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// Normal with mean `mu` and standard deviation `sigma`.
+    Normal { mu: f64, sigma: f64 },
+    /// exp(N(mu, sigma²)) — the paper's default (gradient-like) input.
+    LogNormal { mu: f64, sigma: f64 },
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    Exponential { lambda: f64 },
+    /// Normal(mu, sigma²) conditioned on `[lo, hi]` (inverse-CDF sampler).
+    TruncNorm { mu: f64, sigma: f64, lo: f64, hi: f64 },
+    /// Weibull with shape `k` and scale `λ`; `shape < 1` is heavy-tailed.
+    Weibull { shape: f64, scale: f64 },
+}
+
+impl Dist {
+    /// CLI / figure-legend name (round-trips through [`Dist::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dist::Uniform { .. } => "uniform",
+            Dist::Normal { .. } => "normal",
+            Dist::LogNormal { .. } => "lognormal",
+            Dist::Exponential { .. } => "exponential",
+            Dist::TruncNorm { .. } => "truncnorm",
+            Dist::Weibull { .. } => "weibull",
+        }
+    }
+
+    /// The five input families the paper's figures sweep. LogNormal first
+    /// (the main-body workload); the rest are the appendix families.
+    pub fn paper_suite() -> Vec<(&'static str, Dist)> {
+        vec![
+            ("lognormal", Dist::LogNormal { mu: 0.0, sigma: 1.0 }),
+            ("normal", Dist::Normal { mu: 0.0, sigma: 1.0 }),
+            ("exponential", Dist::Exponential { lambda: 1.0 }),
+            ("truncnorm", Dist::TruncNorm { mu: 0.0, sigma: 1.0, lo: -2.0, hi: 2.0 }),
+            ("weibull", Dist::Weibull { shape: 1.0, scale: 1.0 }),
+        ]
+    }
+
+    /// Parse a CLI spec: a bare name with the canonical parameters
+    /// (`"lognormal"` ⇒ LogNormal(0, 1)) or an explicit parameter list
+    /// (`"normal(0.5,2)"`, `"truncnorm(0,1,-2,2)"`). Returns `None` for
+    /// unknown names, malformed parameter lists, or invalid parameters.
+    pub fn parse(spec: &str) -> Option<Dist> {
+        let spec = spec.trim().to_ascii_lowercase();
+        let (name, args): (&str, Vec<f64>) = match spec.find('(') {
+            Some(open) => {
+                if !spec.ends_with(')') {
+                    return None;
+                }
+                let args = spec[open + 1..spec.len() - 1]
+                    .split(',')
+                    .map(|a| a.trim().parse::<f64>().ok().filter(|v| v.is_finite()))
+                    .collect::<Option<Vec<f64>>>()?;
+                (&spec[..open], args)
+            }
+            None => (spec.as_str(), vec![]),
+        };
+        let d = match (name, args.as_slice()) {
+            ("uniform", []) => Dist::Uniform { lo: 0.0, hi: 1.0 },
+            ("uniform", &[lo, hi]) => Dist::Uniform { lo, hi },
+            ("normal", []) => Dist::Normal { mu: 0.0, sigma: 1.0 },
+            ("normal", &[mu, sigma]) => Dist::Normal { mu, sigma },
+            ("lognormal", []) => Dist::LogNormal { mu: 0.0, sigma: 1.0 },
+            ("lognormal", &[mu, sigma]) => Dist::LogNormal { mu, sigma },
+            ("exponential", []) => Dist::Exponential { lambda: 1.0 },
+            ("exponential", &[lambda]) => Dist::Exponential { lambda },
+            ("truncnorm", []) => Dist::TruncNorm { mu: 0.0, sigma: 1.0, lo: -2.0, hi: 2.0 },
+            ("truncnorm", &[mu, sigma, lo, hi]) => Dist::TruncNorm { mu, sigma, lo, hi },
+            ("weibull", []) => Dist::Weibull { shape: 1.0, scale: 1.0 },
+            ("weibull", &[shape, scale]) => Dist::Weibull { shape, scale },
+            _ => return None,
+        };
+        if d.params_valid() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    /// Whether the parameters define a proper distribution.
+    fn params_valid(&self) -> bool {
+        match *self {
+            Dist::Uniform { lo, hi } => lo.is_finite() && hi.is_finite() && hi > lo,
+            Dist::Normal { mu, sigma } | Dist::LogNormal { mu, sigma } => {
+                mu.is_finite() && sigma.is_finite() && sigma > 0.0
+            }
+            Dist::Exponential { lambda } => lambda.is_finite() && lambda > 0.0,
+            Dist::TruncNorm { mu, sigma, lo, hi } => {
+                mu.is_finite()
+                    && sigma.is_finite()
+                    && sigma > 0.0
+                    && lo.is_finite()
+                    && hi.is_finite()
+                    && hi > lo
+            }
+            Dist::Weibull { shape, scale } => {
+                shape.is_finite() && shape > 0.0 && scale.is_finite() && scale > 0.0
+            }
+        }
+    }
+
+    /// Draw one value from an externally managed stream.
+    pub fn sample_one(&self, rng: &mut Xoshiro256pp) -> f64 {
+        match *self {
+            Dist::Uniform { lo, hi } => lo + (hi - lo) * rng.next_f64(),
+            Dist::Normal { mu, sigma } => mu + sigma * rng.next_normal(),
+            Dist::LogNormal { mu, sigma } => (mu + sigma * rng.next_normal()).exp(),
+            Dist::Exponential { lambda } => -rng.next_f64_open().ln() / lambda,
+            Dist::TruncNorm { mu, sigma, lo, hi } => {
+                let pa = normal_cdf((lo - mu) / sigma);
+                let pb = normal_cdf((hi - mu) / sigma);
+                truncnorm_draw(mu, sigma, lo, hi, pa, pb, rng)
+            }
+            Dist::Weibull { shape, scale } => {
+                scale * (-rng.next_f64_open().ln()).powf(1.0 / shape)
+            }
+        }
+    }
+
+    /// `d` i.i.d. draws, deterministic in `(self, d, seed)`. Unsorted.
+    pub fn sample_vec(&self, d: usize, seed: u64) -> Vec<f64> {
+        assert!(self.params_valid(), "invalid parameters: {self:?}");
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        // TruncNorm's interval CDF endpoints are loop-invariant; hoist the
+        // two erf evaluations (the draw itself stays shared with
+        // [`Dist::sample_one`] through `truncnorm_draw` — same stream).
+        if let Dist::TruncNorm { mu, sigma, lo, hi } = *self {
+            let pa = normal_cdf((lo - mu) / sigma);
+            let pb = normal_cdf((hi - mu) / sigma);
+            return (0..d)
+                .map(|_| truncnorm_draw(mu, sigma, lo, hi, pa, pb, &mut rng))
+                .collect();
+        }
+        (0..d).map(|_| self.sample_one(&mut rng)).collect()
+    }
+
+    /// [`Dist::sample_vec`] sorted ascending — the exact solvers' input
+    /// format.
+    pub fn sample_sorted(&self, d: usize, seed: u64) -> Vec<f64> {
+        let mut v = self.sample_vec(d, seed);
+        v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Exact mean `E[X]` (test oracle).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Dist::Uniform { lo, hi } => 0.5 * (lo + hi),
+            Dist::Normal { mu, .. } => mu,
+            Dist::LogNormal { mu, sigma } => (mu + 0.5 * sigma * sigma).exp(),
+            Dist::Exponential { lambda } => 1.0 / lambda,
+            Dist::TruncNorm { mu, sigma, lo, hi } => {
+                let (a, b) = ((lo - mu) / sigma, (hi - mu) / sigma);
+                let z = normal_cdf(b) - normal_cdf(a);
+                mu + sigma * (normal_pdf(a) - normal_pdf(b)) / z
+            }
+            Dist::Weibull { shape, scale } => scale * gamma(1.0 + 1.0 / shape),
+        }
+    }
+
+    /// Exact variance `Var[X]` (test oracle).
+    pub fn variance(&self) -> f64 {
+        match *self {
+            Dist::Uniform { lo, hi } => (hi - lo) * (hi - lo) / 12.0,
+            Dist::Normal { sigma, .. } => sigma * sigma,
+            Dist::LogNormal { mu, sigma } => {
+                let s2 = sigma * sigma;
+                (s2.exp() - 1.0) * (2.0 * mu + s2).exp()
+            }
+            Dist::Exponential { lambda } => 1.0 / (lambda * lambda),
+            Dist::TruncNorm { mu, sigma, lo, hi } => {
+                let (a, b) = ((lo - mu) / sigma, (hi - mu) / sigma);
+                let z = normal_cdf(b) - normal_cdf(a);
+                let (fa, fb) = (normal_pdf(a), normal_pdf(b));
+                let r = (fa - fb) / z;
+                sigma * sigma * (1.0 + (a * fa - b * fb) / z - r * r)
+            }
+            Dist::Weibull { shape, scale } => {
+                let g1 = gamma(1.0 + 1.0 / shape);
+                let g2 = gamma(1.0 + 2.0 / shape);
+                scale * scale * (g2 - g1 * g1)
+            }
+        }
+    }
+
+    /// Exact second raw moment `E[X²] = Var[X] + E[X]²` (test oracle).
+    pub fn second_moment(&self) -> f64 {
+        let m = self.mean();
+        self.variance() + m * m
+    }
+}
+
+/// One truncated-normal draw with the interval CDF endpoints precomputed.
+#[inline]
+fn truncnorm_draw(
+    mu: f64,
+    sigma: f64,
+    lo: f64,
+    hi: f64,
+    pa: f64,
+    pb: f64,
+    rng: &mut Xoshiro256pp,
+) -> f64 {
+    // Clamp keeps `normal_quantile`'s open-(0,1) domain even for extreme
+    // truncation bounds where pa/pb saturate in f64.
+    let p = (pa + rng.next_f64() * (pb - pa)).clamp(1e-12, 1.0 - 1e-12);
+    (mu + sigma * normal_quantile(p)).clamp(lo, hi)
+}
+
+/// Gamma function via the Lanczos approximation (g = 7, 9 terms),
+/// |relative error| < 1e-12 on the positive reals — needed for the Weibull
+/// moments.
+fn gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1−x) = π / sin(πx).
+        return std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma(1.0 - x));
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    let t = x + 7.5;
+    (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_reference_values() {
+        assert!((gamma(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(3.0) - 2.0).abs() < 1e-10);
+        assert!((gamma(4.0) - 6.0).abs() < 1e-10);
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+        assert!((gamma(1.5) - 0.5 * std::f64::consts::PI.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn paper_suite_shape_and_names() {
+        let suite = Dist::paper_suite();
+        assert_eq!(suite.len(), 5, "the paper sweeps five input families");
+        assert_eq!(suite[0].0, "lognormal", "main-body workload first");
+        for (name, dist) in &suite {
+            assert_eq!(dist.name(), *name);
+            // Every suite name parses back to a valid distribution.
+            assert!(Dist::parse(name).is_some(), "{name}");
+        }
+        let mut names: Vec<&str> = suite.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 5, "names must be unique");
+    }
+
+    #[test]
+    fn parse_bare_and_parameterized() {
+        assert_eq!(
+            Dist::parse("lognormal"),
+            Some(Dist::LogNormal { mu: 0.0, sigma: 1.0 })
+        );
+        assert_eq!(
+            Dist::parse("normal(0.5, 2)"),
+            Some(Dist::Normal { mu: 0.5, sigma: 2.0 })
+        );
+        assert_eq!(
+            Dist::parse("  Uniform(-1, 3) "),
+            Some(Dist::Uniform { lo: -1.0, hi: 3.0 })
+        );
+        assert_eq!(
+            Dist::parse("truncnorm(0,1,-2,2)"),
+            Some(Dist::TruncNorm { mu: 0.0, sigma: 1.0, lo: -2.0, hi: 2.0 })
+        );
+        assert_eq!(
+            Dist::parse("weibull(0.5,1)"),
+            Some(Dist::Weibull { shape: 0.5, scale: 1.0 })
+        );
+        assert_eq!(
+            Dist::parse("exponential(2)"),
+            Some(Dist::Exponential { lambda: 2.0 })
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "cauchy",
+            "normal(",
+            "normal(1)",
+            "normal(1,2,3)",
+            "normal(0,-1)",   // sigma must be positive
+            "uniform(3,1)",   // empty interval
+            "exponential(0)", // rate must be positive
+            "weibull(-1,1)",
+            "truncnorm(0,1,2,2)",
+            "normal(a,b)",
+            "",
+        ] {
+            assert_eq!(Dist::parse(bad), None, "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_vector_different_seed_diverges() {
+        for (_, dist) in Dist::paper_suite() {
+            let a = dist.sample_vec(500, 7);
+            let b = dist.sample_vec(500, 7);
+            assert_eq!(a, b, "{}: determinism", dist.name());
+            let c = dist.sample_vec(500, 8);
+            assert_ne!(a, c, "{}: seeds must matter", dist.name());
+        }
+    }
+
+    #[test]
+    fn sample_sorted_is_sorted_view_of_sample_vec() {
+        for (_, dist) in Dist::paper_suite() {
+            let mut v = dist.sample_vec(1000, 3);
+            v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(v, dist.sample_sorted(1000, 3), "{}", dist.name());
+            assert!(crate::util::is_sorted(&v));
+        }
+        assert!(Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(0, 1).is_empty());
+    }
+
+    #[test]
+    fn samples_respect_supports() {
+        let n = 20_000;
+        for x in (Dist::Uniform { lo: -1.0, hi: 2.0 }).sample_vec(n, 1) {
+            assert!((-1.0..2.0).contains(&x));
+        }
+        for x in (Dist::LogNormal { mu: 0.0, sigma: 1.0 }).sample_vec(n, 2) {
+            assert!(x > 0.0 && x.is_finite());
+        }
+        for x in (Dist::Exponential { lambda: 2.0 }).sample_vec(n, 3) {
+            assert!(x > 0.0 && x.is_finite());
+        }
+        for x in (Dist::TruncNorm { mu: 0.0, sigma: 1.0, lo: -2.0, hi: 2.0 }).sample_vec(n, 4) {
+            assert!((-2.0..=2.0).contains(&x));
+        }
+        for x in (Dist::Weibull { shape: 0.5, scale: 1.0 }).sample_vec(n, 5) {
+            assert!(x > 0.0 && x.is_finite());
+        }
+    }
+
+    #[test]
+    fn sample_moments_match_exact_moments() {
+        // 6σ+ tolerances at n = 200_000 (the heavy-tailed variances are the
+        // binding constraint).
+        let n = 200_000;
+        for (seed, (name, dist)) in Dist::paper_suite().into_iter().enumerate() {
+            let xs = dist.sample_vec(n, 1000 + seed as u64);
+            let m = xs.iter().sum::<f64>() / n as f64;
+            let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n as f64 - 1.0);
+            let (em, ev) = (dist.mean(), dist.variance());
+            assert!(
+                (m - em).abs() < 0.02 * (1.0 + em.abs()),
+                "{name}: sample mean {m} vs exact {em}"
+            );
+            assert!(
+                (v - ev).abs() < 0.15 * ev + 0.01,
+                "{name}: sample var {v} vs exact {ev}"
+            );
+            let m2 = xs.iter().map(|x| x * x).sum::<f64>() / n as f64;
+            let em2 = dist.second_moment();
+            assert!(
+                (m2 - em2).abs() < 0.15 * em2 + 0.01,
+                "{name}: sample E[X²] {m2} vs exact {em2}"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_and_normal_closed_forms() {
+        let u = Dist::Uniform { lo: 2.0, hi: 6.0 };
+        assert!((u.mean() - 4.0).abs() < 1e-15);
+        assert!((u.variance() - 16.0 / 12.0).abs() < 1e-15);
+        let nrm = Dist::Normal { mu: -1.0, sigma: 3.0 };
+        assert_eq!(nrm.mean(), -1.0);
+        assert_eq!(nrm.variance(), 9.0);
+        // Weibull(1, λ) ≡ Exponential(1/λ).
+        let w = Dist::Weibull { shape: 1.0, scale: 2.0 };
+        assert!((w.mean() - 2.0).abs() < 1e-10);
+        assert!((w.variance() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn truncnorm_moments_match_numeric_integration() {
+        let d = Dist::TruncNorm { mu: 0.4, sigma: 1.3, lo: -0.8, hi: 2.5 };
+        let (mu, sigma, lo, hi) = (0.4, 1.3, -0.8, 2.5);
+        let steps = 400_000;
+        let h = (hi - lo) / steps as f64;
+        let z = normal_cdf((hi - mu) / sigma) - normal_cdf((lo - mu) / sigma);
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for i in 0..steps {
+            let x: f64 = lo + (i as f64 + 0.5) * h;
+            let f = normal_pdf((x - mu) / sigma) / (sigma * z) * h;
+            m1 += x * f;
+            m2 += x * x * f;
+        }
+        assert!((d.mean() - m1).abs() < 1e-6, "mean {} vs {m1}", d.mean());
+        let var = m2 - m1 * m1;
+        assert!(
+            (d.variance() - var).abs() < 1e-6,
+            "var {} vs {var}",
+            d.variance()
+        );
+    }
+
+    #[test]
+    fn weibull_below_one_is_heavy_tailed() {
+        let d = Dist::Weibull { shape: 0.5, scale: 1.0 };
+        let xs = d.sample_vec(10_000, 9);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        // E[X] = Γ(3) = 2; the sample max of 10k draws is (ln 10⁴)² ≈ 85.
+        assert!(max > 10.0 * mean.min(2.0), "max {max} vs mean {mean}");
+    }
+
+    #[test]
+    fn sample_one_uses_the_callers_stream() {
+        let d = Dist::LogNormal { mu: 0.0, sigma: 1.0 };
+        let mut r1 = Xoshiro256pp::seed_from_u64(11);
+        let mut r2 = Xoshiro256pp::seed_from_u64(11);
+        for _ in 0..100 {
+            assert_eq!(d.sample_one(&mut r1), d.sample_one(&mut r2));
+        }
+    }
+}

@@ -1,6 +1,6 @@
 //! Figure harnesses: regenerate every table/figure of the paper's
-//! evaluation (§7, Appendices C–D). See DESIGN.md §4 for the experiment
-//! index. Each harness returns [`crate::benchfw::Table`]s that are printed
+//! evaluation (§7, Appendices C–D). [`run`] maps figure ids to harnesses.
+//! Each harness returns [`crate::benchfw::Table`]s that are printed
 //! and saved as CSV by the CLI (`quiver figure <id> [--dist D]`).
 //!
 //! Absolute numbers are hardware-specific; what must reproduce is the

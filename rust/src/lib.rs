@@ -18,7 +18,7 @@
 //! * **[`runtime`]** — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
 //! * **[`figures`]** — regenerates every table/figure of the paper's
-//!   evaluation (see DESIGN.md §4 for the index).
+//!   evaluation (see [`figures::run`] for the id → figure index).
 //!
 //! ## Quickstart
 //!

@@ -9,15 +9,29 @@
 //!   executor thread; this is what the multi-threaded coordinator and the
 //!   worker clients use. Requests are serialized through a channel, which
 //!   is also the right execution model for a single CPU PJRT device.
+//!
+//! The `xla` crate is unavailable in the offline build environment, so the
+//! PJRT-touching half of this module is gated behind the `pjrt` feature.
+//! Without it, [`Runtime::new`] reports the backend as unavailable (after
+//! validating the manifest, so callers still get crisp artifact errors)
+//! and every caller that probes with `.ok()`/missing-manifest checks
+//! degrades gracefully. [`Tensor`], signature validation and the threaded
+//! handle compile and are tested in both configurations.
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
-use super::artifact::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+use super::artifact::{ArtifactSpec, Dtype, Manifest};
+#[cfg(any(feature = "pjrt", test))]
+use super::artifact::TensorSpec;
 
 /// A host tensor crossing the artifact boundary.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,11 +95,53 @@ impl Tensor {
 
 /// The PJRT runtime: client + manifest + executable cache (single thread).
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
+/// Error shared by the stub constructor and the fail-fast handle spawn
+/// (one phrasing, so logs are greppable whichever path reported it).
+const PJRT_UNAVAILABLE: &str = "PJRT backend unavailable: this build does not \
+     enable the `pjrt` feature (the `xla` crate is not vendored in the \
+     offline build; see the feature note in rust/Cargo.toml)";
+
+/// Stub backend: the manifest still parses (so artifact errors stay
+/// crisp), but constructing the executor itself reports the missing
+/// feature. Everything downstream (`RuntimeHandle`, the figure harness,
+/// the training driver) treats this like any other startup failure.
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Validate the manifest, then report the backend as unavailable.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let _manifest = Manifest::load(artifacts_dir)?;
+        bail!(PJRT_UNAVAILABLE)
+    }
+
+    /// The manifest (artifact signatures).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name — never reachable without the `pjrt` feature.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Unreachable without the `pjrt` feature ([`Runtime::new`] errors).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        bail!("cannot warm {name}: PJRT backend unavailable (enable the `pjrt` feature)")
+    }
+
+    /// Unreachable without the `pjrt` feature ([`Runtime::new`] errors).
+    pub fn call(&self, name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!("cannot execute {name}: PJRT backend unavailable (enable the `pjrt` feature)")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
@@ -204,11 +260,17 @@ pub struct RuntimeHandle {
 }
 
 impl RuntimeHandle {
-    /// Spawn the executor thread. Fails fast if the manifest is missing.
+    /// Spawn the executor thread. Fails fast if the manifest is missing or
+    /// the backend is not compiled in.
     pub fn spawn(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         // Validate the manifest on the caller thread for a crisp error.
         Manifest::load(&dir)?;
+        if cfg!(not(feature = "pjrt")) {
+            // Surface the stub's error here rather than from a dead
+            // executor thread ("runtime thread is gone" would mask it).
+            bail!(PJRT_UNAVAILABLE);
+        }
         let (tx, rx) = mpsc::channel::<Request>();
         std::thread::Builder::new()
             .name("pjrt-runtime".into())
@@ -266,6 +328,9 @@ impl RuntimeHandle {
     }
 }
 
+// Exercised by `Runtime::call` (pjrt builds) and the unit tests; without
+// the feature the non-test build has no caller, hence the allow.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn validate_inputs(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
     if inputs.len() != spec.inputs.len() {
         bail!(
@@ -292,6 +357,7 @@ fn validate_inputs(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn to_literal(t: &Tensor, spec: &TensorSpec) -> Result<xla::Literal> {
     let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
     let lit = match t {
@@ -301,6 +367,7 @@ fn to_literal(t: &Tensor, spec: &TensorSpec) -> Result<xla::Literal> {
     lit.reshape(&dims).map_err(|e| anyhow!("reshape to {spec}: {e:?}"))
 }
 
+#[cfg(feature = "pjrt")]
 fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
     Ok(match spec.dtype {
         Dtype::F32 => Tensor::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),

@@ -8,6 +8,10 @@
 //! client.compile → execute`).
 //!
 //! Executables are compiled once and cached per artifact name.
+//!
+//! The executor half requires the `pjrt` cargo feature (the `xla` crate is
+//! not available offline); without it the manifest layer still works and
+//! [`exec::Runtime::new`] reports the backend as unavailable.
 
 pub mod artifact;
 pub mod exec;

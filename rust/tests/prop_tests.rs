@@ -2,6 +2,7 @@
 //! see `quiver::testutil`).
 
 use quiver::avq::{self, Prefix, SolverKind};
+use quiver::dist::Dist;
 use quiver::metrics::sum_variances;
 use quiver::sq;
 use quiver::testutil::{forall, forall_vec, Gen};
@@ -117,6 +118,44 @@ fn prop_all_solvers_agree_with_oracle() {
         }
         Ok(())
     });
+}
+
+/// Cross-solver agreement over the distribution families: all five
+/// [`SolverKind`]s return the same MSE as the `Exhaustive` oracle (within
+/// 1e-9) on small inputs (d ≤ 14, s ≤ 5) drawn from every paper
+/// distribution across several seeds, and every solver's traceback
+/// reproduces its reported objective.
+#[test]
+fn prop_five_solvers_agree_across_dist_families() {
+    for (di, (name, dist)) in Dist::paper_suite().into_iter().enumerate() {
+        for seed in 0..6u64 {
+            for d in [5usize, 8, 11, 14] {
+                let xs = dist.sample_sorted(d, 300 + 31 * di as u64 + seed);
+                let p = Prefix::unweighted(&xs);
+                let s_max = 5usize.min(d - 1);
+                for s in 2..=s_max {
+                    let oracle = avq::solve(&p, s, SolverKind::Exhaustive).unwrap();
+                    for kind in SolverKind::ALL {
+                        let sol = avq::solve(&p, s, kind).unwrap();
+                        assert!(
+                            approx_eq(sol.mse, oracle.mse, 1e-9, 1e-12),
+                            "{name} seed={seed} d={d} s={s}: {} returned {} vs oracle {}",
+                            kind.name(),
+                            sol.mse,
+                            oracle.mse
+                        );
+                        assert!(
+                            approx_eq(sol.recompute_mse(&p), sol.mse, 1e-9, 1e-12),
+                            "{name} seed={seed} d={d} s={s}: {} traceback {} vs reported {}",
+                            kind.name(),
+                            sol.recompute_mse(&p),
+                            sol.mse
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Optimal MSE is non-increasing in the budget s.

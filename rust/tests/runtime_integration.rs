@@ -31,6 +31,10 @@ fn golden_i32(name: &str) -> Vec<i32> {
 }
 
 fn runtime_or_skip() -> Option<Runtime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     if !artifacts_dir().join("manifest.txt").exists() {
         eprintln!("skipping: run `make artifacts` first");
         return None;
@@ -156,7 +160,7 @@ fn call_validates_signatures() {
 
 #[test]
 fn runtime_handle_service_thread() {
-    if !artifacts_dir().join("manifest.txt").exists() {
+    if cfg!(not(feature = "pjrt")) || !artifacts_dir().join("manifest.txt").exists() {
         return;
     }
     let h = quiver::runtime::exec::RuntimeHandle::spawn(artifacts_dir()).expect("spawn");
