@@ -3,7 +3,7 @@
 # manifest + golden dumps under rust/artifacts/ (requires jax; see
 # python/compile/aot.py).
 
-.PHONY: artifacts build test bench clean
+.PHONY: artifacts build test bench bench-smoke clean
 
 artifacts:
 	cd python/compile && python3 aot.py --out ../../rust/artifacts
@@ -16,6 +16,13 @@ test:
 
 bench:
 	cd rust && cargo bench --bench bench_solvers && cargo bench --bench bench_approx && cargo bench --bench bench_pipeline
+
+# Reduced-size run of both JSON-emitting bench binaries (seconds, not
+# minutes) — what the non-gating CI perf-smoke job executes. Leaves
+# BENCH_solvers.json / BENCH_pipeline.json at the repo root.
+bench-smoke:
+	cd rust && QUIVER_MAX_POW=13 cargo bench --bench bench_solvers
+	cd rust && QUIVER_SMOKE=1 cargo bench --bench bench_pipeline
 
 clean:
 	cd rust && cargo clean

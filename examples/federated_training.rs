@@ -33,6 +33,10 @@ fn main() -> anyhow::Result<()> {
     let runtime = RuntimeHandle::spawn(&artifacts)
         .context("starting PJRT runtime — did you run `make artifacts`?")?;
     println!("PJRT platform: {}", runtime.platform()?);
+    println!(
+        "gradient compression runs {} data-parallel executor thread(s) per worker",
+        quiver::par::threads()
+    );
     runtime.warmup("model_grad")?;
     runtime.warmup("model_eval")?;
 

@@ -42,13 +42,15 @@ fn head_tensor(head: usize, rng_seed: u64) -> Vec<f64> {
 
 fn main() -> anyhow::Result<()> {
     println!(
-        "KV-cache compression: {HEADS} heads x {SEQ} tokens x {HEAD_DIM} dims, s={S} (4-bit)"
+        "KV-cache compression: {HEADS} heads x {SEQ} tokens x {HEAD_DIM} dims, s={S} (4-bit), \
+         {} executor thread(s)",
+        quiver::par::threads()
     );
     let heads: Vec<Vec<f64>> = (0..HEADS).map(|h| head_tensor(h, 40 + h as u64)).collect();
 
     // Global uniform grid across the concatenated layer.
     let mut all: Vec<f64> = heads.iter().flatten().copied().collect();
-    all.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    quiver::par::sort::sort_f64(&mut all);
     let q_global = uniform::solve(&all, S);
 
     let mut table = Table::new(
@@ -58,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     let (mut g_acc, mut u_acc, mut a_acc) = (0.0, 0.0, 0.0);
     for (h, data) in heads.iter().enumerate() {
         let mut sorted = data.clone();
-        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        quiver::par::sort::sort_f64(&mut sorted);
         let v_global = vnmse(&sorted, &q_global);
         let v_unif = vnmse(&sorted, &uniform::solve(&sorted, S));
         let q_adapt = solve_hist(data, S, &HistConfig::fixed(400))?.q;

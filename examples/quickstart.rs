@@ -23,7 +23,12 @@ fn main() -> anyhow::Result<()> {
     let xs = dist.sample_sorted(d, 42);
     let p = Prefix::unweighted(&xs);
 
-    println!("QUIVER quickstart: d={d}, s={s}, dist={}", dist.name());
+    println!(
+        "QUIVER quickstart: d={d}, s={s}, dist={}, parallel executor: {} thread(s) \
+         (QUIVER_THREADS overrides; results are identical for any width)",
+        dist.name(),
+        quiver::par::threads()
+    );
 
     // --- Exact solvers: identical (optimal) error, different runtimes. ---
     let mut table = Table::new("exact solvers", &["solver", "vNMSE", "runtime"]);

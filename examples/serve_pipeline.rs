@@ -26,7 +26,11 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     })?;
     let addr = service.addr().to_string();
-    println!("compression service on {addr} (4 solver threads, queue 128)");
+    println!(
+        "compression service on {addr} (4 solver threads, queue 128, \
+         {} data-parallel executor thread(s) per job)",
+        quiver::par::threads()
+    );
 
     // Closed-loop load: 8 clients, mixed request sizes, 5 seconds.
     let clients = 8usize;

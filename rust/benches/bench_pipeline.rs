@@ -3,22 +3,41 @@
 //! * Appendix C (Fig. 4): sort + quantize timings (incl. the PJRT-executed
 //!   Pallas `sq` artifact when `make artifacts` has run);
 //! * §7 headline: 1M optimal / 133M near-optimal timings;
+//! * the data-parallel hot paths at d = 2²⁰: histogram build,
+//!   quantize+encode, and sort at 1 thread vs the configured executor
+//!   width, with the speedup printed (the `par` acceptance numbers);
 //! * coordinator micro-benches: codec, batcher, end-to-end service RPC.
+//!
+//! Machine-readable results land in `BENCH_pipeline.json` at the repo
+//! root (name, d, s, median_ns, mad_ns, elems_per_s per entry).
+//!
+//! Set `QUIVER_SMOKE=1` to shrink every size so a full run finishes in
+//! seconds (the CI perf-smoke job and `make bench-smoke` use this).
 
 use std::time::Duration;
 
-use quiver::benchfw::{self, Table};
+use quiver::avq::histogram::{solve_hist, GridHistogram, HistConfig};
+use quiver::benchfw::{self, write_bench_json, BenchRecord, Table};
 use quiver::coordinator::protocol::Msg;
 use quiver::coordinator::router::{Router, RouterConfig};
 use quiver::coordinator::service::{compress_remote, Service, ServiceConfig};
 use quiver::dist::Dist;
 use quiver::figures::{self, FigOpts};
+use quiver::par;
 use quiver::sq;
+use quiver::util::rng::Xoshiro256pp;
 
 fn main() {
+    let smoke = std::env::var("QUIVER_SMOKE").is_ok();
     let out = std::path::PathBuf::from("results");
-    let opts = FigOpts::default();
+    let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let mut records: Vec<BenchRecord> = vec![];
 
+    let opts = if smoke {
+        FigOpts { max_pow: 13, seeds: 1, time_samples: 1, ..FigOpts::default() }
+    } else {
+        FigOpts::default()
+    };
     for id in ["4", "headline"] {
         for t in figures::run(id, &opts).expect("figure") {
             t.print();
@@ -27,16 +46,84 @@ fn main() {
         }
     }
 
+    // --- Data-parallel hot paths: 1 thread vs the configured width. ---
+    // Smoke still needs > RUN elements (and several chunks), or every pass
+    // would take its sequential fallback and record a meaningless 1.00x.
+    let configured = par::threads();
+    let hot_pow = if smoke { 19 } else { 20 };
+    let d = 1usize << hot_pow;
+    let s = 16usize;
+    let samples = if smoke { 3 } else { 10 };
+    let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 42);
+    let qs = solve_hist(&xs, s, &HistConfig::fixed(1024)).expect("hist solve").q;
+    let mut t = Table::new(
+        format!("parallel hot paths, d=2^{hot_pow} (speedup = t1/tN)"),
+        &["pass", "threads", "median", "elems/s", "speedup"],
+    );
+    let thread_counts: Vec<usize> =
+        if configured > 1 { vec![1, configured] } else { vec![1] };
+    // (pass, quantization budget for the JSON record — 0 when none applies)
+    for (pass, rec_s) in [("hist-build", 0usize), ("quantize+encode", s), ("sort", 0)] {
+        let mut medians: Vec<(usize, f64)> = vec![];
+        for &tc in &thread_counts {
+            par::set_threads(tc);
+            let name = format!("{pass} d=2^{hot_pow} t={tc}");
+            let st = match pass {
+                "hist-build" => benchfw::bench(&name, 1, samples, || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(9);
+                    GridHistogram::build(&xs, 1024, &mut rng).unwrap()
+                }),
+                "quantize+encode" => benchfw::bench(&name, 1, samples, || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(11);
+                    let idx = sq::quantize(&xs, &qs, &mut rng);
+                    sq::encode(&idx, &qs)
+                }),
+                _ => {
+                    // One pristine copy per iteration, cloned OUTSIDE the
+                    // timed closure — the speedup must not be diluted by a
+                    // constant memcpy (and re-sorting sorted data would
+                    // measure a different algorithm path entirely).
+                    let mut pool: Vec<Vec<f64>> =
+                        (0..samples + 1).map(|_| xs.clone()).collect();
+                    let mut next = 0usize;
+                    benchfw::bench(&name, 1, samples, || {
+                        let v = &mut pool[next];
+                        next += 1;
+                        par::sort::sort_f64(v);
+                    })
+                }
+            };
+            medians.push((tc, st.median().as_secs_f64()));
+            let speedup = if medians.len() > 1 {
+                format!("{:.2}x", medians[0].1 / medians.last().unwrap().1)
+            } else {
+                "1.00x".into()
+            };
+            t.row(vec![
+                pass.into(),
+                tc.to_string(),
+                benchfw::fmt_duration(st.median()),
+                format!("{:.3e}", st.throughput(d)),
+                speedup,
+            ]);
+            records.push(BenchRecord::from_stats(&st, d, rec_s));
+        }
+    }
+    par::set_threads(configured);
+    t.print();
+
     // --- Coordinator micro-benches. ---
     let mut t = Table::new("coordinator micro-benches", &["op", "median", "spread"]);
     // Codec: pack/unpack a 1M-coordinate gradient at 4 bits.
-    let qs: Vec<f64> = (0..16).map(|i| i as f64).collect();
+    let qs16: Vec<f64> = (0..16).map(|i| i as f64).collect();
     let idx: Vec<u32> = (0..1 << 20).map(|i| (i % 16) as u32).collect();
-    let st = benchfw::bench("encode 1M@4b", 2, 10, || sq::encode(&idx, &qs));
+    let st = benchfw::bench("encode 1M@4b", 2, samples, || sq::encode(&idx, &qs16));
     t.row(vec![st.name.clone(), benchfw::fmt_duration(st.median()), benchfw::fmt_duration(st.mad())]);
-    let packed = sq::encode(&idx, &qs);
-    let st = benchfw::bench("decode 1M@4b", 2, 10, || sq::decode(&packed));
+    records.push(BenchRecord::from_stats(&st, idx.len(), 16));
+    let packed = sq::encode(&idx, &qs16);
+    let st = benchfw::bench("decode 1M@4b", 2, samples, || sq::decode(&packed));
     t.row(vec![st.name.clone(), benchfw::fmt_duration(st.median()), benchfw::fmt_duration(st.mad())]);
+    records.push(BenchRecord::from_stats(&st, idx.len(), 16));
     // Frame roundtrip.
     let msg = Msg::CompressRequest {
         request_id: 1,
@@ -48,6 +135,7 @@ fn main() {
         Msg::from_body(&f[4..]).unwrap()
     });
     t.row(vec![st.name.clone(), benchfw::fmt_duration(st.median()), benchfw::fmt_duration(st.mad())]);
+    records.push(BenchRecord::from_stats(&st, 1 << 16, 0)); // framing, no s
     t.print();
 
     // --- End-to-end service RPC latency (loopback). ---
@@ -68,7 +156,7 @@ fn main() {
             .into_iter()
             .map(|x| x as f32)
             .collect();
-        let st = benchfw::bench(label, 2, 10, || {
+        let st = benchfw::bench(label, 2, samples, || {
             match compress_remote(&addr, 1, 16, &data).expect("rpc") {
                 Msg::CompressReply { .. } => {}
                 other => panic!("unexpected {other:?}"),
@@ -79,8 +167,13 @@ fn main() {
             benchfw::fmt_duration(st.median()),
             benchfw::fmt_duration(st.mad()),
         ]);
+        records.push(BenchRecord::from_stats(&st, d, 16));
     }
     t.print();
     println!("service metrics: {}", service.metrics.summary());
     service.shutdown();
+
+    let json = write_bench_json(&repo_root.join("BENCH_pipeline.json"), &records)
+        .expect("write BENCH_pipeline.json");
+    println!("wrote {} records to {}", records.len(), json.display());
 }

@@ -5,7 +5,13 @@
 //! runtime+vNMSE vs s at d ∈ {2^12, 2^16}. Pass `--max-pow N` via
 //! `QUIVER_MAX_POW` to extend the sweep (default 18 keeps a run in
 //! minutes; the paper goes to 2^20+).
+//!
+//! Also writes `BENCH_solvers.json` at the repo root: one machine-readable
+//! record per (solver, d) on the LogNormal workload, so the exact-solver
+//! perf trajectory is diffable across commits.
 
+use quiver::avq::{self, Prefix, SolverKind};
+use quiver::benchfw::{self, write_bench_json, BenchRecord};
 use quiver::dist::Dist;
 use quiver::figures::{self, FigOpts};
 
@@ -36,4 +42,27 @@ fn main() {
             }
         }
     }
+
+    // --- Machine-readable perf records (LogNormal, s = 16). ---
+    let s = 16usize;
+    let mut records: Vec<BenchRecord> = vec![];
+    let dist = Dist::LogNormal { mu: 0.0, sigma: 1.0 };
+    for pow in [12u32, 14, 16, 18] {
+        if pow > max_pow {
+            break;
+        }
+        let d = 1usize << pow;
+        let xs = dist.sample_sorted(d, 1);
+        let p = Prefix::unweighted(&xs);
+        for kind in [SolverKind::BinSearch, SolverKind::Quiver, SolverKind::QuiverAccel] {
+            let st = benchfw::bench(&format!("{} d=2^{pow} s={s}", kind.name()), 1, 3, || {
+                avq::solve(&p, s, kind).unwrap()
+            });
+            records.push(BenchRecord::from_stats(&st, d, s));
+        }
+    }
+    let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let json = write_bench_json(&repo_root.join("BENCH_solvers.json"), &records)
+        .expect("write BENCH_solvers.json");
+    println!("wrote {} records to {}", records.len(), json.display());
 }

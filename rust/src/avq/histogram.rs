@@ -15,8 +15,15 @@
 //! histogram build is a single O(d) pass, which is what makes this the
 //! "quantize on the fly" variant (and the part §8 offloads to accelerators;
 //! see `python/compile/kernels/hist.py` for the Pallas twin of the build).
+//!
+//! The build is data-parallel on [`crate::par`]: a fused chunked
+//! min/max/‖X‖²/finiteness scan, then a sharded count pass with one
+//! seeded RNG stream per fixed-size chunk, then an `O(M·threads)` shard
+//! merge. Per the executor's determinism contract the resulting histogram
+//! is bitwise-identical for every thread count.
 
 use super::{AvqError, Prefix, Solution, SolverKind};
+use crate::par;
 use crate::util::rng::Xoshiro256pp;
 
 /// A stochastically-rounded histogram of an input vector on a uniform grid.
@@ -38,26 +45,35 @@ pub struct GridHistogram {
 }
 
 impl GridHistogram {
-    /// Build in one O(d) pass with unbiased stochastic rounding.
+    /// Build in one parallel O(d) pass with unbiased stochastic rounding.
     ///
     /// Returns `Err(AvqError::EmptyInput)` for empty input and
     /// `Err(AvqError::NonFinite)` if any coordinate is non-finite.
+    ///
+    /// ## RNG stream contract
+    ///
+    /// The build consumes **exactly one draw** from `rng` (a base `u64`)
+    /// and derives one independent stream per [`par::CHUNK`]-sized chunk
+    /// via [`Xoshiro256pp::stream`] — this is what makes the sharded
+    /// build bitwise-identical for every thread count. Within a chunk,
+    /// grid-aligned coordinates (`frac == 0`, e.g. the minimum, or every
+    /// coordinate of an already-quantized input) round down with
+    /// certainty and **consume no draw**, so aligned inputs don't burn an
+    /// RNG call per coordinate or shift the stream for the coordinates
+    /// that actually need randomness.
     pub fn build(xs: &[f64], m: usize, rng: &mut Xoshiro256pp) -> Result<Self, AvqError> {
         if xs.is_empty() {
             return Err(AvqError::EmptyInput);
         }
         assert!(m >= 1, "need at least one bin");
-        let mut lo = f64::INFINITY;
-        let mut hi = f64::NEG_INFINITY;
-        let mut norm2 = 0.0;
-        for &x in xs {
-            if !x.is_finite() {
-                return Err(AvqError::NonFinite);
-            }
-            lo = lo.min(x);
-            hi = hi.max(x);
-            norm2 += x * x;
+        // One draw regardless of the data, so the caller's stream advance
+        // is predictable (documented above).
+        let base = rng.next_u64();
+        let st = par::scan::stats(xs);
+        if !st.finite {
+            return Err(AvqError::NonFinite);
         }
+        let (lo, hi, norm2) = (st.lo, st.hi, st.norm2_sq);
         if hi == lo {
             // Degenerate range (constant input): an (M+1)-point grid would
             // be M+1 duplicates of the same value. Collapse to a true
@@ -73,18 +89,41 @@ impl GridHistogram {
                 norm2_sq: norm2,
             });
         }
-        let mut weights = vec![0.0f64; m + 1];
         let delta = (hi - lo) / m as f64;
         let inv_delta = m as f64 / (hi - lo);
-        for &x in xs {
-            // Position on the grid in units of Δ.
-            let t = (x - lo) * inv_delta;
-            let f = t.floor();
-            let low_bin = (f as usize).min(m - 1); // guard x == hi
-            let frac = (t - low_bin as f64).clamp(0.0, 1.0);
-            // Round up with probability frac — unbiased.
-            let bin = if rng.next_f64() < frac { low_bin + 1 } else { low_bin };
-            weights[bin] += 1.0;
+        // Sharded count pass: each worker folds its chunks into a private
+        // (M+1)-bin shard; chunk `c` draws from `stream(base, c)`. The
+        // shard merge is exact integer arithmetic in f64 (counts ≤ d ≪
+        // 2^53), so the grouping of chunks into shards — the only thing
+        // that varies with the thread count — cannot change the result.
+        let shards = par::fold_chunks(
+            xs,
+            par::CHUNK,
+            || vec![0.0f64; m + 1],
+            |acc, chunk_idx, chunk| {
+                let mut crng = Xoshiro256pp::stream(base, chunk_idx as u64);
+                for &x in chunk {
+                    // Position on the grid in units of Δ.
+                    let t = (x - lo) * inv_delta;
+                    let f = t.floor();
+                    let low_bin = (f as usize).min(m - 1); // guard x == hi
+                    let frac = (t - low_bin as f64).clamp(0.0, 1.0);
+                    // Round up with probability frac — unbiased. Aligned
+                    // coordinates skip the draw (see the stream contract).
+                    let bin = if frac > 0.0 && crng.next_f64() < frac {
+                        low_bin + 1
+                    } else {
+                        low_bin
+                    };
+                    acc[bin] += 1.0;
+                }
+            },
+        );
+        let mut weights = vec![0.0f64; m + 1];
+        for shard in shards {
+            for (w, v) in weights.iter_mut().zip(&shard) {
+                *w += v;
+            }
         }
         let mut grid: Vec<f64> = (0..=m).map(|l| lo + l as f64 * delta).collect();
         // Pin the endpoints exactly: lo + m·Δ can round below `hi`, which

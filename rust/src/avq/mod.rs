@@ -153,12 +153,16 @@ pub fn solve(p: &Prefix, s: usize, kind: SolverKind) -> Result<Solution, AvqErro
 }
 
 /// Convenience: sort-if-needed then solve. `O(d log d + solver)`.
+///
+/// The finiteness scan and the sort both run on the [`crate::par`]
+/// executor (parallel merge sort over fixed-size runs), so the O(d log d)
+/// prefix of an exact solve scales with the configured thread count.
 pub fn solve_unsorted(xs: &[f64], s: usize, kind: SolverKind) -> Result<Solution, AvqError> {
-    if xs.iter().any(|x| !x.is_finite()) {
+    if !crate::par::scan::all_finite(xs) {
         return Err(AvqError::NonFinite);
     }
     let mut v = xs.to_vec();
-    v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::par::sort::sort_f64(&mut v);
     let p = Prefix::unweighted(&v);
     solve(&p, s, kind)
 }

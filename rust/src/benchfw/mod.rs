@@ -48,6 +48,83 @@ impl Stats {
     pub fn human(&self) -> String {
         format!("{} ± {}", fmt_duration(self.median()), fmt_duration(self.mad()))
     }
+
+    /// Throughput implied by the median sample: `elems` per second.
+    pub fn throughput(&self, elems: usize) -> f64 {
+        let secs = self.median().as_secs_f64();
+        if secs > 0.0 {
+            elems as f64 / secs
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// One machine-readable benchmark result — the schema of the
+/// `BENCH_*.json` files the bench binaries drop at the repository root so
+/// the perf trajectory is diffable across commits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Benchmark name (unique within one file).
+    pub name: String,
+    /// Problem dimension (elements processed per iteration).
+    pub d: usize,
+    /// Quantization budget, 0 when not applicable.
+    pub s: usize,
+    /// Median runtime in nanoseconds.
+    pub median_ns: u128,
+    /// Median absolute deviation in nanoseconds.
+    pub mad_ns: u128,
+    /// `d / median` (elements per second).
+    pub elems_per_s: f64,
+}
+
+impl BenchRecord {
+    /// Build a record from measured [`Stats`].
+    pub fn from_stats(st: &Stats, d: usize, s: usize) -> Self {
+        Self {
+            name: st.name.clone(),
+            d,
+            s,
+            median_ns: st.median().as_nanos(),
+            mad_ns: st.mad().as_nanos(),
+            elems_per_s: st.throughput(d),
+        }
+    }
+}
+
+/// Write records as a JSON array (hand-rolled — no serde offline; the
+/// schema is flat so escaping the name string is the only subtlety).
+pub fn write_bench_json(
+    path: &std::path::Path,
+    records: &[BenchRecord],
+) -> std::io::Result<std::path::PathBuf> {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let name: String = r
+            .name
+            .chars()
+            .flat_map(|c| match c {
+                '"' | '\\' => vec!['\\', c],
+                '\n' | '\t' | '\r' => vec![' '],
+                _ => vec![c],
+            })
+            .collect();
+        let eps = if r.elems_per_s.is_finite() { r.elems_per_s } else { 0.0 };
+        out.push_str(&format!(
+            "  {{\"name\":\"{}\",\"d\":{},\"s\":{},\"median_ns\":{},\"mad_ns\":{},\"elems_per_s\":{:.3}}}{}\n",
+            name,
+            r.d,
+            r.s,
+            r.median_ns,
+            r.mad_ns,
+            eps,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)?;
+    Ok(path.to_path_buf())
 }
 
 /// Run `f` with `warmup` unmeasured and `samples` measured iterations.
@@ -178,6 +255,45 @@ mod tests {
             std::hint::black_box(&big).iter().sum::<u64>()
         });
         assert!(slow.median() > fast.median());
+    }
+
+    #[test]
+    fn throughput_from_median() {
+        let st = Stats {
+            name: "t".into(),
+            samples: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30),
+            ],
+        };
+        // median = 20ms → 1M elems = 50M elems/s.
+        let eps = st.throughput(1_000_000);
+        assert!((eps - 5e7).abs() < 1e-3 * 5e7, "eps={eps}");
+    }
+
+    #[test]
+    fn bench_json_roundtrip_structure() {
+        let st = Stats {
+            name: "hist-build \"q\"".into(),
+            samples: vec![Duration::from_micros(100); 5],
+        };
+        let rec = BenchRecord::from_stats(&st, 1 << 20, 16);
+        assert_eq!(rec.median_ns, 100_000);
+        let dir = std::env::temp_dir().join("quiver_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_bench_json(&path, &[rec.clone(), BenchRecord::from_stats(&st, 4, 0)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"d\":1048576"));
+        assert!(text.contains("\"s\":16"));
+        assert!(text.contains("\\\"q\\\""), "quote escaped: {text}");
+        assert_eq!(text.matches("\"median_ns\":").count(), 2);
+        // Exactly one separator comma between the two objects.
+        assert_eq!(text.matches("},\n").count(), 1);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! trade error for tail latency per deployment.
 
 use crate::avq::histogram::{solve_hist, HistConfig};
-use crate::avq::{self, Prefix, Solution, SolverKind};
+use crate::avq::{self, Solution, SolverKind};
 
 /// Routing policy configuration.
 #[derive(Debug, Clone, Copy)]
@@ -71,16 +71,14 @@ impl Router {
     /// Execute the routed solve: returns the solution and the route taken.
     ///
     /// Input need not be sorted (the exact path sorts internally; the
-    /// histogram path never needs to).
+    /// histogram path never needs to). Both routes hand their O(d) passes
+    /// — finiteness scan, parallel sort, sharded histogram build — to the
+    /// [`crate::par`] executor, so a single whole-vector job uses every
+    /// configured thread instead of looping on one core.
     pub fn solve(&self, xs: &[f64], s: usize) -> Result<(Solution, Route), avq::AvqError> {
         let route = self.route(xs.len());
         let sol = match route {
-            Route::Exact => {
-                let mut v = xs.to_vec();
-                v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-                let p = Prefix::unweighted(&v);
-                avq::solve(&p, s, SolverKind::QuiverAccel)?
-            }
+            Route::Exact => avq::solve_unsorted(xs, s, SolverKind::QuiverAccel)?,
             Route::Hist { m } => {
                 let cfg = HistConfig { m, inner: SolverKind::QuiverAccel, seed: self.cfg.seed };
                 solve_hist(xs, s, &cfg)?
@@ -93,6 +91,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::avq::Prefix;
     use crate::dist::Dist;
 
     #[test]

@@ -15,6 +15,14 @@
 //! * Routing: [`super::router::Router`] — exact Acc-QUIVER below the size
 //!   crossover, QUIVER-Hist above it.
 //! * Metrics: counters + latency histograms ([`super::metrics`]).
+//! * Data parallelism: each solver thread hands its job's whole-vector
+//!   O(d) passes (f32→f64 widening, scan, sort/histogram, quantize,
+//!   bit-pack) to the [`crate::par`] executor instead of looping
+//!   sequentially — `threads` here sizes the *concurrency* pool (jobs in
+//!   flight), [`crate::par::set_threads`] / `QUIVER_THREADS` size the
+//!   *per-job* data parallelism. With both > 1 the pools compose; the
+//!   default service keeps the solver pool small and lets `par` soak the
+//!   cores, which minimizes single-request latency.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -209,7 +217,7 @@ fn handle_conn(
 
 fn serve_job(job: Job, router: &Router, metrics: &Metrics, rng: &mut Xoshiro256pp) {
     let t0 = Instant::now();
-    let xs: Vec<f64> = job.data.iter().map(|&x| x as f64).collect();
+    let xs: Vec<f64> = crate::par::map_elems(&job.data, |&x| x as f64);
     let reply = match router.solve(&xs, job.s.max(1) as usize) {
         Ok((sol, route)) => {
             let solve_us = t0.elapsed().as_micros() as u64;

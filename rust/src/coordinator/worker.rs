@@ -86,14 +86,16 @@ pub fn run_worker(
 }
 
 /// Compress one gradient: route to a solver for Q, then stochastically
-/// quantize and bit-pack. This is the full client-side hot path.
+/// quantize and bit-pack. This is the full client-side hot path — every
+/// O(d) stage (widening, routed solve, quantize, bit-pack) runs on the
+/// [`crate::par`] executor, so one gradient saturates the worker's cores.
 pub fn compress_gradient(
     grad: &[f32],
     s: usize,
     router: &Router,
     rng: &mut Xoshiro256pp,
 ) -> Result<sq::CompressedVec> {
-    let xs: Vec<f64> = grad.iter().map(|&g| g as f64).collect();
+    let xs: Vec<f64> = crate::par::map_elems(grad, |&g| g as f64);
     let (sol, _route) = router.solve(&xs, s).map_err(|e| anyhow!("AVQ solve: {e}"))?;
     Ok(sq::compress(&xs, &sol.q, rng))
 }

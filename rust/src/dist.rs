@@ -165,10 +165,11 @@ impl Dist {
     }
 
     /// [`Dist::sample_vec`] sorted ascending — the exact solvers' input
-    /// format.
+    /// format (parallel merge sort; same values in the same order for any
+    /// thread count).
     pub fn sample_sorted(&self, d: usize, seed: u64) -> Vec<f64> {
         let mut v = self.sample_vec(d, seed);
-        v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::par::sort::sort_f64(&mut v);
         v
     }
 

@@ -1,10 +1,11 @@
 //! Figure 4 (Appendix C): sort and quantize times vs dimension.
 //!
 //! The paper measured these on a T4 GPU to argue the non-solver stages are
-//! never the bottleneck. Here (CPU-only) we report the Rust `pdqsort` and
-//! the Rust stochastic-quantize pass, plus — when artifacts are present —
-//! the PJRT-executed Pallas `sq` kernel (the actual device path at the
-//! artifact's fixed 64K shape).
+//! never the bottleneck. Here (CPU-only) we report the parallel merge
+//! sort and the chunked stochastic-quantize pass (both on the
+//! [`crate::par`] executor at its configured width), plus — when
+//! artifacts are present — the PJRT-executed Pallas `sq` kernel (the
+//! actual device path at the artifact's fixed 64K shape).
 
 use super::common::*;
 use super::FigOpts;
@@ -32,7 +33,7 @@ pub fn sort_and_quantize(opts: &FigOpts) -> Table {
         let unsorted = opts.dist.sample_vec(d, SEED_BASE);
         let sort_t = time_median(opts.time_samples, || {
             let mut v = unsorted.clone();
-            v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            crate::par::sort::sort_f64(&mut v);
             std::hint::black_box(v);
         });
         // Q from the fast near-optimal path, then time the quantize pass.

@@ -15,6 +15,10 @@
 //! * **[`coordinator`]** — Layer 3: a gradient-compression parameter server
 //!   and AVQ compression service (router, batcher, aggregator) with Python
 //!   never on the request path.
+//! * **[`par`]** — the deterministic chunked executor every O(d) hot pass
+//!   (scan, histogram build, sort, quantize, encode) runs on: fixed chunk
+//!   size + per-chunk RNG streams ⇒ bitwise-identical results for any
+//!   thread count.
 //! * **[`runtime`]** — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
 //! * **[`figures`]** — regenerates every table/figure of the paper's
@@ -46,6 +50,7 @@ pub mod coordinator;
 pub mod dist;
 pub mod figures;
 pub mod metrics;
+pub mod par;
 pub mod runtime;
 pub mod sq;
 pub mod testutil;

@@ -9,7 +9,10 @@
 //! ```
 //!
 //! Every subcommand accepts `--config FILE` (`key = value` lines) with CLI
-//! flags overriding file values.
+//! flags overriding file values, plus `--par-threads N` (or the
+//! `QUIVER_THREADS` env var) to size the data-parallel executor that runs
+//! every O(d) hot pass; results are identical for any value (see
+//! `quiver::par`).
 
 use std::time::Duration;
 
@@ -60,6 +63,12 @@ fn run() -> Result<()> {
         args.drain(pos..pos + 2);
     }
     cfg.apply_overrides(&args)?;
+
+    // Executor width for the data-parallel hot paths (0 = auto).
+    let par_threads = cfg.usize_or("par_threads", 0)?;
+    if par_threads > 0 {
+        quiver::par::set_threads(par_threads);
+    }
 
     match cmd.as_str() {
         "solve" => cmd_solve(&cfg),

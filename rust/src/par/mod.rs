@@ -1,0 +1,379 @@
+//! Deterministic data-parallel executor for the O(d) hot passes.
+//!
+//! Every O(d) stage of the pipeline — the min/max/‖X‖² scan, the
+//! stochastic-histogram build, the sort feeding the exact solvers, and the
+//! `sq` quantize/encode passes — runs through this module. It is
+//! dependency-free (plain [`std::thread::scope`]) and built around one
+//! invariant:
+//!
+//! # The determinism contract
+//!
+//! **Results are bitwise-identical for every thread count, including 1.**
+//!
+//! Three rules make that hold:
+//!
+//! 1. **Fixed chunk size.** Work is split into chunks of [`CHUNK`]
+//!    elements. Chunk boundaries depend only on the input length — never
+//!    on the thread count — so the per-chunk computation is the same no
+//!    matter how many workers run.
+//! 2. **Per-chunk RNG streams.** Randomized passes draw a single base
+//!    `u64` from the caller's generator and derive an independent
+//!    [`Xoshiro256pp`](crate::util::rng::Xoshiro256pp) stream per chunk
+//!    via [`Xoshiro256pp::stream`](crate::util::rng::Xoshiro256pp::stream)
+//!    — chunk `c` sees the same uniforms whichever worker executes it.
+//! 3. **Order-fixed merges.** Chunk results are combined in chunk-index
+//!    order (floating-point reductions), or via exact integer arithmetic
+//!    where grouping may vary (histogram shard counts), so the reduction
+//!    tree never depends on scheduling.
+//!
+//! Work assignment is static: the chunk list is split into contiguous
+//! ranges, one per worker. The passes here are uniform-cost per element,
+//! so static assignment loses nothing to work stealing and keeps the
+//! executor trivially deterministic and lock-free.
+//!
+//! Workers are scoped OS threads spawned per call ([`std::thread::scope`])
+//! — a deliberate v1 simplicity choice: spawn cost (~10–50µs a wave) is
+//! noise against the multi-millisecond O(d) passes this executor exists
+//! for, and scoped borrows need no `Arc`/channel plumbing. A persistent
+//! worker pool that amortizes spawning across a request's passes is a
+//! ROADMAP follow-up; the determinism contract is unaffected either way.
+//!
+//! # Thread-count configuration
+//!
+//! A process-global thread count governs every call site: defaults to the
+//! machine's available parallelism, can be pinned with the
+//! `QUIVER_THREADS` environment variable, and overridden at runtime with
+//! [`set_threads`] (the figure harnesses and the thread-invariance tests
+//! use this). `set_threads(0)` resets to the default.
+
+pub mod scan;
+pub mod sort;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Fixed chunk size (elements) for all chunked passes.
+///
+/// Part of the determinism contract: chunk boundaries — and therefore
+/// per-chunk RNG stream assignment — are multiples of this constant, not
+/// of the thread count. 64K elements ≈ 512 KiB of f64: large enough to
+/// amortize spawn overhead, small enough to split a 1M-coordinate vector
+/// across 16 workers.
+pub const CHUNK: usize = 1 << 16;
+
+/// Global executor width. 0 = unset (resolve from env / hardware).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// The configured executor width (threads used by the chunked passes).
+///
+/// Resolution order: the last [`set_threads`] call, else `QUIVER_THREADS`,
+/// else [`std::thread::available_parallelism`].
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = std::env::var("QUIVER_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    // Install the resolved default only if still unset: concurrent first
+    // callers compute the same value, but an explicit set_threads() pin
+    // that lands between our load and here must win, not be clobbered.
+    match THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => n,
+        Err(pinned) => pinned,
+    }
+}
+
+/// Set the executor width. `0` resets to the default (env / hardware).
+///
+/// Thanks to the determinism contract this only affects wall-clock time,
+/// never results — the thread-invariance tests pin it to 1/2/4/8 and
+/// assert bitwise-identical outputs.
+pub fn set_threads(n: usize) {
+    if n == 0 {
+        THREADS.store(0, Ordering::Relaxed);
+        let _ = threads(); // re-resolve eagerly
+    } else {
+        THREADS.store(n, Ordering::Relaxed);
+    }
+}
+
+/// Split `0..n` into `w` contiguous ranges whose sizes differ by ≤ 1.
+fn split_ranges(n: usize, w: usize) -> Vec<(usize, usize)> {
+    debug_assert!(w >= 1);
+    let base = n / w;
+    let extra = n % w;
+    let mut out = Vec::with_capacity(w);
+    let mut lo = 0;
+    for k in 0..w {
+        let hi = lo + base + usize::from(k < extra);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Run `g` over contiguous parts of `items` (one part per worker) and
+/// return the per-part results **in part order**. The building block for
+/// the typed helpers below; callers never observe which thread ran what.
+fn map_parts<A: Send, R: Send>(mut items: Vec<A>, g: impl Fn(Vec<A>) -> R + Sync) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let w = threads().min(n).max(1);
+    if w == 1 {
+        return vec![g(items)];
+    }
+    let bounds = split_ranges(n, w);
+    let mut parts: Vec<Vec<A>> = Vec::with_capacity(w);
+    for k in (1..w).rev() {
+        parts.push(items.split_off(bounds[k].0));
+    }
+    parts.push(items);
+    parts.reverse(); // now in part order 0..w
+    let mut out: Vec<R> = Vec::with_capacity(w);
+    std::thread::scope(|s| {
+        let g = &g;
+        let mut iter = parts.into_iter();
+        let first = iter.next().expect("w >= 1 parts");
+        let handles: Vec<_> = iter.map(|part| s.spawn(move || g(part))).collect();
+        out.push(g(first)); // this thread is worker 0
+        for h in handles {
+            out.push(h.join().expect("parallel worker panicked"));
+        }
+    });
+    out
+}
+
+/// Map `f` over `items`, preserving order. Parallel across contiguous
+/// partitions; equivalent to `items.into_iter().map(f).collect()`.
+pub fn map_vec<A: Send, R: Send>(items: Vec<A>, f: impl Fn(A) -> R + Sync) -> Vec<R> {
+    let total = items.len();
+    let parts = map_parts(items, |part| part.into_iter().map(&f).collect::<Vec<R>>());
+    let mut out = Vec::with_capacity(total);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+/// Map `f(chunk_idx, chunk)` over fixed-size chunks of `xs`, results in
+/// chunk order.
+pub fn map_chunks<T: Sync, R: Send>(
+    xs: &[T],
+    chunk: usize,
+    f: impl Fn(usize, &[T]) -> R + Sync,
+) -> Vec<R> {
+    let items: Vec<(usize, &[T])> = xs.chunks(chunk.max(1)).enumerate().collect();
+    map_vec(items, |(i, c)| f(i, c))
+}
+
+/// Elementwise map with a parallel middle: `xs.iter().map(f).collect()`.
+/// One allocation, written in place (this sits on the per-request path:
+/// gradient widening, dequantize). Single-chunk inputs take the plain
+/// sequential collect — no zero-init pass, identical to the code this
+/// replaces.
+pub fn map_elems<T: Sync, U: Send + Default + Clone>(
+    xs: &[T],
+    f: impl Fn(&T) -> U + Sync,
+) -> Vec<U> {
+    if xs.len() <= CHUNK || threads() == 1 {
+        return xs.iter().map(f).collect();
+    }
+    let mut out = vec![U::default(); xs.len()];
+    zip_chunks_mut(&mut out, CHUNK, xs, CHUNK, |_, slots, chunk| {
+        for (slot, x) in slots.iter_mut().zip(chunk) {
+            *slot = f(x);
+        }
+    });
+    out
+}
+
+/// Fold fixed-size chunks into one accumulator **per worker** (a shard),
+/// returning the shards in worker-range order.
+///
+/// Shard *grouping* depends on the thread count, so only use this where
+/// the final shard merge is exact regardless of grouping (e.g. integral
+/// histogram counts); use [`map_chunks`] + an in-order fold where
+/// floating-point association matters.
+pub fn fold_chunks<T: Sync, Acc: Send>(
+    xs: &[T],
+    chunk: usize,
+    init: impl Fn() -> Acc + Sync,
+    fold: impl Fn(&mut Acc, usize, &[T]) + Sync,
+) -> Vec<Acc> {
+    let items: Vec<(usize, &[T])> = xs.chunks(chunk.max(1)).enumerate().collect();
+    map_parts(items, |part| {
+        let mut acc = init();
+        for (i, c) in part {
+            fold(&mut acc, i, c);
+        }
+        acc
+    })
+}
+
+/// Run `f(chunk_idx, chunk)` over fixed-size **mutable** chunks of `out`.
+pub fn for_each_chunk_mut<U: Send>(
+    out: &mut [U],
+    chunk: usize,
+    f: impl Fn(usize, &mut [U]) + Sync,
+) {
+    let items: Vec<(usize, &mut [U])> = out.chunks_mut(chunk.max(1)).enumerate().collect();
+    map_vec(items, |(i, c)| f(i, c));
+}
+
+/// Zip mutable output chunks with input chunks: `f(chunk_idx, out, inp)`.
+/// The chunk counts must match (the chunk sizes need not — the codec
+/// pairs 64K indices with their byte-aligned payload window).
+pub fn zip_chunks_mut<T: Sync, U: Send>(
+    out: &mut [U],
+    out_chunk: usize,
+    xs: &[T],
+    in_chunk: usize,
+    f: impl Fn(usize, &mut [U], &[T]) + Sync,
+) {
+    let oc = out.chunks_mut(out_chunk.max(1));
+    let ic = xs.chunks(in_chunk.max(1));
+    assert_eq!(oc.len(), ic.len(), "output/input chunk counts must match");
+    let items: Vec<(usize, (&mut [U], &[T]))> = oc.zip(ic).enumerate().collect();
+    map_vec(items, |(i, (o, c))| f(i, o, c));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize tests that touch the global thread count.
+    fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        let _g = LOCK.lock().unwrap();
+        let prev = threads();
+        set_threads(n);
+        let r = f();
+        set_threads(prev);
+        r
+    }
+
+    #[test]
+    fn split_ranges_covers_everything() {
+        for n in [0usize, 1, 2, 7, 64, 65, 1000] {
+            for w in [1usize, 2, 3, 8, 16] {
+                let r = split_ranges(n, w);
+                assert_eq!(r.len(), w);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[w - 1].1, n);
+                for win in r.windows(2) {
+                    assert_eq!(win[0].1, win[1].0, "contiguous");
+                }
+                let max = r.iter().map(|(a, b)| b - a).max().unwrap();
+                let min = r.iter().map(|(a, b)| b - a).min().unwrap();
+                assert!(max - min <= 1, "balanced: {r:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_vec_preserves_order() {
+        for t in [1usize, 2, 4, 8] {
+            let got = with_threads(t, || map_vec((0..1000).collect::<Vec<_>>(), |i| i * 3));
+            assert_eq!(got, (0..1000).map(|i| i * 3).collect::<Vec<_>>(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn map_chunks_sees_every_chunk_once() {
+        let xs: Vec<u64> = (0..100_000).collect();
+        for t in [1usize, 3, 8] {
+            let sums = with_threads(t, || {
+                map_chunks(&xs, 4096, |i, c| (i, c.iter().sum::<u64>()))
+            });
+            assert_eq!(sums.len(), xs.len().div_ceil(4096));
+            for (k, (i, _)) in sums.iter().enumerate() {
+                assert_eq!(k, *i, "chunk order");
+            }
+            let total: u64 = sums.iter().map(|(_, s)| s).sum();
+            assert_eq!(total, xs.iter().sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn map_elems_matches_sequential() {
+        let xs: Vec<f64> = (0..200_001).map(|i| i as f64 * 0.5).collect();
+        let want: Vec<f64> = xs.iter().map(|x| x * 2.0).collect();
+        for t in [1usize, 4] {
+            let got = with_threads(t, || map_elems(&xs, |x| x * 2.0));
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn fold_chunks_shards_conserve_mass() {
+        let xs = vec![1u64; 300_000];
+        for t in [1usize, 2, 5] {
+            let shards = with_threads(t, || {
+                fold_chunks(&xs, CHUNK, || 0u64, |acc, _, c| *acc += c.len() as u64)
+            });
+            assert!(shards.len() <= t.max(1));
+            assert_eq!(shards.iter().sum::<u64>(), 300_000);
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_mut_writes_disjointly() {
+        let mut out = vec![0usize; 150_000];
+        with_threads(4, || {
+            for_each_chunk_mut(&mut out, CHUNK, |i, c| {
+                for v in c.iter_mut() {
+                    *v = i + 1;
+                }
+            });
+        });
+        assert!(out.iter().all(|&v| v >= 1));
+        assert_eq!(out[0], 1);
+        assert_eq!(out[CHUNK], 2);
+        assert_eq!(out[2 * CHUNK], 3);
+    }
+
+    #[test]
+    fn zip_chunks_mut_pairs_by_index() {
+        let xs: Vec<u32> = (0..130_000).collect();
+        let mut out = vec![0u32; 130_000];
+        with_threads(3, || {
+            zip_chunks_mut(&mut out, CHUNK, &xs, CHUNK, |_, o, c| {
+                for (a, b) in o.iter_mut().zip(c) {
+                    *a = b + 1;
+                }
+            });
+        });
+        assert!(out.iter().zip(&xs).all(|(a, b)| *a == b + 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk counts must match")]
+    fn zip_chunks_mut_rejects_mismatch() {
+        let xs = vec![0u8; 10];
+        let mut out = vec![0u8; 100];
+        zip_chunks_mut(&mut out, 10, &xs, 1, |_, _, _| {});
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        assert!(map_vec(Vec::<u8>::new(), |b| b).is_empty());
+        assert!(map_chunks(&[] as &[u8], CHUNK, |_, _| 0).is_empty());
+        assert!(fold_chunks(&[] as &[u8], CHUNK, || 0, |_, _, _| {}).is_empty());
+    }
+
+    #[test]
+    fn set_threads_zero_resets_to_default() {
+        with_threads(3, || {
+            assert_eq!(threads(), 3);
+            set_threads(0);
+            assert!(threads() >= 1);
+        });
+    }
+}

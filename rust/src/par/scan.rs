@@ -1,0 +1,109 @@
+//! Fused parallel reductions over f64 vectors: min/max/‖X‖²/finiteness in
+//! one chunked pass.
+//!
+//! The histogram build and the unsorted solver entry points each need the
+//! input range, the squared norm, and a finiteness check before doing any
+//! real work — previously three-plus sequential O(d) loops. [`stats`]
+//! fuses them into one pass over [`super::CHUNK`]-sized chunks.
+//!
+//! Determinism: per-chunk partials are folded **in chunk-index order**, so
+//! the floating-point reduction tree is fixed by the input length alone —
+//! `norm2_sq` is bitwise-identical for every thread count (see the module
+//! contract in [`crate::par`]).
+
+use super::{map_chunks, CHUNK};
+
+/// Fused single-pass statistics of a vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VecStats {
+    /// Minimum value (`+∞` for empty input).
+    pub lo: f64,
+    /// Maximum value (`−∞` for empty input).
+    pub hi: f64,
+    /// Squared L2 norm, accumulated per chunk then folded in chunk order.
+    pub norm2_sq: f64,
+    /// Whether every coordinate is finite.
+    pub finite: bool,
+}
+
+/// One fused chunked pass: min, max, ‖X‖², and finiteness.
+pub fn stats(xs: &[f64]) -> VecStats {
+    let parts = map_chunks(xs, CHUNK, |_, c| {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut n2 = 0.0;
+        let mut finite = true;
+        for &x in c {
+            finite &= x.is_finite();
+            lo = lo.min(x);
+            hi = hi.max(x);
+            n2 += x * x;
+        }
+        (lo, hi, n2, finite)
+    });
+    let mut out = VecStats { lo: f64::INFINITY, hi: f64::NEG_INFINITY, norm2_sq: 0.0, finite: true };
+    for (lo, hi, n2, finite) in parts {
+        out.lo = out.lo.min(lo);
+        out.hi = out.hi.max(hi);
+        out.norm2_sq += n2;
+        out.finite &= finite;
+    }
+    out
+}
+
+/// Parallel finiteness check (the cheap prefix of [`stats`]).
+pub fn all_finite(xs: &[f64]) -> bool {
+    map_chunks(xs, CHUNK, |_, c| c.iter().all(|x| x.is_finite()))
+        .into_iter()
+        .all(|ok| ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    #[test]
+    fn stats_matches_sequential() {
+        let xs = Dist::Normal { mu: 0.5, sigma: 2.0 }.sample_vec(3 * CHUNK + 777, 9);
+        let st = stats(&xs);
+        let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(st.lo, lo);
+        assert_eq!(st.hi, hi);
+        assert!(st.finite);
+        // Same chunked association as the reference fold below.
+        let mut want = 0.0;
+        for c in xs.chunks(CHUNK) {
+            let mut n2 = 0.0;
+            for &x in c {
+                n2 += x * x;
+            }
+            want += n2;
+        }
+        assert_eq!(st.norm2_sq, want, "chunk-ordered fold is the contract");
+    }
+
+    #[test]
+    fn stats_flags_nonfinite() {
+        let mut xs = vec![1.0; 2 * CHUNK];
+        xs[CHUNK + 17] = f64::NAN;
+        assert!(!stats(&xs).finite);
+        assert!(!all_finite(&xs));
+        xs[CHUNK + 17] = f64::INFINITY;
+        assert!(!stats(&xs).finite);
+        xs[CHUNK + 17] = 1.0;
+        assert!(stats(&xs).finite);
+        assert!(all_finite(&xs));
+    }
+
+    #[test]
+    fn empty_input_identities() {
+        let st = stats(&[]);
+        assert_eq!(st.lo, f64::INFINITY);
+        assert_eq!(st.hi, f64::NEG_INFINITY);
+        assert_eq!(st.norm2_sq, 0.0);
+        assert!(st.finite);
+        assert!(all_finite(&[]));
+    }
+}

@@ -1,0 +1,147 @@
+//! Parallel merge sort for f64 vectors — the sort feeding the exact
+//! solvers ([`crate::avq::solve_unsorted`], the router's exact path, the
+//! figure harnesses).
+//!
+//! Algorithm: split into **fixed-size runs** of [`RUN`] elements (a
+//! multiple of the executor chunk; boundaries depend only on the input
+//! length), sort each run in parallel with pdqsort, then merge pairs of
+//! adjacent runs in parallel rounds, ping-ponging between the input and
+//! one scratch buffer. `O(d log d)` work, `O(d/threads · log d)` span,
+//! one `O(d)` allocation.
+//!
+//! Determinism: comparisons use [`f64::total_cmp`], a total order on bit
+//! patterns, so the sorted sequence of bit patterns is unique — the
+//! output is bitwise-identical for every thread count (and to a plain
+//! sequential sort). Ties take the left run first, which the fixed merge
+//! tree makes scheduling-independent anyway.
+
+use std::cmp::Ordering;
+
+/// Fixed run size for the parallel sort (`= 4·CHUNK`). Sorting has an
+/// O(log) factor per element, so slightly coarser grains than the linear
+/// passes amortize better; correctness only needs the size to be fixed.
+pub const RUN: usize = 4 * super::CHUNK;
+
+/// Sort `v` ascending (total order; `-0.0 < 0.0`, NaNs sort last with a
+/// fixed order — callers on the solver paths reject NaN beforehand).
+pub fn sort_f64(v: &mut [f64]) {
+    let n = v.len();
+    if n <= RUN || super::threads() == 1 {
+        // Identical output to the merge path: sorting by a total order
+        // yields a unique sequence of bit patterns.
+        v.sort_unstable_by(f64::total_cmp);
+        return;
+    }
+    // 1) Sort fixed-size runs in parallel, in place.
+    super::for_each_chunk_mut(v, RUN, |_, run| run.sort_unstable_by(f64::total_cmp));
+    // 2) Merge adjacent runs in parallel rounds.
+    let mut buf = vec![0.0f64; n];
+    let mut in_v = true; // current data lives in `v`
+    let mut width = RUN;
+    while width < n {
+        if in_v {
+            merge_pass(v, &mut buf, width);
+        } else {
+            merge_pass(&buf, v, width);
+        }
+        in_v = !in_v;
+        width *= 2;
+    }
+    if !in_v {
+        v.copy_from_slice(&buf);
+    }
+}
+
+/// One round: merge each adjacent pair of `width`-sized sorted runs from
+/// `src` into `dst`. Pairs are independent — they run on the executor.
+fn merge_pass(src: &[f64], dst: &mut [f64], width: usize) {
+    let n = src.len();
+    let mut tasks: Vec<(&[f64], &[f64], &mut [f64])> = Vec::with_capacity(n.div_ceil(2 * width));
+    let mut rest = dst;
+    let mut a = 0;
+    while a < n {
+        let m = (a + width).min(n);
+        let b = (a + 2 * width).min(n);
+        let (d, r) = std::mem::take(&mut rest).split_at_mut(b - a);
+        rest = r;
+        tasks.push((&src[a..m], &src[m..b], d));
+        a = b;
+    }
+    super::map_vec(tasks, |(l, r, d)| merge_into(l, r, d));
+}
+
+/// Merge two sorted slices into `dst` (`dst.len() == l.len() + r.len()`),
+/// taking from the left on ties.
+fn merge_into(mut l: &[f64], mut r: &[f64], dst: &mut [f64]) {
+    debug_assert_eq!(l.len() + r.len(), dst.len());
+    let mut i = 0;
+    while !l.is_empty() && !r.is_empty() {
+        if l[0].total_cmp(&r[0]) != Ordering::Greater {
+            dst[i] = l[0];
+            l = &l[1..];
+        } else {
+            dst[i] = r[0];
+            r = &r[1..];
+        }
+        i += 1;
+    }
+    if !l.is_empty() {
+        dst[i..].copy_from_slice(l);
+    } else if !r.is_empty() {
+        dst[i..].copy_from_slice(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    fn reference_sorted(mut v: Vec<f64>) -> Vec<f64> {
+        v.sort_unstable_by(f64::total_cmp);
+        v
+    }
+
+    #[test]
+    fn sorts_small_and_edge_inputs() {
+        for xs in [vec![], vec![1.0], vec![2.0, 1.0], vec![3.0, 3.0, -1.0]] {
+            let mut v = xs.clone();
+            sort_f64(&mut v);
+            assert_eq!(v, reference_sorted(xs));
+        }
+    }
+
+    #[test]
+    fn sorts_across_run_boundaries() {
+        // > 2 runs with a ragged tail so every merge-shape case fires.
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(2 * RUN + RUN / 2 + 13, 4);
+        let want = reference_sorted(xs.clone());
+        let mut v = xs;
+        sort_f64(&mut v);
+        assert_eq!(v, want);
+        assert!(crate::util::is_sorted(&v));
+    }
+
+    #[test]
+    fn duplicates_and_negative_zero() {
+        let mut v = vec![0.0, -0.0, 1.0, -0.0, 0.0, -1.0];
+        sort_f64(&mut v);
+        // total order: -1 < -0.0 < 0.0 < 1, bitwise deterministic.
+        let bits: Vec<u64> = v.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u64> = [-1.0, -0.0, -0.0, 0.0, 0.0, 1.0].iter().map(|x: &f64| x.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn merge_into_exhausts_both_sides() {
+        let mut dst = vec![0.0; 5];
+        merge_into(&[1.0, 4.0], &[2.0, 3.0, 5.0], &mut dst);
+        assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let mut dst = vec![0.0; 3];
+        merge_into(&[], &[1.0, 2.0, 3.0], &mut dst);
+        assert_eq!(dst, vec![1.0, 2.0, 3.0]);
+        let mut dst = vec![0.0; 2];
+        merge_into(&[7.0, 8.0], &[], &mut dst);
+        assert_eq!(dst, vec![7.0, 8.0]);
+    }
+}

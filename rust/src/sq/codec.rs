@@ -11,6 +11,12 @@
 //! `bits = ceil(log2 s)` — with `s = 16` a coordinate costs 4 bits instead
 //! of 64, an ~16× reduction before any entropy coding (which the paper
 //! notes is orthogonal and composable).
+//!
+//! Packing and unpacking are chunked onto [`crate::par`]: every
+//! [`par::CHUNK`] indices occupy a whole number of payload bytes
+//! regardless of the bit width, so chunks own disjoint byte windows.
+
+use crate::par;
 
 /// A compressed vector: quantization values + bit-packed per-coordinate
 /// indices.
@@ -91,56 +97,68 @@ pub fn bits_for(s: usize) -> u8 {
 /// Packed payload length in bytes.
 #[inline]
 pub fn packed_len(d: usize, bits: u8) -> usize {
-    (d * bits as usize + 7) / 8
+    (d * bits as usize).div_ceil(8)
 }
 
 /// Bit-pack `idx` (each `< 2^bits`) with `bits = ceil(log2 |qs|)`.
+///
+/// Parallel over [`par::CHUNK`]-sized index chunks: `CHUNK·bits` is a
+/// whole number of bytes for every `bits`, so each chunk owns a disjoint,
+/// byte-aligned payload window and the packing is embarrassingly parallel
+/// with output identical to the sequential pass.
 pub fn encode(idx: &[u32], qs: &[f64]) -> CompressedVec {
     let bits = bits_for(qs.len());
     let mut payload = vec![0u8; packed_len(idx.len(), bits)];
     if bits > 0 {
-        let mut bitpos = 0usize;
-        for &v in idx {
-            debug_assert!((v as usize) < qs.len());
-            let byte = bitpos >> 3;
-            let off = bitpos & 7;
-            // Write up to 32+7 bits via a u64 window.
-            let window = (v as u64) << off;
-            let mut b = byte;
-            let mut w = window;
-            while w != 0 {
-                payload[b] |= (w & 0xFF) as u8;
-                w >>= 8;
-                b += 1;
+        let chunk_bytes = par::CHUNK * bits as usize / 8; // CHUNK % 8 == 0
+        par::zip_chunks_mut(&mut payload, chunk_bytes, idx, par::CHUNK, |_, window, chunk| {
+            let mut bitpos = 0usize; // chunk-local; windows are byte-aligned
+            for &v in chunk {
+                debug_assert!((v as usize) < qs.len());
+                let byte = bitpos >> 3;
+                let off = bitpos & 7;
+                // Write up to 32+7 bits via a u64 window.
+                let mut b = byte;
+                let mut w = (v as u64) << off;
+                while w != 0 {
+                    window[b] |= (w & 0xFF) as u8;
+                    w >>= 8;
+                    b += 1;
+                }
+                bitpos += bits as usize;
             }
-            bitpos += bits as usize;
-        }
+        });
     }
     CompressedVec { d: idx.len() as u64, q: qs.to_vec(), bits, payload }
 }
 
 /// Unpack to `(indices, q values)`.
+///
+/// Parallel over output chunks; reads may peek past a chunk's own payload
+/// window (the 8-byte read at a boundary), which is safe — the payload is
+/// shared read-only.
 pub fn decode(c: &CompressedVec) -> (Vec<u32>, Vec<f64>) {
     let d = c.d as usize;
     let bits = c.bits as usize;
-    let mut idx = Vec::with_capacity(d);
     if bits == 0 {
-        idx.resize(d, 0);
-        return (idx, c.q.clone());
+        return (vec![0; d], c.q.clone());
     }
     let mask = (1u64 << bits) - 1;
-    let mut bitpos = 0usize;
-    for _ in 0..d {
-        let byte = bitpos >> 3;
-        let off = bitpos & 7;
-        // Read an 8-byte window (guarded at the tail).
-        let mut w = 0u64;
-        for (k, slot) in c.payload[byte..].iter().take(8).enumerate() {
-            w |= (*slot as u64) << (8 * k);
+    let mut idx = vec![0u32; d];
+    par::for_each_chunk_mut(&mut idx, par::CHUNK, |ci, out| {
+        let mut bitpos = ci * par::CHUNK * bits;
+        for slot in out.iter_mut() {
+            let byte = bitpos >> 3;
+            let off = bitpos & 7;
+            // Read an 8-byte window (guarded at the tail).
+            let mut w = 0u64;
+            for (k, b) in c.payload[byte..].iter().take(8).enumerate() {
+                w |= (*b as u64) << (8 * k);
+            }
+            *slot = ((w >> off) & mask) as u32;
+            bitpos += bits;
         }
-        idx.push(((w >> off) & mask) as u32);
-        bitpos += bits;
-    }
+    });
     (idx, c.q.clone())
 }
 

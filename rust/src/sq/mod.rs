@@ -10,46 +10,71 @@
 //! The GPU/TPU twin of [`quantize`] is the Pallas kernel
 //! `python/compile/kernels/sq.py`, AOT-compiled into `artifacts/` and
 //! executed from [`crate::runtime`].
+//!
+//! Both quantize passes are chunked onto the [`crate::par`] executor:
+//! each call draws **one** base `u64` from the caller's generator and
+//! gives every [`par::CHUNK`]-sized chunk its own derived stream
+//! ([`Xoshiro256pp::stream`]), so outputs are bitwise-identical for any
+//! thread count — and [`quantize`] / [`quantize_sorted`] still agree
+//! draw-for-draw on the same caller state.
 
 pub mod codec;
 
 pub use codec::{decode, encode, CompressedVec};
 
+use crate::par;
 use crate::util::rng::Xoshiro256pp;
 
 /// Stochastically quantize `xs` onto `qs` (sorted ascending, covering the
 /// input range). Returns the index into `qs` chosen for each coordinate.
 ///
-/// Unbiased: `E[qs[out[i]]] = xs[i]`. O(d·log s) (binary search per
-/// coordinate; for sorted inputs use [`quantize_sorted`] which is O(d + s)).
+/// Unbiased: `E[qs[out[i]]] = xs[i]`. O(d·log s / threads) (binary search
+/// per coordinate; for sorted inputs use [`quantize_sorted`] which does a
+/// merge scan per chunk). Consumes exactly one draw from `rng` (the
+/// per-chunk stream base).
 pub fn quantize(xs: &[f64], qs: &[f64], rng: &mut Xoshiro256pp) -> Vec<u32> {
-    assert!(qs.len() >= 1);
+    assert!(!qs.is_empty());
     debug_assert!(crate::util::is_sorted(qs));
-    xs.iter()
-        .map(|&x| {
+    let base = rng.next_u64();
+    let mut out = vec![0u32; xs.len()];
+    par::zip_chunks_mut(&mut out, par::CHUNK, xs, par::CHUNK, |c, slots, chunk| {
+        let mut crng = Xoshiro256pp::stream(base, c as u64);
+        for (slot, &x) in slots.iter_mut().zip(chunk) {
             let (lo, hi) = bracket(qs, x);
-            pick(qs, lo, hi, x, rng)
-        })
-        .collect()
+            *slot = pick(qs, lo, hi, x, &mut crng);
+        }
+    });
+    out
 }
 
-/// [`quantize`] specialized for sorted inputs: a single merge scan, O(d + s).
+/// [`quantize`] specialized for sorted inputs: a merge scan per chunk,
+/// O(d + s·(d/CHUNK)). Same stream derivation as [`quantize`], so the two
+/// produce identical picks from the same caller RNG state.
 pub fn quantize_sorted(xs: &[f64], qs: &[f64], rng: &mut Xoshiro256pp) -> Vec<u32> {
-    assert!(qs.len() >= 1);
+    assert!(!qs.is_empty());
     debug_assert!(crate::util::is_sorted(xs));
     debug_assert!(crate::util::is_sorted(qs));
-    let mut hi = 0usize;
-    xs.iter()
-        .map(|&x| {
+    let base = rng.next_u64();
+    let mut out = vec![0u32; xs.len()];
+    par::zip_chunks_mut(&mut out, par::CHUNK, xs, par::CHUNK, |c, slots, chunk| {
+        let mut crng = Xoshiro256pp::stream(base, c as u64);
+        // Seed the merge scan at this chunk's first element — identical to
+        // having scanned every preceding chunk (hi advances monotonically).
+        let mut hi = match chunk.first() {
+            Some(&x0) => qs.partition_point(|&q| q < x0).min(qs.len() - 1),
+            None => 0,
+        };
+        for (slot, &x) in slots.iter_mut().zip(chunk) {
             while hi + 1 < qs.len() && qs[hi] < x {
                 hi += 1;
             }
             // Mirror `bracket` exactly (incl. RNG-draw behaviour on exact
             // hits) so both paths produce identical streams per seed.
             let lo = if qs[hi] <= x { hi } else { hi.saturating_sub(1) };
-            pick(qs, lo, hi, x, rng)
-        })
-        .collect()
+            *slot = pick(qs, lo, hi, x, &mut crng);
+        }
+    });
+    out
 }
 
 /// Find `(lo, hi)` with `qs[lo] ≤ x ≤ qs[hi]`, `hi − lo ≤ 1`.
@@ -84,7 +109,7 @@ fn pick(qs: &[f64], lo: usize, hi: usize, x: f64, rng: &mut Xoshiro256pp) -> u32
 
 /// Reconstruct the (unbiased estimate of the) vector from indices.
 pub fn dequantize(idx: &[u32], qs: &[f64]) -> Vec<f64> {
-    idx.iter().map(|&i| qs[i as usize]).collect()
+    par::map_elems(idx, |&i| qs[i as usize])
 }
 
 /// One-shot unbiased compression: quantize + bit-pack.

@@ -197,6 +197,88 @@ fn compression_service_concurrent_clients() {
     service.shutdown();
 }
 
+/// Batcher under contention with the parallel workers enabled: a small
+/// queue, a 4-thread solver pool whose jobs fan out onto the `par`
+/// executor, and 16 bursty clients. Every request must resolve to exactly
+/// one of {reply, busy}, the metrics must balance, and replies must be
+/// valid compressions — no losses, dupes, deadlocks, or panics from the
+/// nested (pool × executor) parallelism.
+#[test]
+fn batcher_contention_with_parallel_workers() {
+    /// Restores the executor width even if an assertion below panics, so
+    /// a failure here can't leak a pinned width into later tests.
+    struct WidthGuard(usize);
+    impl Drop for WidthGuard {
+        fn drop(&mut self) {
+            quiver::par::set_threads(self.0);
+        }
+    }
+    let _guard = WidthGuard(quiver::par::threads());
+    // Force real data-parallel fan-out per job (never lower the width —
+    // concurrent tests in this binary only ever see it raised).
+    quiver::par::set_threads(quiver::par::threads().max(4));
+    let service = Service::start(ServiceConfig {
+        threads: 4,
+        queue_capacity: 8,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        router: Router::new(RouterConfig { exact_max_d: 1 << 12, hist_m: 256, seed: 5 }),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = service.addr().to_string();
+
+    let clients = 16u64;
+    let per_client = 4u64;
+    let mut joins = vec![];
+    for c in 0..clients {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut ok = 0u64;
+            let mut busy = 0u64;
+            for i in 0..per_client {
+                // Mixed sizes: exact route (small) and hist route (large,
+                // chunk-crossing so the executor genuinely splits it).
+                let d = if (c + i) % 2 == 0 { 2048 } else { 100_000 };
+                let data: Vec<f32> =
+                    (0..d).map(|k| ((k as f32 * 0.003 + c as f32).sin() * 1.5).exp()).collect();
+                match compress_remote(&addr, c * 100 + i, 16, &data).expect("rpc") {
+                    Msg::CompressReply { request_id, compressed, .. } => {
+                        assert_eq!(request_id, c * 100 + i);
+                        assert_eq!(compressed.d as usize, d);
+                        assert_eq!(sq::decompress(&compressed).len(), d);
+                        ok += 1;
+                    }
+                    Msg::Busy { request_id } => {
+                        assert_eq!(request_id, c * 100 + i);
+                        busy += 1;
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            (ok, busy)
+        }));
+    }
+    let (mut ok, mut busy) = (0u64, 0u64);
+    for j in joins {
+        let (o, b) = j.join().unwrap();
+        ok += o;
+        busy += b;
+    }
+    assert_eq!(ok + busy, clients * per_client, "every request resolved exactly once");
+    assert!(ok > 0, "contention must not starve the pool entirely");
+    // Let in-flight completion counters settle, then balance the books.
+    std::thread::sleep(Duration::from_millis(200));
+    let m = &service.metrics;
+    let accepted = m.accepted.load(std::sync::atomic::Ordering::Relaxed);
+    let rejected = m.rejected.load(std::sync::atomic::Ordering::Relaxed);
+    let completed = m.completed.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(accepted, ok, "accepted == client-observed replies");
+    assert_eq!(rejected, busy, "rejected == client-observed busy");
+    assert_eq!(completed, ok, "all accepted jobs completed");
+    service.shutdown();
+}
+
 /// Backpressure: a single slow solver thread and a depth-1 queue must turn
 /// excess load into `Busy` replies, never into unbounded queueing.
 #[test]

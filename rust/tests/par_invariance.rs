@@ -1,0 +1,136 @@
+//! The determinism contract of `quiver::par`, tested end to end: every
+//! parallel hot pass — histogram build, `solve_hist`, quantize, bit-pack
+//! encode, and the parallel sort — must be **bitwise-identical** across
+//! thread counts 1/2/4/8, on every `dist::paper_suite()` family.
+//!
+//! The tests mutate the process-global executor width, and libtest runs
+//! tests of one binary concurrently — `WIDTH_LOCK` serializes them so a
+//! pinned width stays pinned while a snapshot is measured.
+
+use quiver::avq::histogram::{solve_hist, GridHistogram, HistConfig};
+use quiver::avq::{self, SolverKind};
+use quiver::dist::Dist;
+use quiver::par;
+use quiver::sq;
+use quiver::util::rng::Xoshiro256pp;
+
+/// Crosses several chunk boundaries and ends in a ragged tail.
+const D: usize = 3 * par::CHUNK + 1234;
+
+/// Serializes tests that pin the global executor width.
+static WIDTH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Everything a hot pass produces, in bit-exact form (`f64::to_bits` —
+/// `PartialEq` on f64 would hide `-0.0` vs `0.0` differences).
+#[derive(PartialEq, Debug)]
+struct Snapshot {
+    hist_weights: Vec<u64>,
+    hist_grid: Vec<u64>,
+    hist_norm2: u64,
+    sol_q: Vec<u64>,
+    sol_idx: Vec<usize>,
+    sol_mse: u64,
+    quant_idx: Vec<u32>,
+    quant_sorted_idx: Vec<u32>,
+    payload: Vec<u8>,
+    sorted: Vec<u64>,
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn snapshot(xs: &[f64]) -> Snapshot {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xD17E);
+    let h = GridHistogram::build(xs, 777, &mut rng).unwrap();
+    let sol = solve_hist(xs, 16, &HistConfig::fixed(777)).unwrap();
+    let mut q_rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+    let quant_idx = sq::quantize(xs, &sol.q, &mut q_rng);
+    let payload = sq::encode(&quant_idx, &sol.q).payload;
+    let mut sorted = xs.to_vec();
+    par::sort::sort_f64(&mut sorted);
+    // The documented contract: on the same input and RNG state, the merge
+    // scan and the binary-search path agree draw-for-draw — asserted here
+    // on a multi-chunk input (the sq unit test only covers one chunk).
+    let mut qs_rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+    let quant_sorted_idx = sq::quantize_sorted(&sorted, &sol.q, &mut qs_rng);
+    let mut agree_rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+    assert_eq!(
+        sq::quantize(&sorted, &sol.q, &mut agree_rng),
+        quant_sorted_idx,
+        "quantize vs quantize_sorted diverged on identical input + RNG state"
+    );
+    Snapshot {
+        hist_weights: bits(&h.weights),
+        hist_grid: bits(&h.grid),
+        hist_norm2: h.norm2_sq.to_bits(),
+        sol_q: bits(&sol.q),
+        sol_idx: sol.q_idx.clone(),
+        sol_mse: sol.mse.to_bits(),
+        quant_idx,
+        quant_sorted_idx,
+        payload,
+        sorted: bits(&sorted),
+    }
+}
+
+#[test]
+fn hot_passes_bitwise_identical_across_thread_counts() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let prev = par::threads();
+    for (name, dist) in Dist::paper_suite() {
+        let xs = dist.sample_vec(D, 0xC0FFEE);
+        par::set_threads(1);
+        let reference = snapshot(&xs);
+        // Single-thread sanity: the sort really sorted, mass conserved.
+        assert!(reference.sorted.windows(2).all(|w| f64::from_bits(w[0]) <= f64::from_bits(w[1])));
+        for t in [2usize, 4, 8] {
+            par::set_threads(t);
+            let got = snapshot(&xs);
+            assert_eq!(reference, got, "{name}: outputs diverged at {t} threads");
+        }
+    }
+    par::set_threads(prev);
+}
+
+/// The exact-solver entry point (scan + parallel sort + solve) is also
+/// invariant — and matches a hand-rolled sequential sort + solve.
+#[test]
+fn solve_unsorted_invariant_and_correct() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let prev = par::threads();
+    let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(D, 0xFACE);
+    let mut sorted = xs.clone();
+    sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = avq::Prefix::unweighted(&sorted);
+    let want = avq::solve(&p, 16, SolverKind::QuiverAccel).unwrap();
+    for t in [1usize, 2, 4, 8] {
+        par::set_threads(t);
+        let got = avq::solve_unsorted(&xs, 16, SolverKind::QuiverAccel).unwrap();
+        assert_eq!(got.q_idx, want.q_idx, "t={t}");
+        assert_eq!(bits(&got.q), bits(&want.q), "t={t}");
+        assert_eq!(got.mse.to_bits(), want.mse.to_bits(), "t={t}");
+    }
+    par::set_threads(prev);
+}
+
+/// Decode is the inverse of encode under any width, and dequantize
+/// round-trips through the parallel paths.
+#[test]
+fn codec_roundtrip_under_parallel_widths() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let prev = par::threads();
+    let xs = Dist::Exponential { lambda: 1.0 }.sample_vec(D, 0xABCD);
+    let sol = solve_hist(&xs, 16, &HistConfig::fixed(300)).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let idx = sq::quantize(&xs, &sol.q, &mut rng);
+    for t in [1usize, 3, 8] {
+        par::set_threads(t);
+        let c = sq::encode(&idx, &sol.q);
+        let (back, qs) = sq::decode(&c);
+        assert_eq!(back, idx, "t={t}");
+        let vals = sq::dequantize(&back, &qs);
+        assert!(vals.iter().all(|v| sol.q.contains(v)), "t={t}");
+    }
+    par::set_threads(prev);
+}
