@@ -6,6 +6,11 @@
 //! * the data-parallel hot paths at d = 2²⁰: histogram build,
 //!   quantize+encode, and sort at 1 thread vs the configured executor
 //!   width, with the speedup printed (the `par` acceptance numbers);
+//! * spawn-wave vs persistent-pool: the same wave-heavy pass on the
+//!   scoped backend (one thread spawn per worker per wave) vs the worker
+//!   pool (parked threads, sealed handoff);
+//! * multi-tenant small-vector batches: per-call compression vs one
+//!   `par::dispatch_batch` wave per batch (the serving path);
 //! * coordinator micro-benches: codec, batcher, end-to-end service RPC.
 //!
 //! Machine-readable results land in `BENCH_pipeline.json` at the repo
@@ -111,6 +116,137 @@ fn main() {
     }
     par::set_threads(configured);
     t.print();
+
+    // --- Spawn-wave vs persistent pool. ---
+    // A wave-heavy workload: many back-to-back chunked passes over a
+    // mid-size vector, so per-wave overhead (thread spawn+join vs sealed
+    // queue handoff to parked workers) dominates the comparison. Outputs
+    // are bitwise-identical by the executor contract; only overhead
+    // differs.
+    {
+        let wave_d = 1usize << if smoke { 17 } else { 18 };
+        let passes = if smoke { 8 } else { 32 };
+        let ys = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(wave_d, 77);
+        let mut t = Table::new(
+            format!("spawn-wave vs pool, {passes}×scan of d=2^{}", wave_d.trailing_zeros()),
+            &["backend", "median", "elems/s", "speedup"],
+        );
+        let run_passes = || {
+            let mut acc = 0.0f64;
+            for _ in 0..passes {
+                acc += par::scan::stats(&ys).norm2_sq;
+            }
+            acc
+        };
+        let mut medians: Vec<f64> = vec![];
+        let prev_backend = par::backend();
+        for (label, backend) in
+            [("scoped-spawn", par::Backend::Scoped), ("pool", par::Backend::Pool)]
+        {
+            par::set_backend(backend);
+            let st =
+                benchfw::bench(&format!("{passes}x scan {label}"), 1, samples, || run_passes());
+            medians.push(st.median().as_secs_f64());
+            let speedup = if medians.len() > 1 {
+                format!("{:.2}x", medians[0] / medians.last().unwrap())
+            } else {
+                "1.00x".into()
+            };
+            t.row(vec![
+                label.into(),
+                benchfw::fmt_duration(st.median()),
+                format!("{:.3e}", st.throughput(wave_d * passes)),
+                speedup,
+            ]);
+            records.push(BenchRecord::from_stats(&st, wave_d * passes, 0));
+        }
+        par::set_backend(prev_backend);
+        t.print();
+    }
+
+    // --- Multi-tenant small-vector batches (the serving path). ---
+    // A batch of 1K-element tenant vectors: compressing them one at a
+    // time leaves tenant-level parallelism on the table (each vector is
+    // below one executor chunk, so its own passes run sequentially);
+    // `dispatch_batch` packs the whole batch into one sealed pool wave.
+    {
+        let tenants_n = if smoke { 128 } else { 512 };
+        let tenant_d = 1024usize;
+        let vecs: Vec<Vec<f64>> = (0..tenants_n as u64)
+            .map(|t| Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(tenant_d, 1000 + t))
+            .collect();
+        let qsets: Vec<Vec<f64>> = vecs
+            .iter()
+            .map(|xs| solve_hist(xs, 16, &HistConfig::fixed(256)).expect("tenant solve").q)
+            .collect();
+        let tenants: Vec<(&[f64], &[f64])> = vecs
+            .iter()
+            .zip(&qsets)
+            .map(|(xs, qs)| (xs.as_slice(), qs.as_slice()))
+            .collect();
+        let mut t = Table::new(
+            format!("small-vector batch: {tenants_n} tenants × d={tenant_d}, s=16"),
+            &["path", "median", "tenants/s", "speedup", "pool waves/batch"],
+        );
+        let mut medians: Vec<f64> = vec![];
+        let mut bench_one = |label: &str,
+                             medians: &mut Vec<f64>,
+                             t: &mut Table,
+                             records: &mut Vec<BenchRecord>,
+                             f: &mut dyn FnMut() -> usize| {
+            let waves0 = par::pool::wave_count();
+            let mut calls = 0usize;
+            let st = benchfw::bench(label, 1, samples, || {
+                calls += 1;
+                f()
+            });
+            let waves_per_batch =
+                (par::pool::wave_count() - waves0) as f64 / (calls as f64).max(1.0);
+            medians.push(st.median().as_secs_f64());
+            let speedup = if medians.len() > 1 {
+                format!("{:.2}x", medians[0] / medians.last().unwrap())
+            } else {
+                "1.00x".into()
+            };
+            t.row(vec![
+                label.into(),
+                benchfw::fmt_duration(st.median()),
+                format!("{:.3e}", st.throughput(tenants_n)),
+                speedup,
+                format!("{waves_per_batch:.1}"),
+            ]);
+            records.push(BenchRecord::from_stats(&st, tenants_n * tenant_d, 16));
+        };
+        // (a) one vector at a time, per-tenant derived streams (the exact
+        // computation the batch performs, minus the batching).
+        bench_one("per-call loop", &mut medians, &mut t, &mut records, &mut || {
+            let mut rng = Xoshiro256pp::seed_from_u64(5);
+            let base = rng.next_u64();
+            tenants
+                .iter()
+                .enumerate()
+                .map(|(j, (xs, qs))| {
+                    sq::compress(xs, qs, &mut Xoshiro256pp::stream(base, j as u64)).payload.len()
+                })
+                .sum()
+        });
+        // (b) batched dispatch on the scoped backend (one spawn wave per
+        // batch — already amortized, but spawning per call).
+        let prev_backend = par::backend();
+        par::set_backend(par::Backend::Scoped);
+        bench_one("dispatch (scoped)", &mut medians, &mut t, &mut records, &mut || {
+            let mut rng = Xoshiro256pp::seed_from_u64(5);
+            sq::compress_batch(tenants.clone(), &mut rng).iter().map(|c| c.payload.len()).sum()
+        });
+        // (c) batched dispatch on the persistent pool (one sealed handoff).
+        par::set_backend(par::Backend::Pool);
+        bench_one("dispatch (pool)", &mut medians, &mut t, &mut records, &mut || {
+            let mut rng = Xoshiro256pp::seed_from_u64(5);
+            sq::compress_batch(tenants.clone(), &mut rng).iter().map(|c| c.payload.len()).sum()
+        });
+        par::set_backend(prev_backend);
+        t.print();
+    }
 
     // --- Coordinator micro-benches. ---
     let mut t = Table::new("coordinator micro-benches", &["op", "median", "spread"]);

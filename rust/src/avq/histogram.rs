@@ -20,7 +20,10 @@
 //! min/max/‖X‖²/finiteness scan, then a sharded count pass with one
 //! seeded RNG stream per fixed-size chunk, then an `O(M·threads)` shard
 //! merge. Per the executor's determinism contract the resulting histogram
-//! is bitwise-identical for every thread count.
+//! is bitwise-identical for every thread count — and, since the chunk
+//! jobs are self-contained, identical whether they run on the persistent
+//! worker pool or on per-call scoped threads (see [`crate::par::Backend`]
+//! and `DESIGN.md`).
 
 use super::{AvqError, Prefix, Solution, SolverKind};
 use crate::par;
@@ -35,8 +38,9 @@ pub struct GridHistogram {
     pub grid: Vec<f64>,
     /// Integral bin weights; `Σ weights = d`.
     pub weights: Vec<f64>,
-    /// Input min / max.
+    /// Input minimum (the grid's first point).
     pub lo: f64,
+    /// Input maximum (pinned exactly as the grid's last point).
     pub hi: f64,
     /// Original input dimension.
     pub d: usize,

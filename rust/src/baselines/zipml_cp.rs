@@ -18,7 +18,9 @@ use crate::avq::Prefix;
 /// Candidate-point selection rule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Candidates {
+    /// Evenly spaced values across the input range.
     Uniform,
+    /// Input order statistics at evenly spaced ranks.
     Quantile,
 }
 

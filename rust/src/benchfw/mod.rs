@@ -9,25 +9,31 @@ use std::time::{Duration, Instant};
 /// Statistics over one benchmark's samples.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Benchmark name (label for tables and JSON records).
     pub name: String,
+    /// Raw measured iteration times.
     pub samples: Vec<Duration>,
 }
 
 impl Stats {
+    /// Median sample.
     pub fn median(&self) -> Duration {
         let mut v = self.samples.clone();
         v.sort_unstable();
         v[v.len() / 2]
     }
 
+    /// Fastest sample.
     pub fn min(&self) -> Duration {
         *self.samples.iter().min().unwrap()
     }
 
+    /// Slowest sample.
     pub fn max(&self) -> Duration {
         *self.samples.iter().max().unwrap()
     }
 
+    /// Arithmetic mean of the samples.
     pub fn mean(&self) -> Duration {
         self.samples.iter().sum::<Duration>() / self.samples.len() as u32
     }
@@ -159,12 +165,16 @@ pub fn fmt_duration(d: Duration) -> String {
 /// A printable/CSV-able results table (one paper figure series).
 #[derive(Debug, Default, Clone)]
 pub struct Table {
+    /// Table caption (also the CSV filename slug).
     pub title: String,
+    /// Column headers.
     pub columns: Vec<String>,
+    /// Row cells, one `Vec` per row, matching `columns` in arity.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given caption and column headers.
     pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
         Self {
             title: title.into(),
@@ -173,6 +183,7 @@ impl Table {
         }
     }
 
+    /// Append one row (panics if the arity differs from the header).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.columns.len(), "row arity");
         self.rows.push(cells);

@@ -21,6 +21,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Empty configuration (every getter falls back to its default).
     pub fn new() -> Self {
         Self::default()
     }
@@ -64,18 +65,22 @@ impl Config {
         Ok(())
     }
 
+    /// Set `k` programmatically (tests and embedding callers).
     pub fn set(&mut self, k: &str, v: impl ToString) {
         self.values.insert(k.to_string(), v.to_string());
     }
 
+    /// Raw string lookup.
     pub fn get(&self, k: &str) -> Option<&str> {
         self.values.get(k).map(|s| s.as_str())
     }
 
+    /// String lookup with a default.
     pub fn get_or(&self, k: &str, default: &str) -> String {
         self.get(k).unwrap_or(default).to_string()
     }
 
+    /// `usize` lookup with a default; errors on a non-integer value.
     pub fn usize_or(&self, k: &str, default: usize) -> Result<usize> {
         match self.get(k) {
             None => Ok(default),
@@ -83,6 +88,7 @@ impl Config {
         }
     }
 
+    /// `u64` lookup with a default; errors on a non-integer value.
     pub fn u64_or(&self, k: &str, default: u64) -> Result<u64> {
         match self.get(k) {
             None => Ok(default),
@@ -90,6 +96,7 @@ impl Config {
         }
     }
 
+    /// `f64` lookup with a default; errors on a non-numeric value.
     pub fn f64_or(&self, k: &str, default: f64) -> Result<f64> {
         match self.get(k) {
             None => Ok(default),
@@ -97,6 +104,7 @@ impl Config {
         }
     }
 
+    /// Boolean lookup (`true/1/yes` | `false/0/no`) with a default.
     pub fn bool_or(&self, k: &str, default: bool) -> Result<bool> {
         match self.get(k) {
             None => Ok(default),

@@ -25,13 +25,26 @@ pub struct Aggregate {
     pub bytes: usize,
 }
 
+/// How many submissions to decode per dispatch wave: bounds the decoded
+/// transient buffers to `DECODE_BATCH × d` f64s (a 1.33e8-coordinate
+/// round must not materialize every worker's decode at once) while still
+/// amortizing the handoff across the group.
+const DECODE_BATCH: usize = 8;
+
 /// Decode and average `(loss, compressed-gradient)` submissions.
+///
+/// The per-worker decompressions are independent, so they run as
+/// multi-tenant batched dispatches ([`crate::par::dispatch_batch`]) in
+/// groups of [`DECODE_BATCH`] — a handful of pool handoffs per round
+/// instead of one unpack wave per worker, with peak memory bounded at
+/// `DECODE_BATCH × d` instead of `n_workers × d`. The mean is
+/// accumulated sequentially **in submission order**, keeping the
+/// floating-point reduction deterministic regardless of grouping.
 pub fn aggregate(submissions: &[(f32, CompressedVec)]) -> Result<Aggregate> {
     if submissions.is_empty() {
         bail!("no submissions to aggregate");
     }
     let d = submissions[0].1.d as usize;
-    let mut mean = vec![0f64; d];
     let mut loss_acc = 0f64;
     let mut bytes = 0usize;
     for (loss, c) in submissions {
@@ -40,9 +53,15 @@ pub fn aggregate(submissions: &[(f32, CompressedVec)]) -> Result<Aggregate> {
         }
         bytes += c.wire_size();
         loss_acc += *loss as f64;
-        let decoded = sq::decompress(c);
-        for (m, v) in mean.iter_mut().zip(decoded) {
-            *m += v;
+    }
+    let mut mean = vec![0f64; d];
+    for group in submissions.chunks(DECODE_BATCH) {
+        let decoded: Vec<Vec<f64>> =
+            crate::par::dispatch_batch(group.iter().collect(), |_, (_, c)| sq::decompress(c));
+        for v in &decoded {
+            for (m, x) in mean.iter_mut().zip(v) {
+                *m += x;
+            }
         }
     }
     let n = submissions.len();

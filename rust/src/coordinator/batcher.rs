@@ -68,7 +68,24 @@ impl<T> Batcher<T> {
         Ok(())
     }
 
-    /// Pull the next batch (blocking). `None` when closed and drained.
+    /// Pull the next batch (blocking). `None` when closed **and** drained.
+    ///
+    /// # Drain semantics
+    ///
+    /// Closing never loses jobs: every job queued before [`close`]
+    /// remains pullable, in FIFO order, `max_batch` at a time. Once the
+    /// batcher is closed the linger phase is skipped entirely — no more
+    /// producers can exist, so waiting `max_wait` for stragglers would be
+    /// a pure `max_wait`-long stall per residual batch (with an unbounded
+    /// `max_wait`, a hang). Consumers therefore see: residual batches
+    /// immediately, then `None`.
+    ///
+    /// `max_wait` may be arbitrarily large (e.g. [`Duration::MAX`] for
+    /// "wait until full or closed"): the deadline uses checked arithmetic
+    /// and degrades to an untimed wait instead of panicking on `Instant`
+    /// overflow.
+    ///
+    /// [`close`]: Batcher::close
     pub fn next_batch(&self) -> Option<Vec<T>> {
         let mut g = self.inner.lock().unwrap();
         // Wait for the first job.
@@ -78,17 +95,30 @@ impl<T> Batcher<T> {
             }
             g = self.not_empty.wait(g).unwrap();
         }
-        // Linger up to max_wait for the batch to fill.
-        let deadline = Instant::now() + self.max_wait;
-        while g.queue.len() < self.max_batch && !g.closed {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (gg, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
-            g = gg;
-            if timeout.timed_out() {
-                break;
+        // Linger up to max_wait for the batch to fill — unless the
+        // batcher is already closed (drain-on-close: nothing can arrive).
+        if !g.closed && g.queue.len() < self.max_batch {
+            // `None` ⇒ effectively-infinite linger (checked_add overflow).
+            let deadline = Instant::now().checked_add(self.max_wait);
+            while g.queue.len() < self.max_batch && !g.closed {
+                match deadline {
+                    Some(deadline) => {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        let (gg, timeout) =
+                            self.not_empty.wait_timeout(g, deadline - now).unwrap();
+                        g = gg;
+                        if timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    None => {
+                        // Untimed: woken by fill-up or close.
+                        g = self.not_empty.wait(g).unwrap();
+                    }
+                }
             }
         }
         let take = g.queue.len().min(self.max_batch);
@@ -151,6 +181,50 @@ mod tests {
         assert!(!b.submit(3), "submit after close fails");
         assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn closed_batcher_with_residual_jobs_skips_the_linger() {
+        // Regression: with a large max_wait, pulling residual jobs from a
+        // closed batcher must not linger (nothing can arrive) — and the
+        // huge deadline must not panic on Instant overflow.
+        let b = Batcher::new(64, 4, Duration::MAX);
+        for i in 0..6 {
+            assert!(b.submit(i));
+        }
+        b.close();
+        let t0 = std::time::Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5]);
+        assert!(b.next_batch().is_none());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "drain-on-close must not wait out max_wait"
+        );
+    }
+
+    #[test]
+    fn unbounded_linger_waits_for_fill_or_close() {
+        // max_wait = Duration::MAX with an open batcher: the consumer
+        // lingers untimed until the batch fills (no overflow panic).
+        let b = Arc::new(Batcher::new(64, 3, Duration::MAX));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            for i in 0..3 {
+                std::thread::sleep(Duration::from_millis(5));
+                b2.submit(i);
+            }
+        });
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2], "filled to max_batch");
+        t.join().unwrap();
+        // And close releases a consumer stuck in an untimed linger.
+        let b3 = b.clone();
+        let consumer = std::thread::spawn(move || b3.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        b.submit(99); // one job, batch can't fill
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert_eq!(consumer.join().unwrap().unwrap(), vec![99]);
     }
 
     #[test]

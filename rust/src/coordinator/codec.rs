@@ -10,34 +10,41 @@ pub struct Writer {
 }
 
 impl Writer {
+    /// Empty writer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Empty writer with `cap` bytes pre-allocated.
     pub fn with_capacity(cap: usize) -> Self {
         Self { buf: Vec::with_capacity(cap) }
     }
 
+    /// Append one byte.
     pub fn u8(&mut self, v: u8) -> &mut Self {
         self.buf.push(v);
         self
     }
 
+    /// Append a little-endian `u32`.
     pub fn u32(&mut self, v: u32) -> &mut Self {
         self.buf.extend_from_slice(&v.to_le_bytes());
         self
     }
 
+    /// Append a little-endian `u64`.
     pub fn u64(&mut self, v: u64) -> &mut Self {
         self.buf.extend_from_slice(&v.to_le_bytes());
         self
     }
 
+    /// Append a little-endian `f32`.
     pub fn f32(&mut self, v: f32) -> &mut Self {
         self.buf.extend_from_slice(&v.to_le_bytes());
         self
     }
 
+    /// Append a little-endian `f64`.
     pub fn f64(&mut self, v: f64) -> &mut Self {
         self.buf.extend_from_slice(&v.to_le_bytes());
         self
@@ -64,14 +71,17 @@ impl Writer {
         self.bytes(s.as_bytes())
     }
 
+    /// Consume the writer, returning the built buffer.
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
 
+    /// Bytes written so far.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// Whether nothing has been written yet.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
@@ -98,6 +108,7 @@ impl std::error::Error for DecodeError {}
 type R<T> = Result<T, DecodeError>;
 
 impl<'a> Reader<'a> {
+    /// Reader positioned at the start of `buf`.
     pub fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
@@ -111,26 +122,32 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    /// Read one byte.
     pub fn u8(&mut self) -> R<u8> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a little-endian `u32`.
     pub fn u32(&mut self) -> R<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `u64`.
     pub fn u64(&mut self) -> R<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `f32`.
     pub fn f32(&mut self) -> R<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `f64`.
     pub fn f64(&mut self) -> R<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read a `u64` length followed by that many raw bytes.
     pub fn bytes(&mut self) -> R<Vec<u8>> {
         let n = self.u64()? as usize;
         if n > self.remaining() {
@@ -139,6 +156,7 @@ impl<'a> Reader<'a> {
         Ok(self.take(n)?.to_vec())
     }
 
+    /// Read a `u64` count followed by that many `f32`s.
     pub fn f32s(&mut self) -> R<Vec<f32>> {
         let n = self.u64()? as usize;
         if n.checked_mul(4).map_or(true, |b| b > self.remaining()) {
@@ -151,10 +169,12 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
+    /// Read a length-prefixed UTF-8 string.
     pub fn string(&mut self) -> R<String> {
         String::from_utf8(self.bytes()?).map_err(|_| DecodeError("invalid utf-8"))
     }
 
+    /// Bytes left to read.
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }

@@ -13,6 +13,7 @@ pub struct LatencyHisto {
 }
 
 impl LatencyHisto {
+    /// Record one latency observation (microseconds, clamped to ≥ 1).
     pub fn record_us(&self, us: u64) {
         let b = (64 - us.max(1).leading_zeros() as usize - 1).min(26);
         self.buckets[b].fetch_add(1, Ordering::Relaxed);
@@ -20,10 +21,12 @@ impl LatencyHisto {
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Number of recorded observations.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean observed latency in microseconds (0 when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -71,6 +74,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Add `v` to one of the [`Metrics`] counters.
     pub fn add(&self, counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
     }

@@ -51,10 +51,12 @@ impl Route {
 /// Stateless router (cheap to copy into worker threads).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Router {
+    /// The routing policy this router applies.
     pub cfg: RouterConfig,
 }
 
 impl Router {
+    /// Build a router with the given policy.
     pub fn new(cfg: RouterConfig) -> Self {
         Self { cfg }
     }
@@ -85,6 +87,22 @@ impl Router {
             }
         };
         Ok((sol, route))
+    }
+
+    /// Solve many independent `(vector, budget)` requests as **one**
+    /// batched dispatch ([`crate::par::dispatch_batch`]) — one sealed
+    /// handoff to the worker pool for the whole batch, tenant-level
+    /// parallelism across requests.
+    ///
+    /// [`Router::solve`] is a pure function of its inputs (the histogram
+    /// route's stochastic rounding is seeded from `self.cfg.seed`), so
+    /// each result is identical to calling `solve` on that request alone;
+    /// results come back in request order.
+    pub fn solve_batch(
+        &self,
+        reqs: Vec<(&[f64], usize)>,
+    ) -> Vec<Result<(Solution, Route), avq::AvqError>> {
+        crate::par::dispatch_batch(reqs, |_, (xs, s)| self.solve(xs, s))
     }
 }
 
@@ -133,5 +151,27 @@ mod tests {
     fn labels_are_stable() {
         assert_eq!(Route::Exact.label(), "quiver-accel");
         assert_eq!(Route::Hist { m: 400 }.label(), "quiver-hist(M=400)");
+    }
+
+    #[test]
+    fn solve_batch_matches_solo_solves() {
+        // Mixed routes in one batch; every per-tenant result must equal
+        // the one-request-at-a-time path bitwise.
+        let r = Router::new(RouterConfig { exact_max_d: 2048, hist_m: 128, seed: 11 });
+        let vecs: Vec<Vec<f64>> = (0..6u64)
+            .map(|t| {
+                let d = if t % 2 == 0 { 1024 } else { 5000 }; // exact | hist
+                Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 40 + t)
+            })
+            .collect();
+        let reqs: Vec<(&[f64], usize)> = vecs.iter().map(|v| (v.as_slice(), 8)).collect();
+        let batched = r.solve_batch(reqs);
+        for (t, v) in vecs.iter().enumerate() {
+            let (sol, route) = r.solve(v, 8).unwrap();
+            let (bsol, broute) = batched[t].as_ref().unwrap();
+            assert_eq!(*broute, route, "tenant {t}");
+            assert_eq!(bsol.q_idx, sol.q_idx, "tenant {t}");
+            assert_eq!(bsol.mse.to_bits(), sol.mse.to_bits(), "tenant {t}");
+        }
     }
 }

@@ -51,19 +51,24 @@ impl Default for ServerConfig {
 /// Per-round statistics recorded by the leader.
 #[derive(Debug, Clone)]
 pub struct RoundStats {
+    /// Round index (0-based).
     pub round: u64,
+    /// Mean of the workers' reported local losses.
     pub mean_loss: f32,
     /// Compressed uplink bytes this round (all workers).
     pub bytes_up: usize,
     /// What uncompressed f32 uplink would have cost.
     pub bytes_up_raw: usize,
+    /// Gradient submissions aggregated this round.
     pub submissions: usize,
+    /// Wall-clock duration of the round.
     pub elapsed: Duration,
 }
 
 /// Full training log returned by [`Server::run`].
 #[derive(Debug, Clone, Default)]
 pub struct TrainLog {
+    /// Per-round statistics, in round order.
     pub rounds: Vec<RoundStats>,
 }
 

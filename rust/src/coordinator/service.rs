@@ -23,6 +23,13 @@
 //!   *per-job* data parallelism. With both > 1 the pools compose; the
 //!   default service keeps the solver pool small and lets `par` soak the
 //!   cores, which minimizes single-request latency.
+//! * Multi-tenant batched dispatch: a pulled batch's *small* jobs
+//!   (dimension ≤ [`ServiceConfig::batch_small_d`]) are packed into one
+//!   [`crate::par::dispatch_batch`] wave — one sealed handoff to the
+//!   persistent worker pool per batch, tenant-level parallelism, one
+//!   derived RNG stream per tenant — while *large* jobs keep whole-vector
+//!   data parallelism. A batch of 1K-element tenant vectors thus costs
+//!   one pool handoff rather than 1K per-pass spawn waves.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -41,6 +48,7 @@ use crate::util::rng::Xoshiro256pp;
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
+    /// Listen address (`host:port`; port 0 picks a free one).
     pub addr: String,
     /// Solver pool size.
     pub threads: usize,
@@ -50,9 +58,17 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Batch linger.
     pub max_wait: Duration,
+    /// Solver routing policy (exact vs histogram crossover).
     pub router: Router,
     /// Seed for the service's quantization randomness.
     pub seed: u64,
+    /// Jobs with dimension ≤ this ride the multi-tenant batched dispatch
+    /// (one [`crate::par::dispatch_batch`] wave per pulled batch); larger
+    /// jobs keep per-job whole-vector data parallelism. Default:
+    /// [`crate::par::CHUNK`] — below one executor chunk, intra-vector
+    /// parallelism has nothing to split anyway, so tenant-level
+    /// parallelism is strictly better.
+    pub batch_small_d: usize,
 }
 
 impl Default for ServiceConfig {
@@ -65,6 +81,7 @@ impl Default for ServiceConfig {
             max_wait: Duration::from_millis(2),
             router: Router::default(),
             seed: 0x5E71CE,
+            batch_small_d: crate::par::CHUNK,
         }
     }
 }
@@ -81,6 +98,7 @@ struct Job {
 pub struct Service {
     addr: String,
     stop: Arc<AtomicBool>,
+    /// Live service counters and latency histograms.
     pub metrics: Arc<Metrics>,
     joins: Vec<std::thread::JoinHandle<()>>,
     batcher: Arc<Batcher<Job>>,
@@ -102,15 +120,14 @@ impl Service {
             let batcher = batcher.clone();
             let metrics = metrics.clone();
             let router = cfg.router;
+            let batch_small_d = cfg.batch_small_d;
             let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ (t as u64).wrapping_mul(0x9E37));
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("avq-solver-{t}"))
                     .spawn(move || {
                         while let Some(batch) = batcher.next_batch() {
-                            for job in batch {
-                                serve_job(job, &router, &metrics, &mut rng);
-                            }
+                            serve_batch(batch, &router, &metrics, &mut rng, batch_small_d);
                         }
                     })
                     .expect("spawn solver"),
@@ -215,10 +232,65 @@ fn handle_conn(
     }
 }
 
-fn serve_job(job: Job, router: &Router, metrics: &Metrics, rng: &mut Xoshiro256pp) {
+/// Serve one pulled batch.
+///
+/// Draws **one** base `u64` from the solver thread's generator and gives
+/// tenant `j` of the batch its own derived stream
+/// ([`Xoshiro256pp::stream(base, j)`](Xoshiro256pp::stream)) — so a
+/// tenant's compression is a pure function of `(base, j, data)`, identical
+/// whether it runs in the packed wave, on the large-job path, or alone in
+/// a batch of one (`tests/par_invariance.rs` asserts the equivalent
+/// property on [`crate::sq::compress_batch`]).
+///
+/// Small jobs (`d ≤ batch_small_d`) compute their replies in a single
+/// [`crate::par::dispatch_batch`] wave; large jobs run one at a time so
+/// each can fan its own O(d) passes out across every worker. The socket
+/// writes all happen here on the solver thread, **after** the wave — a
+/// slow client blocking on `send` must stall this solver thread only,
+/// never the process-wide compute pool.
+fn serve_batch(
+    batch: Vec<Job>,
+    router: &Router,
+    metrics: &Metrics,
+    rng: &mut Xoshiro256pp,
+    batch_small_d: usize,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let base = rng.next_u64();
+    let mut small: Vec<(usize, Job)> = Vec::new();
+    let mut large: Vec<(usize, Job)> = Vec::new();
+    for (tenant, job) in batch.into_iter().enumerate() {
+        if job.data.len() <= batch_small_d {
+            small.push((tenant, job));
+        } else {
+            large.push((tenant, job));
+        }
+    }
+    // Compute-only wave: no I/O inside shared pool workers.
+    let mut served: Vec<(Job, Msg)> = crate::par::dispatch_batch(small, |_, (tenant, job)| {
+        let mut trng = Xoshiro256pp::stream(base, tenant as u64);
+        let reply = compute_reply(&job, router, metrics, &mut trng);
+        (job, reply)
+    });
+    for (tenant, job) in large {
+        let mut trng = Xoshiro256pp::stream(base, tenant as u64);
+        let reply = compute_reply(&job, router, metrics, &mut trng);
+        served.push((job, reply));
+    }
+    for (job, reply) in served {
+        send_reply(job, reply, metrics);
+    }
+}
+
+/// Compute one job's reply: widen, route-solve, quantize, bit-pack. Pure
+/// compute — safe to run on a pool worker. `rng` is the job's own derived
+/// stream (see [`serve_batch`]).
+fn compute_reply(job: &Job, router: &Router, metrics: &Metrics, rng: &mut Xoshiro256pp) -> Msg {
     let t0 = Instant::now();
     let xs: Vec<f64> = crate::par::map_elems(&job.data, |&x| x as f64);
-    let reply = match router.solve(&xs, job.s.max(1) as usize) {
+    match router.solve(&xs, job.s.max(1) as usize) {
         Ok((sol, route)) => {
             let solve_us = t0.elapsed().as_micros() as u64;
             let compressed = sq::compress(&xs, &sol.q, rng);
@@ -232,9 +304,16 @@ fn serve_job(job: Job, router: &Router, metrics: &Metrics, rng: &mut Xoshiro256p
             }
         }
         Err(_) => Msg::Busy { request_id: job.request_id },
-    };
+    }
+}
+
+/// Write one computed reply back to its connection and settle the
+/// completion metrics. Runs on the solver thread only (blocking TCP
+/// send; see [`serve_batch`]).
+fn send_reply(job: Job, reply: Msg, metrics: &Metrics) {
     let mut w = job.reply.lock().unwrap();
     let _ = send(&mut *w, &reply);
+    drop(w);
     metrics.add(&metrics.completed, 1);
     metrics
         .latency
@@ -259,6 +338,7 @@ mod tests {
         let c = ServiceConfig::default();
         assert!(c.threads >= 1);
         assert!(c.queue_capacity >= c.max_batch);
+        assert_eq!(c.batch_small_d, crate::par::CHUNK);
     }
     // Live service round-trips are tested in
     // rust/tests/coordinator_integration.rs.

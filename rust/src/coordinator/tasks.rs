@@ -15,8 +15,11 @@ use crate::util::rng::Xoshiro256pp;
 
 /// The model artifact's input geometry (must match `python/compile/model.py`).
 pub const MODEL_DIM: usize = 85_002;
+/// Batch size the model artifact was compiled for.
 pub const MODEL_BATCH: usize = 128;
+/// Input feature dimension of the synthetic task.
 pub const MODEL_IN: usize = 64;
+/// Number of classes in the synthetic task.
 pub const MODEL_CLASSES: usize = 10;
 
 /// Synthetic-classification batches: inputs are standard normal; labels
@@ -29,6 +32,8 @@ pub struct SyntheticTask {
 }
 
 impl SyntheticTask {
+    /// Task with a fixed random teacher (`teacher_seed`) and a
+    /// per-worker batch stream (`stream_seed`).
     pub fn new(teacher_seed: u64, stream_seed: u64) -> Self {
         let mut trng = Xoshiro256pp::seed_from_u64(teacher_seed);
         let teacher = (0..MODEL_IN * MODEL_CLASSES)
@@ -68,6 +73,7 @@ pub struct RuntimeGradSource {
 }
 
 impl RuntimeGradSource {
+    /// Gradient source calling `model_grad` through `runtime`.
     pub fn new(runtime: RuntimeHandle, teacher_seed: u64, stream_seed: u64) -> Self {
         Self { runtime, task: SyntheticTask::new(teacher_seed, stream_seed) }
     }
@@ -92,6 +98,7 @@ impl GradSource for RuntimeGradSource {
 /// Convex toy task: minimize `½‖p − p*‖²` (tests converge in a few rounds
 /// with no artifacts required).
 pub struct QuadraticToy {
+    /// The minimizer `p*`.
     pub target: Vec<f32>,
     /// Per-worker gradient noise (simulates local data heterogeneity).
     pub noise: f32,
@@ -99,6 +106,8 @@ pub struct QuadraticToy {
 }
 
 impl QuadraticToy {
+    /// Toy task pulling `params` toward `target`, with seeded gradient
+    /// noise of scale `noise`.
     pub fn new(target: Vec<f32>, noise: f32, seed: u64) -> Self {
         Self { target, noise, rng: Xoshiro256pp::seed_from_u64(seed) }
     }

@@ -24,6 +24,7 @@ pub trait GradSource: Send {
 /// Worker configuration.
 #[derive(Debug, Clone)]
 pub struct WorkerConfig {
+    /// Worker id reported to the server in `Hello`.
     pub id: u64,
     /// Quantization budget per gradient.
     pub s: usize,
@@ -36,9 +37,13 @@ pub struct WorkerConfig {
 /// Worker-side statistics.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerStats {
+    /// Completed training rounds.
     pub rounds: u64,
+    /// Compressed uplink bytes actually sent.
     pub bytes_sent: usize,
+    /// What raw f32 uplink would have cost.
     pub bytes_raw: usize,
+    /// Loss reported with the most recent gradient.
     pub last_loss: f32,
 }
 
@@ -100,6 +105,34 @@ pub fn compress_gradient(
     Ok(sq::compress(&xs, &sol.q, rng))
 }
 
+/// Compress many small tenant gradients as **one** batched dispatch — the
+/// multi-tenant sibling of [`compress_gradient`] (per-head KV-cache
+/// blocks, per-layer gradient shards, per-client uplinks).
+///
+/// Consumes exactly one draw from `rng` (a base `u64`); tenant `j`
+/// quantizes with the derived stream `Xoshiro256pp::stream(base, j)` (see
+/// [`Xoshiro256pp::stream`]), so each output is bitwise-identical to
+/// calling [`compress_gradient`] on that tenant alone with the same
+/// derived stream. The whole batch costs a single sealed handoff to the
+/// [`crate::par::pool`] worker pool ([`crate::par::dispatch_batch`]).
+///
+/// Fails if any tenant's solve fails (first error wins, in tenant order).
+pub fn compress_gradients(
+    grads: &[Vec<f32>],
+    s: usize,
+    router: &Router,
+    rng: &mut Xoshiro256pp,
+) -> Result<Vec<sq::CompressedVec>> {
+    let base = rng.next_u64();
+    let tenants: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    crate::par::dispatch_batch(tenants, |j, grad| {
+        let mut trng = Xoshiro256pp::stream(base, j as u64);
+        compress_gradient(grad, s, router, &mut trng)
+    })
+    .into_iter()
+    .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +155,28 @@ mod tests {
             .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &g| (l.min(g), h.max(g)));
         for (b, g) in back.iter().zip(&grad) {
             assert!((*b as f32 - g).abs() <= hi - lo);
+        }
+    }
+
+    #[test]
+    fn compress_gradients_matches_solo_path() {
+        let router = Router::new(RouterConfig::default());
+        let grads: Vec<Vec<f32>> = (0..7)
+            .map(|t| {
+                (0..1000 + t * 13)
+                    .map(|i| ((i as f32 * 0.11 + t as f32).sin() * 0.7).exp())
+                    .collect()
+            })
+            .collect();
+        let mut rng = Xoshiro256pp::seed_from_u64(0x6EAD);
+        let batched = compress_gradients(&grads, 8, &router, &mut rng).unwrap();
+        let mut rng2 = Xoshiro256pp::seed_from_u64(0x6EAD);
+        let base = rng2.next_u64();
+        for (j, g) in grads.iter().enumerate() {
+            let solo =
+                compress_gradient(g, 8, &router, &mut Xoshiro256pp::stream(base, j as u64))
+                    .unwrap();
+            assert_eq!(batched[j], solo, "tenant {j}");
         }
     }
 

@@ -11,6 +11,8 @@ use crate::avq::histogram::{solve_hist, theory_bound, HistConfig};
 use crate::avq::{self, Prefix, SolverKind};
 use crate::benchfw::{fmt_duration, Table};
 
+/// Figure 2: vNMSE and runtime of QUIVER-Hist vs the histogram size M,
+/// with the §6 theoretical bound, against the exact optimum.
 pub fn m_effect(opts: &FigOpts) -> Table {
     let s = 8usize;
     let mut t = Table::new(

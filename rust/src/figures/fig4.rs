@@ -15,6 +15,8 @@ use crate::runtime::{Runtime, Tensor};
 use crate::sq;
 use crate::util::rng::Xoshiro256pp;
 
+/// Figure 4 / Appendix C: sort and stochastic-quantize timings vs d,
+/// including the AOT-compiled Pallas `sq` kernel when artifacts exist.
 pub fn sort_and_quantize(opts: &FigOpts) -> Table {
     let mut t = Table::new(
         format!("Fig 4 sort+quantize vs d [{}]", opts.dist.name()),

@@ -14,6 +14,8 @@ use crate::avq::{self, Prefix, SolverKind};
 use crate::benchfw::{fmt_duration, Table};
 use crate::util::rng::Xoshiro256pp;
 
+/// §7 headline claims measured: 1M-coordinate exact solve latency and
+/// the 133M-coordinate near-optimal histogram solve.
 pub fn headline(opts: &FigOpts) -> Table {
     let mut t = Table::new(
         format!("§7 headline numbers [{}]", opts.dist.name()),

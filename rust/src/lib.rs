@@ -18,7 +18,9 @@
 //! * **[`par`]** — the deterministic chunked executor every O(d) hot pass
 //!   (scan, histogram build, sort, quantize, encode) runs on: fixed chunk
 //!   size + per-chunk RNG streams ⇒ bitwise-identical results for any
-//!   thread count.
+//!   thread count. Waves execute on a persistent worker pool
+//!   ([`par::pool`]) with a sealed job-queue handoff; many small tenant
+//!   vectors pack into one wave via [`par::dispatch_batch`].
 //! * **[`runtime`]** — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
 //! * **[`figures`]** — regenerates every table/figure of the paper's
@@ -41,6 +43,19 @@
 //!     avq::histogram::solve_hist(&x, 16, &avq::histogram::HistConfig::fixed(400)).unwrap();
 //! assert!(approx.mse <= sol.mse * 1.5);
 //! ```
+//!
+//! ## Further reading
+//!
+//! * `DESIGN.md` (repository root) — module map, the chunked-executor and
+//!   worker-pool architecture, and the **normative determinism contract**
+//!   (chunk size, per-chunk stream derivation, merge ordering).
+//! * `EXPERIMENTS.md` (repository root) — how to reproduce every paper
+//!   figure and bench, which `BENCH_*.json` files are emitted, and how
+//!   `QUIVER_THREADS` / `--par-threads` interact with reproducibility.
+
+// Every public item in this crate is documented; keep it that way (the CI
+// docs job runs `cargo doc --no-deps` with `-D warnings`).
+#![warn(missing_docs)]
 
 pub mod avq;
 pub mod baselines;

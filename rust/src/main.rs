@@ -11,8 +11,14 @@
 //! Every subcommand accepts `--config FILE` (`key = value` lines) with CLI
 //! flags overriding file values, plus `--par-threads N` (or the
 //! `QUIVER_THREADS` env var) to size the data-parallel executor that runs
-//! every O(d) hot pass; results are identical for any value (see
-//! `quiver::par`).
+//! every O(d) hot pass, and `--par-backend pool|scoped` (or
+//! `QUIVER_BACKEND`) to pick between the persistent worker pool (default)
+//! and per-call scoped spawning; results are identical for any value of
+//! either (see `quiver::par` and `DESIGN.md`).
+//!
+//! `serve` additionally takes `--batch-small-d N`: jobs with dimension
+//! ≤ N ride the multi-tenant batched dispatch (one pool handoff per
+//! pulled batch) instead of per-job whole-vector parallelism.
 
 use std::time::Duration;
 
@@ -68,6 +74,13 @@ fn run() -> Result<()> {
     let par_threads = cfg.usize_or("par_threads", 0)?;
     if par_threads > 0 {
         quiver::par::set_threads(par_threads);
+    }
+    // Executor backend: persistent pool (default) or per-call scoped spawn.
+    match cfg.get("par_backend") {
+        None => {}
+        Some("pool") => quiver::par::set_backend(quiver::par::Backend::Pool),
+        Some("scoped") => quiver::par::set_backend(quiver::par::Backend::Scoped),
+        Some(other) => bail!("--par-backend must be `pool` or `scoped`, got {other:?}"),
     }
 
     match cmd.as_str() {
@@ -143,6 +156,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             seed: cfg.u64_or("seed", 0xA11CE)?,
         }),
         seed: cfg.u64_or("sq_seed", 0x5E71CE)?,
+        batch_small_d: cfg.usize_or("batch_small_d", quiver::par::CHUNK)?,
     })?;
     println!("quiver compression service listening on {}", service.addr());
     let period = cfg.u64_or("stats_secs", 10)?;

@@ -3,12 +3,13 @@
 //! Every O(d) stage of the pipeline — the min/max/‖X‖² scan, the
 //! stochastic-histogram build, the sort feeding the exact solvers, and the
 //! `sq` quantize/encode passes — runs through this module. It is
-//! dependency-free (plain [`std::thread::scope`]) and built around one
+//! dependency-free (plain `std` threads, no rayon) and built around one
 //! invariant:
 //!
 //! # The determinism contract
 //!
-//! **Results are bitwise-identical for every thread count, including 1.**
+//! **Results are bitwise-identical for every thread count, including 1,
+//! and on every execution backend.**
 //!
 //! Three rules make that hold:
 //!
@@ -26,17 +27,28 @@
 //!    where grouping may vary (histogram shard counts), so the reduction
 //!    tree never depends on scheduling.
 //!
-//! Work assignment is static: the chunk list is split into contiguous
-//! ranges, one per worker. The passes here are uniform-cost per element,
-//! so static assignment loses nothing to work stealing and keeps the
-//! executor trivially deterministic and lock-free.
+//! Work assignment under the scoped backend is static: the chunk list is
+//! split into contiguous ranges, one per worker. Under the pool backend,
+//! jobs are pulled dynamically from a shared queue. Both satisfy the
+//! contract because a chunk's *result* never depends on which thread ran
+//! it — only the wall-clock schedule differs.
 //!
-//! Workers are scoped OS threads spawned per call ([`std::thread::scope`])
-//! — a deliberate v1 simplicity choice: spawn cost (~10–50µs a wave) is
-//! noise against the multi-millisecond O(d) passes this executor exists
-//! for, and scoped borrows need no `Arc`/channel plumbing. A persistent
-//! worker pool that amortizes spawning across a request's passes is a
-//! ROADMAP follow-up; the determinism contract is unaffected either way.
+//! # Execution backends
+//!
+//! Two interchangeable backends run the waves ([`Backend`]):
+//!
+//! * [`Backend::Pool`] (default) — the persistent worker [`pool`]: parked
+//!   workers, one sealed job handoff per wave, so a request's passes
+//!   (scan → sort/hist → quantize → encode) share a single spawn wave and
+//!   a batch of small tenant vectors costs one handoff
+//!   ([`dispatch_batch`]).
+//! * [`Backend::Scoped`] — scoped OS threads spawned per call
+//!   ([`std::thread::scope`]), the PR 2 substrate. Kept as the reference
+//!   implementation: `tests/par_invariance.rs` asserts the two backends
+//!   produce bitwise-identical outputs.
+//!
+//! Select with [`set_backend`] or the `QUIVER_BACKEND` environment
+//! variable (`pool` | `scoped`); the CLI exposes `--par-backend`.
 //!
 //! # Thread-count configuration
 //!
@@ -45,7 +57,11 @@
 //! `QUIVER_THREADS` environment variable, and overridden at runtime with
 //! [`set_threads`] (the figure harnesses and the thread-invariance tests
 //! use this). `set_threads(0)` resets to the default.
+//!
+//! See `DESIGN.md` at the repository root for the full architecture
+//! write-up (module map, pool internals, normative determinism contract).
 
+pub mod pool;
 pub mod scan;
 pub mod sort;
 
@@ -93,6 +109,10 @@ pub fn threads() -> usize {
 /// Thanks to the determinism contract this only affects wall-clock time,
 /// never results — the thread-invariance tests pin it to 1/2/4/8 and
 /// assert bitwise-identical outputs.
+///
+/// Under the pool backend the change takes effect at the next wave:
+/// missing workers are spawned, excess workers retire at their next
+/// wakeup (see [`pool`]).
 pub fn set_threads(n: usize) {
     if n == 0 {
         THREADS.store(0, Ordering::Relaxed);
@@ -100,6 +120,71 @@ pub fn set_threads(n: usize) {
     } else {
         THREADS.store(n, Ordering::Relaxed);
     }
+}
+
+/// Which mechanism executes a parallel wave. Results are bitwise-identical
+/// either way; only scheduling overhead differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Persistent worker [`pool`] (default): parked workers, one sealed
+    /// job-queue handoff per wave, lazy init, `QUIVER_THREADS`-driven
+    /// resize, graceful shutdown.
+    Pool,
+    /// Scoped threads spawned per call — the PR 2 reference substrate,
+    /// kept selectable so the invariance tests can assert pool-vs-scoped
+    /// bit equality (and as a fallback if a platform's thread spawning is
+    /// ever cheaper than parking).
+    Scoped,
+}
+
+/// Encoded [`Backend`]: 0 = unset, 1 = pool, 2 = scoped.
+static BACKEND: AtomicUsize = AtomicUsize::new(0);
+
+/// The active execution backend.
+///
+/// Resolution order: the last [`set_backend`] call, else the
+/// `QUIVER_BACKEND` environment variable (`pool` | `scoped`), else
+/// [`Backend::Pool`].
+pub fn backend() -> Backend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => Backend::Pool,
+        2 => Backend::Scoped,
+        _ => {
+            let resolved = match std::env::var("QUIVER_BACKEND").ok().as_deref() {
+                Some("scoped") => Backend::Scoped,
+                Some("pool") | None => Backend::Pool,
+                Some(other) => {
+                    // Loud, not silent: a typo here would make a bench or
+                    // repro run measure the wrong backend. (The CLI flag
+                    // `--par-backend` rejects outright; a library getter
+                    // defaults instead of panicking.)
+                    eprintln!(
+                        "warning: QUIVER_BACKEND={other:?} not recognized \
+                         (expected `pool` or `scoped`); using the pool backend"
+                    );
+                    Backend::Pool
+                }
+            };
+            let enc = if resolved == Backend::Scoped { 2 } else { 1 };
+            // Install only if still unset — an explicit set_backend() that
+            // lands concurrently must win (same pattern as `threads()`).
+            match BACKEND.compare_exchange(0, enc, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => resolved,
+                Err(2) => Backend::Scoped,
+                Err(_) => Backend::Pool,
+            }
+        }
+    }
+}
+
+/// Pin the execution backend (the invariance tests and benches flip this
+/// between [`Backend::Pool`] and [`Backend::Scoped`] to compare them).
+pub fn set_backend(b: Backend) {
+    let enc = match b {
+        Backend::Pool => 1,
+        Backend::Scoped => 2,
+    };
+    BACKEND.store(enc, Ordering::Relaxed);
 }
 
 /// Split `0..n` into `w` contiguous ranges whose sizes differ by ≤ 1.
@@ -120,6 +205,10 @@ fn split_ranges(n: usize, w: usize) -> Vec<(usize, usize)> {
 /// Run `g` over contiguous parts of `items` (one part per worker) and
 /// return the per-part results **in part order**. The building block for
 /// the typed helpers below; callers never observe which thread ran what.
+///
+/// Dispatches to the active [`Backend`]: one wave on the persistent
+/// [`pool`], or a scoped spawn per part. Part boundaries (and therefore
+/// results) are identical either way.
 fn map_parts<A: Send, R: Send>(mut items: Vec<A>, g: impl Fn(Vec<A>) -> R + Sync) -> Vec<R> {
     let n = items.len();
     if n == 0 {
@@ -136,18 +225,96 @@ fn map_parts<A: Send, R: Send>(mut items: Vec<A>, g: impl Fn(Vec<A>) -> R + Sync
     }
     parts.push(items);
     parts.reverse(); // now in part order 0..w
-    let mut out: Vec<R> = Vec::with_capacity(w);
-    std::thread::scope(|s| {
-        let g = &g;
-        let mut iter = parts.into_iter();
-        let first = iter.next().expect("w >= 1 parts");
-        let handles: Vec<_> = iter.map(|part| s.spawn(move || g(part))).collect();
-        out.push(g(first)); // this thread is worker 0
-        for h in handles {
-            out.push(h.join().expect("parallel worker panicked"));
+    match backend() {
+        Backend::Pool => {
+            let mut slots: Vec<Option<R>> = (0..w).map(|_| None).collect();
+            {
+                let g = &g;
+                let jobs: Vec<pool::Job<'_>> = parts
+                    .into_iter()
+                    .zip(slots.iter_mut())
+                    .map(|(part, slot)| {
+                        Box::new(move || *slot = Some(g(part))) as pool::Job<'_>
+                    })
+                    .collect();
+                pool::run_wave(jobs);
+            }
+            slots
+                .into_iter()
+                .map(|s| s.expect("pool wave ran every part"))
+                .collect()
         }
-    });
-    out
+        Backend::Scoped => {
+            let mut out: Vec<R> = Vec::with_capacity(w);
+            std::thread::scope(|s| {
+                let g = &g;
+                let mut iter = parts.into_iter();
+                let first = iter.next().expect("w >= 1 parts");
+                let handles: Vec<_> = iter.map(|part| s.spawn(move || g(part))).collect();
+                out.push(g(first)); // this thread is worker 0
+                for h in handles {
+                    out.push(h.join().expect("parallel worker panicked"));
+                }
+            });
+            out
+        }
+    }
+}
+
+/// Multi-tenant batched dispatch: run `f(tenant_idx, tenant)` for many
+/// independent tenants as **one** pool wave, returning results in tenant
+/// order.
+///
+/// This is the serving-path entry point: where [`map_vec`] splits one big
+/// input into per-worker parts, `dispatch_batch` keeps tenant boundaries
+/// — one job per tenant, pulled dynamically from the pool queue, so a
+/// batch of 1K small vectors costs a single sealed handoff (instead of 1K
+/// spawn waves) and uneven tenants load-balance across workers.
+///
+/// Determinism: each tenant's job is self-contained, writes only its own
+/// output slot, and — by construction at the call sites
+/// ([`crate::sq::compress_batch`], the compression service) — derives any
+/// randomness from a per-tenant stream
+/// ([`Xoshiro256pp::stream(base, tenant_idx)`](crate::util::rng::Xoshiro256pp::stream)),
+/// so per-tenant results are bitwise-identical to running the tenants one
+/// at a time, at any thread count and on either backend.
+///
+/// ```
+/// use quiver::par;
+/// let squares = par::dispatch_batch(vec![1u64, 2, 3, 4], |_, x| x * x);
+/// assert_eq!(squares, vec![1, 4, 9, 16]);
+/// ```
+pub fn dispatch_batch<A: Send, R: Send>(
+    tenants: Vec<A>,
+    f: impl Fn(usize, A) -> R + Sync,
+) -> Vec<R> {
+    let n = tenants.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 || threads() == 1 || backend() == Backend::Scoped {
+        // Scoped fallback / sequential path: contiguous parts via
+        // map_vec. Tenant jobs are independent, so results are identical
+        // — only the scheduling granularity differs.
+        return map_vec(tenants.into_iter().enumerate().collect(), |(i, t)| f(i, t));
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    {
+        let f = &f;
+        let jobs: Vec<pool::Job<'_>> = tenants
+            .into_iter()
+            .zip(slots.iter_mut())
+            .enumerate()
+            .map(|(i, (tenant, slot))| {
+                Box::new(move || *slot = Some(f(i, tenant))) as pool::Job<'_>
+            })
+            .collect();
+        pool::run_wave(jobs);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("dispatched tenant job completed"))
+        .collect()
 }
 
 /// Map `f` over `items`, preserving order. Parallel across contiguous
@@ -244,14 +411,22 @@ pub fn zip_chunks_mut<T: Sync, U: Send>(
     map_vec(items, |(i, (o, c))| f(i, o, c));
 }
 
+/// Crate-wide lock serializing tests that pin the global executor width
+/// or backend (shared by the `par` and `pool` unit tests so they cannot
+/// race each other's pins).
+#[cfg(test)]
+pub(crate) fn test_width_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     /// Serialize tests that touch the global thread count.
     fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
-        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-        let _g = LOCK.lock().unwrap();
+        let _g = test_width_lock();
         let prev = threads();
         set_threads(n);
         let r = f();
@@ -375,5 +550,69 @@ mod tests {
             set_threads(0);
             assert!(threads() >= 1);
         });
+    }
+
+    #[test]
+    fn backends_produce_identical_results() {
+        let xs: Vec<f64> = (0..3 * CHUNK + 99).map(|i| (i as f64 * 0.37).sin()).collect();
+        with_threads(4, || {
+            let prev = backend();
+            set_backend(Backend::Scoped);
+            let a = map_chunks(&xs, CHUNK, |i, c| (i, c.iter().sum::<f64>().to_bits()));
+            set_backend(Backend::Pool);
+            let b = map_chunks(&xs, CHUNK, |i, c| (i, c.iter().sum::<f64>().to_bits()));
+            set_backend(prev);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn dispatch_batch_preserves_tenant_order() {
+        for t in [1usize, 4] {
+            let got = with_threads(t, || {
+                dispatch_batch((0..257u64).collect::<Vec<_>>(), |i, x| {
+                    assert_eq!(i as u64, x, "index matches tenant");
+                    x * 10 + 1
+                })
+            });
+            assert_eq!(got, (0..257u64).map(|x| x * 10 + 1).collect::<Vec<_>>(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn dispatch_batch_matches_scoped_and_sequential() {
+        // Per-tenant work with tenant-keyed randomness — the serving
+        // pattern. All three execution modes must agree exactly.
+        use crate::util::rng::Xoshiro256pp;
+        let base = 0xFEED_u64;
+        let job = |i: usize, len: usize| {
+            let mut rng = Xoshiro256pp::stream(base, i as u64);
+            (0..len).map(|_| rng.next_u64()).fold(0u64, u64::wrapping_add)
+        };
+        let tenants: Vec<usize> = (0..100).map(|i| 10 + (i * 37) % 500).collect();
+        let seq: Vec<u64> = tenants.iter().enumerate().map(|(i, &l)| job(i, l)).collect();
+        for t in [2usize, 8] {
+            let pooled = with_threads(t, || {
+                let prev = backend();
+                set_backend(Backend::Pool);
+                let r = dispatch_batch(tenants.clone(), |i, l| job(i, l));
+                set_backend(prev);
+                r
+            });
+            let scoped = with_threads(t, || {
+                let prev = backend();
+                set_backend(Backend::Scoped);
+                let r = dispatch_batch(tenants.clone(), |i, l| job(i, l));
+                set_backend(prev);
+                r
+            });
+            assert_eq!(pooled, seq, "pool == sequential at t={t}");
+            assert_eq!(scoped, seq, "scoped == sequential at t={t}");
+        }
+    }
+
+    #[test]
+    fn dispatch_batch_empty() {
+        assert!(dispatch_batch(Vec::<u8>::new(), |_, b| b).is_empty());
     }
 }

@@ -8,8 +8,8 @@
 //!
 //! Determinism: per-chunk partials are folded **in chunk-index order**, so
 //! the floating-point reduction tree is fixed by the input length alone —
-//! `norm2_sq` is bitwise-identical for every thread count (see the module
-//! contract in [`crate::par`]).
+//! `norm2_sq` is bitwise-identical for every thread count and on either
+//! execution backend (see the module contract in [`crate::par`]).
 
 use super::{map_chunks, CHUNK};
 

@@ -14,6 +14,11 @@
 //! output is bitwise-identical for every thread count (and to a plain
 //! sequential sort). Ties take the left run first, which the fixed merge
 //! tree makes scheduling-independent anyway.
+//!
+//! The run sorts and every merge round are waves on the [`crate::par`]
+//! executor, so with the persistent pool backend a whole `sort_f64` costs
+//! `1 + ⌈log₂(d/RUN)⌉` sealed queue handoffs and **zero** thread spawns
+//! after warm-up (previously each round spawned its own scoped threads).
 
 use std::cmp::Ordering;
 

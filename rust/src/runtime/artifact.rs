@@ -17,7 +17,9 @@ use std::path::{Path, PathBuf};
 /// Element type of a tensor on the artifact boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// IEEE-754 single precision.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -43,7 +45,9 @@ impl fmt::Display for Dtype {
 /// Shape + dtype of one artifact input/output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Element type.
     pub dtype: Dtype,
+    /// Dimensions (empty for a scalar).
     pub dims: Vec<usize>,
 }
 
@@ -53,6 +57,7 @@ impl TensorSpec {
         self.dims.iter().product()
     }
 
+    /// Whether the tensor holds zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -87,16 +92,22 @@ impl fmt::Display for TensorSpec {
 /// One compiled graph: name, HLO file, and its I/O signature.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Graph name (`model_grad`, `sq`, …) — the call-site key.
     pub name: String,
+    /// HLO text file, relative to the artifact directory.
     pub file: PathBuf,
+    /// Expected input tensors, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Produced output tensors, in result order.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// The parsed `manifest.txt`.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Every compiled graph listed in the manifest.
     pub artifacts: Vec<ArtifactSpec>,
+    /// Directory the manifest (and HLO files) live in.
     pub dir: PathBuf,
 }
 

@@ -36,11 +36,14 @@ use super::artifact::TensorSpec;
 /// A host tensor crossing the artifact boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
+    /// Single-precision float buffer.
     F32(Vec<f32>),
+    /// 32-bit signed integer buffer.
     I32(Vec<i32>),
 }
 
 impl Tensor {
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32(v) => v.len(),
@@ -48,10 +51,12 @@ impl Tensor {
         }
     }
 
+    /// Whether the buffer holds zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Element type of this buffer.
     pub fn dtype(&self) -> Dtype {
         match self {
             Tensor::F32(_) => Dtype::F32,

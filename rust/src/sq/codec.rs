@@ -14,7 +14,12 @@
 //!
 //! Packing and unpacking are chunked onto [`crate::par`]: every
 //! [`par::CHUNK`] indices occupy a whole number of payload bytes
-//! regardless of the bit width, so chunks own disjoint byte windows.
+//! regardless of the bit width, so chunks own disjoint byte windows. The
+//! chunk jobs carry no RNG state at all, so they are trivially
+//! backend-agnostic: one wave on the persistent worker pool (default) or
+//! scoped spawns produce the same bytes. For many small vectors, prefer
+//! [`crate::sq::compress_batch`] — it packs the per-tenant
+//! quantize+encode pipelines into a single pool handoff.
 
 use crate::par;
 

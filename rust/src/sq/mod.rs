@@ -118,6 +118,46 @@ pub fn compress(xs: &[f64], qs: &[f64], rng: &mut Xoshiro256pp) -> CompressedVec
     encode(&idx, qs)
 }
 
+/// Compress many tenant vectors in **one** batched dispatch
+/// ([`par::dispatch_batch`]): a single sealed handoff to the worker pool
+/// instead of one wave per vector — the multi-tenant serving path.
+///
+/// ## RNG stream contract
+///
+/// Consumes exactly **one** draw from `rng` (a base `u64`); tenant `j`
+/// compresses with the derived stream `Xoshiro256pp::stream(base, j)`
+/// (see [`Xoshiro256pp::stream`]). Per-tenant output is therefore a pure
+/// function of `(base, j, xs, qs)` — bitwise-identical to compressing the
+/// tenants one at a time with the same derived streams, at any thread
+/// count and on either executor backend (asserted in
+/// `tests/par_invariance.rs`).
+///
+/// ```
+/// use quiver::sq;
+/// use quiver::util::rng::Xoshiro256pp;
+/// let (a, b) = (vec![0.0, 0.4, 1.0], vec![0.0, 0.1, 0.8, 1.0]);
+/// let qs = [0.0, 0.5, 1.0];
+/// let tenants = vec![(a.as_slice(), &qs[..]), (b.as_slice(), &qs[..])];
+/// let mut rng = Xoshiro256pp::seed_from_u64(7);
+/// let out = sq::compress_batch(tenants, &mut rng);
+/// assert_eq!(out.len(), 2);
+/// // One-at-a-time replay with the same derived streams is identical.
+/// let mut rng2 = Xoshiro256pp::seed_from_u64(7);
+/// let base = rng2.next_u64();
+/// let solo = sq::compress(&a, &qs, &mut Xoshiro256pp::stream(base, 0));
+/// assert_eq!(out[0], solo);
+/// ```
+pub fn compress_batch(
+    tenants: Vec<(&[f64], &[f64])>,
+    rng: &mut Xoshiro256pp,
+) -> Vec<CompressedVec> {
+    let base = rng.next_u64();
+    par::dispatch_batch(tenants, |j, (xs, qs)| {
+        let mut trng = Xoshiro256pp::stream(base, j as u64);
+        compress(xs, qs, &mut trng)
+    })
+}
+
 /// Decompress back to value estimates.
 pub fn decompress(c: &CompressedVec) -> Vec<f64> {
     let (idx, qs) = decode(c);
@@ -213,6 +253,45 @@ mod tests {
         let mut rng = Xoshiro256pp::seed_from_u64(7);
         let out = dequantize(&quantize(&xs, &qs, &mut rng), &qs);
         assert_eq!(out, xs.to_vec());
+    }
+
+    #[test]
+    fn compress_batch_equals_one_at_a_time() {
+        // The documented contract: tenant j of a batch == solo compress
+        // with stream(base, j), where base is the one draw the batch
+        // consumed from the caller's generator.
+        let tenants_data: Vec<Vec<f64>> = (0..9u64)
+            .map(|t| {
+                Dist::Normal { mu: t as f64, sigma: 1.0 }.sample_vec(500 + 37 * t as usize, t)
+            })
+            .collect();
+        let sols: Vec<Vec<f64>> = tenants_data
+            .iter()
+            .map(|xs| {
+                crate::avq::histogram::solve_hist(
+                    xs,
+                    8,
+                    &crate::avq::histogram::HistConfig::fixed(64),
+                )
+                .unwrap()
+                .q
+            })
+            .collect();
+        let tenants: Vec<(&[f64], &[f64])> = tenants_data
+            .iter()
+            .zip(&sols)
+            .map(|(xs, qs)| (xs.as_slice(), qs.as_slice()))
+            .collect();
+        let mut rng = Xoshiro256pp::seed_from_u64(0xBA7C4);
+        let batched = compress_batch(tenants, &mut rng);
+        let mut rng2 = Xoshiro256pp::seed_from_u64(0xBA7C4);
+        let base = rng2.next_u64();
+        for (j, (xs, qs)) in tenants_data.iter().zip(&sols).enumerate() {
+            let solo = compress(xs, qs, &mut Xoshiro256pp::stream(base, j as u64));
+            assert_eq!(batched[j], solo, "tenant {j}");
+        }
+        // And the caller's generator advanced by exactly one draw.
+        assert_eq!(rng.next_u64(), rng2.next_u64());
     }
 
     #[test]

@@ -25,27 +25,33 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Generator for one property case, fully determined by `seed`.
     pub fn new(seed: u64) -> Self {
         Self { rng: Xoshiro256pp::seed_from_u64(seed) }
     }
 
+    /// Direct access to the underlying generator.
     pub fn rng(&mut self) -> &mut Xoshiro256pp {
         &mut self.rng
     }
 
+    /// Uniform `usize` in `r` (panics on an empty range).
     pub fn usize_in(&mut self, r: Range<usize>) -> usize {
         assert!(!r.is_empty());
         r.start + self.rng.next_below((r.end - r.start) as u64) as usize
     }
 
+    /// Uniform 64-bit value.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Uniform `f64` in `r`.
     pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
         r.start + (r.end - r.start) * self.rng.next_f64()
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

@@ -19,6 +19,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// Empty timer with no recorded phases.
     pub fn new() -> Self {
         Self::default()
     }

@@ -1,11 +1,18 @@
 //! The determinism contract of `quiver::par`, tested end to end: every
 //! parallel hot pass — histogram build, `solve_hist`, quantize, bit-pack
 //! encode, and the parallel sort — must be **bitwise-identical** across
-//! thread counts 1/2/4/8, on every `dist::paper_suite()` family.
+//! thread counts 1/2/4/8 **and across execution backends** (persistent
+//! worker pool vs per-call scoped spawning), on every
+//! `dist::paper_suite()` family. Plus the pool lifecycle: shutdown,
+//! lazy reinit, and mid-run resize must neither lose work nor change
+//! results; and the multi-tenant batched dispatch must equal the
+//! one-vector-at-a-time path per tenant.
 //!
-//! The tests mutate the process-global executor width, and libtest runs
-//! tests of one binary concurrently — `WIDTH_LOCK` serializes them so a
-//! pinned width stays pinned while a snapshot is measured.
+//! The tests mutate the process-global executor width/backend, and
+//! libtest runs tests of one binary concurrently — `WIDTH_LOCK`
+//! serializes them so a pinned width stays pinned while a snapshot is
+//! measured. (Every test in this file takes the lock, so pool worker
+//! counts are stable to assert on here — unlike in the lib unit tests.)
 
 use quiver::avq::histogram::{solve_hist, GridHistogram, HistConfig};
 use quiver::avq::{self, SolverKind};
@@ -74,23 +81,163 @@ fn snapshot(xs: &[f64]) -> Snapshot {
     }
 }
 
+/// Restores width and backend even if an assertion panics, so a failure
+/// cannot leak a pinned configuration into later tests.
+struct ParGuard {
+    width: usize,
+    backend: par::Backend,
+}
+
+impl ParGuard {
+    fn pin() -> Self {
+        Self { width: par::threads(), backend: par::backend() }
+    }
+}
+
+impl Drop for ParGuard {
+    fn drop(&mut self) {
+        par::set_threads(self.width);
+        par::set_backend(self.backend);
+    }
+}
+
 #[test]
-fn hot_passes_bitwise_identical_across_thread_counts() {
+fn hot_passes_bitwise_identical_across_thread_counts_and_backends() {
     let _guard = WIDTH_LOCK.lock().unwrap();
-    let prev = par::threads();
+    let _restore = ParGuard::pin();
     for (name, dist) in Dist::paper_suite() {
         let xs = dist.sample_vec(D, 0xC0FFEE);
+        par::set_backend(par::Backend::Scoped);
         par::set_threads(1);
         let reference = snapshot(&xs);
         // Single-thread sanity: the sort really sorted, mass conserved.
         assert!(reference.sorted.windows(2).all(|w| f64::from_bits(w[0]) <= f64::from_bits(w[1])));
-        for t in [2usize, 4, 8] {
-            par::set_threads(t);
-            let got = snapshot(&xs);
-            assert_eq!(reference, got, "{name}: outputs diverged at {t} threads");
+        for backend in [par::Backend::Scoped, par::Backend::Pool] {
+            par::set_backend(backend);
+            for t in [1usize, 2, 4, 8] {
+                par::set_threads(t);
+                let got = snapshot(&xs);
+                assert_eq!(
+                    reference, got,
+                    "{name}: outputs diverged at {t} threads on {backend:?}"
+                );
+            }
         }
     }
-    par::set_threads(prev);
+}
+
+/// Pool lifecycle under real workloads: shutdown retires every worker,
+/// the next pass lazily re-initializes, and a mid-run resize (the
+/// `QUIVER_THREADS`-driven path) converges to the new width — all without
+/// changing a single output bit.
+#[test]
+fn pool_shutdown_reinit_and_resize_mid_run() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    par::set_backend(par::Backend::Pool);
+    let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(D, 0x9001);
+    par::set_threads(1);
+    let reference = snapshot(&xs);
+
+    // Warm the pool at width 4 and check the worker census.
+    par::set_threads(4);
+    assert_eq!(snapshot(&xs), reference, "width 4 (pool warm-up)");
+    assert_eq!(par::pool::worker_count(), 3, "width 4 keeps 3 workers");
+
+    // Graceful shutdown: every worker retires...
+    par::pool::shutdown();
+    assert_eq!(par::pool::worker_count(), 0, "shutdown retires every worker");
+    // ...and the very next pass transparently re-initializes the pool.
+    assert_eq!(snapshot(&xs), reference, "after shutdown + lazy reinit");
+    assert_eq!(par::pool::worker_count(), 3, "pool re-initialized to width 4");
+
+    // Resize mid-run: grow to 8, then shrink to 2. Excess workers retire
+    // at their next wakeup, so poll briefly after the shrink.
+    par::set_threads(8);
+    assert_eq!(snapshot(&xs), reference, "width 8 (grown)");
+    assert_eq!(par::pool::worker_count(), 7, "width 8 keeps 7 workers");
+    par::set_threads(2);
+    assert_eq!(snapshot(&xs), reference, "width 2 (shrunk)");
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while par::pool::worker_count() > 1 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(par::pool::worker_count(), 1, "width 2 keeps 1 worker");
+    par::pool::shutdown();
+}
+
+/// Multi-tenant batched dispatch: compressing a batch of small tenant
+/// vectors in one pool wave yields, per tenant, exactly the bytes the
+/// one-vector-at-a-time path produces with the same derived stream — at
+/// every width and on both backends.
+#[test]
+fn batched_dispatch_equals_one_at_a_time() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    // 40 small tenants, mixed sizes and families (all ≪ one chunk — the
+    // serving case batching exists for).
+    let suite = Dist::paper_suite();
+    let tenants_data: Vec<Vec<f64>> = (0..40u64)
+        .map(|t| {
+            let (_, dist) = suite[(t as usize) % suite.len()];
+            dist.sample_vec(200 + 97 * (t as usize % 7), 0x7E7E + t)
+        })
+        .collect();
+    let qsets: Vec<Vec<f64>> = tenants_data
+        .iter()
+        .map(|xs| solve_hist(xs, 8, &HistConfig::fixed(128)).unwrap().q)
+        .collect();
+    let tenants: Vec<(&[f64], &[f64])> = tenants_data
+        .iter()
+        .zip(&qsets)
+        .map(|(xs, qs)| (xs.as_slice(), qs.as_slice()))
+        .collect();
+    // One-at-a-time reference with the documented per-tenant streams.
+    let mut ref_rng = Xoshiro256pp::seed_from_u64(0x5EED);
+    let base = ref_rng.next_u64();
+    let reference: Vec<sq::CompressedVec> = tenants
+        .iter()
+        .enumerate()
+        .map(|(j, (xs, qs))| sq::compress(xs, qs, &mut Xoshiro256pp::stream(base, j as u64)))
+        .collect();
+    for backend in [par::Backend::Pool, par::Backend::Scoped] {
+        par::set_backend(backend);
+        for t in [1usize, 2, 4, 8] {
+            par::set_threads(t);
+            let mut rng = Xoshiro256pp::seed_from_u64(0x5EED);
+            let got = sq::compress_batch(tenants.clone(), &mut rng);
+            assert_eq!(got.len(), reference.len());
+            for (j, (g, r)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(g, r, "tenant {j} diverged at {t} threads on {backend:?}");
+            }
+        }
+    }
+}
+
+/// One batch of small tenants costs exactly one pool wave (the sealed
+/// handoff the batching exists to buy), versus one-wave-per-pass when the
+/// tenants are compressed individually.
+#[test]
+fn batched_dispatch_is_one_wave() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    par::set_backend(par::Backend::Pool);
+    par::set_threads(4);
+    let tenants_data: Vec<Vec<f64>> =
+        (0..64u64).map(|t| Dist::Uniform { lo: 0.0, hi: 1.0 }.sample_vec(512, t)).collect();
+    let qs: Vec<f64> = (0..=8).map(|i| i as f64 / 8.0).collect();
+    let tenants: Vec<(&[f64], &[f64])> =
+        tenants_data.iter().map(|xs| (xs.as_slice(), qs.as_slice())).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let waves_before = par::pool::wave_count();
+    let out = sq::compress_batch(tenants, &mut rng);
+    let waves_after = par::pool::wave_count();
+    assert_eq!(out.len(), 64);
+    assert_eq!(
+        waves_after - waves_before,
+        1,
+        "64 small tenants must cost exactly one sealed pool handoff"
+    );
 }
 
 /// The exact-solver entry point (scan + parallel sort + solve) is also
