@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         queue_capacity: 128,
         max_batch: 8,
         max_wait: Duration::from_millis(1),
-        router: Router::new(RouterConfig { exact_max_d: 1 << 14, hist_m: 400, seed: 3 }),
+        router: Router::new(RouterConfig { exact_max_d: 1 << 14, hist_m: 400, seed: 3, shards: 1 }),
         ..Default::default()
     })?;
     let addr = service.addr().to_string();

@@ -11,10 +11,14 @@
 //!   pool (parked threads, sealed handoff);
 //! * multi-tenant small-vector batches: per-call compression vs one
 //!   `par::dispatch_batch` wave per batch (the serving path);
+//! * the sharded coordinator: the hist solve split across 1/2/4/8
+//!   chunk-aligned shard ranges (bit-identical results, asserted), so
+//!   the scale-out overhead is measured on its own;
 //! * coordinator micro-benches: codec, batcher, end-to-end service RPC.
 //!
-//! Machine-readable results land in `BENCH_pipeline.json` at the repo
-//! root (name, d, s, median_ns, mad_ns, elems_per_s per entry).
+//! Machine-readable results land in `BENCH_pipeline.json` and
+//! `BENCH_shard.json` at the repo root (name, d, s, median_ns, mad_ns,
+//! elems_per_s per entry).
 //!
 //! Set `QUIVER_SMOKE=1` to shrink every size so a full run finishes in
 //! seconds (the CI perf-smoke job and `make bench-smoke` use this).
@@ -248,6 +252,58 @@ fn main() {
         t.print();
     }
 
+    // --- Sharded coordinator (the 10⁸-coordinate scale-out path at
+    // bench-size d). Results are bitwise-identical for every shard count
+    // — asserted once below — so the table is pure scheduling overhead:
+    // the cost of the split + exact merges on one machine. Records land
+    // in BENCH_shard.json so the shard layer gets its own perf
+    // trajectory.
+    {
+        use quiver::coordinator::shard::{ShardConfig, ShardCoordinator};
+        let shard_pow = if smoke { 18 } else { 22 };
+        let d = 1usize << shard_pow;
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 4242);
+        let mut t = Table::new(
+            format!("sharded hist solve, d=2^{shard_pow}, M=1024, s=16"),
+            &["shards", "median", "elems/s", "vs 1 shard"],
+        );
+        let mut shard_records: Vec<BenchRecord> = vec![];
+        let mut medians: Vec<f64> = vec![];
+        let mut ref_mse: Option<u64> = None;
+        for shards in [1usize, 2, 4, 8] {
+            let coord = ShardCoordinator::new(ShardConfig {
+                shards,
+                m: 1024,
+                ..Default::default()
+            });
+            let st = benchfw::bench(
+                &format!("sharded-solve d=2^{shard_pow} shards={shards}"),
+                1,
+                samples,
+                || coord.solve(&xs, 16).expect("sharded solve"),
+            );
+            // Shard invariance, proven in-line on the bench input.
+            let mse_bits = coord.solve(&xs, 16).expect("sharded solve").mse.to_bits();
+            match ref_mse {
+                None => ref_mse = Some(mse_bits),
+                Some(want) => assert_eq!(mse_bits, want, "shards={shards} diverged"),
+            }
+            medians.push(st.median().as_secs_f64());
+            let vs1 = format!("{:.2}x", medians[0] / medians.last().unwrap());
+            t.row(vec![
+                shards.to_string(),
+                benchfw::fmt_duration(st.median()),
+                format!("{:.3e}", st.throughput(d)),
+                vs1,
+            ]);
+            shard_records.push(BenchRecord::from_stats(&st, d, 16));
+        }
+        t.print();
+        let json = write_bench_json(&repo_root.join("BENCH_shard.json"), &shard_records)
+            .expect("write BENCH_shard.json");
+        println!("wrote {} records to {}", shard_records.len(), json.display());
+    }
+
     // --- Coordinator micro-benches. ---
     let mut t = Table::new("coordinator micro-benches", &["op", "median", "spread"]);
     // Codec: pack/unpack a 1M-coordinate gradient at 4 bits.
@@ -264,6 +320,8 @@ fn main() {
     let msg = Msg::CompressRequest {
         request_id: 1,
         s: 16,
+        class: 0,
+        deadline_ms: 0,
         data: vec![0.5f32; 1 << 16],
     };
     let st = benchfw::bench("frame 64K req", 2, 20, || {
@@ -280,7 +338,7 @@ fn main() {
         queue_capacity: 64,
         max_batch: 8,
         max_wait: Duration::from_millis(1),
-        router: Router::new(RouterConfig { exact_max_d: 1 << 14, hist_m: 400, seed: 3 }),
+        router: Router::new(RouterConfig { exact_max_d: 1 << 14, hist_m: 400, seed: 3, shards: 1 }),
         ..Default::default()
     })
     .expect("service");

@@ -24,6 +24,15 @@
 //! jobs are self-contained, identical whether they run on the persistent
 //! worker pool or on per-call scoped threads (see [`crate::par::Backend`]
 //! and `DESIGN.md`).
+//!
+//! The same decomposition scales past one node: the count pass over a
+//! **chunk-aligned shard** of the input
+//! ([`GridHistogram::shard_counts`]) keys its RNG streams by *global*
+//! chunk index, and [`GridHistogram::from_shards`] merges shard counts and
+//! scan statistics exactly — so a vector split across shard nodes solves
+//! to the bit-identical histogram a single node would build
+//! (orchestrated by [`crate::coordinator::shard`], asserted by
+//! `tests/shard_invariance.rs`).
 
 use super::{AvqError, Prefix, Solution, SolverKind};
 use crate::par;
@@ -77,35 +86,52 @@ impl GridHistogram {
         if !st.finite {
             return Err(AvqError::NonFinite);
         }
-        let (lo, hi, norm2) = (st.lo, st.hi, st.norm2_sq);
-        if hi == lo {
-            // Degenerate range (constant input): an (M+1)-point grid would
-            // be M+1 duplicates of the same value. Collapse to a true
-            // single-point grid so downstream `Prefix::weighted` + solvers
-            // see one position, take the constant-vector fast path, and
-            // return Q = {lo} with exactly zero MSE.
-            return Ok(Self {
-                grid: vec![lo],
-                weights: vec![xs.len() as f64],
-                lo,
-                hi,
-                d: xs.len(),
-                norm2_sq: norm2,
-            });
+        if st.hi == st.lo {
+            return Self::from_shards(m, st, xs.len(), &[]);
         }
-        let delta = (hi - lo) / m as f64;
+        // Single-node build = a one-shard instance of the shard-merge API,
+        // so the sharded coordinator path is identical by construction.
+        let counts = Self::shard_counts(xs, m, st.lo, st.hi, base, 0);
+        Self::from_shards(m, st, xs.len(), std::slice::from_ref(&counts))
+    }
+
+    /// The stochastic count pass over one **chunk-aligned shard** of a
+    /// larger vector: bin counts (length `m + 1`) of `xs` on the *global*
+    /// grid `[lo, hi]`, with chunk `c` of this shard drawing from
+    /// `Xoshiro256pp::stream(base, first_chunk + c)`.
+    ///
+    /// `first_chunk` is the shard's global chunk offset (its start index
+    /// divided by [`par::CHUNK`]; shard ranges must start on a chunk
+    /// boundary). Because the streams are keyed by *global* chunk index,
+    /// summing the shard counts reproduces the single-node
+    /// [`build`](Self::build) bin counts exactly — the merge is integer
+    /// arithmetic in f64 (counts ≤ d ≪ 2⁵³), so neither the shard count
+    /// nor the thread count can change the result. This is the piece a
+    /// shard node runs locally (see [`crate::coordinator::shard`]).
+    ///
+    /// Panics if `m == 0` or `hi <= lo` (the degenerate range never
+    /// reaches the count pass — see [`from_shards`](Self::from_shards)).
+    pub fn shard_counts(
+        xs: &[f64],
+        m: usize,
+        lo: f64,
+        hi: f64,
+        base: u64,
+        first_chunk: u64,
+    ) -> Vec<f64> {
+        assert!(m >= 1, "need at least one bin");
+        assert!(hi > lo, "degenerate range has no count pass");
         let inv_delta = m as f64 / (hi - lo);
-        // Sharded count pass: each worker folds its chunks into a private
-        // (M+1)-bin shard; chunk `c` draws from `stream(base, c)`. The
-        // shard merge is exact integer arithmetic in f64 (counts ≤ d ≪
-        // 2^53), so the grouping of chunks into shards — the only thing
-        // that varies with the thread count — cannot change the result.
-        let shards = par::fold_chunks(
+        // Worker-sharded count pass: each worker folds its chunks into a
+        // private (M+1)-bin accumulator; the merge below is exact, so the
+        // grouping of chunks into workers — the only thing that varies
+        // with the thread count — cannot change the result.
+        let parts = par::fold_chunks(
             xs,
             par::CHUNK,
             || vec![0.0f64; m + 1],
             |acc, chunk_idx, chunk| {
-                let mut crng = Xoshiro256pp::stream(base, chunk_idx as u64);
+                let mut crng = Xoshiro256pp::stream(base, first_chunk + chunk_idx as u64);
                 for &x in chunk {
                     // Position on the grid in units of Δ.
                     let t = (x - lo) * inv_delta;
@@ -124,8 +150,81 @@ impl GridHistogram {
             },
         );
         let mut weights = vec![0.0f64; m + 1];
-        for shard in shards {
-            for (w, v) in weights.iter_mut().zip(&shard) {
+        for part in parts {
+            for (w, v) in weights.iter_mut().zip(&part) {
+                *w += v;
+            }
+        }
+        weights
+    }
+
+    /// Assemble a histogram from exactly-merged shard statistics: the
+    /// global scan result `st` (fold the shards' per-chunk partials with
+    /// [`par::scan::fold_stats`] in global chunk order) and the per-shard
+    /// bin counts from [`shard_counts`](Self::shard_counts).
+    ///
+    /// The grid is constructed from `st.lo`/`st.hi` exactly as the
+    /// single-node [`build`](Self::build) does (endpoints pinned), and the
+    /// shard counts sum bin-wise — so the result is bitwise-identical to
+    /// building on the concatenated input, for any shard count including
+    /// one. A degenerate range (`st.hi == st.lo`) collapses to a true
+    /// single-point grid carrying all the mass; pass no shard counts in
+    /// that case (the count pass is skipped entirely).
+    ///
+    /// ```
+    /// use quiver::avq::histogram::GridHistogram;
+    /// use quiver::par::{self, scan};
+    /// use quiver::util::rng::Xoshiro256pp;
+    /// // A two-shard build, split at a chunk boundary, merges to exactly
+    /// // the single-node histogram.
+    /// let xs: Vec<f64> = (0..par::CHUNK + 500).map(|i| (i as f64 * 0.37).sin()).collect();
+    /// let mut rng = Xoshiro256pp::seed_from_u64(7);
+    /// let whole = GridHistogram::build(&xs, 64, &mut rng).unwrap();
+    /// let mut rng2 = Xoshiro256pp::seed_from_u64(7);
+    /// let base = rng2.next_u64(); // build consumes exactly one draw
+    /// let (a, b) = xs.split_at(par::CHUNK); // shard b starts at global chunk 1
+    /// let st = scan::fold_stats(scan::chunk_stats(a).into_iter().chain(scan::chunk_stats(b)));
+    /// let wa = GridHistogram::shard_counts(a, 64, st.lo, st.hi, base, 0);
+    /// let wb = GridHistogram::shard_counts(b, 64, st.lo, st.hi, base, 1);
+    /// let merged = GridHistogram::from_shards(64, st, xs.len(), &[wa, wb]).unwrap();
+    /// assert_eq!(merged.weights, whole.weights);
+    /// assert_eq!(merged.grid, whole.grid);
+    /// assert_eq!(merged.norm2_sq.to_bits(), whole.norm2_sq.to_bits());
+    /// ```
+    pub fn from_shards(
+        m: usize,
+        st: par::scan::VecStats,
+        d: usize,
+        shard_weights: &[Vec<f64>],
+    ) -> Result<Self, AvqError> {
+        if d == 0 {
+            return Err(AvqError::EmptyInput);
+        }
+        if !st.finite {
+            return Err(AvqError::NonFinite);
+        }
+        let (lo, hi, norm2) = (st.lo, st.hi, st.norm2_sq);
+        if hi == lo {
+            // Degenerate range (constant input): an (M+1)-point grid would
+            // be M+1 duplicates of the same value. Collapse to a true
+            // single-point grid so downstream `Prefix::weighted` + solvers
+            // see one position, take the constant-vector fast path, and
+            // return Q = {lo} with exactly zero MSE.
+            return Ok(Self {
+                grid: vec![lo],
+                weights: vec![d as f64],
+                lo,
+                hi,
+                d,
+                norm2_sq: norm2,
+            });
+        }
+        assert!(m >= 1, "need at least one bin");
+        let delta = (hi - lo) / m as f64;
+        let mut weights = vec![0.0f64; m + 1];
+        for shard in shard_weights {
+            assert_eq!(shard.len(), m + 1, "shard counts must carry M+1 bins");
+            for (w, v) in weights.iter_mut().zip(shard) {
                 *w += v;
             }
         }
@@ -134,7 +233,7 @@ impl GridHistogram {
         // would leave the max input outside the quantizer's range.
         grid[0] = lo;
         grid[m] = hi;
-        Ok(Self { grid, weights, lo, hi, d: xs.len(), norm2_sq: norm2 })
+        Ok(Self { grid, weights, lo, hi, d, norm2_sq: norm2 })
     }
 
     /// The rounded vector's weighted prefix moments (for the solver).
@@ -348,6 +447,54 @@ mod tests {
             assert_eq!(sol.mse, 0.0, "{}", kind.name());
             assert_eq!(sol.recompute_mse(&h.prefix()), 0.0, "{}", kind.name());
         }
+    }
+
+    #[test]
+    fn shard_merge_reproduces_single_node_build() {
+        use crate::par::{self, scan};
+        // Multi-chunk input with a ragged tail, split at every chunk
+        // boundary: the merged histogram must equal the single build
+        // bitwise (grid, weights, norm2) wherever the cut lands.
+        let d = 3 * par::CHUNK + 4321;
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 23);
+        let mut rng = Xoshiro256pp::seed_from_u64(0x51AB);
+        let whole = GridHistogram::build(&xs, 97, &mut rng).unwrap();
+        let mut rng2 = Xoshiro256pp::seed_from_u64(0x51AB);
+        let base = rng2.next_u64();
+        for cut_chunks in [1usize, 2, 3] {
+            let (a, b) = xs.split_at(cut_chunks * par::CHUNK);
+            let st = scan::fold_stats(
+                scan::chunk_stats(a).into_iter().chain(scan::chunk_stats(b)),
+            );
+            let wa = GridHistogram::shard_counts(a, 97, st.lo, st.hi, base, 0);
+            let wb =
+                GridHistogram::shard_counts(b, 97, st.lo, st.hi, base, cut_chunks as u64);
+            let merged =
+                GridHistogram::from_shards(97, st, d, &[wa, wb]).unwrap();
+            assert_eq!(merged.weights, whole.weights, "cut at chunk {cut_chunks}");
+            assert_eq!(merged.grid, whole.grid);
+            assert_eq!(merged.norm2_sq.to_bits(), whole.norm2_sq.to_bits());
+            assert_eq!((merged.lo, merged.hi, merged.d), (whole.lo, whole.hi, whole.d));
+            assert_eq!(merged.total(), d as f64);
+        }
+    }
+
+    #[test]
+    fn from_shards_degenerate_and_errors() {
+        use crate::par::scan::VecStats;
+        let st = VecStats { lo: 2.5, hi: 2.5, norm2_sq: 312.5, finite: true };
+        let h = GridHistogram::from_shards(64, st, 50, &[]).unwrap();
+        assert_eq!(h.grid, vec![2.5]);
+        assert_eq!(h.weights, vec![50.0]);
+        assert_eq!(
+            GridHistogram::from_shards(64, st, 0, &[]).unwrap_err(),
+            AvqError::EmptyInput
+        );
+        let bad = VecStats { lo: 0.0, hi: 1.0, norm2_sq: f64::NAN, finite: false };
+        assert_eq!(
+            GridHistogram::from_shards(64, bad, 10, &[]).unwrap_err(),
+            AvqError::NonFinite
+        );
     }
 
     #[test]

@@ -104,6 +104,21 @@ impl Config {
         }
     }
 
+    /// Comma-separated list lookup (`k = a,b,c`); entries are trimmed and
+    /// empties dropped, so `a, b,` parses as `["a", "b"]`. Missing key →
+    /// empty vector. Used for e.g. `--shard-nodes host:port,host:port`.
+    pub fn list_or_empty(&self, k: &str) -> Vec<String> {
+        match self.get(k) {
+            None => Vec::new(),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect(),
+        }
+    }
+
     /// Boolean lookup (`true/1/yes` | `false/0/no`) with a default.
     pub fn bool_or(&self, k: &str, default: bool) -> Result<bool> {
         match self.get(k) {
@@ -131,6 +146,14 @@ mod tests {
         assert_eq!(c.f64_or("lr", 0.0).unwrap(), 0.25);
         assert!(c.bool_or("flag", false).unwrap());
         assert_eq!(c.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Config::parse("nodes = a:1, b:2,c:3, \nempty = ,\n").unwrap();
+        assert_eq!(c.list_or_empty("nodes"), vec!["a:1", "b:2", "c:3"]);
+        assert!(c.list_or_empty("empty").is_empty());
+        assert!(c.list_or_empty("missing").is_empty());
     }
 
     #[test]

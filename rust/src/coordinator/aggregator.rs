@@ -7,6 +7,13 @@
 //! variance equal to the mean of the per-worker AVQ objectives divided by
 //! n² — which is exactly why minimizing the sum of variances (the AVQ
 //! objective) minimizes the aggregation error.
+//!
+//! Submissions produced by the shard coordinator
+//! ([`crate::coordinator::shard`]) need no special handling here: a
+//! shard-assembled [`CompressedVec`] is byte-identical to the single-node
+//! compression of the same gradient (the shard layer's contract), so the
+//! aggregate — and therefore training — is unaffected by how many shard
+//! nodes produced each uplink.
 
 use anyhow::{bail, Result};
 
@@ -124,6 +131,35 @@ mod tests {
     #[test]
     fn empty_rejected() {
         assert!(aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn sharded_submissions_aggregate_identically() {
+        // A shard-assembled compression is byte-identical to the solo
+        // one, so swapping it into a round changes nothing — not even the
+        // mean's bits.
+        use crate::coordinator::shard::{ShardConfig, ShardCoordinator};
+        let d = crate::par::CHUNK + 501;
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 77);
+        let solo = {
+            let sol = solve_hist(&xs, 8, &HistConfig::fixed(256)).unwrap();
+            let mut rng = Xoshiro256pp::seed_from_u64(9);
+            sq::compress(&xs, &sol.q, &mut rng)
+        };
+        let sharded = {
+            let coord = ShardCoordinator::new(ShardConfig {
+                shards: 4,
+                m: 256,
+                ..Default::default()
+            });
+            let mut rng = Xoshiro256pp::seed_from_u64(9);
+            coord.compress(&xs, 8, &mut rng).unwrap().1
+        };
+        assert_eq!(solo, sharded, "shard assembly must be byte-identical");
+        let a = aggregate(&[(0.5, solo.clone()), (0.5, solo)]).unwrap();
+        let b = aggregate(&[(0.5, sharded.clone()), (0.5, sharded)]).unwrap();
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.bytes, b.bytes);
     }
 
     #[test]

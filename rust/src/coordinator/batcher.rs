@@ -1,71 +1,59 @@
-//! Bounded job queue with batching and backpressure — the admission-control
-//! stage of the compression service.
+//! Bounded job queues with batching and backpressure — the
+//! admission-control stage of the compression service.
 //!
-//! Producers ([`Batcher::submit`] / [`Batcher::try_submit`]) enqueue jobs;
-//! a pool of solver threads pulls *batches* ([`Batcher::next_batch`]):
-//! up to `max_batch` jobs, waiting at most `max_wait` after the first
-//! arrival (classic size-or-timeout dynamic batching, as in serving
-//! systems). A full queue blocks (`submit`) or rejects (`try_submit` →
-//! protocol `Busy`) — backpressure instead of unbounded memory.
+//! Two queue flavours share the size-or-timeout pull discipline:
+//!
+//! * [`Batcher`] — plain FIFO. Producers ([`Batcher::submit`] /
+//!   [`Batcher::try_submit`]) enqueue jobs; a pool of solver threads
+//!   pulls *batches* ([`Batcher::next_batch`]): up to `max_batch` jobs,
+//!   waiting at most `max_wait` after the first arrival (classic
+//!   size-or-timeout dynamic batching, as in serving systems). A full
+//!   queue blocks (`submit`) or rejects (`try_submit` → protocol `Busy`)
+//!   — backpressure instead of unbounded memory.
+//! * [`Scheduler`] — the tenant-aware sibling the service runs on: every
+//!   job carries a [`TenantClass`] (priority level + optional deadline)
+//!   and pulls come out in scheduling order — priority first, earliest
+//!   deadline within a priority, FIFO within equals. It also exposes the
+//!   non-blocking [`Scheduler::try_next_batch`] that cross-batch
+//!   admission uses to pack several batches into one dispatch wave under
+//!   load.
+//!
+//! Both flavours share the **drain-on-close** semantics documented (and
+//! doctested) on [`Batcher::next_batch`]: closing never loses jobs, and
+//! residual batches are pulled without the linger.
 
-use std::collections::VecDeque;
+use std::collections::BinaryHeap;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Bounded multi-producer multi-consumer batching queue.
+/// Bounded multi-producer multi-consumer FIFO batching queue.
+///
+/// Since the tenant-aware [`Scheduler`] landed, `Batcher` is a thin
+/// wrapper over it with every job submitted as
+/// [`TenantClass::best_effort`]: equal classes pull in submission order,
+/// which *is* FIFO — so there is exactly one implementation of the
+/// bounded/linger/drain-on-close protocol to maintain, and the two
+/// flavours cannot drift.
 pub struct Batcher<T> {
-    inner: Mutex<Inner<T>>,
-    not_full: Condvar,
-    not_empty: Condvar,
-    capacity: usize,
-    max_batch: usize,
-    max_wait: Duration,
-}
-
-struct Inner<T> {
-    queue: VecDeque<T>,
-    closed: bool,
+    inner: Scheduler<T>,
 }
 
 impl<T> Batcher<T> {
     /// `capacity`: max queued jobs; `max_batch`: jobs per pull;
     /// `max_wait`: max linger after the first job of a batch arrives.
     pub fn new(capacity: usize, max_batch: usize, max_wait: Duration) -> Self {
-        assert!(capacity >= 1 && max_batch >= 1);
-        Self {
-            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
-            not_full: Condvar::new(),
-            not_empty: Condvar::new(),
-            capacity,
-            max_batch,
-            max_wait,
-        }
+        Self { inner: Scheduler::new(capacity, max_batch, max_wait) }
     }
 
     /// Blocking submit; returns `false` if the queue is closed.
     pub fn submit(&self, job: T) -> bool {
-        let mut g = self.inner.lock().unwrap();
-        while g.queue.len() >= self.capacity && !g.closed {
-            g = self.not_full.wait(g).unwrap();
-        }
-        if g.closed {
-            return false;
-        }
-        g.queue.push_back(job);
-        self.not_empty.notify_one();
-        true
+        self.inner.submit(job, TenantClass::best_effort())
     }
 
     /// Non-blocking submit; `Err(job)` when full or closed (caller replies
     /// `Busy`).
     pub fn try_submit(&self, job: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
-        if g.closed || g.queue.len() >= self.capacity {
-            return Err(job);
-        }
-        g.queue.push_back(job);
-        self.not_empty.notify_one();
-        Ok(())
+        self.inner.try_submit(job, TenantClass::best_effort())
     }
 
     /// Pull the next batch (blocking). `None` when closed **and** drained.
@@ -85,22 +73,199 @@ impl<T> Batcher<T> {
     /// and degrades to an untimed wait instead of panicking on `Instant`
     /// overflow.
     ///
+    /// ```
+    /// use std::time::Duration;
+    /// use quiver::coordinator::batcher::Batcher;
+    /// // Even with an unbounded linger, a closed batcher drains its
+    /// // residual jobs immediately (no `max_wait` stall), then reports
+    /// // exhaustion with `None`.
+    /// let b = Batcher::new(8, 2, Duration::MAX);
+    /// for i in 0..3 {
+    ///     assert!(b.submit(i));
+    /// }
+    /// b.close();
+    /// assert!(!b.submit(9), "producers fail after close");
+    /// assert_eq!(b.next_batch(), Some(vec![0, 1]));
+    /// assert_eq!(b.next_batch(), Some(vec![2]));
+    /// assert_eq!(b.next_batch(), None);
+    /// ```
+    ///
     /// [`close`]: Batcher::close
     pub fn next_batch(&self) -> Option<Vec<T>> {
+        self.inner.next_batch()
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.close()
+    }
+
+    /// Current depth (for metrics).
+    pub fn depth(&self) -> usize {
+        self.inner.depth()
+    }
+}
+
+/// Scheduling class of a submitted job: a priority level plus an optional
+/// deadline. Ordering only — the scheduler never drops late jobs (a
+/// missed deadline still completes; operators watch the service latency
+/// histograms for violations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TenantClass {
+    /// Priority level; higher pulls earlier. Default 0 (best effort).
+    pub priority: u8,
+    /// Optional absolute deadline. Within one priority level, earlier
+    /// deadlines pull first; jobs without a deadline pull last.
+    pub deadline: Option<Instant>,
+}
+
+impl TenantClass {
+    /// The default class: priority 0, no deadline.
+    pub fn best_effort() -> Self {
+        Self::default()
+    }
+
+    /// A class with priority `p` and no deadline.
+    pub fn with_priority(p: u8) -> Self {
+        Self { priority: p, deadline: None }
+    }
+
+    /// A best-effort-priority class whose deadline is `budget` from now.
+    pub fn with_deadline_in(budget: Duration) -> Self {
+        Self { priority: 0, deadline: Instant::now().checked_add(budget) }
+    }
+}
+
+/// One scheduled job. `Ord` encodes pull order (greater = pulls earlier):
+/// priority descending, then deadline ascending (none = last), then
+/// submission order — so the heap pop sequence is the schedule.
+struct Entry<T> {
+    class: TenantClass,
+    seq: u64,
+    job: T,
+}
+
+impl<T> Entry<T> {
+    fn rank(&self, other: &Self) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        self.class
+            .priority
+            .cmp(&other.class.priority)
+            .then_with(|| match (self.class.deadline, other.class.deadline) {
+                (None, None) => Ordering::Equal,
+                (Some(_), None) => Ordering::Greater, // a deadline beats none
+                (None, Some(_)) => Ordering::Less,
+                (Some(a), Some(b)) => b.cmp(&a), // earlier deadline is greater
+            })
+            // FIFO within equals: the smaller (earlier) seq is greater.
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.rank(other) == std::cmp::Ordering::Equal
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.rank(other)
+    }
+}
+
+/// Tenant-aware batching queue: [`Batcher`] semantics (bounded capacity,
+/// size-or-timeout pulls, drain-on-close), but pulls come out in
+/// [`TenantClass`] scheduling order instead of FIFO.
+///
+/// A job submitted *during* another consumer's linger can still outrank
+/// everything queued before it — scheduling order is evaluated at pull
+/// time, which is the point of the class system. Per-tenant RNG streams
+/// are unaffected by any of this: stream assignment happens after a batch
+/// is pulled (one base per pulled batch, tenant index within the batch),
+/// so reordering across *requests* never reorders the draws *within* a
+/// tenant's compression (see the service's determinism notes and
+/// `DESIGN.md`).
+pub struct Scheduler<T> {
+    inner: Mutex<SchedInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+struct SchedInner<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    closed: bool,
+}
+
+impl<T> Scheduler<T> {
+    /// `capacity`: max queued jobs; `max_batch`: jobs per pull;
+    /// `max_wait`: max linger after the first job of a batch arrives.
+    pub fn new(capacity: usize, max_batch: usize, max_wait: Duration) -> Self {
+        assert!(capacity >= 1 && max_batch >= 1);
+        Self {
+            inner: Mutex::new(SchedInner { heap: BinaryHeap::new(), seq: 0, closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+            max_batch,
+            max_wait,
+        }
+    }
+
+    /// Blocking submit; returns `false` if the queue is closed.
+    pub fn submit(&self, job: T, class: TenantClass) -> bool {
         let mut g = self.inner.lock().unwrap();
-        // Wait for the first job.
-        while g.queue.is_empty() {
+        while g.heap.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        let seq = g.seq;
+        g.seq += 1;
+        g.heap.push(Entry { class, seq, job });
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Non-blocking submit; `Err(job)` when full or closed (caller replies
+    /// `Busy`). Admission is class-blind by design: priority buys an
+    /// earlier *pull*, not a bigger queue share.
+    pub fn try_submit(&self, job: T, class: TenantClass) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.heap.len() >= self.capacity {
+            return Err(job);
+        }
+        let seq = g.seq;
+        g.seq += 1;
+        g.heap.push(Entry { class, seq, job });
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pull the next batch in scheduling order (blocking). `None` when
+    /// closed **and** drained. Same linger and drain-on-close semantics as
+    /// [`Batcher::next_batch`].
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        while g.heap.is_empty() {
             if g.closed {
                 return None;
             }
             g = self.not_empty.wait(g).unwrap();
         }
-        // Linger up to max_wait for the batch to fill — unless the
-        // batcher is already closed (drain-on-close: nothing can arrive).
-        if !g.closed && g.queue.len() < self.max_batch {
-            // `None` ⇒ effectively-infinite linger (checked_add overflow).
+        if !g.closed && g.heap.len() < self.max_batch {
             let deadline = Instant::now().checked_add(self.max_wait);
-            while g.queue.len() < self.max_batch && !g.closed {
+            while g.heap.len() < self.max_batch && !g.closed {
                 match deadline {
                     Some(deadline) => {
                         let now = Instant::now();
@@ -115,16 +280,38 @@ impl<T> Batcher<T> {
                         }
                     }
                     None => {
-                        // Untimed: woken by fill-up or close.
                         g = self.not_empty.wait(g).unwrap();
                     }
                 }
             }
         }
-        let take = g.queue.len().min(self.max_batch);
-        let batch: Vec<T> = g.queue.drain(..take).collect();
+        let batch = Self::pop_batch(&mut g, self.max_batch);
         self.not_full.notify_all();
         Some(batch)
+    }
+
+    /// Non-blocking pull: up to `max_batch` jobs in scheduling order, or
+    /// `None` when the queue is currently empty. No linger — this is the
+    /// cross-batch admission hook: a solver thread that just pulled a
+    /// batch calls this to pack *already-queued* work into the same
+    /// dispatch wave instead of paying one wave per batch under load.
+    pub fn try_next_batch(&self) -> Option<Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.heap.is_empty() {
+            return None;
+        }
+        let batch = Self::pop_batch(&mut g, self.max_batch);
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    fn pop_batch(g: &mut SchedInner<T>, max_batch: usize) -> Vec<T> {
+        let take = g.heap.len().min(max_batch);
+        let mut batch = Vec::with_capacity(take);
+        for _ in 0..take {
+            batch.push(g.heap.pop().expect("sized by heap length").job);
+        }
+        batch
     }
 
     /// Close the queue: producers fail, consumers drain then get `None`.
@@ -135,9 +322,9 @@ impl<T> Batcher<T> {
         self.not_full.notify_all();
     }
 
-    /// Current depth (for metrics).
+    /// Current depth (for metrics and admission decisions).
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        self.inner.lock().unwrap().heap.len()
     }
 }
 
@@ -261,6 +448,125 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         b.close();
+        for h in chandles {
+            h.join().unwrap();
+        }
+        let mut all = seen.lock().unwrap().clone();
+        all.sort_unstable();
+        assert_eq!(all, (0..producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scheduler_orders_by_priority_then_deadline_then_fifo() {
+        let s = Scheduler::new(64, 16, Duration::from_millis(1));
+        let now = Instant::now();
+        let soon = Some(now + Duration::from_millis(10));
+        let later = Some(now + Duration::from_millis(500));
+        // Submission order deliberately scrambled vs the schedule.
+        let subs: Vec<(&str, TenantClass)> = vec![
+            ("p0-fifo-a", TenantClass::best_effort()),
+            ("p2-later", TenantClass { priority: 2, deadline: later }),
+            ("p0-soon", TenantClass { priority: 0, deadline: soon }),
+            ("p2-soon", TenantClass { priority: 2, deadline: soon }),
+            ("p0-fifo-b", TenantClass::best_effort()),
+            ("p2-nodeadline", TenantClass::with_priority(2)),
+            ("p1", TenantClass::with_priority(1)),
+        ];
+        for (name, class) in subs {
+            assert!(s.submit(name, class));
+        }
+        let batch = s.next_batch().unwrap();
+        assert_eq!(
+            batch,
+            vec![
+                "p2-soon",       // highest priority, earliest deadline
+                "p2-later",      // highest priority, later deadline
+                "p2-nodeadline", // highest priority, deadline beats none
+                "p1",
+                "p0-soon",   // deadline pulls ahead of best-effort FIFO
+                "p0-fifo-a", // FIFO within equal class
+                "p0-fifo-b",
+            ]
+        );
+    }
+
+    #[test]
+    fn scheduler_try_next_batch_packs_without_linger() {
+        // The cross-batch admission hook: after one blocking pull, the
+        // queued remainder comes out max_batch at a time, non-blocking,
+        // still in scheduling order.
+        let s = Scheduler::new(64, 3, Duration::from_millis(1));
+        for i in 0..10 {
+            let class = TenantClass::with_priority(if i == 7 { 9 } else { 0 });
+            assert!(s.submit(i, class));
+        }
+        let first = s.next_batch().unwrap();
+        assert_eq!(first, vec![7, 0, 1], "priority 9 job leads the first pull");
+        let t0 = Instant::now();
+        assert_eq!(s.try_next_batch().unwrap(), vec![2, 3, 4]);
+        assert_eq!(s.try_next_batch().unwrap(), vec![5, 6, 8]);
+        assert_eq!(s.try_next_batch().unwrap(), vec![9]);
+        assert!(s.try_next_batch().is_none(), "empty queue yields None");
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "try_next_batch must never linger"
+        );
+        assert_eq!(s.depth(), 0);
+    }
+
+    #[test]
+    fn scheduler_backpressure_and_drain_on_close() {
+        let s = Scheduler::new(2, 2, Duration::MAX);
+        assert!(s.try_submit(1, TenantClass::best_effort()).is_ok());
+        assert!(s.try_submit(2, TenantClass::with_priority(5)).is_ok());
+        // Full queue rejects even the highest class: priority buys an
+        // earlier pull, not a bigger queue share.
+        assert_eq!(s.try_submit(3, TenantClass::with_priority(255)), Err(3));
+        assert_eq!(s.depth(), 2);
+        s.close();
+        assert!(!s.submit(4, TenantClass::best_effort()), "submit after close fails");
+        let t0 = Instant::now();
+        assert_eq!(s.next_batch().unwrap(), vec![2, 1], "drained in class order");
+        assert!(s.next_batch().is_none());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "drain-on-close must not wait out max_wait"
+        );
+    }
+
+    #[test]
+    fn scheduler_concurrent_producers_consumers_no_loss() {
+        let s = Arc::new(Scheduler::new(16, 5, Duration::from_millis(2)));
+        let producers = 4;
+        let per = 300;
+        let mut handles = vec![];
+        for p in 0..producers {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    let class = TenantClass::with_priority((i % 3) as u8);
+                    assert!(s.submit(p * per + i, class));
+                }
+            }));
+        }
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut chandles = vec![];
+        for _ in 0..3 {
+            let s = s.clone();
+            let seen = seen.clone();
+            chandles.push(std::thread::spawn(move || {
+                while let Some(batch) = s.next_batch() {
+                    seen.lock().unwrap().extend(batch);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        while seen.lock().unwrap().len() < producers * per {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        s.close();
         for h in chandles {
             h.join().unwrap();
         }

@@ -66,6 +66,17 @@ impl Writer {
         self
     }
 
+    /// Length-prefixed f64 slice (raw LE) — shard data and merged
+    /// statistics travel at full precision (bit-exactness is the shard
+    /// layer's contract; f32 truncation would break it).
+    pub fn f64s(&mut self, v: &[f64]) -> &mut Self {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
     /// Length-prefixed UTF-8 string.
     pub fn string(&mut self, s: &str) -> &mut Self {
         self.bytes(s.as_bytes())
@@ -169,6 +180,19 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
+    /// Read a `u64` count followed by that many `f64`s.
+    pub fn f64s(&mut self) -> R<Vec<f64>> {
+        let n = self.u64()? as usize;
+        if n.checked_mul(8).map_or(true, |b| b > self.remaining()) {
+            return Err(DecodeError("f64 slice length exceeds buffer"));
+        }
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     /// Read a length-prefixed UTF-8 string.
     pub fn string(&mut self) -> R<String> {
         String::from_utf8(self.bytes()?).map_err(|_| DecodeError("invalid utf-8"))
@@ -203,6 +227,7 @@ mod tests {
             .f64(-2.25)
             .bytes(&[1, 2, 3])
             .f32s(&[0.5, -0.5])
+            .f64s(&[1.25, -3.5, 0.1])
             .string("hello");
         let buf = w.finish();
         let mut r = Reader::new(&buf);
@@ -213,6 +238,7 @@ mod tests {
         assert_eq!(r.f64().unwrap(), -2.25);
         assert_eq!(r.bytes().unwrap(), vec![1, 2, 3]);
         assert_eq!(r.f32s().unwrap(), vec![0.5, -0.5]);
+        assert_eq!(r.f64s().unwrap(), vec![1.25, -3.5, 0.1]);
         assert_eq!(r.string().unwrap(), "hello");
         assert!(r.expect_end().is_ok());
     }
@@ -230,7 +256,7 @@ mod tests {
 
     #[test]
     fn malicious_length_rejected() {
-        // Claimed length of 2^60 f32s must not allocate.
+        // Claimed length of 2^60 elements must not allocate.
         let mut w = Writer::new();
         w.u64(1u64 << 60);
         let buf = w.finish();
@@ -238,6 +264,8 @@ mod tests {
         assert!(r.f32s().is_err());
         let mut r2 = Reader::new(&buf);
         assert!(r2.bytes().is_err());
+        let mut r3 = Reader::new(&buf);
+        assert!(r3.f64s().is_err());
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     /// Requests completed.
     pub completed: AtomicU64,
+    /// Batches coalesced into an already-pulled dispatch wave by
+    /// cross-batch admission (each counts the *extra* batches of a wave,
+    /// i.e. the pool handoffs saved under load).
+    pub packed: AtomicU64,
     /// Raw input bytes received.
     pub bytes_in: AtomicU64,
     /// Compressed bytes produced.
@@ -92,10 +96,11 @@ impl Metrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "accepted={} rejected={} completed={} ratio={:.2}x mean={:.0}µs p50={}µs p99={}µs solve_mean={:.0}µs",
+            "accepted={} rejected={} completed={} packed={} ratio={:.2}x mean={:.0}µs p50={}µs p99={}µs solve_mean={:.0}µs",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.packed.load(Ordering::Relaxed),
             self.ratio(),
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),

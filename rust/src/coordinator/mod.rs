@@ -1,6 +1,6 @@
 //! Layer 3: the Rust coordinator.
 //!
-//! Two deployments of the paper's algorithms as a *system*:
+//! Three deployments of the paper's algorithms as a *system*:
 //!
 //! * **Federated parameter server** ([`server`], [`worker`],
 //!   [`aggregator`], [`tasks`]): synchronous-round training where workers
@@ -8,8 +8,14 @@
 //!   AOT-compiled `model_grad` artifact through [`crate::runtime`] —
 //!   Python never runs on the request path.
 //! * **Compression service** ([`service`], [`batcher`], [`router`]): an
-//!   on-demand vector-quantization microservice with dynamic batching,
-//!   bounded-queue backpressure and size-based solver routing.
+//!   on-demand vector-quantization microservice with tenant-aware
+//!   scheduling (priority/deadline classes), dynamic batching plus
+//!   cross-batch admission under load, bounded-queue backpressure and
+//!   size-based solver routing.
+//! * **Shard coordinator** ([`shard`]): one 10⁸-coordinate vector split
+//!   across shard nodes — per-shard scans/histograms merge *exactly*, one
+//!   solve on the merged statistics, per-shard quantize/encode — with
+//!   results bitwise-identical to a single node for any shard count.
 //!
 //! Shared plumbing: binary [`codec`], framed [`protocol`], [`metrics`].
 
@@ -21,5 +27,56 @@ pub mod protocol;
 pub mod router;
 pub mod server;
 pub mod service;
+pub mod shard;
 pub mod tasks;
 pub mod worker;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// Shared nonblocking accept loop for the coordinator's TCP servers (the
+/// compression service and the shard node): poll until `stop` flips,
+/// hand each connection — nodelay set, switched back to blocking — to
+/// `on_conn` (which typically spawns the per-connection handler thread).
+///
+/// Accept errors other than `WouldBlock` are treated as **transient**
+/// (`ECONNABORTED` from an aborted handshake, a brief fd shortage, …):
+/// logged and retried after a short sleep, never a silent loop exit — a
+/// server that looks alive but no longer accepts is the worst failure
+/// mode. Only the stop flag ends the loop.
+pub(crate) fn run_accept_loop(
+    listener: &TcpListener,
+    stop: &AtomicBool,
+    mut on_conn: impl FnMut(TcpStream),
+) {
+    // Exponential backoff for persistent accept failures: first error
+    // logs and retries at 10 ms, doubling to a 1 s ceiling (one log line
+    // per retry, so a stuck listener costs ~1 line/s, not thousands);
+    // any success resets it.
+    const ERR_SLEEP_FLOOR: Duration = Duration::from_millis(10);
+    const ERR_SLEEP_CEIL: Duration = Duration::from_secs(1);
+    let mut err_sleep = ERR_SLEEP_FLOOR;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                err_sleep = ERR_SLEEP_FLOOR;
+                stream.set_nodelay(true).ok();
+                stream.set_nonblocking(false).ok();
+                on_conn(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                err_sleep = ERR_SLEEP_FLOOR;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                eprintln!("coordinator accept error (retrying in {err_sleep:?}): {e}");
+                std::thread::sleep(err_sleep);
+                err_sleep = (err_sleep * 2).min(ERR_SLEEP_CEIL);
+            }
+        }
+    }
+}

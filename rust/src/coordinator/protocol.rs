@@ -5,19 +5,29 @@
 //! frame  := len:u32 tag:u8 payload[len-1]
 //! ```
 //!
-//! Two services share the framing:
+//! Three services share the framing:
 //!
 //! * **Federated parameter server** (`Hello`/`Welcome`/`RoundStart`/
 //!   `GradSubmit`/`RoundResult`/`Shutdown`) — workers pull parameters,
 //!   push AVQ-compressed gradients.
 //! * **Compression service** (`CompressRequest`/`CompressReply`) — clients
-//!   submit raw vectors, the service returns the compressed form plus
-//!   solver statistics (the "AVQ as a microservice" deployment §1
-//!   motivates for, e.g., KV-cache or dataset quantization).
+//!   submit raw vectors (optionally tagged with a tenant priority class
+//!   and a deadline budget for the service scheduler), the service
+//!   returns the compressed form plus solver statistics (the "AVQ as a
+//!   microservice" deployment §1 motivates for, e.g., KV-cache or
+//!   dataset quantization).
+//! * **Shard nodes** (`ShardInit`/`ShardScanned`/`ShardHistRequest`/
+//!   `ShardWeights`/`ShardEncodeRequest`/`ShardPayload`) — the three
+//!   phases of the sharded solve ([`crate::coordinator::shard`]): ship a
+//!   chunk-aligned range, return per-chunk scan partials, count on the
+//!   merged grid, quantize+pack against the broadcast level set. All
+//!   shard payloads travel as raw `f64`/bytes because the shard layer's
+//!   contract is *bitwise* equality with the single-node solve.
 
 use std::io::{Read, Write};
 
 use super::codec::{DecodeError, Reader, Writer};
+use crate::par::scan::ChunkStats;
 use crate::sq::CompressedVec;
 
 /// Hard cap on frame size (guards the server against bogus lengths).
@@ -39,7 +49,19 @@ pub enum Msg {
     /// Server → worker: training finished.
     Shutdown,
     /// Client → compression service: quantize `data` to `s` values.
-    CompressRequest { request_id: u64, s: u32, data: Vec<f32> },
+    CompressRequest {
+        /// Client-chosen id echoed in the reply.
+        request_id: u64,
+        /// Quantization budget (number of values).
+        s: u32,
+        /// Tenant priority class (higher pulls earlier; 0 = best effort).
+        class: u8,
+        /// Deadline budget in milliseconds from receipt (0 = none); within
+        /// a priority class, earlier deadlines pull first.
+        deadline_ms: u32,
+        /// The raw vector to compress.
+        data: Vec<f32>,
+    },
     /// Compression service → client.
     CompressReply {
         request_id: u64,
@@ -51,9 +73,98 @@ pub enum Msg {
     },
     /// Either side: service is overloaded, retry later (backpressure).
     Busy { request_id: u64 },
+    /// Coordinator → shard node: adopt one chunk-aligned shard of a
+    /// sharded task. The node retains the data for the later phases and
+    /// immediately replies [`Msg::ShardScanned`].
+    ShardInit {
+        /// Task id echoed by every phase reply.
+        task_id: u64,
+        /// Global chunk index of the shard's first chunk (its start
+        /// offset divided by [`crate::par::CHUNK`]).
+        first_chunk: u64,
+        /// The shard's coordinates, at full precision.
+        data: Vec<f64>,
+    },
+    /// Shard node → coordinator: the shard's per-chunk scan partials, in
+    /// local chunk order — the coordinator folds all shards' partials in
+    /// global chunk order, reproducing the single-node scan bitwise.
+    ShardScanned {
+        /// Task id from [`Msg::ShardInit`].
+        task_id: u64,
+        /// Per-chunk min/max/‖·‖²/finiteness partials.
+        chunks: Vec<ChunkStats>,
+    },
+    /// Coordinator → shard node: run the stochastic count pass on the
+    /// merged global grid.
+    ShardHistRequest {
+        /// Task id from [`Msg::ShardInit`].
+        task_id: u64,
+        /// Number of grid intervals M (the grid has M+1 points).
+        m: u64,
+        /// Merged global minimum (grid origin).
+        lo: f64,
+        /// Merged global maximum (grid end).
+        hi: f64,
+        /// The one RNG base draw of the build; the node keys its chunk
+        /// streams as `stream(base, first_chunk + local_chunk)`.
+        base: u64,
+    },
+    /// Shard node → coordinator: the shard's M+1 bin counts (exact
+    /// integer values in f64; the coordinator sums them bin-wise).
+    ShardWeights {
+        /// Task id from [`Msg::ShardInit`].
+        task_id: u64,
+        /// Bin counts on the global grid.
+        weights: Vec<f64>,
+    },
+    /// Coordinator → shard node: quantize + bit-pack the shard against
+    /// the broadcast level set.
+    ShardEncodeRequest {
+        /// Task id from [`Msg::ShardInit`].
+        task_id: u64,
+        /// The solved quantization values (sorted ascending).
+        levels: Vec<f64>,
+        /// The one RNG base draw of the quantize pass (chunk streams keyed
+        /// as in [`Msg::ShardHistRequest`]).
+        qbase: u64,
+    },
+    /// Shard node → coordinator: the shard's bit-packed index payload
+    /// (byte-aligned because shard ranges are chunk-aligned; the
+    /// coordinator concatenates payloads in shard order).
+    ShardPayload {
+        /// Task id from [`Msg::ShardInit`].
+        task_id: u64,
+        /// Number of coordinates the payload covers.
+        d: u64,
+        /// Bit-packed indices.
+        payload: Vec<u8>,
+    },
 }
 
 impl Msg {
+    /// Compact variant name for logs and error messages — shard frames
+    /// carry up to [`MAX_FRAME`] bytes of data, so Debug-formatting a
+    /// whole message into an error string is never acceptable.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::Welcome { .. } => "Welcome",
+            Msg::RoundStart { .. } => "RoundStart",
+            Msg::GradSubmit { .. } => "GradSubmit",
+            Msg::RoundResult { .. } => "RoundResult",
+            Msg::Shutdown => "Shutdown",
+            Msg::CompressRequest { .. } => "CompressRequest",
+            Msg::CompressReply { .. } => "CompressReply",
+            Msg::Busy { .. } => "Busy",
+            Msg::ShardInit { .. } => "ShardInit",
+            Msg::ShardScanned { .. } => "ShardScanned",
+            Msg::ShardHistRequest { .. } => "ShardHistRequest",
+            Msg::ShardWeights { .. } => "ShardWeights",
+            Msg::ShardEncodeRequest { .. } => "ShardEncodeRequest",
+            Msg::ShardPayload { .. } => "ShardPayload",
+        }
+    }
+
     fn tag(&self) -> u8 {
         match self {
             Msg::Hello { .. } => 1,
@@ -65,10 +176,21 @@ impl Msg {
             Msg::CompressRequest { .. } => 7,
             Msg::CompressReply { .. } => 8,
             Msg::Busy { .. } => 9,
+            Msg::ShardInit { .. } => 10,
+            Msg::ShardScanned { .. } => 11,
+            Msg::ShardHistRequest { .. } => 12,
+            Msg::ShardWeights { .. } => 13,
+            Msg::ShardEncodeRequest { .. } => 14,
+            Msg::ShardPayload { .. } => 15,
         }
     }
 
     /// Serialize to a full frame (length prefix included).
+    ///
+    /// Panics if the body exceeds `u32::MAX` bytes — the length prefix
+    /// could not represent it and a silently wrapped prefix would corrupt
+    /// the stream. [`send`] additionally rejects anything over the much
+    /// smaller [`MAX_FRAME`] with a clean error before writing.
     pub fn to_frame(&self) -> Vec<u8> {
         let mut w = Writer::with_capacity(64);
         w.u8(self.tag());
@@ -89,8 +211,8 @@ impl Msg {
                 w.u64(*round).f32(*mean_loss);
             }
             Msg::Shutdown => {}
-            Msg::CompressRequest { request_id, s, data } => {
-                w.u64(*request_id).u32(*s).f32s(data);
+            Msg::CompressRequest { request_id, s, class, deadline_ms, data } => {
+                w.u64(*request_id).u32(*s).u8(*class).u32(*deadline_ms).f32s(data);
             }
             Msg::CompressReply { request_id, compressed, solver, solve_us } => {
                 w.u64(*request_id)
@@ -101,8 +223,34 @@ impl Msg {
             Msg::Busy { request_id } => {
                 w.u64(*request_id);
             }
+            Msg::ShardInit { task_id, first_chunk, data } => {
+                w.u64(*task_id).u64(*first_chunk).f64s(data);
+            }
+            Msg::ShardScanned { task_id, chunks } => {
+                w.u64(*task_id).u64(chunks.len() as u64);
+                for c in chunks {
+                    w.f64(c.lo).f64(c.hi).f64(c.norm2_sq).u8(u8::from(c.finite));
+                }
+            }
+            Msg::ShardHistRequest { task_id, m, lo, hi, base } => {
+                w.u64(*task_id).u64(*m).f64(*lo).f64(*hi).u64(*base);
+            }
+            Msg::ShardWeights { task_id, weights } => {
+                w.u64(*task_id).f64s(weights);
+            }
+            Msg::ShardEncodeRequest { task_id, levels, qbase } => {
+                w.u64(*task_id).f64s(levels).u64(*qbase);
+            }
+            Msg::ShardPayload { task_id, d, payload } => {
+                w.u64(*task_id).u64(*d).bytes(payload);
+            }
         }
         let body = w.finish();
+        assert!(
+            body.len() <= u32::MAX as usize,
+            "frame body of {} bytes cannot be length-prefixed",
+            body.len()
+        );
         let mut out = Vec::with_capacity(4 + body.len());
         out.extend_from_slice(&(body.len() as u32).to_le_bytes());
         out.extend_from_slice(&body);
@@ -128,7 +276,13 @@ impl Msg {
             }
             5 => Msg::RoundResult { round: r.u64()?, mean_loss: r.f32()? },
             6 => Msg::Shutdown,
-            7 => Msg::CompressRequest { request_id: r.u64()?, s: r.u32()?, data: r.f32s()? },
+            7 => Msg::CompressRequest {
+                request_id: r.u64()?,
+                s: r.u32()?,
+                class: r.u8()?,
+                deadline_ms: r.u32()?,
+                data: r.f32s()?,
+            },
             8 => {
                 let request_id = r.u64()?;
                 let blob = r.bytes()?;
@@ -139,6 +293,47 @@ impl Msg {
                 Msg::CompressReply { request_id, compressed, solver, solve_us }
             }
             9 => Msg::Busy { request_id: r.u64()? },
+            10 => Msg::ShardInit {
+                task_id: r.u64()?,
+                first_chunk: r.u64()?,
+                data: r.f64s()?,
+            },
+            11 => {
+                let task_id = r.u64()?;
+                let n = r.u64()? as usize;
+                // 25 wire bytes per chunk entry: reject bogus counts
+                // before allocating.
+                if n.checked_mul(25).map_or(true, |b| b > r.remaining()) {
+                    return Err(DecodeError("chunk-stats length exceeds buffer"));
+                }
+                let mut chunks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let lo = r.f64()?;
+                    let hi = r.f64()?;
+                    let norm2_sq = r.f64()?;
+                    let finite = match r.u8()? {
+                        0 => false,
+                        1 => true,
+                        _ => return Err(DecodeError("bad finite flag")),
+                    };
+                    chunks.push(ChunkStats { lo, hi, norm2_sq, finite });
+                }
+                Msg::ShardScanned { task_id, chunks }
+            }
+            12 => Msg::ShardHistRequest {
+                task_id: r.u64()?,
+                m: r.u64()?,
+                lo: r.f64()?,
+                hi: r.f64()?,
+                base: r.u64()?,
+            },
+            13 => Msg::ShardWeights { task_id: r.u64()?, weights: r.f64s()? },
+            14 => Msg::ShardEncodeRequest {
+                task_id: r.u64()?,
+                levels: r.f64s()?,
+                qbase: r.u64()?,
+            },
+            15 => Msg::ShardPayload { task_id: r.u64()?, d: r.u64()?, payload: r.bytes()? },
             _ => return Err(DecodeError("unknown message tag")),
         };
         r.expect_end()?;
@@ -147,8 +342,23 @@ impl Msg {
 }
 
 /// Write one frame to a stream.
+///
+/// Refuses (with `InvalidInput`) any message whose body exceeds
+/// [`MAX_FRAME`] **before** writing a byte: the length prefix is a `u32`,
+/// so an oversized body — e.g. a `ShardInit` shard of more than ~2²⁷
+/// coordinates — would otherwise be rejected only at the receiver, or
+/// (past 4 GiB) silently wrap the prefix and corrupt the stream. Split
+/// across more shard nodes instead.
 pub fn send(stream: &mut impl Write, msg: &Msg) -> std::io::Result<()> {
-    stream.write_all(&msg.to_frame())?;
+    let frame = msg.to_frame();
+    let body = frame.len().saturating_sub(4);
+    if body > MAX_FRAME as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame body of {body} bytes exceeds MAX_FRAME ({MAX_FRAME})"),
+        ));
+    }
+    stream.write_all(&frame)?;
     stream.flush()
 }
 
@@ -203,7 +413,13 @@ mod tests {
         });
         roundtrip(Msg::RoundResult { round: 9, mean_loss: 1.25 });
         roundtrip(Msg::Shutdown);
-        roundtrip(Msg::CompressRequest { request_id: 77, s: 16, data: vec![0.0; 100] });
+        roundtrip(Msg::CompressRequest {
+            request_id: 77,
+            s: 16,
+            class: 3,
+            deadline_ms: 250,
+            data: vec![0.0; 100],
+        });
         roundtrip(Msg::CompressReply {
             request_id: 77,
             compressed: sample_compressed(),
@@ -211,6 +427,32 @@ mod tests {
             solve_us: 1234,
         });
         roundtrip(Msg::Busy { request_id: 77 });
+        roundtrip(Msg::ShardInit {
+            task_id: 5,
+            first_chunk: 2,
+            data: vec![0.5, -1.25, 3.0],
+        });
+        roundtrip(Msg::ShardScanned {
+            task_id: 5,
+            chunks: vec![
+                ChunkStats { lo: -1.25, hi: 3.0, norm2_sq: 10.8125, finite: true },
+                ChunkStats { lo: 0.0, hi: 0.0, norm2_sq: 0.0, finite: false },
+            ],
+        });
+        roundtrip(Msg::ShardHistRequest {
+            task_id: 5,
+            m: 400,
+            lo: -1.25,
+            hi: 3.0,
+            base: 0xDEAD_BEEF,
+        });
+        roundtrip(Msg::ShardWeights { task_id: 5, weights: vec![1.0, 0.0, 2.0] });
+        roundtrip(Msg::ShardEncodeRequest {
+            task_id: 5,
+            levels: vec![-1.25, 0.5, 3.0],
+            qbase: 42,
+        });
+        roundtrip(Msg::ShardPayload { task_id: 5, d: 3, payload: vec![0b_0110] });
     }
 
     #[test]

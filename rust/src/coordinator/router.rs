@@ -6,6 +6,7 @@
 //! encodes that crossover, plus a latency-budget override so operators can
 //! trade error for tail latency per deployment.
 
+use super::shard;
 use crate::avq::histogram::{solve_hist, HistConfig};
 use crate::avq::{self, Solution, SolverKind};
 
@@ -18,6 +19,11 @@ pub struct RouterConfig {
     pub hist_m: usize,
     /// Seed for the histogram's stochastic rounding.
     pub seed: u64,
+    /// Split histogram-route solves across this many chunk-aligned shard
+    /// ranges (`coordinator::shard`); 1 = off. Results are
+    /// bitwise-identical either way — sharding only changes where the
+    /// O(d) phases run.
+    pub shards: usize,
 }
 
 impl Default for RouterConfig {
@@ -25,7 +31,7 @@ impl Default for RouterConfig {
         // 64K crossover keeps worst-case service latency in the low
         // milliseconds on this hardware while staying exactly optimal for
         // the bulk of gradient-sized requests.
-        Self { exact_max_d: 1 << 16, hist_m: 400, seed: 0xA11CE }
+        Self { exact_max_d: 1 << 16, hist_m: 400, seed: 0xA11CE, shards: 1 }
     }
 }
 
@@ -36,6 +42,14 @@ pub enum Route {
     Exact,
     /// O(d + s·M) histogram path (no sort needed).
     Hist { m: usize },
+    /// The histogram path, split across shard ranges by the
+    /// [`shard`] coordinator — bitwise-identical to [`Route::Hist`].
+    ShardedHist {
+        /// Histogram bins.
+        m: usize,
+        /// Shard count.
+        shards: usize,
+    },
 }
 
 impl Route {
@@ -44,6 +58,7 @@ impl Route {
         match self {
             Route::Exact => "quiver-accel".into(),
             Route::Hist { m } => format!("quiver-hist(M={m})"),
+            Route::ShardedHist { m, shards } => format!("quiver-hist(M={m})x{shards}shards"),
         }
     }
 }
@@ -65,6 +80,8 @@ impl Router {
     pub fn route(&self, d: usize) -> Route {
         if d <= self.cfg.exact_max_d {
             Route::Exact
+        } else if self.cfg.shards > 1 {
+            Route::ShardedHist { m: self.cfg.hist_m, shards: self.cfg.shards }
         } else {
             Route::Hist { m: self.cfg.hist_m }
         }
@@ -84,6 +101,10 @@ impl Router {
             Route::Hist { m } => {
                 let cfg = HistConfig { m, inner: SolverKind::QuiverAccel, seed: self.cfg.seed };
                 solve_hist(xs, s, &cfg)?
+            }
+            Route::ShardedHist { m, shards } => {
+                let cfg = HistConfig { m, inner: SolverKind::QuiverAccel, seed: self.cfg.seed };
+                shard::solve_hist_sharded(xs, s, &cfg, shards)?
             }
         };
         Ok((sol, route))
@@ -114,7 +135,7 @@ mod tests {
 
     #[test]
     fn crossover_at_exact_max_d() {
-        let r = Router::new(RouterConfig { exact_max_d: 1000, hist_m: 100, seed: 1 });
+        let r = Router::new(RouterConfig { exact_max_d: 1000, hist_m: 100, seed: 1, shards: 1 });
         assert_eq!(r.route(1000), Route::Exact);
         assert_eq!(r.route(1001), Route::Hist { m: 100 });
         assert_eq!(r.route(1), Route::Exact);
@@ -136,7 +157,7 @@ mod tests {
     #[test]
     fn hist_route_near_optimal() {
         let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(100_000, 4);
-        let r = Router::new(RouterConfig { exact_max_d: 1 << 10, hist_m: 512, seed: 2 });
+        let r = Router::new(RouterConfig { exact_max_d: 1 << 10, hist_m: 512, seed: 2, shards: 1 });
         let (sol, route) = r.solve(&xs, 8).unwrap();
         assert_eq!(route, Route::Hist { m: 512 });
         let mut sorted = xs.clone();
@@ -151,13 +172,42 @@ mod tests {
     fn labels_are_stable() {
         assert_eq!(Route::Exact.label(), "quiver-accel");
         assert_eq!(Route::Hist { m: 400 }.label(), "quiver-hist(M=400)");
+        assert_eq!(
+            Route::ShardedHist { m: 400, shards: 8 }.label(),
+            "quiver-hist(M=400)x8shards"
+        );
+    }
+
+    #[test]
+    fn sharded_route_matches_hist_route_bitwise() {
+        // Turning sharding on must be invisible in results: same levels,
+        // same positions, same objective, down to the bit.
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(100_000, 6);
+        let base = RouterConfig { exact_max_d: 1 << 10, hist_m: 256, seed: 12, shards: 1 };
+        let plain = Router::new(base);
+        let sharded = Router::new(RouterConfig { shards: 4, ..base });
+        assert_eq!(plain.route(xs.len()), Route::Hist { m: 256 });
+        assert_eq!(
+            sharded.route(xs.len()),
+            Route::ShardedHist { m: 256, shards: 4 }
+        );
+        // Below the crossover both stay exact.
+        assert_eq!(sharded.route(1000), Route::Exact);
+        let (a, _) = plain.solve(&xs, 8).unwrap();
+        let (b, _) = sharded.solve(&xs, 8).unwrap();
+        assert_eq!(a.q_idx, b.q_idx);
+        assert_eq!(
+            a.q.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.q.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.mse.to_bits(), b.mse.to_bits());
     }
 
     #[test]
     fn solve_batch_matches_solo_solves() {
         // Mixed routes in one batch; every per-tenant result must equal
         // the one-request-at-a-time path bitwise.
-        let r = Router::new(RouterConfig { exact_max_d: 2048, hist_m: 128, seed: 11 });
+        let r = Router::new(RouterConfig { exact_max_d: 2048, hist_m: 128, seed: 11, shards: 1 });
         let vecs: Vec<Vec<f64>> = (0..6u64)
             .map(|t| {
                 let d = if t % 2 == 0 { 1024 } else { 5000 }; // exact | hist

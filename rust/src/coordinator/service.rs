@@ -5,15 +5,29 @@
 //! Architecture (vLLM-router-like, scaled to this problem):
 //!
 //! ```text
-//! conn threads ──try_submit──▶ Batcher (bounded, linger) ──▶ solver pool
-//!      ▲                            │ full → Busy               │
-//!      └────────── CompressReply ◀──┴───────────────────────────┘
+//! conn threads ──try_submit──▶ Scheduler (bounded, classed, linger) ──▶ solver pool
+//!      ▲                            │ full → Busy                          │
+//!      └────────── CompressReply ◀──┴──────────────────────────────────────┘
 //! ```
 //!
 //! * Admission control: a full queue answers `Busy` instead of queueing
 //!   unboundedly (backpressure).
+//! * Tenant-aware scheduling: requests carry a priority class and an
+//!   optional deadline budget (`CompressRequest::class`/`deadline_ms`);
+//!   the [`Scheduler`] pulls batches in priority → earliest-deadline →
+//!   FIFO order, so latency-sensitive tenants jump the queue without
+//!   starving correctness (ordering only, nothing is dropped).
+//! * Cross-batch admission ([`ServiceConfig::admission`]): under load a
+//!   solver thread that pulled a batch also drains up to `admission − 1`
+//!   more *already-queued* batches (non-blocking) and serves them all as
+//!   **one** dispatch wave — one sealed pool handoff for several batches
+//!   instead of one per batch. Packing never reorders per-tenant RNG
+//!   streams: each pulled batch draws its own base, in pull order, and
+//!   tenant `j` of a batch keeps `stream(base_batch, j)` exactly as if
+//!   its batch were served alone.
 //! * Routing: [`super::router::Router`] — exact Acc-QUIVER below the size
-//!   crossover, QUIVER-Hist above it.
+//!   crossover, QUIVER-Hist above it (optionally sharded,
+//!   `RouterConfig::shards`).
 //! * Metrics: counters + latency histograms ([`super::metrics`]).
 //! * Data parallelism: each solver thread hands its job's whole-vector
 //!   O(d) passes (f32→f64 widening, scan, sort/histogram, quantize,
@@ -38,7 +52,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::Batcher;
+use super::batcher::{Scheduler, TenantClass};
 use super::metrics::Metrics;
 use super::protocol::{recv, send, Msg};
 use super::router::Router;
@@ -69,6 +83,22 @@ pub struct ServiceConfig {
     /// parallelism has nothing to split anyway, so tenant-level
     /// parallelism is strictly better.
     pub batch_small_d: usize,
+    /// Cross-batch admission: the maximum number of pulled batches one
+    /// solver thread packs into a single dispatch wave. After a blocking
+    /// pull it drains up to `admission − 1` further batches
+    /// *non-blocking* ([`Scheduler::try_next_batch`]), so packing only
+    /// happens when the queue is actually backed up. 1 (the default)
+    /// disables packing. Per-tenant results are identical either way —
+    /// see the module docs for the stream-preservation argument.
+    ///
+    /// Trade-off: packing buys handoff throughput at the cost of wave
+    /// latency — the first (highest-priority) batch's replies are sent
+    /// only after the whole wave computes, so under load its tenants
+    /// wait for up to `admission − 1` lower-priority batches of compute.
+    /// Deployments with strict priority/deadline classes should keep
+    /// `admission` small (or 1); throughput-oriented single-class
+    /// deployments can raise it freely.
+    pub admission: usize,
 }
 
 impl Default for ServiceConfig {
@@ -82,6 +112,7 @@ impl Default for ServiceConfig {
             router: Router::default(),
             seed: 0x5E71CE,
             batch_small_d: crate::par::CHUNK,
+            admission: 1,
         }
     }
 }
@@ -101,7 +132,7 @@ pub struct Service {
     /// Live service counters and latency histograms.
     pub metrics: Arc<Metrics>,
     joins: Vec<std::thread::JoinHandle<()>>,
-    batcher: Arc<Batcher<Job>>,
+    sched: Arc<Scheduler<Job>>,
 }
 
 impl Service {
@@ -112,12 +143,13 @@ impl Service {
         let addr = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::default());
-        let batcher = Arc::new(Batcher::new(cfg.queue_capacity, cfg.max_batch, cfg.max_wait));
+        let sched = Arc::new(Scheduler::new(cfg.queue_capacity, cfg.max_batch, cfg.max_wait));
         let mut joins = Vec::new();
 
         // Solver pool.
+        let admission = cfg.admission.max(1);
         for t in 0..cfg.threads.max(1) {
-            let batcher = batcher.clone();
+            let sched = sched.clone();
             let metrics = metrics.clone();
             let router = cfg.router;
             let batch_small_d = cfg.batch_small_d;
@@ -126,48 +158,50 @@ impl Service {
                 std::thread::Builder::new()
                     .name(format!("avq-solver-{t}"))
                     .spawn(move || {
-                        while let Some(batch) = batcher.next_batch() {
-                            serve_batch(batch, &router, &metrics, &mut rng, batch_small_d);
+                        while let Some(first) = sched.next_batch() {
+                            // Cross-batch admission: pack already-queued
+                            // batches (non-blocking) into the same wave.
+                            let mut groups = vec![first];
+                            while groups.len() < admission {
+                                match sched.try_next_batch() {
+                                    Some(b) => groups.push(b),
+                                    None => break,
+                                }
+                            }
+                            if groups.len() > 1 {
+                                metrics.add(&metrics.packed, (groups.len() - 1) as u64);
+                            }
+                            serve_groups(groups, &router, &metrics, &mut rng, batch_small_d);
                         }
                     })
                     .expect("spawn solver"),
             );
         }
 
-        // Accept loop (nonblocking poll so shutdown is prompt).
+        // Accept loop (shared nonblocking poll so shutdown is prompt and
+        // transient accept errors never kill the server).
         {
             let stop = stop.clone();
-            let batcher = batcher.clone();
+            let sched = sched.clone();
             let metrics = metrics.clone();
             joins.push(
                 std::thread::Builder::new()
                     .name("avq-accept".into())
-                    .spawn(move || loop {
-                        if stop.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        match listener.accept() {
-                            Ok((stream, _)) => {
-                                stream.set_nodelay(true).ok();
-                                stream.set_nonblocking(false).ok();
-                                let batcher = batcher.clone();
-                                let metrics = metrics.clone();
-                                let stop = stop.clone();
-                                std::thread::spawn(move || {
-                                    handle_conn(stream, &batcher, &metrics, &stop);
-                                });
-                            }
-                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(Duration::from_millis(2));
-                            }
-                            Err(_) => break,
-                        }
+                    .spawn(move || {
+                        super::run_accept_loop(&listener, &stop, |stream| {
+                            let sched = sched.clone();
+                            let metrics = metrics.clone();
+                            let stop = stop.clone();
+                            std::thread::spawn(move || {
+                                handle_conn(stream, &sched, &metrics, &stop);
+                            });
+                        });
                     })
                     .expect("spawn accept"),
             );
         }
 
-        Ok(Self { addr, stop, metrics, joins, batcher })
+        Ok(Self { addr, stop, metrics, joins, sched })
     }
 
     /// Bound address (`host:port`).
@@ -178,7 +212,7 @@ impl Service {
     /// Stop accepting, drain the queue, join all threads.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        self.batcher.close();
+        self.sched.close();
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
@@ -187,7 +221,7 @@ impl Service {
 
 fn handle_conn(
     stream: TcpStream,
-    batcher: &Batcher<Job>,
+    sched: &Scheduler<Job>,
     metrics: &Metrics,
     stop: &AtomicBool,
 ) {
@@ -201,7 +235,7 @@ fn handle_conn(
             break;
         }
         match recv(&mut rd) {
-            Ok(Some(Msg::CompressRequest { request_id, s, data })) => {
+            Ok(Some(Msg::CompressRequest { request_id, s, class, deadline_ms, data })) => {
                 metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
                 let job = Job {
                     request_id,
@@ -210,11 +244,21 @@ fn handle_conn(
                     accepted_at: Instant::now(),
                     reply: reply.clone(),
                 };
+                let tclass = TenantClass {
+                    priority: class,
+                    ..if deadline_ms > 0 {
+                        TenantClass::with_deadline_in(Duration::from_millis(u64::from(
+                            deadline_ms,
+                        )))
+                    } else {
+                        TenantClass::best_effort()
+                    }
+                };
                 // Count *before* submitting: once queued, a solver thread
                 // may reply (and the client observe metrics) before this
                 // thread runs again.
                 metrics.add(&metrics.accepted, 1);
-                match batcher.try_submit(job) {
+                match sched.try_submit(job, tclass) {
                     Ok(()) => {}
                     Err(job) => {
                         metrics.accepted.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
@@ -232,49 +276,61 @@ fn handle_conn(
     }
 }
 
-/// Serve one pulled batch.
+/// Serve one or more pulled batches as a single dispatch wave (the
+/// `groups.len() == 1` case is the classic one-batch path; more groups
+/// arrive via cross-batch admission).
 ///
-/// Draws **one** base `u64` from the solver thread's generator and gives
-/// tenant `j` of the batch its own derived stream
-/// ([`Xoshiro256pp::stream(base, j)`](Xoshiro256pp::stream)) — so a
-/// tenant's compression is a pure function of `(base, j, data)`, identical
-/// whether it runs in the packed wave, on the large-job path, or alone in
-/// a batch of one (`tests/par_invariance.rs` asserts the equivalent
-/// property on [`crate::sq::compress_batch`]).
+/// Draws **one** base `u64` per pulled batch, in pull order, and gives
+/// tenant `j` of batch `g` its own derived stream
+/// ([`Xoshiro256pp::stream(base_g, j)`](Xoshiro256pp::stream)) — so a
+/// tenant's compression is a pure function of `(base_g, j, data)`,
+/// identical whether its batch is served alone, packed with others into
+/// one wave, or the tenant runs on the large-job path
+/// (`tests/par_invariance.rs` asserts the equivalent property on
+/// [`crate::sq::compress_batch`]). Packing therefore may not — and does
+/// not — reorder per-tenant streams; this is normative in `DESIGN.md`.
 ///
-/// Small jobs (`d ≤ batch_small_d`) compute their replies in a single
-/// [`crate::par::dispatch_batch`] wave; large jobs run one at a time so
-/// each can fan its own O(d) passes out across every worker. The socket
-/// writes all happen here on the solver thread, **after** the wave — a
-/// slow client blocking on `send` must stall this solver thread only,
-/// never the process-wide compute pool.
-fn serve_batch(
-    batch: Vec<Job>,
+/// Small jobs (`d ≤ batch_small_d`) from **all** groups compute their
+/// replies in a single [`crate::par::dispatch_batch`] wave; large jobs
+/// run one at a time so each can fan its own O(d) passes out across
+/// every worker. The socket writes all happen here on the solver thread,
+/// **after** the wave — a slow client blocking on `send` must stall this
+/// solver thread only, never the process-wide compute pool.
+fn serve_groups(
+    groups: Vec<Vec<Job>>,
     router: &Router,
     metrics: &Metrics,
     rng: &mut Xoshiro256pp,
     batch_small_d: usize,
 ) {
-    if batch.is_empty() {
-        return;
-    }
-    let base = rng.next_u64();
-    let mut small: Vec<(usize, Job)> = Vec::new();
-    let mut large: Vec<(usize, Job)> = Vec::new();
-    for (tenant, job) in batch.into_iter().enumerate() {
-        if job.data.len() <= batch_small_d {
-            small.push((tenant, job));
-        } else {
-            large.push((tenant, job));
+    // One base per pulled batch, in pull order — the same draws the
+    // solver thread would make serving the batches back to back.
+    let mut small: Vec<(u64, usize, Job)> = Vec::new();
+    let mut large: Vec<(u64, usize, Job)> = Vec::new();
+    for group in groups {
+        if group.is_empty() {
+            // A concurrent try_next_batch can drain the queue during
+            // another consumer's linger, so a pull may come back empty;
+            // an empty batch must not consume a base draw.
+            continue;
+        }
+        let base = rng.next_u64();
+        for (tenant, job) in group.into_iter().enumerate() {
+            if job.data.len() <= batch_small_d {
+                small.push((base, tenant, job));
+            } else {
+                large.push((base, tenant, job));
+            }
         }
     }
     // Compute-only wave: no I/O inside shared pool workers.
-    let mut served: Vec<(Job, Msg)> = crate::par::dispatch_batch(small, |_, (tenant, job)| {
-        let mut trng = Xoshiro256pp::stream(base, tenant as u64);
-        let reply = compute_reply(&job, router, metrics, &mut trng);
-        (job, reply)
-    });
-    for (tenant, job) in large {
+    let mut served: Vec<(Job, Msg)> =
+        crate::par::dispatch_batch(small, |_, (base, tenant, job)| {
+            let mut trng = Xoshiro256pp::stream(base, tenant as u64);
+            let reply = compute_reply(&job, router, metrics, &mut trng);
+            (job, reply)
+        });
+    for (base, tenant, job) in large {
         let mut trng = Xoshiro256pp::stream(base, tenant as u64);
         let reply = compute_reply(&job, router, metrics, &mut trng);
         served.push((job, reply));
@@ -286,7 +342,7 @@ fn serve_batch(
 
 /// Compute one job's reply: widen, route-solve, quantize, bit-pack. Pure
 /// compute — safe to run on a pool worker. `rng` is the job's own derived
-/// stream (see [`serve_batch`]).
+/// stream (see [`serve_groups`]).
 fn compute_reply(job: &Job, router: &Router, metrics: &Metrics, rng: &mut Xoshiro256pp) -> Msg {
     let t0 = Instant::now();
     let xs: Vec<f64> = crate::par::map_elems(&job.data, |&x| x as f64);
@@ -309,7 +365,7 @@ fn compute_reply(job: &Job, router: &Router, metrics: &Metrics, rng: &mut Xoshir
 
 /// Write one computed reply back to its connection and settle the
 /// completion metrics. Runs on the solver thread only (blocking TCP
-/// send; see [`serve_batch`]).
+/// send; see [`serve_groups`]).
 fn send_reply(job: Job, reply: Msg, metrics: &Metrics) {
     let mut w = job.reply.lock().unwrap();
     let _ = send(&mut *w, &reply);
@@ -320,11 +376,30 @@ fn send_reply(job: Job, reply: Msg, metrics: &Metrics) {
         .record_us(job.accepted_at.elapsed().as_micros().max(1) as u64);
 }
 
-/// Blocking client helper: compress `data` remotely.
+/// Blocking client helper: compress `data` remotely as a best-effort
+/// tenant (priority 0, no deadline).
 pub fn compress_remote(addr: &str, request_id: u64, s: u32, data: &[f32]) -> Result<Msg> {
+    compress_remote_with(addr, request_id, s, 0, 0, data)
+}
+
+/// [`compress_remote`] with an explicit tenant class: `class` is the
+/// scheduler priority (higher pulls earlier) and `deadline_ms` a deadline
+/// budget in milliseconds from receipt (0 = none). The CLI exposes these
+/// as `quiver client --tenant-class N --deadline-ms MS`.
+pub fn compress_remote_with(
+    addr: &str,
+    request_id: u64,
+    s: u32,
+    class: u8,
+    deadline_ms: u32,
+    data: &[f32],
+) -> Result<Msg> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
     stream.set_nodelay(true).ok();
-    send(&mut stream, &Msg::CompressRequest { request_id, s, data: data.to_vec() })?;
+    send(
+        &mut stream,
+        &Msg::CompressRequest { request_id, s, class, deadline_ms, data: data.to_vec() },
+    )?;
     let mut rd = std::io::BufReader::new(stream);
     recv(&mut rd)?.context("service closed the connection")
 }
@@ -339,6 +414,7 @@ mod tests {
         assert!(c.threads >= 1);
         assert!(c.queue_capacity >= c.max_batch);
         assert_eq!(c.batch_small_d, crate::par::CHUNK);
+        assert_eq!(c.admission, 1, "cross-batch packing is opt-in");
     }
     // Live service round-trips are tested in
     // rust/tests/coordinator_integration.rs.

@@ -1,0 +1,634 @@
+//! Shard-scale coordination: solve one huge vector (d up to 10⁸ and
+//! beyond) across many shard nodes with **zero accuracy loss**.
+//!
+//! The paper's practicality claim is that AVQ's expensive per-input
+//! statistics decompose: the stochastic histogram of §5–§6 is a sum of
+//! per-range histograms, so the solve splits into three cheap phases with
+//! exact merges in between:
+//!
+//! ```text
+//!            ┌─ shard 0: scan ──┐        ┌─ shard 0: count ─┐        ┌─ shard 0: quantize+pack ─┐
+//! split ─────┼─ shard 1: scan ──┼─ fold ─┼─ shard 1: count ─┼─ solve ┼─ shard 1: quantize+pack ─┼─ assemble
+//!            └─ shard k: scan ──┘ (exact)└─ shard k: count ─┘ (once) └─ shard k: quantize+pack ─┘  (concat)
+//! ```
+//!
+//! 1. **Scan** — each shard computes the per-chunk min/max/‖·‖²/finite
+//!    partials of its range ([`crate::par::scan::chunk_stats`]); the
+//!    coordinator folds all partials in global chunk order
+//!    ([`crate::par::scan::fold_stats`]) — byte-for-byte the single-node
+//!    reduction tree.
+//! 2. **Count** — the coordinator broadcasts the merged `[lo, hi]` grid
+//!    and the build's one RNG base; each shard runs the stochastic count
+//!    pass ([`GridHistogram::shard_counts`]) with chunk streams keyed by
+//!    *global* chunk index; bin counts merge by exact integer addition
+//!    ([`GridHistogram::from_shards`]). One solver run on the merged
+//!    histogram picks the level set.
+//! 3. **Encode** — the level set is broadcast back; each shard
+//!    stochastically quantizes ([`crate::sq::quantize_shard`]) and
+//!    bit-packs its range; the byte-aligned payloads concatenate
+//!    ([`crate::sq::assemble`]) into the exact single-node
+//!    [`CompressedVec`].
+//!
+//! # Why this is bitwise-exact
+//!
+//! The [`ShardPlan`] cuts the input on [`par::CHUNK`] boundaries only, so
+//! a shard's local chunk `c` *is* global chunk `first_chunk + c` — it
+//! sees the identical derived RNG stream, computes the identical counts
+//! and picks, and owns the identical byte window of the packed payload,
+//! no matter which node runs it. Every merge is either exact (integer
+//! bin counts, min/max, byte concatenation) or follows the single-node
+//! reduction tree (the chunk-ordered ‖X‖² fold over shipped per-chunk
+//! partials). The shard count is therefore as invisible to results as
+//! the thread count: `tests/shard_invariance.rs` asserts bit equality of
+//! the merged histogram, the chosen levels, and the encoded payloads
+//! across 1/2/4/8 shards × both executor backends.
+//!
+//! # Deployments
+//!
+//! * **In-process** ([`ShardCoordinator::solve`] /
+//!   [`ShardCoordinator::compress`]) — shards are slices; each phase runs
+//!   as one [`par::dispatch_batch`] wave (one sealed pool handoff per
+//!   phase, shards load-balanced across workers). This is how the
+//!   [`Router`](super::router::Router) serves its sharded-histogram route.
+//! * **Across nodes** ([`ShardNode`] + [`ShardCoordinator::compress_remote`])
+//!   — shard nodes serve the three phases over the framed TCP
+//!   [`protocol`](super::protocol) (`ShardInit`/`ShardScanned`/
+//!   `ShardHistRequest`/`ShardWeights`/`ShardEncodeRequest`/
+//!   `ShardPayload`); the coordinator drives them in lockstep and merges
+//!   exactly as in-process. `quiver shard-node` runs a standalone node;
+//!   `quiver solve --shard-nodes a,b,c` drives them.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::{recv, send, Msg, MAX_FRAME};
+use crate::avq::histogram::{solve_on, GridHistogram, HistConfig};
+use crate::avq::{AvqError, Solution, SolverKind};
+use crate::par;
+use crate::par::scan::ChunkStats;
+use crate::sq::{self, CompressedVec};
+use crate::util::rng::Xoshiro256pp;
+
+/// How one input splits into chunk-aligned shard ranges.
+///
+/// Chunks ([`par::CHUNK`] elements each) are distributed across shards as
+/// evenly as possible; every shard therefore starts on a chunk boundary
+/// and only the last non-empty shard may end mid-chunk (the input's
+/// ragged tail). With more shards than chunks, the trailing shards are
+/// empty — harmless, they contribute nothing to any phase.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Total input dimension.
+    pub d: usize,
+    /// Per-shard element ranges `[lo, hi)`, contiguous and covering `0..d`.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Split `d` elements across `shards` chunk-aligned ranges.
+    pub fn new(d: usize, shards: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        let n_chunks = d.div_ceil(par::CHUNK);
+        let base = n_chunks / shards;
+        let extra = n_chunks % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut chunk_lo = 0usize;
+        for k in 0..shards {
+            let chunk_hi = chunk_lo + base + usize::from(k < extra);
+            ranges.push(((chunk_lo * par::CHUNK).min(d), (chunk_hi * par::CHUNK).min(d)));
+            chunk_lo = chunk_hi;
+        }
+        Self { d, ranges }
+    }
+
+    /// Number of shards (including empty ones).
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Global chunk index of shard `k`'s first chunk (meaningful for
+    /// non-empty shards; empty shards run no chunks at all).
+    pub fn first_chunk(&self, k: usize) -> u64 {
+        (self.ranges[k].0 / par::CHUNK) as u64
+    }
+
+    /// The per-shard slices of `xs` (which must have length `d`).
+    pub fn slices<'a>(&self, xs: &'a [f64]) -> Vec<&'a [f64]> {
+        assert_eq!(xs.len(), self.d, "plan was built for a different dimension");
+        self.ranges.iter().map(|&(lo, hi)| &xs[lo..hi]).collect()
+    }
+}
+
+/// Build the stochastic histogram of `xs` split across `shards` shard
+/// ranges — bitwise-identical to [`GridHistogram::build`] for **any**
+/// shard count, including 1.
+///
+/// Mirrors `build`'s RNG contract exactly: consumes one draw from `rng`
+/// (the stream base) and returns the same errors on empty or non-finite
+/// input. Each phase (scan, count) runs the shards as one
+/// [`par::dispatch_batch`] wave.
+pub fn build_sharded(
+    xs: &[f64],
+    m: usize,
+    rng: &mut Xoshiro256pp,
+    shards: usize,
+) -> Result<GridHistogram, AvqError> {
+    if xs.is_empty() {
+        return Err(AvqError::EmptyInput);
+    }
+    assert!(m >= 1, "need at least one bin");
+    let base = rng.next_u64();
+    let plan = ShardPlan::new(xs.len(), shards);
+    let slices = plan.slices(xs);
+    // Phase 1: per-shard scan partials, folded in global chunk order.
+    let parts: Vec<Vec<ChunkStats>> =
+        par::dispatch_batch(slices.clone(), |_, slice| par::scan::chunk_stats(slice));
+    let st = par::scan::fold_stats(parts.into_iter().flatten());
+    if !st.finite {
+        return Err(AvqError::NonFinite);
+    }
+    if st.hi == st.lo {
+        return GridHistogram::from_shards(m, st, xs.len(), &[]);
+    }
+    // Phase 2: per-shard counts on the merged grid, global-chunk streams.
+    let weights: Vec<Vec<f64>> = par::dispatch_batch(slices, |k, slice| {
+        GridHistogram::shard_counts(slice, m, st.lo, st.hi, base, plan.first_chunk(k))
+    });
+    GridHistogram::from_shards(m, st, xs.len(), &weights)
+}
+
+/// Sharded [`solve_hist`](crate::avq::histogram::solve_hist): build the
+/// histogram across `shards` ranges, solve once on the merged statistics.
+/// Bitwise-identical to the single-node solve for any shard count.
+pub fn solve_hist_sharded(
+    xs: &[f64],
+    s: usize,
+    cfg: &HistConfig,
+    shards: usize,
+) -> Result<Solution, AvqError> {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let h = build_sharded(xs, cfg.m, &mut rng, shards)?;
+    solve_on(&h, s, cfg.inner)
+}
+
+/// Configuration of a [`ShardCoordinator`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardConfig {
+    /// Shard count for the in-process methods (the remote method takes
+    /// one shard per node instead).
+    pub shards: usize,
+    /// Histogram grid intervals M.
+    pub m: usize,
+    /// Exact solver run on the merged weighted histogram.
+    pub inner: SolverKind,
+    /// Seed of the histogram build's stochastic rounding (the quantize
+    /// pass draws from the caller's generator instead, mirroring the
+    /// service path).
+    pub seed: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        // Same defaults as HistConfig::fixed(400): the paper's practical
+        // M range, Accelerated QUIVER inner solve.
+        Self { shards: 1, m: 400, inner: SolverKind::QuiverAccel, seed: 0x9157 }
+    }
+}
+
+impl ShardConfig {
+    /// The equivalent single-node histogram configuration.
+    fn hist(&self) -> HistConfig {
+        HistConfig { m: self.m, inner: self.inner, seed: self.seed }
+    }
+}
+
+/// Orchestrates the three-phase sharded solve (see the module docs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardCoordinator {
+    /// The coordinator's configuration.
+    pub cfg: ShardConfig,
+}
+
+/// Monotone task ids for the remote phases (echoed by every reply).
+static NEXT_TASK: AtomicU64 = AtomicU64::new(1);
+
+impl ShardCoordinator {
+    /// Coordinator with the given configuration.
+    pub fn new(cfg: ShardConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// In-process sharded solve: split, scan, merge, count, merge, solve
+    /// once. Bitwise-identical to
+    /// [`solve_hist`](crate::avq::histogram::solve_hist) with the
+    /// equivalent [`HistConfig`], for any shard count.
+    pub fn solve(&self, xs: &[f64], s: usize) -> Result<Solution, AvqError> {
+        solve_hist_sharded(xs, s, &self.cfg.hist(), self.cfg.shards)
+    }
+
+    /// In-process sharded compress: [`solve`](Self::solve), then each
+    /// shard quantizes + bit-packs against the broadcast level set (one
+    /// more [`par::dispatch_batch`] wave) and the payloads assemble into
+    /// the single [`CompressedVec`].
+    ///
+    /// Consumes exactly one draw from `rng` (the quantize stream base),
+    /// so the result is bitwise-identical to solving single-node and
+    /// calling [`sq::compress`] with the same generator state — asserted
+    /// across shard counts and backends in `tests/shard_invariance.rs`.
+    pub fn compress(
+        &self,
+        xs: &[f64],
+        s: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Result<(Solution, CompressedVec), AvqError> {
+        let sol = self.solve(xs, s)?;
+        let qbase = rng.next_u64();
+        let plan = ShardPlan::new(xs.len(), self.cfg.shards);
+        let parts: Vec<CompressedVec> = par::dispatch_batch(plan.slices(xs), |k, slice| {
+            let idx = sq::quantize_shard(slice, &sol.q, qbase, plan.first_chunk(k));
+            sq::encode(&idx, &sol.q)
+        });
+        let compressed = sq::assemble(&parts);
+        Ok((sol, compressed))
+    }
+
+    /// Drive the sharded compress across remote [`ShardNode`]s — one
+    /// shard per node, phases in lockstep over the framed TCP protocol.
+    /// Produces the same `(Solution, CompressedVec)` as the in-process
+    /// path (and therefore as a single node), bit for bit.
+    ///
+    /// Each shard ships as one `ShardInit` frame, so a shard is bounded
+    /// by the protocol's `MAX_FRAME` (2³⁰ bytes ≈ 1.3·10⁸ `f64`
+    /// coordinates); `send` rejects larger shards cleanly — use more
+    /// nodes. Every reply is validated (chunk-partial count, bin count,
+    /// payload length) so a skewed or buggy node surfaces as an error,
+    /// never as silently wrong bits.
+    pub fn compress_remote(
+        &self,
+        nodes: &[String],
+        xs: &[f64],
+        s: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Result<(Solution, CompressedVec)> {
+        anyhow::ensure!(!nodes.is_empty(), "need at least one shard node");
+        anyhow::ensure!(!xs.is_empty(), "cannot shard an empty vector");
+        // Mirror solve_hist's RNG derivation: the build consumes one draw
+        // from a generator seeded with cfg.seed.
+        let mut hist_rng = Xoshiro256pp::seed_from_u64(self.cfg.seed);
+        let base = hist_rng.next_u64();
+        let task_id = NEXT_TASK.fetch_add(1, Ordering::Relaxed);
+        let plan = ShardPlan::new(xs.len(), nodes.len());
+        let slices = plan.slices(xs);
+        // Reject oversized shards before serializing anything: a
+        // ShardInit body is 8 bytes per coordinate plus a small header
+        // and must fit one protocol frame.
+        for (k, sl) in slices.iter().enumerate() {
+            let bytes = sl.len() * 8 + 64;
+            anyhow::ensure!(
+                bytes <= MAX_FRAME as usize,
+                "shard {k} ({} coordinates, ~{bytes} bytes) exceeds MAX_FRAME \
+                 ({MAX_FRAME}); split across more shard nodes",
+                sl.len()
+            );
+        }
+
+        let mut conns: Vec<(BufReader<TcpStream>, TcpStream)> = Vec::with_capacity(nodes.len());
+        for addr in nodes {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting shard node {addr}"))?;
+            stream.set_nodelay(true).ok();
+            let wr = stream.try_clone()?;
+            conns.push((BufReader::new(stream), wr));
+        }
+
+        // Phase 1: ship the shards, collect per-chunk scan partials. The
+        // init frames are the big transfer (everything later is bins and
+        // bytes), so write them from one thread per node — phase-1 wall
+        // clock is the slowest shard's transfer, not the sum.
+        let init_results: Vec<std::io::Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = conns
+                .iter_mut()
+                .enumerate()
+                .map(|(k, (_, wr))| {
+                    // Copy + serialize inside the per-node thread too, so
+                    // the big memcpys overlap instead of serializing on
+                    // the caller before the first byte moves.
+                    let slice = slices[k];
+                    let first_chunk = plan.first_chunk(k);
+                    scope.spawn(move || {
+                        let msg =
+                            Msg::ShardInit { task_id, first_chunk, data: slice.to_vec() };
+                        send(wr, &msg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard send thread panicked"))
+                .collect()
+        });
+        for (k, r) in init_results.into_iter().enumerate() {
+            r.with_context(|| format!("sending shard {k}"))?;
+        }
+        let mut all_chunks: Vec<ChunkStats> = Vec::new();
+        for (k, (rd, _)) in conns.iter_mut().enumerate() {
+            match recv(rd)?.with_context(|| format!("shard node {k} closed"))? {
+                Msg::ShardScanned { task_id: t, chunks } if t == task_id => {
+                    // Validate before merging: a skewed or buggy node must
+                    // surface as an error, never as silently wrong stats.
+                    let want = slices[k].len().div_ceil(par::CHUNK);
+                    anyhow::ensure!(
+                        chunks.len() == want,
+                        "shard node {k} returned {} chunk partials, expected {want}",
+                        chunks.len()
+                    );
+                    all_chunks.extend(chunks);
+                }
+                other => bail!("shard node {k}: expected ShardScanned, got {}", other.kind()),
+            }
+        }
+        let st = par::scan::fold_stats(all_chunks);
+        anyhow::ensure!(st.finite, "input contains non-finite values");
+
+        // Phase 2: broadcast the merged grid, merge the counts, solve.
+        let h = if st.hi == st.lo {
+            GridHistogram::from_shards(self.cfg.m, st, xs.len(), &[])?
+        } else {
+            for (k, (_, wr)) in conns.iter_mut().enumerate() {
+                send(
+                    wr,
+                    &Msg::ShardHistRequest {
+                        task_id,
+                        m: self.cfg.m as u64,
+                        lo: st.lo,
+                        hi: st.hi,
+                        base,
+                    },
+                )
+                .with_context(|| format!("requesting counts from shard {k}"))?;
+            }
+            let mut weights: Vec<Vec<f64>> = Vec::with_capacity(conns.len());
+            for (k, (rd, _)) in conns.iter_mut().enumerate() {
+                match recv(rd)?.with_context(|| format!("shard node {k} closed"))? {
+                    Msg::ShardWeights { task_id: t, weights: w } if t == task_id => {
+                        anyhow::ensure!(
+                            w.len() == self.cfg.m + 1,
+                            "shard node {k} returned {} bins, expected {}",
+                            w.len(),
+                            self.cfg.m + 1
+                        );
+                        weights.push(w);
+                    }
+                    other => bail!("shard node {k}: expected ShardWeights, got {}", other.kind()),
+                }
+            }
+            GridHistogram::from_shards(self.cfg.m, st, xs.len(), &weights)?
+        };
+        let sol = solve_on(&h, s, self.cfg.inner)?;
+
+        // Phase 3: broadcast the levels, collect the byte-aligned payloads.
+        let qbase = rng.next_u64();
+        for (k, (_, wr)) in conns.iter_mut().enumerate() {
+            send(wr, &Msg::ShardEncodeRequest { task_id, levels: sol.q.clone(), qbase })
+                .with_context(|| format!("requesting encode from shard {k}"))?;
+        }
+        let bits = sq::codec::bits_for(sol.q.len());
+        let mut parts: Vec<CompressedVec> = Vec::with_capacity(conns.len());
+        for (k, (rd, _)) in conns.iter_mut().enumerate() {
+            match recv(rd)?.with_context(|| format!("shard node {k} closed"))? {
+                Msg::ShardPayload { task_id: t, d, payload } if t == task_id => {
+                    anyhow::ensure!(
+                        d as usize == slices[k].len(),
+                        "shard node {k} covered {d} of {} coordinates",
+                        slices[k].len()
+                    );
+                    let want = sq::codec::packed_len(d as usize, bits);
+                    anyhow::ensure!(
+                        payload.len() == want,
+                        "shard node {k} returned a {}-byte payload, expected {want}",
+                        payload.len()
+                    );
+                    parts.push(CompressedVec { d, q: sol.q.clone(), bits, payload });
+                }
+                other => bail!("shard node {k}: expected ShardPayload, got {}", other.kind()),
+            }
+        }
+        Ok((sol, sq::assemble(&parts)))
+    }
+}
+
+/// A standalone TCP shard node: accepts coordinator connections and
+/// serves the three shard phases (scan, count, encode) for any number of
+/// concurrent tasks. Each phase's compute runs on this node's own
+/// [`crate::par`] executor, so a shard node is itself fully parallel.
+pub struct ShardNode {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardNode {
+    /// Bind and start the accept loop (`host:port`; port 0 picks a free
+    /// one).
+    pub fn start(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("avq-shard-node".into())
+            .spawn(move || {
+                super::run_accept_loop(&listener, &stop2, |stream| {
+                    std::thread::spawn(move || handle_shard_conn(stream));
+                });
+            })?;
+        Ok(Self { addr, stop, join: Some(join) })
+    }
+
+    /// Bound address (`host:port`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting and join the accept loop. Connections in flight
+    /// finish their current task and exit on client disconnect.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One coordinator connection: a session of tasks keyed by `task_id`,
+/// each holding the shard data and chunk offset between phases. Malformed
+/// phase sequences (unknown task, degenerate grid, empty level set) drop
+/// the connection rather than panic — the coordinator surfaces the closed
+/// socket as an error.
+fn handle_shard_conn(stream: TcpStream) {
+    let mut wr = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut rd = BufReader::new(stream);
+    let mut sessions: HashMap<u64, (u64, Vec<f64>)> = HashMap::new();
+    loop {
+        match recv(&mut rd) {
+            Ok(Some(Msg::ShardInit { task_id, first_chunk, data })) => {
+                // Bound retained shard data: a session lives until its
+                // encode phase, and a coordinator drives tasks in
+                // lockstep, so more than a few live sessions on one
+                // connection means a broken or hostile peer — drop it
+                // rather than let inits (up to a frame each) pile up.
+                const MAX_LIVE_SESSIONS: usize = 4;
+                if sessions.len() >= MAX_LIVE_SESSIONS {
+                    eprintln!(
+                        "shard node: {} unfinished tasks on one connection, closing",
+                        sessions.len()
+                    );
+                    return;
+                }
+                let chunks = par::scan::chunk_stats(&data);
+                sessions.insert(task_id, (first_chunk, data));
+                if send(&mut wr, &Msg::ShardScanned { task_id, chunks }).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(Msg::ShardHistRequest { task_id, m, lo, hi, base })) => {
+                let Some((first_chunk, data)) = sessions.get(&task_id) else { return };
+                // A count pass needs a real grid: reject m = 0 and any
+                // degenerate or non-finite range (NaN included). Cap m
+                // before allocating m+1 bins per worker — `m` comes off
+                // the wire, and the bound is generous: far above any
+                // meaningful M = ω(√d) for a frame-sized shard, and the
+                // ShardWeights reply must fit one frame anyway.
+                const MAX_M: u64 = 1 << 24;
+                if m == 0
+                    || m > MAX_M
+                    || hi.partial_cmp(&lo) != Some(std::cmp::Ordering::Greater)
+                {
+                    return;
+                }
+                let weights =
+                    GridHistogram::shard_counts(data, m as usize, lo, hi, base, *first_chunk);
+                if send(&mut wr, &Msg::ShardWeights { task_id, weights }).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(Msg::ShardEncodeRequest { task_id, levels, qbase })) => {
+                // Encode is the task's final phase: take the session out so
+                // a long-lived connection running many tasks doesn't
+                // accumulate every finished task's shard data.
+                let Some((first_chunk, data)) = sessions.remove(&task_id) else { return };
+                if levels.is_empty() {
+                    return;
+                }
+                let idx = sq::quantize_shard(&data, &levels, qbase, first_chunk);
+                let enc = sq::encode(&idx, &levels);
+                if send(&mut wr, &Msg::ShardPayload { task_id, d: enc.d, payload: enc.payload })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            Ok(Some(other)) => {
+                // Drop the connection (per the contract above) instead of
+                // looping: a peer speaking the wrong dialect would
+                // otherwise block forever awaiting a phase reply. Log the
+                // variant only — shard frames can carry a GiB of data.
+                eprintln!(
+                    "shard node: unexpected {} message, closing connection",
+                    other.kind()
+                );
+                return;
+            }
+            Ok(None) | Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::histogram::solve_hist;
+    use crate::dist::Dist;
+
+    #[test]
+    fn plan_covers_contiguously_and_chunk_aligned() {
+        for d in [0usize, 1, 100, par::CHUNK, 3 * par::CHUNK + 17, 5 * par::CHUNK] {
+            for shards in [1usize, 2, 3, 8, 16] {
+                let plan = ShardPlan::new(d, shards);
+                assert_eq!(plan.shards(), shards);
+                assert_eq!(plan.ranges[0].0, 0);
+                assert_eq!(plan.ranges[shards - 1].1, d);
+                for w in plan.ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous: d={d} shards={shards}");
+                }
+                for (k, &(lo, hi)) in plan.ranges.iter().enumerate() {
+                    if lo == hi {
+                        continue; // empty shard: no chunks
+                    }
+                    assert_eq!(lo % par::CHUNK, 0, "d={d} shards={shards} k={k}");
+                    assert_eq!(plan.first_chunk(k) as usize, lo / par::CHUNK);
+                    if hi != d {
+                        assert_eq!(hi % par::CHUNK, 0, "interior cut must be aligned");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_solve_matches_single_node_on_small_input() {
+        // Single-chunk input with more shards than chunks: the trailing
+        // empty shards must be no-ops. (The full multi-chunk × backend
+        // sweep lives in tests/shard_invariance.rs.)
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(1000, 3);
+        let cfg = HistConfig::fixed(64);
+        let want = solve_hist(&xs, 8, &cfg).unwrap();
+        for shards in [1usize, 2, 8] {
+            let got = solve_hist_sharded(&xs, 8, &cfg, shards).unwrap();
+            assert_eq!(got.q_idx, want.q_idx, "shards={shards}");
+            assert_eq!(got.mse.to_bits(), want.mse.to_bits(), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_build_error_cases_match_single_node() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        assert_eq!(
+            build_sharded(&[], 16, &mut rng, 4).unwrap_err(),
+            AvqError::EmptyInput
+        );
+        let bad = vec![1.0, f64::NAN, 2.0];
+        assert_eq!(
+            build_sharded(&bad, 16, &mut rng, 4).unwrap_err(),
+            AvqError::NonFinite
+        );
+        // Degenerate constant input collapses identically.
+        let xs = vec![-7.25; 640];
+        let mut r1 = Xoshiro256pp::seed_from_u64(3);
+        let h = build_sharded(&xs, 128, &mut r1, 4).unwrap();
+        assert_eq!(h.grid, vec![-7.25]);
+        assert_eq!(h.weights, vec![640.0]);
+    }
+
+    #[test]
+    fn coordinator_compress_consumes_one_draw() {
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(5000, 9);
+        let coord = ShardCoordinator::new(ShardConfig { shards: 3, m: 64, ..Default::default() });
+        let mut rng = Xoshiro256pp::seed_from_u64(0xFEED);
+        let (_, c) = coord.compress(&xs, 8, &mut rng).unwrap();
+        assert_eq!(c.d as usize, xs.len());
+        // Exactly one base draw was consumed.
+        let mut rng2 = Xoshiro256pp::seed_from_u64(0xFEED);
+        let _ = rng2.next_u64();
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+}

@@ -94,6 +94,10 @@ pub fn run_worker(
 /// quantize and bit-pack. This is the full client-side hot path — every
 /// O(d) stage (widening, routed solve, quantize, bit-pack) runs on the
 /// [`crate::par`] executor, so one gradient saturates the worker's cores.
+/// A router configured with `RouterConfig::shards > 1` transparently
+/// shards the histogram-route solve ([`crate::coordinator::shard`]) —
+/// bitwise-identical output, so turning sharding on for huge gradients
+/// (Faghri et al.'s data-parallel SGD workload) never perturbs training.
 pub fn compress_gradient(
     grad: &[f32],
     s: usize,
@@ -178,6 +182,23 @@ mod tests {
                     .unwrap();
             assert_eq!(batched[j], solo, "tenant {j}");
         }
+    }
+
+    #[test]
+    fn sharded_router_compresses_gradients_bit_identically() {
+        // A chunk-crossing gradient on the histogram route: the worker's
+        // uplink bytes must not change when the router shards the solve.
+        let d = 2 * crate::par::CHUNK + 777;
+        let grad: Vec<f32> =
+            (0..d).map(|i| ((i as f32 * 0.003).sin() * 0.9).exp() - 1.0).collect();
+        let base_cfg = RouterConfig { exact_max_d: 1 << 10, hist_m: 128, seed: 7, shards: 1 };
+        let plain = Router::new(base_cfg);
+        let sharded = Router::new(RouterConfig { shards: 4, ..base_cfg });
+        let mut r1 = Xoshiro256pp::seed_from_u64(0x11);
+        let mut r2 = Xoshiro256pp::seed_from_u64(0x11);
+        let a = compress_gradient(&grad, 8, &plain, &mut r1).unwrap();
+        let b = compress_gradient(&grad, 8, &sharded, &mut r2).unwrap();
+        assert_eq!(a, b, "sharding must be invisible in the uplink bytes");
     }
 
     #[test]

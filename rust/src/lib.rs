@@ -12,9 +12,13 @@
 //!   (uniform/quantile candidate points), ZipML 2-Apx, ALQ, uniform SQ.
 //! * **[`sq`]** — the stochastic-quantization substrate: unbiased encoding
 //!   of a vector onto a value set, bit-packed wire format.
-//! * **[`coordinator`]** — Layer 3: a gradient-compression parameter server
-//!   and AVQ compression service (router, batcher, aggregator) with Python
-//!   never on the request path.
+//! * **[`coordinator`]** — Layer 3: a gradient-compression parameter
+//!   server, an AVQ compression service (router, tenant-aware scheduler
+//!   with cross-batch admission, aggregator) with Python never on the
+//!   request path, and the shard coordinator
+//!   ([`coordinator::shard`](coordinator::shard)) that splits one
+//!   10⁸-coordinate vector across shard nodes with bitwise-exact
+//!   histogram merge.
 //! * **[`par`]** — the deterministic chunked executor every O(d) hot pass
 //!   (scan, histogram build, sort, quantize, encode) runs on: fixed chunk
 //!   size + per-chunk RNG streams ⇒ bitwise-identical results for any

@@ -1,11 +1,14 @@
 //! `quiver` — the CLI entry point for the QUIVER reproduction.
 //!
 //! ```text
-//! quiver solve   --d 65536 --s 16 [--dist lognormal] [--solver quiver-accel]
-//! quiver figure  <1a|1b|1c|2|3a|3b|3c|3d|4|headline|all> [--dist D] [--max-pow N]
-//! quiver serve   [--addr 127.0.0.1:7071] [--threads 2] [--exact-max-d 65536]
-//! quiver client  --addr HOST:PORT --d 100000 --s 16
-//! quiver train   [--workers 4] [--rounds 50] [--s 16] [--lr 0.05]
+//! quiver solve      --d 65536 --s 16 [--dist lognormal] [--solver quiver-accel]
+//!                   [--shards N | --shard-nodes host:port,host:port]
+//! quiver figure     <1a|1b|1c|2|3a|3b|3c|3d|4|headline|all> [--dist D] [--max-pow N]
+//! quiver serve      [--addr 127.0.0.1:7071] [--threads 2] [--exact-max-d 65536]
+//!                   [--shards N] [--admission N]
+//! quiver client     --addr HOST:PORT --d 100000 --s 16 [--tenant-class N] [--deadline-ms MS]
+//! quiver shard-node [--addr 127.0.0.1:7171]
+//! quiver train      [--workers 4] [--rounds 50] [--s 16] [--lr 0.05]
 //! ```
 //!
 //! Every subcommand accepts `--config FILE` (`key = value` lines) with CLI
@@ -16,9 +19,18 @@
 //! and per-call scoped spawning; results are identical for any value of
 //! either (see `quiver::par` and `DESIGN.md`).
 //!
-//! `serve` additionally takes `--batch-small-d N`: jobs with dimension
-//! ≤ N ride the multi-tenant batched dispatch (one pool handoff per
-//! pulled batch) instead of per-job whole-vector parallelism.
+//! `serve` additionally takes `--batch-small-d N` (jobs with dimension
+//! ≤ N ride the multi-tenant batched dispatch — one pool handoff per
+//! pulled batch — instead of per-job whole-vector parallelism),
+//! `--shards N` (split histogram-route solves across N chunk-aligned
+//! shard ranges; results bitwise-identical for any N) and `--admission N`
+//! (cross-batch admission: pack up to N already-queued batches into one
+//! dispatch wave under load). `client` tags its request with a scheduler
+//! class: `--tenant-class N` (higher pulls earlier) and `--deadline-ms
+//! MS` (earliest-deadline-first within a class). `shard-node` runs a
+//! standalone TCP shard node; point `solve --shard-nodes a,b,c` at a
+//! fleet of them to solve one vector across machines with bitwise-exact
+//! histogram merge (see `quiver::coordinator::shard`).
 
 use std::time::Duration;
 
@@ -27,13 +39,15 @@ use quiver::avq::{self, SolverKind};
 use quiver::config::Config;
 use quiver::coordinator::router::{Router, RouterConfig};
 use quiver::coordinator::server::{Server, ServerConfig};
-use quiver::coordinator::service::{compress_remote, Service, ServiceConfig};
+use quiver::coordinator::service::{compress_remote_with, Service, ServiceConfig};
+use quiver::coordinator::shard::{ShardConfig, ShardCoordinator, ShardNode};
 use quiver::coordinator::tasks::{RuntimeGradSource, MODEL_DIM};
 use quiver::coordinator::worker::{run_worker, WorkerConfig};
 use quiver::dist::Dist;
 use quiver::figures::{self, FigOpts};
 use quiver::metrics::vnmse;
 use quiver::runtime::RuntimeHandle;
+use quiver::util::rng::Xoshiro256pp;
 
 fn main() {
     if let Err(e) = run() {
@@ -44,7 +58,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: quiver <solve|figure|serve|client|train> [--key value ...]\n\
+        "usage: quiver <solve|figure|serve|client|shard-node|train> [--key value ...]\n\
          see rust/src/main.rs docs or README.md for per-command flags"
     );
     std::process::exit(2);
@@ -88,6 +102,7 @@ fn run() -> Result<()> {
         "figure" => cmd_figure(positional.as_deref().unwrap_or("all"), &cfg),
         "serve" => cmd_serve(&cfg),
         "client" => cmd_client(&cfg),
+        "shard-node" => cmd_shard_node(&cfg),
         "train" => cmd_train(&cfg),
         _ => usage(),
     }
@@ -107,6 +122,16 @@ fn cmd_solve(cfg: &Config) -> Result<()> {
         let name = cfg.get_or("solver", "quiver-accel");
         SolverKind::parse(&name).with_context(|| format!("unknown solver {name:?}"))?
     };
+    // Sharded paths: --shards N (in-process ranges) or --shard-nodes
+    // a,b,c (remote shard nodes started with `quiver shard-node`). The
+    // requested solver runs as the *inner* solve on the merged histogram.
+    // An explicit `--shards 1` also takes this path — it IS the
+    // single-node quiver-hist solve the shard-invariance claim compares
+    // against, so `--shards 1` vs `--shards 8` print identical results.
+    let shard_nodes = cfg.list_or_empty("shard_nodes");
+    if cfg.get("shards").is_some() || !shard_nodes.is_empty() {
+        return cmd_solve_sharded(cfg, d, s, dist, solver, shard_nodes);
+    }
     let seed = cfg.u64_or("seed", 42)?;
     let xs = dist.sample_sorted(d, seed);
     let p = avq::Prefix::unweighted(&xs);
@@ -123,6 +148,66 @@ fn cmd_solve(cfg: &Config) -> Result<()> {
     );
     println!("Q = {:?}", sol.q);
     Ok(())
+}
+
+/// Sharded one-shot solve: split the vector across in-process shard
+/// ranges or remote shard nodes, solve once on the merged histogram,
+/// compress, and report — results are bitwise-identical to a single-node
+/// `quiver-hist` solve for any shard count.
+fn cmd_solve_sharded(
+    cfg: &Config,
+    d: usize,
+    s: usize,
+    dist: Dist,
+    inner: SolverKind,
+    shard_nodes: Vec<String>,
+) -> Result<()> {
+    let m = cfg.usize_or("hist_m", 400)?;
+    let seed = cfg.u64_or("seed", 42)?;
+    let xs = dist.sample_vec(d, seed);
+    let n_shards = if shard_nodes.is_empty() {
+        cfg.usize_or("shards", 1)?.max(1)
+    } else {
+        shard_nodes.len()
+    };
+    let coord = ShardCoordinator::new(ShardConfig {
+        shards: n_shards,
+        m,
+        inner,
+        seed: cfg.u64_or("hist_seed", 0x9157)?,
+    });
+    let mut qrng = Xoshiro256pp::seed_from_u64(cfg.u64_or("sq_seed", 0x5E71CE)?);
+    let t0 = std::time::Instant::now();
+    let (sol, compressed, where_) = if shard_nodes.is_empty() {
+        let (sol, c) = coord.compress(&xs, s, &mut qrng)?;
+        (sol, c, "in-process".to_string())
+    } else {
+        let (sol, c) = coord.compress_remote(&shard_nodes, &xs, s, &mut qrng)?;
+        (sol, c, format!("nodes [{}]", shard_nodes.join(", ")))
+    };
+    let dt = t0.elapsed();
+    println!(
+        "quiver-hist(M={m}) d={d} s={s} dist={} sharded x{n_shards} ({where_}): \
+         mse={:.6e} -> {} bytes ({:.2}x vs f32) in {}",
+        dist.name(),
+        sol.mse,
+        compressed.wire_size(),
+        compressed.ratio_vs_f32(),
+        quiver::benchfw::fmt_duration(dt)
+    );
+    println!("Q = {:?}", sol.q);
+    Ok(())
+}
+
+/// Run a standalone TCP shard node until killed (see
+/// `quiver::coordinator::shard`): serves the scan/count/encode phases for
+/// any coordinator that connects, e.g. `quiver solve --shard-nodes ...`.
+fn cmd_shard_node(cfg: &Config) -> Result<()> {
+    let node = ShardNode::start(&cfg.get_or("addr", "127.0.0.1:7171"))?;
+    println!("quiver shard node listening on {}", node.addr());
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
 }
 
 /// Regenerate paper figures (tables + CSV under results/).
@@ -154,9 +239,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             exact_max_d: cfg.usize_or("exact_max_d", 1 << 16)?,
             hist_m: cfg.usize_or("hist_m", 400)?,
             seed: cfg.u64_or("seed", 0xA11CE)?,
+            shards: cfg.usize_or("shards", 1)?,
         }),
         seed: cfg.u64_or("sq_seed", 0x5E71CE)?,
         batch_small_d: cfg.usize_or("batch_small_d", quiver::par::CHUNK)?,
+        admission: cfg.usize_or("admission", 1)?,
     })?;
     println!("quiver compression service listening on {}", service.addr());
     let period = cfg.u64_or("stats_secs", 10)?;
@@ -177,8 +264,11 @@ fn cmd_client(cfg: &Config) -> Result<()> {
         .into_iter()
         .map(|x| x as f32)
         .collect();
+    // Scheduler class: priority (higher pulls earlier) + deadline budget.
+    let class = cfg.usize_or("tenant_class", 0)?.min(u8::MAX as usize) as u8;
+    let deadline_ms = cfg.u64_or("deadline_ms", 0)?.min(u32::MAX as u64) as u32;
     let t0 = std::time::Instant::now();
-    let reply = compress_remote(&addr, 1, s, &data)?;
+    let reply = compress_remote_with(&addr, 1, s, class, deadline_ms, &data)?;
     let rtt = t0.elapsed();
     match reply {
         quiver::coordinator::protocol::Msg::CompressReply {

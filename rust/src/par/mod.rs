@@ -284,6 +284,25 @@ fn map_parts<A: Send, R: Send>(mut items: Vec<A>, g: impl Fn(Vec<A>) -> R + Sync
 /// let squares = par::dispatch_batch(vec![1u64, 2, 3, 4], |_, x| x * x);
 /// assert_eq!(squares, vec![1, 4, 9, 16]);
 /// ```
+///
+/// The randomized-call-site pattern — one base draw for the batch, one
+/// derived stream per tenant — makes each tenant's output independent of
+/// the batch it rode in:
+///
+/// ```
+/// use quiver::par;
+/// use quiver::util::rng::Xoshiro256pp;
+/// let mut rng = Xoshiro256pp::seed_from_u64(7);
+/// let base = rng.next_u64();
+/// let batched = par::dispatch_batch(vec![10usize, 20, 30], |j, n| {
+///     let mut trng = Xoshiro256pp::stream(base, j as u64);
+///     (0..n).map(|_| trng.next_u64()).fold(0u64, u64::wrapping_add)
+/// });
+/// // Tenant 1 alone produces the identical result.
+/// let mut solo = Xoshiro256pp::stream(base, 1);
+/// let want = (0..20).map(|_| solo.next_u64()).fold(0u64, u64::wrapping_add);
+/// assert_eq!(batched[1], want);
+/// ```
 pub fn dispatch_batch<A: Send, R: Send>(
     tenants: Vec<A>,
     f: impl Fn(usize, A) -> R + Sync,

@@ -10,6 +10,13 @@
 //! the floating-point reduction tree is fixed by the input length alone —
 //! `norm2_sq` is bitwise-identical for every thread count and on either
 //! execution backend (see the module contract in [`crate::par`]).
+//!
+//! The per-chunk partials are public ([`chunk_stats`] / [`fold_stats`])
+//! because the shard coordinator ([`crate::coordinator::shard`]) ships
+//! them over the wire: a shard node returns the raw [`ChunkStats`] of its
+//! chunk-aligned range and the coordinator folds all shards' partials in
+//! global chunk order — byte-for-byte the same reduction tree as a
+//! single-node [`stats`] call over the whole vector.
 
 use super::{map_chunks, CHUNK};
 
@@ -26,9 +33,24 @@ pub struct VecStats {
     pub finite: bool,
 }
 
-/// One fused chunked pass: min, max, ‖X‖², and finiteness.
-pub fn stats(xs: &[f64]) -> VecStats {
-    let parts = map_chunks(xs, CHUNK, |_, c| {
+/// The scan partial of one [`CHUNK`]-sized chunk — the unit the shard
+/// coordinator ships so the merged fold is exact (see [`fold_stats`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkStats {
+    /// Chunk minimum (`+∞` for an empty chunk).
+    pub lo: f64,
+    /// Chunk maximum (`−∞` for an empty chunk).
+    pub hi: f64,
+    /// Chunk squared L2 norm (sequential sum within the chunk).
+    pub norm2_sq: f64,
+    /// Whether every coordinate of the chunk is finite.
+    pub finite: bool,
+}
+
+/// Per-chunk scan partials of `xs`, in chunk-index order (one entry per
+/// [`CHUNK`]-sized chunk; empty input yields an empty vector).
+pub fn chunk_stats(xs: &[f64]) -> Vec<ChunkStats> {
+    map_chunks(xs, CHUNK, |_, c| {
         let mut lo = f64::INFINITY;
         let mut hi = f64::NEG_INFINITY;
         let mut n2 = 0.0;
@@ -39,16 +61,33 @@ pub fn stats(xs: &[f64]) -> VecStats {
             hi = hi.max(x);
             n2 += x * x;
         }
-        (lo, hi, n2, finite)
-    });
+        ChunkStats { lo, hi, norm2_sq: n2, finite }
+    })
+}
+
+/// Fold per-chunk partials into [`VecStats`] **in iteration order**.
+///
+/// Feeding the partials of every chunk of a vector, in global chunk
+/// order, reproduces [`stats`] bitwise: min/max/finiteness are exact
+/// whatever the grouping, and the `norm2_sq` left fold follows the same
+/// fixed reduction tree. This is the shard-merge half of the scan — the
+/// coordinator concatenates the shards' [`chunk_stats`] (shard ranges are
+/// chunk-aligned, so shard order × local chunk order = global chunk
+/// order) and folds once.
+pub fn fold_stats(parts: impl IntoIterator<Item = ChunkStats>) -> VecStats {
     let mut out = VecStats { lo: f64::INFINITY, hi: f64::NEG_INFINITY, norm2_sq: 0.0, finite: true };
-    for (lo, hi, n2, finite) in parts {
-        out.lo = out.lo.min(lo);
-        out.hi = out.hi.max(hi);
-        out.norm2_sq += n2;
-        out.finite &= finite;
+    for c in parts {
+        out.lo = out.lo.min(c.lo);
+        out.hi = out.hi.max(c.hi);
+        out.norm2_sq += c.norm2_sq;
+        out.finite &= c.finite;
     }
     out
+}
+
+/// One fused chunked pass: min, max, ‖X‖², and finiteness.
+pub fn stats(xs: &[f64]) -> VecStats {
+    fold_stats(chunk_stats(xs))
 }
 
 /// Parallel finiteness check (the cheap prefix of [`stats`]).
@@ -105,5 +144,28 @@ mod tests {
         assert_eq!(st.norm2_sq, 0.0);
         assert!(st.finite);
         assert!(all_finite(&[]));
+        assert!(chunk_stats(&[]).is_empty());
+        assert_eq!(fold_stats([]), st);
+    }
+
+    #[test]
+    fn split_chunk_stats_fold_to_whole_vector_stats() {
+        // The shard-merge contract: folding the concatenated per-chunk
+        // partials of chunk-aligned pieces reproduces stats() bitwise.
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(4 * CHUNK + 321, 21);
+        let whole = stats(&xs);
+        for cut_chunks in [1usize, 2, 3] {
+            let (a, b) = xs.split_at(cut_chunks * CHUNK);
+            let folded =
+                fold_stats(chunk_stats(a).into_iter().chain(chunk_stats(b)));
+            assert_eq!(folded.lo.to_bits(), whole.lo.to_bits());
+            assert_eq!(folded.hi.to_bits(), whole.hi.to_bits());
+            assert_eq!(
+                folded.norm2_sq.to_bits(),
+                whole.norm2_sq.to_bits(),
+                "norm2 fold must follow the same chunk-ordered tree"
+            );
+            assert_eq!(folded.finite, whole.finite);
+        }
     }
 }

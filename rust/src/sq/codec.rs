@@ -137,6 +137,58 @@ pub fn encode(idx: &[u32], qs: &[f64]) -> CompressedVec {
     CompressedVec { d: idx.len() as u64, q: qs.to_vec(), bits, payload }
 }
 
+/// Assemble per-shard encodes of chunk-aligned ranges into the one
+/// [`CompressedVec`] a single-node encode of the whole vector produces.
+///
+/// Every [`par::CHUNK`] indices pack into a whole number of payload bytes
+/// for any bit width, so shards whose ranges start on chunk boundaries own
+/// disjoint, byte-aligned payload windows — concatenating their payloads
+/// (in shard order) is byte-for-byte the single-node payload. Empty shards
+/// (zero indices) contribute nothing and are fine.
+///
+/// # Panics
+///
+/// If `parts` is empty, if the parts disagree on quantization values or
+/// bit width, or if a part that *precedes further coordinates* has a
+/// length that is not a multiple of [`par::CHUNK`] (such a part could
+/// not have ended on a chunk boundary). The input's ragged tail part may
+/// be followed by empty parts — a `ShardPlan` with more shards than
+/// chunks produces exactly that shape.
+///
+/// ```
+/// use quiver::par::CHUNK;
+/// use quiver::sq;
+/// let qs = [0.0, 1.0, 2.0, 3.0];
+/// let idx: Vec<u32> = (0..(CHUNK + 100) as u32).map(|i| i % 4).collect();
+/// let whole = sq::encode(&idx, &qs);
+/// let parts = [sq::encode(&idx[..CHUNK], &qs), sq::encode(&idx[CHUNK..], &qs)];
+/// assert_eq!(sq::assemble(&parts), whole);
+/// ```
+pub fn assemble(parts: &[CompressedVec]) -> CompressedVec {
+    assert!(!parts.is_empty(), "assemble needs at least one shard part");
+    // Alignment matters only for parts with later coordinates after them:
+    // the ragged tail may sit before trailing *empty* shards.
+    let last_nonempty = parts.iter().rposition(|p| p.d > 0);
+    let q = parts[0].q.clone();
+    let bits = parts[0].bits;
+    let mut d = 0u64;
+    let mut payload = Vec::with_capacity(parts.iter().map(|p| p.payload.len()).sum());
+    for (k, p) in parts.iter().enumerate() {
+        assert_eq!(p.q, q, "shard {k}: quantization values differ");
+        assert_eq!(p.bits, bits, "shard {k}: bit width differs");
+        if last_nonempty.is_some_and(|ln| k < ln) {
+            assert_eq!(
+                p.d as usize % par::CHUNK,
+                0,
+                "non-final shard {k} must cover whole chunks"
+            );
+        }
+        d += p.d;
+        payload.extend_from_slice(&p.payload);
+    }
+    CompressedVec { d, q, bits, payload }
+}
+
 /// Unpack to `(indices, q values)`.
 ///
 /// Parallel over output chunks; reads may peek past a chunk's own payload
@@ -231,6 +283,53 @@ mod tests {
         // 4 bits/coord = d/2 bytes + small header.
         assert!(c.wire_size() < d / 2 + 200);
         assert!(c.ratio_vs_f32() > 7.9, "ratio={}", c.ratio_vs_f32());
+    }
+
+    #[test]
+    fn assemble_matches_whole_encode_for_every_bit_width() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let d = 2 * par::CHUNK + 777; // ragged tail
+        for s in [1usize, 2, 5, 16, 33] {
+            let qs: Vec<f64> = (0..s).map(|i| i as f64 * 0.25).collect();
+            let idx: Vec<u32> =
+                (0..d).map(|_| rng.next_below(s as u64) as u32).collect();
+            let whole = encode(&idx, &qs);
+            let parts = [
+                encode(&idx[..par::CHUNK], &qs),
+                encode(&idx[par::CHUNK..2 * par::CHUNK], &qs),
+                encode(&idx[2 * par::CHUNK..], &qs),
+            ];
+            assert_eq!(assemble(&parts), whole, "s={s}");
+            // An empty middle shard is a no-op.
+            let with_empty = [
+                encode(&idx[..par::CHUNK], &qs),
+                encode(&[], &qs),
+                encode(&idx[par::CHUNK..], &qs),
+            ];
+            assert_eq!(assemble(&with_empty), whole, "s={s} (empty shard)");
+            // The ragged tail may be followed by trailing empty shards —
+            // the shape ShardPlan produces when shards > chunks.
+            let with_trailing_empty = [
+                encode(&idx[..par::CHUNK], &qs),
+                encode(&idx[par::CHUNK..], &qs), // ragged, not chunk-aligned
+                encode(&[], &qs),
+                encode(&[], &qs),
+            ];
+            assert_eq!(
+                assemble(&with_trailing_empty),
+                whole,
+                "s={s} (ragged + trailing empty shards)"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must cover whole chunks")]
+    fn assemble_rejects_unaligned_interior_part() {
+        let qs = [0.0, 1.0];
+        let idx = vec![1u32; par::CHUNK + 10];
+        let parts = [encode(&idx[..10], &qs), encode(&idx[10..], &qs)];
+        let _ = assemble(&parts);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 pub mod codec;
 
-pub use codec::{decode, encode, CompressedVec};
+pub use codec::{assemble, decode, encode, CompressedVec};
 
 use crate::par;
 use crate::util::rng::Xoshiro256pp;
@@ -34,11 +34,29 @@ use crate::util::rng::Xoshiro256pp;
 /// per-chunk stream base).
 pub fn quantize(xs: &[f64], qs: &[f64], rng: &mut Xoshiro256pp) -> Vec<u32> {
     assert!(!qs.is_empty());
-    debug_assert!(crate::util::is_sorted(qs));
     let base = rng.next_u64();
+    quantize_shard(xs, qs, base, 0)
+}
+
+/// [`quantize`] over one **chunk-aligned shard** of a larger vector: chunk
+/// `c` of this shard draws from `Xoshiro256pp::stream(base, first_chunk + c)`,
+/// where `first_chunk` is the shard's global chunk offset (its start index
+/// divided by [`par::CHUNK`]) and `base` is the single draw the whole
+/// sharded pass consumed from the caller's generator.
+///
+/// Keying the streams by *global* chunk index makes the per-shard index
+/// vectors concatenate to exactly what a single-node [`quantize`] of the
+/// whole vector picks — and, because every [`par::CHUNK`] indices bit-pack
+/// into a whole number of payload bytes, the per-shard
+/// [`encode`](crate::sq::encode) payloads concatenate byte-for-byte too
+/// (see [`codec::assemble`]). This is the encode half a shard node runs
+/// locally ([`crate::coordinator::shard`]).
+pub fn quantize_shard(xs: &[f64], qs: &[f64], base: u64, first_chunk: u64) -> Vec<u32> {
+    assert!(!qs.is_empty());
+    debug_assert!(crate::util::is_sorted(qs));
     let mut out = vec![0u32; xs.len()];
     par::zip_chunks_mut(&mut out, par::CHUNK, xs, par::CHUNK, |c, slots, chunk| {
-        let mut crng = Xoshiro256pp::stream(base, c as u64);
+        let mut crng = Xoshiro256pp::stream(base, first_chunk + c as u64);
         for (slot, &x) in slots.iter_mut().zip(chunk) {
             let (lo, hi) = bracket(qs, x);
             *slot = pick(qs, lo, hi, x, &mut crng);
@@ -292,6 +310,30 @@ mod tests {
         }
         // And the caller's generator advanced by exactly one draw.
         assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn quantize_shard_concat_equals_whole_quantize() {
+        // Global-chunk stream keying: per-shard picks concatenate to the
+        // single-node quantize, wherever the chunk-aligned cut lands.
+        let d = 3 * par::CHUNK + 999;
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 31);
+        let sol = crate::avq::histogram::solve_hist(
+            &xs,
+            8,
+            &crate::avq::histogram::HistConfig::fixed(128),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(0xC0DE);
+        let whole = quantize(&xs, &sol.q, &mut rng);
+        let mut rng2 = Xoshiro256pp::seed_from_u64(0xC0DE);
+        let base = rng2.next_u64();
+        for cut_chunks in [1usize, 2, 3] {
+            let cut = cut_chunks * par::CHUNK;
+            let mut parts = quantize_shard(&xs[..cut], &sol.q, base, 0);
+            parts.extend(quantize_shard(&xs[cut..], &sol.q, base, cut_chunks as u64));
+            assert_eq!(parts, whole, "cut at chunk {cut_chunks}");
+        }
     }
 
     #[test]

@@ -298,6 +298,38 @@ fn prop_vec_shrinking_framework() {
     );
 }
 
+/// Shard decomposition (`coordinator::shard`): for random dimensions, bin
+/// counts and shard counts — including shards ≫ chunks — the sharded
+/// histogram build is bitwise-identical to the single-node build.
+#[test]
+fn prop_sharded_build_matches_single_node() {
+    use quiver::avq::histogram::GridHistogram;
+    use quiver::coordinator::shard::build_sharded;
+    use quiver::util::rng::Xoshiro256pp;
+    forall(10, 0xB7, |g: &mut Gen, case| {
+        let d = g.usize_in(1..2 * quiver::par::CHUNK + 999);
+        let m = g.usize_in(1..300);
+        let shards = g.usize_in(1..12);
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 7000 + case);
+        let seed = g.u64();
+        let mut r1 = Xoshiro256pp::seed_from_u64(seed);
+        let want = GridHistogram::build(&xs, m, &mut r1).unwrap();
+        let mut r2 = Xoshiro256pp::seed_from_u64(seed);
+        let got = build_sharded(&xs, m, &mut r2, shards).unwrap();
+        if got.weights != want.weights
+            || got.grid != want.grid
+            || got.norm2_sq.to_bits() != want.norm2_sq.to_bits()
+        {
+            return Err(format!("shard mismatch d={d} m={m} shards={shards}"));
+        }
+        // Both consumed exactly one draw.
+        if r1.next_u64() != r2.next_u64() {
+            return Err("stream advance diverged".into());
+        }
+        Ok(())
+    });
+}
+
 /// Fuzz the wire decoders: arbitrary bytes must never panic — only return
 /// errors (the server parses untrusted input).
 #[test]
@@ -321,6 +353,8 @@ fn prop_decoders_survive_bitflips() {
         let msg = Msg::CompressRequest {
             request_id: g.u64(),
             s: g.usize_in(1..64) as u32,
+            class: g.usize_in(0..256) as u8,
+            deadline_ms: g.usize_in(0..10_000) as u32,
             data: (0..g.usize_in(0..64)).map(|i| i as f32).collect(),
         };
         let mut frame = msg.to_frame();

@@ -1,0 +1,182 @@
+//! The shard layer's determinism contract, tested end to end: splitting
+//! one vector across 1/2/4/8 shard ranges — on either execution backend
+//! (persistent pool vs scoped spawning) and at several executor widths —
+//! must leave the merged histogram, the chosen level set, and the encoded
+//! payload **bitwise-identical** to the single-node solve, on every
+//! `dist::paper_suite()` family. This is the `coordinator::shard`
+//! counterpart of `tests/par_invariance.rs`: thread count, backend, and
+//! now shard count are all invisible in results.
+//!
+//! Tests here pin the process-global executor width/backend, so they all
+//! serialize on one lock (same pattern as par_invariance).
+
+use quiver::avq::histogram::{solve_hist, GridHistogram, HistConfig};
+use quiver::coordinator::shard::{build_sharded, ShardConfig, ShardCoordinator};
+use quiver::dist::Dist;
+use quiver::par;
+use quiver::sq;
+use quiver::util::rng::Xoshiro256pp;
+
+/// Crosses several chunk boundaries and ends in a ragged tail.
+const D: usize = 3 * par::CHUNK + 1234;
+
+/// Serializes tests that pin the global executor width/backend.
+static WIDTH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Restores width and backend even if an assertion panics.
+struct ParGuard {
+    width: usize,
+    backend: par::Backend,
+}
+
+impl ParGuard {
+    fn pin() -> Self {
+        Self { width: par::threads(), backend: par::backend() }
+    }
+}
+
+impl Drop for ParGuard {
+    fn drop(&mut self) {
+        par::set_threads(self.width);
+        par::set_backend(self.backend);
+    }
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Everything the sharded build produces, in bit-exact form.
+fn hist_snapshot(h: &GridHistogram) -> (Vec<u64>, Vec<u64>, u64, u64, u64, usize) {
+    (
+        bits(&h.weights),
+        bits(&h.grid),
+        h.norm2_sq.to_bits(),
+        h.lo.to_bits(),
+        h.hi.to_bits(),
+        h.d,
+    )
+}
+
+#[test]
+fn merged_histogram_bitwise_identical_across_shard_counts_and_backends() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    for (name, dist) in Dist::paper_suite() {
+        let xs = dist.sample_vec(D, 0x5AAD);
+        let mut ref_rng = Xoshiro256pp::seed_from_u64(0xD17E);
+        let reference = hist_snapshot(&GridHistogram::build(&xs, 777, &mut ref_rng).unwrap());
+        for backend in [par::Backend::Pool, par::Backend::Scoped] {
+            par::set_backend(backend);
+            for t in [1usize, 2, 4] {
+                par::set_threads(t);
+                for shards in [1usize, 2, 4, 8] {
+                    let mut rng = Xoshiro256pp::seed_from_u64(0xD17E);
+                    let h = build_sharded(&xs, 777, &mut rng, shards).unwrap();
+                    assert_eq!(
+                        hist_snapshot(&h),
+                        reference,
+                        "{name}: histogram diverged at {shards} shards, \
+                         {t} threads on {backend:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn levels_and_payload_bitwise_identical_across_shard_counts_and_backends() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    for (name, dist) in Dist::paper_suite() {
+        let xs = dist.sample_vec(D, 0xC0FFEE);
+        // Single-node reference: solve + compress, exactly as the service
+        // does it (HistConfig::fixed and ShardConfig share defaults).
+        let ref_sol = solve_hist(&xs, 16, &HistConfig::fixed(777)).unwrap();
+        let mut ref_rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+        let ref_compressed = sq::compress(&xs, &ref_sol.q, &mut ref_rng);
+        for backend in [par::Backend::Pool, par::Backend::Scoped] {
+            par::set_backend(backend);
+            for t in [1usize, 4] {
+                par::set_threads(t);
+                for shards in [1usize, 2, 4, 8] {
+                    let coord = ShardCoordinator::new(ShardConfig {
+                        shards,
+                        m: 777,
+                        ..Default::default()
+                    });
+                    let mut rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+                    let (sol, compressed) = coord.compress(&xs, 16, &mut rng).unwrap();
+                    let ctx = format!(
+                        "{name}: {shards} shards, {t} threads on {backend:?}"
+                    );
+                    assert_eq!(sol.q_idx, ref_sol.q_idx, "levels positions — {ctx}");
+                    assert_eq!(bits(&sol.q), bits(&ref_sol.q), "level values — {ctx}");
+                    assert_eq!(
+                        sol.mse.to_bits(),
+                        ref_sol.mse.to_bits(),
+                        "objective — {ctx}"
+                    );
+                    assert_eq!(compressed, ref_compressed, "payload — {ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn more_shards_than_chunks_and_tiny_inputs() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    par::set_threads(4);
+    // Inputs from a single element up to one chunk: with 8 shards most
+    // shard ranges are empty, and the result must not care.
+    for d in [1usize, 2, 100, par::CHUNK - 1, par::CHUNK] {
+        let xs = Dist::Exponential { lambda: 1.0 }.sample_vec(d, 900 + d as u64);
+        let mut r1 = Xoshiro256pp::seed_from_u64(5);
+        let want = hist_snapshot(&GridHistogram::build(&xs, 64, &mut r1).unwrap());
+        let mut r2 = Xoshiro256pp::seed_from_u64(5);
+        let got = hist_snapshot(&build_sharded(&xs, 64, &mut r2, 8).unwrap());
+        assert_eq!(got, want, "d={d} with 8 shards");
+        // And the full compress path.
+        let coord =
+            ShardCoordinator::new(ShardConfig { shards: 8, m: 64, ..Default::default() });
+        let sol = solve_hist(&xs, 4, &HistConfig::fixed(64)).unwrap();
+        let mut q1 = Xoshiro256pp::seed_from_u64(6);
+        let want_c = sq::compress(&xs, &sol.q, &mut q1);
+        let mut q2 = Xoshiro256pp::seed_from_u64(6);
+        let (_, got_c) = coord.compress(&xs, 4, &mut q2).unwrap();
+        assert_eq!(got_c, want_c, "compress d={d} with 8 shards");
+    }
+}
+
+#[test]
+fn degenerate_and_error_inputs_shard_like_single_node() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    par::set_threads(2);
+    // Constant input: both paths collapse to the single-point grid.
+    let xs = vec![1.5; 2 * par::CHUNK + 7];
+    let mut r1 = Xoshiro256pp::seed_from_u64(11);
+    let want = hist_snapshot(&GridHistogram::build(&xs, 32, &mut r1).unwrap());
+    let mut r2 = Xoshiro256pp::seed_from_u64(11);
+    let got = hist_snapshot(&build_sharded(&xs, 32, &mut r2, 4).unwrap());
+    assert_eq!(got, want);
+    // The compress of a constant vector is a zero-bit payload either way.
+    let coord = ShardCoordinator::new(ShardConfig { shards: 4, m: 32, ..Default::default() });
+    let mut q = Xoshiro256pp::seed_from_u64(12);
+    let (sol, c) = coord.compress(&xs, 4, &mut q).unwrap();
+    assert_eq!(sol.q, vec![1.5]);
+    assert_eq!(c.bits, 0);
+    assert!(c.payload.is_empty());
+    assert_eq!(c.d as usize, xs.len());
+    // NaN anywhere in any shard errors exactly like single-node.
+    let mut bad = xs.clone();
+    bad[par::CHUNK + 3] = f64::NAN;
+    let mut r3 = Xoshiro256pp::seed_from_u64(13);
+    assert_eq!(
+        build_sharded(&bad, 32, &mut r3, 4).unwrap_err(),
+        GridHistogram::build(&bad, 32, &mut Xoshiro256pp::seed_from_u64(13)).unwrap_err()
+    );
+}
