@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
                 s,
                 router: Router::default(),
                 seed: 9000 + w as u64,
+                stream: None,
             };
             // Same teacher (1234) across workers = a common learning task;
             // different stream seeds = heterogeneous local batches.

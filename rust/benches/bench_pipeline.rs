@@ -14,11 +14,18 @@
 //! * the sharded coordinator: the hist solve split across 1/2/4/8
 //!   chunk-aligned shard ranges (bit-identical results, asserted), so
 //!   the scale-out overhead is measured on its own;
+//! * incremental rounds (`quiver::stream`): a 20-round
+//!   stationary-distribution replay comparing the streaming solver's
+//!   per-round solve cost against a from-scratch solve of the identical
+//!   round histogram (the ≥5× cache/warm-start win is asserted), plus
+//!   the warm-start iteration-count wins (Bin-Search cost evals, ALQ
+//!   sweeps, 2-Apx threshold probes);
 //! * coordinator micro-benches: codec, batcher, end-to-end service RPC.
 //!
-//! Machine-readable results land in `BENCH_pipeline.json` and
-//! `BENCH_shard.json` at the repo root (name, d, s, median_ns, mad_ns,
-//! elems_per_s per entry).
+//! Machine-readable results land in `BENCH_pipeline.json`,
+//! `BENCH_shard.json` and `BENCH_stream.json` at the repo root (name, d,
+//! s, median_ns, mad_ns, elems_per_s per entry; the stream file carries
+//! one record per replay round — the round-cost curve).
 //!
 //! Set `QUIVER_SMOKE=1` to shrink every size so a full run finishes in
 //! seconds (the CI perf-smoke job and `make bench-smoke` use this).
@@ -302,6 +309,184 @@ fn main() {
         let json = write_bench_json(&repo_root.join("BENCH_shard.json"), &shard_records)
             .expect("write BENCH_shard.json");
         println!("wrote {} records to {}", shard_records.len(), json.display());
+    }
+
+    // --- Incremental rounds (`quiver::stream`): the multi-round section.
+    // A 20-round stationary replay (fresh sample of the same distribution
+    // per round, endpoints pinned so the grid repeats): round 0 re-solves
+    // from scratch; later rounds are served by the drift tracker — cache,
+    // reuse, or warm start. Each round's streaming solve cost is compared
+    // against a from-scratch solve of the *identical* round histogram, so
+    // the table isolates the solve-side win (the O(d) histogram build is
+    // paid identically on both sides). Per-round records land in
+    // BENCH_stream.json — the round-cost curve EXPERIMENTS.md documents.
+    {
+        use quiver::avq::binsearch;
+        use quiver::avq::histogram::solve_on;
+        use quiver::avq::SolverKind;
+        use quiver::baselines::{alq, zipml_2apx};
+        use quiver::stream::{self, StreamConfig, StreamSolver};
+
+        let round_pow = if smoke { 17 } else { 20 };
+        let d = 1usize << round_pow;
+        let rounds = 20u64;
+        let m = if smoke { 512 } else { 1024 };
+        let s = 16usize;
+        // Stationary gradient-style rounds: a fixed base sample with 1/8
+        // of the coordinates redrawn per round (Faghri et al.'s regime —
+        // consecutive rounds statistically near-identical) and sentinel
+        // endpoints pinning the grid so rounds share it exactly.
+        let base_sample = Dist::Uniform { lo: -1.0, hi: 1.0 }.sample_vec(d - 2, 0xF00D);
+        let mk_round = |r: u64| -> Vec<f64> {
+            let mut v = base_sample.clone();
+            let redraw = (d - 2) / 8;
+            let fresh = Dist::Uniform { lo: -1.0, hi: 1.0 }.sample_vec(redraw, 0xF00D + 1 + r);
+            v[..redraw].copy_from_slice(&fresh);
+            v.push(-1.5);
+            v.push(1.5);
+            v
+        };
+        let scfg = StreamConfig { m, inner: SolverKind::BinSearch, ..Default::default() };
+        let mut solver = StreamSolver::new(scfg);
+        let base = stream::stream_base(scfg.seed);
+        let mut t = Table::new(
+            format!("incremental rounds, d=2^{round_pow}, M={m}, s={s} (stationary replay)"),
+            &["round", "decision", "drift", "stream solve", "scratch solve", "speedup"],
+        );
+        let mut stream_records: Vec<BenchRecord> = vec![];
+        let mut fresh_samples: Vec<std::time::Duration> = vec![];
+        let (mut stream_after0_us, mut fresh_after0_us) = (0u64, 0u64);
+        for r in 0..rounds {
+            let xs = mk_round(r);
+            let outcome = solver.round(r, &xs, s).expect("stream round");
+            // From-scratch reference on the bit-identical round histogram
+            // (same round-keyed base), solve step timed on its own.
+            let (hist_base, _) = stream::round_bases(base, r);
+            let h = GridHistogram::build_with_base(&xs, m, hist_base).expect("round hist");
+            let tf = std::time::Instant::now();
+            let fresh = solve_on(&h, s, SolverKind::BinSearch).expect("scratch solve");
+            let fresh_dt = tf.elapsed();
+            let fresh_us = fresh_dt.as_micros().max(1) as u64;
+            if outcome.decision == quiver::stream::Decision::Resolve {
+                assert_eq!(
+                    outcome.solution.mse.to_bits(),
+                    fresh.mse.to_bits(),
+                    "round {r}: a re-solve must equal the from-scratch solve bitwise"
+                );
+            }
+            if r > 0 {
+                stream_after0_us += outcome.solve_us;
+                fresh_after0_us += fresh_us;
+            }
+            let st = benchfw::Stats {
+                name: format!("stream round r={r} [{}]", outcome.decision.name()),
+                samples: vec![std::time::Duration::from_micros(outcome.solve_us)],
+            };
+            stream_records.push(BenchRecord::from_stats(&st, d, s));
+            fresh_samples.push(fresh_dt);
+            t.row(vec![
+                r.to_string(),
+                outcome.decision.name().into(),
+                if outcome.drift_total.is_finite() {
+                    format!("{:.4}", outcome.drift_total)
+                } else {
+                    "-".into()
+                },
+                format!("{}µs", outcome.solve_us),
+                format!("{}µs", fresh_us),
+                format!("{:.1}x", fresh_us as f64 / outcome.solve_us.max(1) as f64),
+            ]);
+        }
+        let fresh_st = benchfw::Stats { name: "stream scratch-solve baseline".into(), samples: fresh_samples };
+        stream_records.push(BenchRecord::from_stats(&fresh_st, d, s));
+        t.print();
+        println!("stream decisions: {}", solver.metrics().summary());
+        // The acceptance bar: after round 1, cache/warm-start must cut the
+        // per-round solve cost by ≥ 5× vs from-scratch.
+        let speedup = fresh_after0_us as f64 / stream_after0_us.max(1) as f64;
+        println!(
+            "rounds 1..{rounds}: stream {stream_after0_us}µs vs scratch {fresh_after0_us}µs \
+             ({speedup:.1}x)"
+        );
+        assert!(
+            speedup >= 5.0,
+            "incremental rounds must be ≥5x cheaper after round 1, got {speedup:.2}x"
+        );
+        let json = write_bench_json(&repo_root.join("BENCH_stream.json"), &stream_records)
+            .expect("write BENCH_stream.json");
+        println!("wrote {} records to {}", stream_records.len(), json.display());
+
+        // Warm-start iteration counts: two consecutive stationary rounds,
+        // cold vs warm on each warm-startable solver. Work units, not
+        // wall-clock — immune to runner noise.
+        let ra = mk_round(100);
+        let rb = mk_round(101);
+        let (hb_a, _) = stream::round_bases(base, 100);
+        let (hb_b, _) = stream::round_bases(base, 101);
+        let ha = GridHistogram::build_with_base(&ra, m, hb_a).unwrap();
+        let hb = GridHistogram::build_with_base(&rb, m, hb_b).unwrap();
+        let pa = ha.prefix();
+        let pb = hb.prefix();
+        let (_, trace_a) = binsearch::solve_traced(&pa, s);
+        let (_, cold_trace) = binsearch::solve_traced(&pb, s);
+        let warm = binsearch::solve_warm(&pb, s, &trace_a, 2, 0.05);
+        let mut t = Table::new(
+            "warm-start iteration counts (round N+1 seeded from round N)",
+            &["solver", "unit", "cold", "warm", "win"],
+        );
+        t.row(vec![
+            "binsearch".into(),
+            "cost evals".into(),
+            cold_trace.evals.to_string(),
+            warm.evals.to_string(),
+            format!("{:.1}x", cold_trace.evals as f64 / warm.evals.max(1) as f64),
+        ]);
+        assert!(
+            warm.evals < cold_trace.evals,
+            "warm DP must evaluate fewer costs: {} vs {}",
+            warm.evals,
+            cold_trace.evals
+        );
+        // ALQ / 2-Apx iterate on sorted sample vectors (their own input
+        // shape); same two-round regime — round B shares ⅞ of round A's
+        // coordinates, so the warm state is genuinely close.
+        let sorted_d = if smoke { 4096 } else { 16_384 };
+        let bs = 8usize; // baseline budget (coordinate descent mixes slowly past this)
+        let base_round = Dist::Normal { mu: 0.3, sigma: 1.2 }.sample_vec(sorted_d, 0xA1);
+        let mut sa = base_round.clone();
+        sa.sort_unstable_by(f64::total_cmp);
+        let mut sb = base_round;
+        let fresh = Dist::Normal { mu: 0.3, sigma: 1.2 }.sample_vec(sorted_d / 8, 0xA2);
+        sb[..sorted_d / 8].copy_from_slice(&fresh);
+        sb.sort_unstable_by(f64::total_cmp);
+        let (qa, _) = alq::solve_converged(&sa, bs, 60, 1e-4);
+        let (_, alq_cold) = alq::solve_converged(&sb, bs, 60, 1e-4);
+        let (_, alq_warm) = alq::solve_warm(&sb, bs, &qa, 60, 1e-4);
+        t.row(vec![
+            "alq".into(),
+            "sweeps".into(),
+            alq_cold.to_string(),
+            alq_warm.to_string(),
+            format!("{:.1}x", alq_cold as f64 / alq_warm.max(1) as f64),
+        ]);
+        assert!(alq_warm < alq_cold, "warm ALQ must sweep less: {alq_warm} vs {alq_cold}");
+        let tsa = zipml_2apx::solve_bracketed(&sa, bs, None, 1e-3);
+        let tsb_cold = zipml_2apx::solve_bracketed(&sb, bs, None, 1e-3);
+        let tsb_warm = zipml_2apx::solve_bracketed(&sb, bs, Some(tsa.threshold), 1e-3);
+        t.row(vec![
+            "zipml-2apx".into(),
+            "greedy probes".into(),
+            tsb_cold.probes.to_string(),
+            tsb_warm.probes.to_string(),
+            format!("{:.1}x", tsb_cold.probes as f64 / tsb_warm.probes.max(1) as f64),
+        ]);
+        assert!(
+            tsb_warm.probes < tsb_cold.probes,
+            "warm bracket must probe less: {} vs {}",
+            tsb_warm.probes,
+            tsb_cold.probes
+        );
+        t.print();
     }
 
     // --- Coordinator micro-benches. ---

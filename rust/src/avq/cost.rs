@@ -97,6 +97,25 @@ impl Prefix {
     /// When every weight is integral (the histogram case), the `α⁻¹` inverse
     /// array is also built, making [`Prefix::b_star`] O(1) as in Appendix A.
     pub fn weighted(sorted_vals: &[f64], weights: &[f64]) -> Self {
+        Self::weighted_core(sorted_vals, weights, true)
+    }
+
+    /// [`Prefix::weighted`] **without** the `α⁻¹` acceleration array.
+    ///
+    /// The moment arrays are computed identically, so every
+    /// [`cost`](Prefix::cost)/[`cost2`](Prefix::cost2) value — and
+    /// therefore any solver that only evaluates interval costs
+    /// (Bin-Search) — is bit-identical to the [`weighted`](Prefix::weighted)
+    /// build; only [`b_star`](Prefix::b_star) changes complexity (O(log d)
+    /// binary search instead of O(1)). The streaming layer uses this for
+    /// its per-round Bin-Search solves: the inverse array costs O(total
+    /// weight) = O(d) per build, which would dwarf the warm-started DP it
+    /// feeds.
+    pub fn weighted_no_inverse(sorted_vals: &[f64], weights: &[f64]) -> Self {
+        Self::weighted_core(sorted_vals, weights, false)
+    }
+
+    fn weighted_core(sorted_vals: &[f64], weights: &[f64], build_inverse: bool) -> Self {
         assert_eq!(sorted_vals.len(), weights.len());
         debug_assert!(crate::util::is_sorted(sorted_vals), "values must be sorted");
         debug_assert!(weights.iter().all(|&w| w.is_finite() && w >= 0.0));
@@ -112,6 +131,7 @@ impl Prefix {
             gamma += w * y * y;
             data.push(Entry { y, alpha, beta, gamma });
         }
+        integral &= build_inverse;
         let total = alpha;
         // The explicit α⁻¹ array costs O(total weight) space (Appendix A
         // stores exactly this). For the histogram use case total = d, which
@@ -538,6 +558,27 @@ mod tests {
                 let slow = p.b_star_naive(k, j);
                 let cs = p.cost(k, slow) + p.cost(slow, j);
                 assert!(crate::util::approx_eq(cf, cs, 1e-9, 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_no_inverse_costs_are_bit_identical() {
+        let ys = lognormal(64, 15);
+        let mut rng = Xoshiro256pp::seed_from_u64(16);
+        let ws: Vec<f64> = (0..64).map(|_| rng.next_below(9) as f64).collect();
+        let full = Prefix::weighted(&ys, &ws);
+        let lean = Prefix::weighted_no_inverse(&ys, &ws);
+        assert!(full.has_alpha_inv());
+        assert!(!lean.has_alpha_inv(), "no-inverse build must skip α⁻¹");
+        for k in 0..ys.len() {
+            for j in k..ys.len() {
+                assert_eq!(full.cost(k, j).to_bits(), lean.cost(k, j).to_bits());
+                // b* stays *correct* (cost-equivalent) on the fallback path.
+                let (bf, bl) = (full.b_star(k, j), lean.b_star(k, j));
+                let cf = full.cost(k, bf) + full.cost(bf, j);
+                let cl = lean.cost(k, bl) + lean.cost(bl, j);
+                assert!(crate::util::approx_eq(cf, cl, 1e-9, 1e-12));
             }
         }
     }

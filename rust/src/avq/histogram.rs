@@ -78,10 +78,26 @@ impl GridHistogram {
         if xs.is_empty() {
             return Err(AvqError::EmptyInput);
         }
-        assert!(m >= 1, "need at least one bin");
         // One draw regardless of the data, so the caller's stream advance
         // is predictable (documented above).
         let base = rng.next_u64();
+        Self::build_with_base(xs, m, base)
+    }
+
+    /// [`build`](Self::build) with the per-chunk stream base supplied
+    /// explicitly instead of drawn from a generator.
+    ///
+    /// This is the entry point for callers that key the base themselves —
+    /// the round-based streaming layer ([`crate::stream`]) derives one
+    /// base per training round (`Xoshiro256pp::stream(round_base, round)`)
+    /// so round `r`'s histogram is a pure function of `(base, r, xs)`,
+    /// independent of how many rounds preceded it. Identical to `build`
+    /// when `base` is the draw `build` would have made.
+    pub fn build_with_base(xs: &[f64], m: usize, base: u64) -> Result<Self, AvqError> {
+        if xs.is_empty() {
+            return Err(AvqError::EmptyInput);
+        }
+        assert!(m >= 1, "need at least one bin");
         let st = par::scan::stats(xs);
         if !st.finite {
             return Err(AvqError::NonFinite);
@@ -477,6 +493,30 @@ mod tests {
             assert_eq!((merged.lo, merged.hi, merged.d), (whole.lo, whole.hi, whole.d));
             assert_eq!(merged.total(), d as f64);
         }
+    }
+
+    #[test]
+    fn build_with_base_matches_build() {
+        // The explicit-base entry point is `build` minus the draw: feeding
+        // it the draw `build` makes must reproduce the histogram bitwise.
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(5000, 29);
+        let mut rng = Xoshiro256pp::seed_from_u64(0xBA5E);
+        let whole = GridHistogram::build(&xs, 64, &mut rng).unwrap();
+        let mut rng2 = Xoshiro256pp::seed_from_u64(0xBA5E);
+        let base = rng2.next_u64();
+        let explicit = GridHistogram::build_with_base(&xs, 64, base).unwrap();
+        assert_eq!(explicit.weights, whole.weights);
+        assert_eq!(explicit.grid, whole.grid);
+        assert_eq!(explicit.norm2_sq.to_bits(), whole.norm2_sq.to_bits());
+        // Error cases match too.
+        assert_eq!(
+            GridHistogram::build_with_base(&[], 64, base).unwrap_err(),
+            AvqError::EmptyInput
+        );
+        assert_eq!(
+            GridHistogram::build_with_base(&[1.0, f64::NAN], 64, base).unwrap_err(),
+            AvqError::NonFinite
+        );
     }
 
     #[test]

@@ -24,40 +24,66 @@
 
 use crate::util::erf::{truncnorm_mass, truncnorm_partial_mean};
 
-/// Compute ALQ quantization values for sorted input `xs` and budget `s`.
-pub fn solve(xs: &[f64], s: usize, iters: usize) -> Vec<f64> {
-    assert!(!xs.is_empty());
-    assert!(s >= 2);
+/// The O(d) part of ALQ: the truncated-normal fit of the norm-normalized
+/// input. Retained across rounds by the warm-start path so only the sweep
+/// count changes with drift.
+struct Fit {
+    scale: f64,
+    mean: f64,
+    sigma: f64,
+    a: f64,
+    b: f64,
+    lo: f64,
+    hi: f64,
+}
+
+/// Fit the truncated normal; `None` for a degenerate (constant) input.
+fn fit(xs: &[f64]) -> Option<Fit> {
     let d = xs.len() as f64;
     let lo = xs[0];
     let hi = *xs.last().unwrap();
     if hi == lo {
-        return vec![lo];
+        return None;
     }
-    // ---- Fit a truncated normal to the norm-normalized vector. ----
     let norm = xs.iter().map(|x| x * x).sum::<f64>().sqrt();
     let scale = if norm > 0.0 { norm } else { 1.0 };
     let v: Vec<f64> = xs.iter().map(|x| x / scale).collect();
     let mean = v.iter().sum::<f64>() / d;
     let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / d;
     let sigma = var.sqrt().max(1e-12);
-    let (a, b) = (lo / scale, hi / scale); // truncation = observed range
-    // ---- Initialize levels at equally spaced positions. ----
-    let mut q: Vec<f64> = (0..s)
-        .map(|i| a + (b - a) * i as f64 / (s - 1) as f64)
-        .collect();
-    // ---- Ten fixed-point sweeps of exact coordinate descent. ----
-    for _ in 0..iters {
+    Some(Fit { scale, mean, sigma, a: lo / scale, b: hi / scale, lo, hi })
+}
+
+/// Run coordinate-descent sweeps on normalized levels `q` until either
+/// `max_iters` sweeps ran or the largest level movement of a sweep is
+/// ≤ `tol · (b − a)`. Returns the number of sweeps performed. `tol = 0`
+/// stops only at an exact fixed point, so it reproduces the fixed-count
+/// behaviour bit for bit (a zero-movement sweep implies every later sweep
+/// is a no-op).
+fn run_sweeps(f: &Fit, q: &mut [f64], max_iters: usize, tol: f64) -> usize {
+    let s = q.len();
+    let thresh = tol * (f.b - f.a);
+    for it in 0..max_iters {
+        let mut max_move = 0.0f64;
         for i in 1..s - 1 {
-            q[i] = optimal_between(mean, sigma, q[i - 1], q[i + 1]);
+            let new = optimal_between(f.mean, f.sigma, q[i - 1], q[i + 1]);
+            max_move = max_move.max((new - q[i]).abs());
+            q[i] = new;
+        }
+        if max_move <= thresh {
+            return it + 1;
         }
     }
-    // Map back to the input scale; endpoints are the observed min/max so
-    // the set covers X exactly.
-    let mut out: Vec<f64> = q.iter().map(|qi| qi * scale).collect();
-    out[0] = lo;
-    out[s - 1] = hi;
-    // Enforce monotonicity against float jitter.
+    max_iters
+}
+
+/// Map normalized levels back to the input scale, pin the endpoints to the
+/// observed min/max, enforce monotonicity, dedup.
+fn finish(f: &Fit, q: &[f64]) -> Vec<f64> {
+    let s = q.len();
+    let mut out: Vec<f64> = q.iter().map(|qi| qi * f.scale).collect();
+    out[0] = f.lo;
+    out[s - 1] = f.hi;
     for i in 1..s {
         if out[i] < out[i - 1] {
             out[i] = out[i - 1];
@@ -65,6 +91,77 @@ pub fn solve(xs: &[f64], s: usize, iters: usize) -> Vec<f64> {
     }
     out.dedup();
     out
+}
+
+/// Equally spaced initial levels on the normalized range.
+fn equispaced(f: &Fit, s: usize) -> Vec<f64> {
+    (0..s).map(|i| f.a + (f.b - f.a) * i as f64 / (s - 1) as f64).collect()
+}
+
+/// Compute ALQ quantization values for sorted input `xs` and budget `s`.
+pub fn solve(xs: &[f64], s: usize, iters: usize) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    assert!(s >= 2);
+    let Some(f) = fit(xs) else {
+        return vec![xs[0]];
+    };
+    let mut q = equispaced(&f, s);
+    run_sweeps(&f, &mut q, iters, 0.0);
+    finish(&f, &q)
+}
+
+/// [`solve`] with convergence-based early stopping from the equispaced
+/// start: sweeps until the largest level movement is ≤ `tol · (b − a)` (or
+/// `max_iters`), returning `(levels, sweeps)` — the cold baseline the
+/// benches compare [`solve_warm`]'s sweep count against.
+pub fn solve_converged(xs: &[f64], s: usize, max_iters: usize, tol: f64) -> (Vec<f64>, usize) {
+    assert!(!xs.is_empty());
+    assert!(s >= 2);
+    let Some(f) = fit(xs) else {
+        return (vec![xs[0]], 0);
+    };
+    let mut q = equispaced(&f, s);
+    let sweeps = run_sweeps(&f, &mut q, max_iters, tol);
+    (finish(&f, &q), sweeps)
+}
+
+/// Warm-started ALQ: iterate from the **previous round's levels** instead
+/// of the equispaced start (the round-based reuse Faghri et al. 2020
+/// exploit — consecutive rounds' fitted distributions barely move, so the
+/// fixed point is a few sweeps from the prior one). `init` is in input
+/// scale (a previous [`solve`]'s output); it is renormalized by this
+/// round's scale, clamped into the observed range, and falls back to the
+/// equispaced start when its length does not match `s`. Returns
+/// `(levels, sweeps)` with the same convergence rule as
+/// [`solve_converged`].
+pub fn solve_warm(
+    xs: &[f64],
+    s: usize,
+    init: &[f64],
+    max_iters: usize,
+    tol: f64,
+) -> (Vec<f64>, usize) {
+    assert!(!xs.is_empty());
+    assert!(s >= 2);
+    let Some(f) = fit(xs) else {
+        return (vec![xs[0]], 0);
+    };
+    let mut q = if init.len() == s && init.iter().all(|v| v.is_finite()) {
+        let mut q: Vec<f64> =
+            init.iter().map(|v| (v / f.scale).clamp(f.a, f.b)).collect();
+        q[0] = f.a;
+        q[s - 1] = f.b;
+        for i in 1..s {
+            if q[i] < q[i - 1] {
+                q[i] = q[i - 1];
+            }
+        }
+        q
+    } else {
+        equispaced(&f, s)
+    };
+    let sweeps = run_sweeps(&f, &mut q, max_iters, tol);
+    (finish(&f, &q), sweeps)
 }
 
 /// Root of `g(q)` on `[lo, hi]` for the fitted N(mu, sigma²):
@@ -153,6 +250,54 @@ mod tests {
         let e1 = vnmse(&xs, &solve(&xs, 8, 1));
         let e10 = vnmse(&xs, &solve(&xs, 8, 10));
         assert!(e10 <= e1 * 1.05, "iter1={e1} iter10={e10}");
+    }
+
+    #[test]
+    fn warm_start_converges_in_fewer_sweeps() {
+        // Two consecutive training-style rounds: round 2 shares ⅞ of
+        // round 1's coordinates (the stationary regime warm starts exist
+        // for). Warm-starting from round 1's levels must converge in far
+        // fewer sweeps than the cold equispaced start, to comparable
+        // quality.
+        let d = 8192;
+        let base = Dist::Normal { mu: 0.5, sigma: 1.5 }.sample_vec(d, 61);
+        let mut r1 = base.clone();
+        r1.sort_unstable_by(f64::total_cmp);
+        let mut next = base;
+        let fresh = Dist::Normal { mu: 0.5, sigma: 1.5 }.sample_vec(d / 8, 62);
+        next[..d / 8].copy_from_slice(&fresh);
+        next.sort_unstable_by(f64::total_cmp);
+        let r2 = next;
+        let s = 8;
+        let tol = 1e-5;
+        let (q1, _) = alq_cold(&r1, s, tol);
+        let (cold_q, cold_sweeps) = alq_cold(&r2, s, tol);
+        let (warm_q, warm_sweeps) = solve_warm(&r2, s, &q1, 50, tol);
+        assert!(
+            warm_sweeps * 2 < cold_sweeps,
+            "warm {warm_sweeps} sweeps should be well under cold {cold_sweeps}"
+        );
+        let ec = vnmse(&r2, &cold_q);
+        let ew = vnmse(&r2, &warm_q);
+        assert!(ew <= ec * 1.02, "warm quality must match cold: {ew} vs {ec}");
+        // Mismatched init lengths fall back to the equispaced start.
+        let (fb_q, fb_sweeps) = solve_warm(&r2, s, &q1[..3], 50, tol);
+        assert_eq!((fb_q, fb_sweeps), (cold_q, cold_sweeps));
+    }
+
+    fn alq_cold(xs: &[f64], s: usize, tol: f64) -> (Vec<f64>, usize) {
+        solve_converged(xs, s, 50, tol)
+    }
+
+    #[test]
+    fn solve_converged_with_zero_tol_matches_fixed_iters() {
+        // tol = 0 only stops at an exact fixed point, so the capped run is
+        // bitwise the fixed-count run.
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(4096, 63);
+        let fixed = solve(&xs, 8, 10);
+        let (capped, sweeps) = solve_converged(&xs, 8, 10, 0.0);
+        assert_eq!(capped, fixed);
+        assert!(sweeps <= 10);
     }
 
     #[test]

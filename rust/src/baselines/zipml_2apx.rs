@@ -27,6 +27,89 @@
 
 use crate::avq::Prefix;
 
+/// Result of a probe-counted threshold search ([`solve_bracketed`]).
+#[derive(Debug, Clone)]
+pub struct ThresholdSolve {
+    /// The bicriteria value set (≤ 2s values).
+    pub q: Vec<f64>,
+    /// The accepted interval-cost threshold `T` — feed it back as the next
+    /// round's warm bracket.
+    pub threshold: f64,
+    /// Number of greedy-cover probes the search performed (the solver's
+    /// unit of work, reported by the benches).
+    pub probes: usize,
+}
+
+/// [`solve`] with an explicit threshold bracket and probe accounting — the
+/// round-based warm-start entry point.
+///
+/// Cold (`warm_t = None`) the search bisects `[0, C_total]`; warm it
+/// brackets around the previous round's accepted threshold (`[T/2, 2T]`,
+/// expanded geometrically until it truly brackets), which converges in a
+/// handful of probes when consecutive rounds drift little. Both sides stop
+/// at relative width `rel_tol` and return the greedy cover of the feasible
+/// end, so warm and cold solutions are interchangeable (same guarantee);
+/// the measured win is the probe count.
+pub fn solve_bracketed(xs: &[f64], s: usize, warm_t: Option<f64>, rel_tol: f64) -> ThresholdSolve {
+    assert!(!xs.is_empty());
+    assert!(s >= 2);
+    assert!(rel_tol > 0.0);
+    let d = xs.len();
+    if xs[d - 1] == xs[0] {
+        return ThresholdSolve { q: vec![xs[0]], threshold: 0.0, probes: 0 };
+    }
+    let p = Prefix::unweighted(xs);
+    let budget = 2 * s;
+    if budget >= d {
+        return ThresholdSolve { q: xs.to_vec(), threshold: 0.0, probes: 0 };
+    }
+    let total = p.cost(0, d - 1);
+    let mut probes = 0usize;
+    let mut feasible = |t: f64, probes: &mut usize| {
+        *probes += 1;
+        greedy_count(&p, t, budget + 1).0 <= budget
+    };
+    // Establish a bracket [lo_t (infeasible), hi_t (feasible)].
+    let (mut lo_t, mut hi_t) = match warm_t {
+        Some(t) if t.is_finite() && t > 0.0 && t < total => {
+            if feasible(t, &mut probes) {
+                // Shrink the lower edge until it is genuinely infeasible
+                // (or vanishes — then t is already minimal enough).
+                let mut lo = t / 2.0;
+                let mut hi = t;
+                while lo > total * 1e-18 && feasible(lo, &mut probes) {
+                    hi = lo;
+                    lo /= 2.0;
+                }
+                (if lo > total * 1e-18 { lo } else { 0.0 }, hi)
+            } else {
+                // Grow the upper edge until feasible (T = C_total always is).
+                let mut lo = t;
+                let mut hi = (t * 2.0).min(total);
+                while hi < total && !feasible(hi, &mut probes) {
+                    lo = hi;
+                    hi = (hi * 2.0).min(total);
+                }
+                (lo, hi)
+            }
+        }
+        _ => (0.0, total),
+    };
+    // Bisect to relative width rel_tol (cap guards degenerate floats).
+    let mut iters = 0;
+    while hi_t - lo_t > rel_tol * hi_t && iters < 200 {
+        let mid = 0.5 * (lo_t + hi_t);
+        if feasible(mid, &mut probes) {
+            hi_t = mid;
+        } else {
+            lo_t = mid;
+        }
+        iters += 1;
+    }
+    let (_, idx) = greedy_count(&p, hi_t, budget + 1);
+    ThresholdSolve { q: idx.into_iter().map(|i| xs[i]).collect(), threshold: hi_t, probes }
+}
+
 /// Compute the bicriteria value set: up to `2s` values. `xs` sorted.
 pub fn solve(xs: &[f64], s: usize) -> Vec<f64> {
     assert!(!xs.is_empty());
@@ -139,6 +222,35 @@ mod tests {
         let q = solve(&xs, s);
         let err = sum_variances(&xs, &q);
         assert!(err + 1e-12 >= opt2s.mse, "greedy cannot beat the 2s-optimal");
+    }
+
+    #[test]
+    fn bracketed_cold_matches_quality_and_warm_probes_fewer() {
+        let r1 = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(3000, 71);
+        let r2 = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_sorted(3000, 72);
+        let s = 8;
+        let cold1 = solve_bracketed(&r1, s, None, 1e-3);
+        assert!(cold1.q.len() <= 2 * s && cold1.threshold > 0.0 && cold1.probes > 0);
+        // Warm round 2 from round 1's threshold: far fewer probes, same
+        // budget and guarantee.
+        let cold2 = solve_bracketed(&r2, s, None, 1e-3);
+        let warm2 = solve_bracketed(&r2, s, Some(cold1.threshold), 1e-3);
+        assert!(
+            warm2.probes < cold2.probes,
+            "warm {} probes should beat cold {}",
+            warm2.probes,
+            cold2.probes
+        );
+        assert!(warm2.q.len() <= 2 * s);
+        let p = avq::Prefix::unweighted(&r2);
+        let opt = avq::solve(&p, s, SolverKind::QuiverAccel).unwrap();
+        assert!(
+            sum_variances(&r2, &warm2.q) <= 2.0 * opt.mse + 1e-9,
+            "warm path keeps the bicriteria bound"
+        );
+        // Degenerate warm hints fall back to the cold bracket.
+        let junk = solve_bracketed(&r2, s, Some(f64::NAN), 1e-3);
+        assert_eq!(junk.q, cold2.q);
     }
 
     #[test]

@@ -198,27 +198,66 @@ pub struct Scheduler<T> {
     capacity: usize,
     max_batch: usize,
     max_wait: Duration,
+    /// Deadline-aware shedding (opt-in): when set, a job whose deadline
+    /// has already passed **at pop time** is diverted into the shed list
+    /// instead of being returned in a batch — the work was already too
+    /// late to matter, so burning a solve on it only delays live jobs.
+    /// The caller drains [`Scheduler::take_shed`] after each pull and
+    /// disposes of the jobs (the service replies `Busy` and bumps its
+    /// `shed=` metric). Admission stays class-blind either way; only the
+    /// pop filters.
+    shed_expired: bool,
 }
 
 struct SchedInner<T> {
     heap: BinaryHeap<Entry<T>>,
     seq: u64,
     closed: bool,
+    shed: Vec<T>,
+    shed_total: u64,
 }
 
 impl<T> Scheduler<T> {
     /// `capacity`: max queued jobs; `max_batch`: jobs per pull;
     /// `max_wait`: max linger after the first job of a batch arrives.
+    /// Deadline shedding starts off; enable with
+    /// [`with_shed_expired`](Scheduler::with_shed_expired).
     pub fn new(capacity: usize, max_batch: usize, max_wait: Duration) -> Self {
         assert!(capacity >= 1 && max_batch >= 1);
         Self {
-            inner: Mutex::new(SchedInner { heap: BinaryHeap::new(), seq: 0, closed: false }),
+            inner: Mutex::new(SchedInner {
+                heap: BinaryHeap::new(),
+                seq: 0,
+                closed: false,
+                shed: Vec::new(),
+                shed_total: 0,
+            }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
             max_batch,
             max_wait,
+            shed_expired: false,
         }
+    }
+
+    /// Enable/disable deadline-aware shedding (builder style; see the
+    /// field docs on the struct).
+    pub fn with_shed_expired(mut self, on: bool) -> Self {
+        self.shed_expired = on;
+        self
+    }
+
+    /// Drain the jobs shed since the last call (empty unless shedding is
+    /// enabled). The caller owns their disposal — nothing is silently
+    /// dropped.
+    pub fn take_shed(&self) -> Vec<T> {
+        std::mem::take(&mut self.inner.lock().unwrap().shed)
+    }
+
+    /// Total jobs shed over the scheduler's lifetime.
+    pub fn shed_count(&self) -> u64 {
+        self.inner.lock().unwrap().shed_total
     }
 
     /// Blocking submit; returns `false` if the queue is closed.
@@ -285,7 +324,7 @@ impl<T> Scheduler<T> {
                 }
             }
         }
-        let batch = Self::pop_batch(&mut g, self.max_batch);
+        let batch = Self::pop_batch(&mut g, self.max_batch, self.shed_expired);
         self.not_full.notify_all();
         Some(batch)
     }
@@ -300,16 +339,28 @@ impl<T> Scheduler<T> {
         if g.heap.is_empty() {
             return None;
         }
-        let batch = Self::pop_batch(&mut g, self.max_batch);
+        let batch = Self::pop_batch(&mut g, self.max_batch, self.shed_expired);
         self.not_full.notify_all();
         Some(batch)
     }
 
-    fn pop_batch(g: &mut SchedInner<T>, max_batch: usize) -> Vec<T> {
-        let take = g.heap.len().min(max_batch);
-        let mut batch = Vec::with_capacity(take);
-        for _ in 0..take {
-            batch.push(g.heap.pop().expect("sized by heap length").job);
+    /// Pop up to `max_batch` jobs in scheduling order. With shedding on,
+    /// expired-deadline jobs are diverted to the shed list and do not
+    /// count toward the batch — a pop may therefore return an *empty*
+    /// batch when everything pending had already missed its deadline
+    /// (consumers treat it like any other batch; the service's
+    /// `serve_groups` skips empty groups).
+    fn pop_batch(g: &mut SchedInner<T>, max_batch: usize, shed_expired: bool) -> Vec<T> {
+        let now = Instant::now();
+        let mut batch = Vec::with_capacity(g.heap.len().min(max_batch));
+        while batch.len() < max_batch {
+            let Some(entry) = g.heap.pop() else { break };
+            if shed_expired && entry.class.deadline.is_some_and(|d| d <= now) {
+                g.shed.push(entry.job);
+                g.shed_total += 1;
+                continue;
+            }
+            batch.push(entry.job);
         }
         batch
     }
@@ -532,6 +583,35 @@ mod tests {
             t0.elapsed() < Duration::from_secs(5),
             "drain-on-close must not wait out max_wait"
         );
+    }
+
+    #[test]
+    fn shed_expired_drops_late_jobs_at_pop_time() {
+        let s = Scheduler::new(16, 8, Duration::from_millis(1)).with_shed_expired(true);
+        let now = Instant::now();
+        // Already expired at submission; definitely expired at pop.
+        let expired = TenantClass { priority: 0, deadline: Some(now - Duration::from_millis(5)) };
+        let live = TenantClass { priority: 0, deadline: Some(now + Duration::from_secs(60)) };
+        assert!(s.submit("dead-a", expired));
+        assert!(s.submit("live-1", live));
+        assert!(s.submit("dead-b", expired));
+        assert!(s.submit("no-deadline", TenantClass::best_effort()));
+        let batch = s.next_batch().unwrap();
+        assert_eq!(batch, vec!["live-1", "no-deadline"], "live jobs only, in schedule order");
+        let mut shed = s.take_shed();
+        shed.sort_unstable();
+        assert_eq!(shed, vec!["dead-a", "dead-b"]);
+        assert_eq!(s.shed_count(), 2);
+        assert!(s.take_shed().is_empty(), "shed list drains once");
+        // A pop where everything expired yields an empty batch, not a hang.
+        assert!(s.submit("dead-c", expired));
+        assert_eq!(s.next_batch().unwrap(), Vec::<&str>::new());
+        assert_eq!(s.take_shed(), vec!["dead-c"]);
+        // Shedding off (the default): expired jobs still serve.
+        let off = Scheduler::new(16, 8, Duration::from_millis(1));
+        assert!(off.submit("dead", expired));
+        assert_eq!(off.next_batch().unwrap(), vec!["dead"]);
+        assert_eq!(off.shed_count(), 0);
     }
 
     #[test]

@@ -67,6 +67,18 @@ pub struct Metrics {
     /// cross-batch admission (each counts the *extra* batches of a wave,
     /// i.e. the pool handoffs saved under load).
     pub packed: AtomicU64,
+    /// Requests shed at pop time because their deadline had already
+    /// passed (the opt-in `--shed-expired` admission rule; each shed
+    /// request was answered `Busy` instead of burning a solve).
+    pub shed: AtomicU64,
+    /// Streaming rounds served from the exact level cache.
+    pub stream_cached: AtomicU64,
+    /// Streaming rounds served by drift-bounded reuse.
+    pub stream_reused: AtomicU64,
+    /// Streaming rounds served by a warm-started solve.
+    pub stream_warm: AtomicU64,
+    /// Streaming rounds fully re-solved.
+    pub stream_resolved: AtomicU64,
     /// Raw input bytes received.
     pub bytes_in: AtomicU64,
     /// Compressed bytes produced.
@@ -93,20 +105,32 @@ impl Metrics {
         }
     }
 
-    /// One-line human summary.
+    /// One-line human summary. The `stream=` segment appears once any
+    /// streaming round has been served (cached/reused/warm/resolved).
     pub fn summary(&self) -> String {
-        format!(
-            "accepted={} rejected={} completed={} packed={} ratio={:.2}x mean={:.0}µs p50={}µs p99={}µs solve_mean={:.0}µs",
+        let mut line = format!(
+            "accepted={} rejected={} completed={} packed={} shed={} ratio={:.2}x mean={:.0}µs p50={}µs p99={}µs solve_mean={:.0}µs",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.packed.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
             self.ratio(),
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
             self.solve_latency.mean_us(),
-        )
+        );
+        let (c, r, w, f) = (
+            self.stream_cached.load(Ordering::Relaxed),
+            self.stream_reused.load(Ordering::Relaxed),
+            self.stream_warm.load(Ordering::Relaxed),
+            self.stream_resolved.load(Ordering::Relaxed),
+        );
+        if c + r + w + f > 0 {
+            line.push_str(&format!(" stream=c{c}/r{r}/w{w}/s{f}"));
+        }
+        line
     }
 }
 
@@ -142,6 +166,12 @@ mod tests {
         m.add(&m.bytes_out, 500);
         assert!((m.ratio() - 8.0).abs() < 1e-12);
         assert!(m.summary().contains("ratio=8.00x"));
+        assert!(m.summary().contains("shed=0"));
+        // The stream segment only appears once streaming rounds exist.
+        assert!(!m.summary().contains("stream="));
+        m.add(&m.stream_reused, 3);
+        m.add(&m.stream_resolved, 1);
+        assert!(m.summary().contains("stream=c0/r3/w0/s1"));
     }
 
     #[test]

@@ -139,6 +139,48 @@ pub enum Msg {
         /// Bit-packed indices.
         payload: Vec<u8>,
     },
+    /// Client → compression service: one round of an **incremental
+    /// (streaming) session** ([`crate::stream`]). The `(stream_id,
+    /// round)` pair keys the round's RNG streams, so a tenant's round is
+    /// reproducible regardless of batching, scheduling, or which solver
+    /// thread serves it.
+    StreamCompressRequest {
+        /// Client-chosen id echoed in the reply.
+        request_id: u64,
+        /// The tenant's stream (one incremental solver state per id).
+        stream_id: u64,
+        /// Round id within the stream (keys the round's RNG bases).
+        round: u64,
+        /// Quantization budget (number of values).
+        s: u32,
+        /// Tenant priority class (as in [`Msg::CompressRequest`]).
+        class: u8,
+        /// Deadline budget in milliseconds (as in
+        /// [`Msg::CompressRequest`]).
+        deadline_ms: u32,
+        /// The round's raw vector.
+        data: Vec<f32>,
+    },
+    /// Compression service → client, streaming mode: the compressed round
+    /// plus how it was served.
+    StreamCompressReply {
+        /// Echoed request id.
+        request_id: u64,
+        /// Echoed round id.
+        round: u64,
+        /// [`crate::stream::Decision`] wire code (resolve / warm / reuse
+        /// / cached).
+        decision: u8,
+        /// Measured drift vs the stream's previous round.
+        drift: f64,
+        /// The compressed round.
+        compressed: CompressedVec,
+        /// Route label (see
+        /// [`Route::Streaming`](crate::coordinator::router::Route)).
+        solver: String,
+        /// Decision + solve wall time in microseconds.
+        solve_us: u64,
+    },
 }
 
 impl Msg {
@@ -162,6 +204,8 @@ impl Msg {
             Msg::ShardWeights { .. } => "ShardWeights",
             Msg::ShardEncodeRequest { .. } => "ShardEncodeRequest",
             Msg::ShardPayload { .. } => "ShardPayload",
+            Msg::StreamCompressRequest { .. } => "StreamCompressRequest",
+            Msg::StreamCompressReply { .. } => "StreamCompressReply",
         }
     }
 
@@ -182,6 +226,8 @@ impl Msg {
             Msg::ShardWeights { .. } => 13,
             Msg::ShardEncodeRequest { .. } => 14,
             Msg::ShardPayload { .. } => 15,
+            Msg::StreamCompressRequest { .. } => 16,
+            Msg::StreamCompressReply { .. } => 17,
         }
     }
 
@@ -243,6 +289,40 @@ impl Msg {
             }
             Msg::ShardPayload { task_id, d, payload } => {
                 w.u64(*task_id).u64(*d).bytes(payload);
+            }
+            Msg::StreamCompressRequest {
+                request_id,
+                stream_id,
+                round,
+                s,
+                class,
+                deadline_ms,
+                data,
+            } => {
+                w.u64(*request_id)
+                    .u64(*stream_id)
+                    .u64(*round)
+                    .u32(*s)
+                    .u8(*class)
+                    .u32(*deadline_ms)
+                    .f32s(data);
+            }
+            Msg::StreamCompressReply {
+                request_id,
+                round,
+                decision,
+                drift,
+                compressed,
+                solver,
+                solve_us,
+            } => {
+                w.u64(*request_id)
+                    .u64(*round)
+                    .u8(*decision)
+                    .f64(*drift)
+                    .bytes(&compressed.to_bytes())
+                    .string(solver)
+                    .u64(*solve_us);
             }
         }
         let body = w.finish();
@@ -334,6 +414,35 @@ impl Msg {
                 qbase: r.u64()?,
             },
             15 => Msg::ShardPayload { task_id: r.u64()?, d: r.u64()?, payload: r.bytes()? },
+            16 => Msg::StreamCompressRequest {
+                request_id: r.u64()?,
+                stream_id: r.u64()?,
+                round: r.u64()?,
+                s: r.u32()?,
+                class: r.u8()?,
+                deadline_ms: r.u32()?,
+                data: r.f32s()?,
+            },
+            17 => {
+                let request_id = r.u64()?;
+                let round = r.u64()?;
+                let decision = r.u8()?;
+                let drift = r.f64()?;
+                let blob = r.bytes()?;
+                let compressed = CompressedVec::from_bytes(&blob)
+                    .ok_or(DecodeError("malformed compressed vector"))?;
+                let solver = r.string()?;
+                let solve_us = r.u64()?;
+                Msg::StreamCompressReply {
+                    request_id,
+                    round,
+                    decision,
+                    drift,
+                    compressed,
+                    solver,
+                    solve_us,
+                }
+            }
             _ => return Err(DecodeError("unknown message tag")),
         };
         r.expect_end()?;
@@ -453,6 +562,24 @@ mod tests {
             qbase: 42,
         });
         roundtrip(Msg::ShardPayload { task_id: 5, d: 3, payload: vec![0b_0110] });
+        roundtrip(Msg::StreamCompressRequest {
+            request_id: 91,
+            stream_id: 4,
+            round: 17,
+            s: 16,
+            class: 2,
+            deadline_ms: 100,
+            data: vec![0.25; 64],
+        });
+        roundtrip(Msg::StreamCompressReply {
+            request_id: 91,
+            round: 17,
+            decision: 2,
+            drift: 0.0125,
+            compressed: sample_compressed(),
+            solver: "quiver-stream(M=400)".into(),
+            solve_us: 77,
+        });
     }
 
     #[test]

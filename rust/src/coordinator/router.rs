@@ -50,6 +50,17 @@ pub enum Route {
         /// Shard count.
         shards: usize,
     },
+    /// An incremental-session round served by the [`crate::stream`]
+    /// subsystem (drift-tracked histogram, level cache, warm-started
+    /// solver). Always histogram-based — drift tracking and the cache are
+    /// keyed on the merged histogram — and sharded internally when the
+    /// router's `shards > 1`. Taken only for
+    /// [`Msg::StreamCompressRequest`](super::protocol::Msg) traffic;
+    /// one-shot requests keep the size-based routes above.
+    Streaming {
+        /// Histogram bins.
+        m: usize,
+    },
 }
 
 impl Route {
@@ -59,6 +70,7 @@ impl Route {
             Route::Exact => "quiver-accel".into(),
             Route::Hist { m } => format!("quiver-hist(M={m})"),
             Route::ShardedHist { m, shards } => format!("quiver-hist(M={m})x{shards}shards"),
+            Route::Streaming { m } => format!("quiver-stream(M={m})"),
         }
     }
 }
@@ -74,6 +86,13 @@ impl Router {
     /// Build a router with the given policy.
     pub fn new(cfg: RouterConfig) -> Self {
         Self { cfg }
+    }
+
+    /// The route an incremental-session round takes ([`Route::Streaming`]
+    /// at the configured M) — requested explicitly by streaming traffic,
+    /// never inferred from the dimension.
+    pub fn route_streaming(&self) -> Route {
+        Route::Streaming { m: self.cfg.hist_m }
     }
 
     /// Decide the route for a `d`-dimensional request.
@@ -106,6 +125,10 @@ impl Router {
                 let cfg = HistConfig { m, inner: SolverKind::QuiverAccel, seed: self.cfg.seed };
                 shard::solve_hist_sharded(xs, s, &cfg, shards)?
             }
+            // `route()` never returns Streaming — incremental rounds carry
+            // their own state and go through `stream::StreamSolver` (the
+            // service's streaming handler), not the stateless solve.
+            Route::Streaming { .. } => unreachable!("streaming rounds use stream::StreamSolver"),
         };
         Ok((sol, route))
     }
@@ -176,6 +199,11 @@ mod tests {
             Route::ShardedHist { m: 400, shards: 8 }.label(),
             "quiver-hist(M=400)x8shards"
         );
+        assert_eq!(Route::Streaming { m: 400 }.label(), "quiver-stream(M=400)");
+        let r = Router::new(RouterConfig { hist_m: 128, ..Default::default() });
+        assert_eq!(r.route_streaming(), Route::Streaming { m: 128 });
+        // Streaming is never inferred from the dimension.
+        assert_ne!(r.route(1 << 20), Route::Streaming { m: 128 });
     }
 
     #[test]

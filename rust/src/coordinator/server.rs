@@ -27,6 +27,12 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Number of synchronous rounds.
     pub rounds: u64,
+    /// First round id broadcast (default 0). Round ids key the workers'
+    /// round-based RNG streams (`crate::stream`), so a training job
+    /// resumed from a checkpoint should continue its round numbering —
+    /// `start_round = N` makes the resumed job's rounds reproduce exactly
+    /// the streams an uninterrupted run would have used.
+    pub start_round: u64,
     /// Model dimension (validated against submissions).
     pub dim: usize,
     /// SGD learning rate applied to the aggregated gradient.
@@ -41,6 +47,7 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:0".into(),
             workers: 4,
             rounds: 50,
+            start_round: 0,
             dim: 0,
             lr: 0.1,
             round_timeout: Duration::from_secs(30),
@@ -174,7 +181,7 @@ impl Server {
         params: &mut Vec<f32>,
         log: &mut TrainLog,
     ) -> Result<()> {
-        for round in 0..cfg.rounds {
+        for round in cfg.start_round..cfg.start_round + cfg.rounds {
             let t0 = Instant::now();
             for stream in writers.values_mut() {
                 send(stream, &Msg::RoundStart { round, params: params.clone() })?;

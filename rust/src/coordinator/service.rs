@@ -28,6 +28,19 @@
 //! * Routing: [`super::router::Router`] — exact Acc-QUIVER below the size
 //!   crossover, QUIVER-Hist above it (optionally sharded,
 //!   `RouterConfig::shards`).
+//! * Streaming mode ([`ServiceConfig::stream`], `--stream`): round-based
+//!   tenants send [`Msg::StreamCompressRequest`] and the service keeps
+//!   one [`crate::stream::StreamSolver`] per `stream_id` — a drift
+//!   tracker decides per round whether to serve cached levels, reuse the
+//!   previous round's, warm-start the DP, or fully re-solve
+//!   ([`Route::Streaming`](super::router::Route) label, per-decision
+//!   metrics). Round RNG streams are keyed by `(stream seed, stream_id,
+//!   round)`, so tenant streams are reproducible no matter how requests
+//!   were batched or scheduled.
+//! * Deadline shedding ([`ServiceConfig::shed_expired`],
+//!   `--shed-expired`): opt-in admission rule answering already-expired
+//!   requests with `Busy` at pop time instead of solving them (`shed=`
+//!   metric) — bounded wasted work under overload.
 //! * Metrics: counters + latency histograms ([`super::metrics`]).
 //! * Data parallelism: each solver thread hands its job's whole-vector
 //!   O(d) passes (f32→f64 widening, scan, sort/histogram, quantize,
@@ -45,6 +58,7 @@
 //!   data parallelism. A batch of 1K-element tenant vectors thus costs
 //!   one pool handoff rather than 1K per-pass spawn waves.
 
+use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -57,6 +71,7 @@ use super::metrics::Metrics;
 use super::protocol::{recv, send, Msg};
 use super::router::Router;
 use crate::sq;
+use crate::stream::{Decision, StreamConfig, StreamSolver, StreamTuning};
 use crate::util::rng::Xoshiro256pp;
 
 /// Service configuration.
@@ -99,6 +114,95 @@ pub struct ServiceConfig {
     /// `admission` small (or 1); throughput-oriented single-class
     /// deployments can raise it freely.
     pub admission: usize,
+    /// Opt-in streaming mode ([`crate::stream`]): `Some` makes the
+    /// service accept [`Msg::StreamCompressRequest`] traffic, holding one
+    /// incremental solver per `stream_id` (drift-tracked histogram, level
+    /// cache, warm-started DP). `None` (the default) answers streaming
+    /// requests with `Busy`. One-shot `CompressRequest` traffic is
+    /// unaffected either way.
+    pub stream: Option<StreamServiceConfig>,
+    /// Opt-in deadline-aware shedding (`--shed-expired`): a request whose
+    /// deadline already passed when a solver pops it is answered `Busy`
+    /// immediately instead of burning a solve (counted by the `shed=`
+    /// metric). Off by default — the scheduler then only *orders* by
+    /// deadline, never drops.
+    pub shed_expired: bool,
+}
+
+/// Streaming-mode knobs ([`ServiceConfig::stream`]).
+#[derive(Debug, Clone, Copy)]
+pub struct StreamServiceConfig {
+    /// The per-stream decision-ladder knobs ([`StreamTuning`] — shared
+    /// with the library and worker deployments).
+    pub tuning: StreamTuning,
+    /// Base seed; stream `id` solves with the derived seed
+    /// `Xoshiro256pp::stream(seed, id)` draw, so every tenant stream is
+    /// reproducible from `(seed, id, round, data)` alone — independent of
+    /// batching, scheduling, or which solver thread served it.
+    pub seed: u64,
+    /// Maximum number of live per-stream solvers. `stream_id` comes off
+    /// the wire, so an unbounded map would let a client churn ids until
+    /// the service OOMs (each solver retains two M-bin histograms plus
+    /// its level cache). Beyond the cap the **oldest-created** stream is
+    /// evicted; a later round of an evicted stream transparently
+    /// re-creates it and re-solves (the derived seed makes its streams
+    /// reproducible, so eviction costs one Resolve, never correctness).
+    pub max_streams: usize,
+}
+
+impl Default for StreamServiceConfig {
+    fn default() -> Self {
+        Self { tuning: StreamTuning::default(), seed: 0x57A3A, max_streams: 64 }
+    }
+}
+
+/// A capped, creation-ordered map of live stream solvers.
+type SharedSolver = Arc<Mutex<StreamSolver>>;
+#[derive(Default)]
+struct StreamMap {
+    map: HashMap<u64, SharedSolver>,
+    order: std::collections::VecDeque<u64>,
+}
+
+/// Shared streaming state: per-`stream_id` incremental solvers. Stream
+/// jobs always compute inline on a solver thread (never inside a pool
+/// wave), so holding a per-stream mutex across the solve cannot deadlock
+/// with the pool's help-and-wait — a blocked solver thread waits on the
+/// mutex, it never executes another stream job.
+struct StreamState {
+    cfg: Option<StreamServiceConfig>,
+    solvers: Mutex<StreamMap>,
+}
+
+impl StreamState {
+    fn solver(&self, router: &Router, stream_id: u64) -> Option<SharedSolver> {
+        let scfg = self.cfg?;
+        let mut g = self.solvers.lock().unwrap();
+        if let Some(s) = g.map.get(&stream_id) {
+            return Some(s.clone());
+        }
+        // Capacity: evict the oldest-created streams first (an in-flight
+        // round keeps its solver alive through its own Arc).
+        while g.map.len() >= scfg.max_streams.max(1) {
+            match g.order.pop_front() {
+                Some(old) => {
+                    g.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        let seed = Xoshiro256pp::stream(scfg.seed, stream_id).next_u64();
+        let solver = Arc::new(Mutex::new(StreamSolver::new(StreamConfig {
+            m: router.cfg.hist_m,
+            seed,
+            shards: router.cfg.shards.max(1),
+            tuning: scfg.tuning,
+            ..StreamConfig::default()
+        })));
+        g.map.insert(stream_id, solver.clone());
+        g.order.push_back(stream_id);
+        Some(solver)
+    }
 }
 
 impl Default for ServiceConfig {
@@ -113,6 +217,8 @@ impl Default for ServiceConfig {
             seed: 0x5E71CE,
             batch_small_d: crate::par::CHUNK,
             admission: 1,
+            stream: None,
+            shed_expired: false,
         }
     }
 }
@@ -123,6 +229,8 @@ struct Job {
     data: Vec<f32>,
     accepted_at: Instant,
     reply: Arc<Mutex<TcpStream>>,
+    /// `Some((stream_id, round))` for incremental-session rounds.
+    stream: Option<(u64, u64)>,
 }
 
 /// Handle to a running service.
@@ -143,7 +251,12 @@ impl Service {
         let addr = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::default());
-        let sched = Arc::new(Scheduler::new(cfg.queue_capacity, cfg.max_batch, cfg.max_wait));
+        let sched = Arc::new(
+            Scheduler::new(cfg.queue_capacity, cfg.max_batch, cfg.max_wait)
+                .with_shed_expired(cfg.shed_expired),
+        );
+        let streams =
+            Arc::new(StreamState { cfg: cfg.stream, solvers: Mutex::new(StreamMap::default()) });
         let mut joins = Vec::new();
 
         // Solver pool.
@@ -151,6 +264,7 @@ impl Service {
         for t in 0..cfg.threads.max(1) {
             let sched = sched.clone();
             let metrics = metrics.clone();
+            let streams = streams.clone();
             let router = cfg.router;
             let batch_small_d = cfg.batch_small_d;
             let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ (t as u64).wrapping_mul(0x9E37));
@@ -171,7 +285,26 @@ impl Service {
                             if groups.len() > 1 {
                                 metrics.add(&metrics.packed, (groups.len() - 1) as u64);
                             }
-                            serve_groups(groups, &router, &metrics, &mut rng, batch_small_d);
+                            // Deadline shedding: answer diverted jobs with
+                            // Busy before computing anything — they were
+                            // already too late when popped.
+                            let shed = sched.take_shed();
+                            if !shed.is_empty() {
+                                metrics.add(&metrics.shed, shed.len() as u64);
+                                for job in shed {
+                                    let mut w = job.reply.lock().unwrap();
+                                    let _ =
+                                        send(&mut *w, &Msg::Busy { request_id: job.request_id });
+                                }
+                            }
+                            serve_groups(
+                                groups,
+                                &router,
+                                &metrics,
+                                &mut rng,
+                                batch_small_d,
+                                &streams,
+                            );
                         }
                     })
                     .expect("spawn solver"),
@@ -234,44 +367,56 @@ fn handle_conn(
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        match recv(&mut rd) {
+        // Plain and streaming requests share the whole admission path;
+        // only the `stream` tag differs.
+        let (request_id, s, class, deadline_ms, data, stream_key) = match recv(&mut rd) {
             Ok(Some(Msg::CompressRequest { request_id, s, class, deadline_ms, data })) => {
-                metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
-                let job = Job {
-                    request_id,
-                    s,
-                    data,
-                    accepted_at: Instant::now(),
-                    reply: reply.clone(),
-                };
-                let tclass = TenantClass {
-                    priority: class,
-                    ..if deadline_ms > 0 {
-                        TenantClass::with_deadline_in(Duration::from_millis(u64::from(
-                            deadline_ms,
-                        )))
-                    } else {
-                        TenantClass::best_effort()
-                    }
-                };
-                // Count *before* submitting: once queued, a solver thread
-                // may reply (and the client observe metrics) before this
-                // thread runs again.
-                metrics.add(&metrics.accepted, 1);
-                match sched.try_submit(job, tclass) {
-                    Ok(()) => {}
-                    Err(job) => {
-                        metrics.accepted.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
-                        metrics.add(&metrics.rejected, 1);
-                        let mut w = job.reply.lock().unwrap();
-                        let _ = send(&mut *w, &Msg::Busy { request_id: job.request_id });
-                    }
-                }
+                (request_id, s, class, deadline_ms, data, None)
             }
+            Ok(Some(Msg::StreamCompressRequest {
+                request_id,
+                stream_id,
+                round,
+                s,
+                class,
+                deadline_ms,
+                data,
+            })) => (request_id, s, class, deadline_ms, data, Some((stream_id, round))),
             Ok(Some(other)) => {
-                eprintln!("compression service: unexpected {other:?}");
+                eprintln!("compression service: unexpected {}", other.kind());
+                continue;
             }
             Ok(None) | Err(_) => break,
+        };
+        metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
+        let job = Job {
+            request_id,
+            s,
+            data,
+            accepted_at: Instant::now(),
+            reply: reply.clone(),
+            stream: stream_key,
+        };
+        let tclass = TenantClass {
+            priority: class,
+            ..if deadline_ms > 0 {
+                TenantClass::with_deadline_in(Duration::from_millis(u64::from(deadline_ms)))
+            } else {
+                TenantClass::best_effort()
+            }
+        };
+        // Count *before* submitting: once queued, a solver thread
+        // may reply (and the client observe metrics) before this
+        // thread runs again.
+        metrics.add(&metrics.accepted, 1);
+        match sched.try_submit(job, tclass) {
+            Ok(()) => {}
+            Err(job) => {
+                metrics.accepted.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.add(&metrics.rejected, 1);
+                let mut w = job.reply.lock().unwrap();
+                let _ = send(&mut *w, &Msg::Busy { request_id: job.request_id });
+            }
         }
     }
 }
@@ -293,15 +438,21 @@ fn handle_conn(
 /// Small jobs (`d ≤ batch_small_d`) from **all** groups compute their
 /// replies in a single [`crate::par::dispatch_batch`] wave; large jobs
 /// run one at a time so each can fan its own O(d) passes out across
-/// every worker. The socket writes all happen here on the solver thread,
-/// **after** the wave — a slow client blocking on `send` must stall this
-/// solver thread only, never the process-wide compute pool.
+/// every worker. **Streaming jobs always take the inline (large) path**,
+/// whatever their size: they lock per-stream solver state, and a pool
+/// worker must never block on (or re-enter) a stream mutex from inside a
+/// wave — inline on the solver thread, the lock orders concurrent rounds
+/// of one stream without touching the compute pool. The socket writes
+/// all happen here on the solver thread, **after** the wave — a slow
+/// client blocking on `send` must stall this solver thread only, never
+/// the process-wide compute pool.
 fn serve_groups(
     groups: Vec<Vec<Job>>,
     router: &Router,
     metrics: &Metrics,
     rng: &mut Xoshiro256pp,
     batch_small_d: usize,
+    streams: &StreamState,
 ) {
     // One base per pulled batch, in pull order — the same draws the
     // solver thread would make serving the batches back to back.
@@ -316,7 +467,7 @@ fn serve_groups(
         }
         let base = rng.next_u64();
         for (tenant, job) in group.into_iter().enumerate() {
-            if job.data.len() <= batch_small_d {
+            if job.stream.is_none() && job.data.len() <= batch_small_d {
                 small.push((base, tenant, job));
             } else {
                 large.push((base, tenant, job));
@@ -331,8 +482,12 @@ fn serve_groups(
             (job, reply)
         });
     for (base, tenant, job) in large {
-        let mut trng = Xoshiro256pp::stream(base, tenant as u64);
-        let reply = compute_reply(&job, router, metrics, &mut trng);
+        let reply = if let Some((stream_id, round)) = job.stream {
+            compute_stream_reply(&job, stream_id, round, router, metrics, streams)
+        } else {
+            let mut trng = Xoshiro256pp::stream(base, tenant as u64);
+            compute_reply(&job, router, metrics, &mut trng)
+        };
         served.push((job, reply));
     }
     for (job, reply) in served {
@@ -340,10 +495,58 @@ fn serve_groups(
     }
 }
 
+/// Serve one incremental-session round: look up (or create) the stream's
+/// solver, run the drift-tracked round, compress with the round-keyed
+/// quantize base. Runs inline on the solver thread (see [`serve_groups`]).
+/// A service without streaming configured answers `Busy`.
+fn compute_stream_reply(
+    job: &Job,
+    stream_id: u64,
+    round: u64,
+    router: &Router,
+    metrics: &Metrics,
+    streams: &StreamState,
+) -> Msg {
+    let Some(solver) = streams.solver(router, stream_id) else {
+        return Msg::Busy { request_id: job.request_id };
+    };
+    let xs: Vec<f64> = crate::par::map_elems(&job.data, |&x| x as f64);
+    let mut solver = solver.lock().unwrap();
+    match solver.round_compress(round, &xs, job.s.max(1) as usize) {
+        Ok((outcome, compressed)) => {
+            metrics.add(&metrics.bytes_out, compressed.wire_size() as u64);
+            let counter = match outcome.decision {
+                Decision::Cached => &metrics.stream_cached,
+                Decision::Reuse => &metrics.stream_reused,
+                Decision::WarmStart => &metrics.stream_warm,
+                Decision::Resolve => &metrics.stream_resolved,
+            };
+            metrics.add(counter, 1);
+            // One quantity, one name: the wire field and the solve_latency
+            // histogram both carry the outcome's decision+solve time (the
+            // histogram build is excluded — it is paid identically on
+            // every decision path, and the end-to-end `latency` histogram
+            // already covers the whole request).
+            metrics.solve_latency.record_us(outcome.solve_us.max(1));
+            Msg::StreamCompressReply {
+                request_id: job.request_id,
+                round,
+                decision: outcome.decision.code(),
+                drift: outcome.drift_total,
+                compressed,
+                solver: router.route_streaming().label(),
+                solve_us: outcome.solve_us,
+            }
+        }
+        Err(_) => Msg::Busy { request_id: job.request_id },
+    }
+}
+
 /// Compute one job's reply: widen, route-solve, quantize, bit-pack. Pure
 /// compute — safe to run on a pool worker. `rng` is the job's own derived
 /// stream (see [`serve_groups`]).
 fn compute_reply(job: &Job, router: &Router, metrics: &Metrics, rng: &mut Xoshiro256pp) -> Msg {
+    debug_assert!(job.stream.is_none(), "stream jobs take compute_stream_reply");
     let t0 = Instant::now();
     let xs: Vec<f64> = crate::par::map_elems(&job.data, |&x| x as f64);
     match router.solve(&xs, job.s.max(1) as usize) {
@@ -404,6 +607,55 @@ pub fn compress_remote_with(
     recv(&mut rd)?.context("service closed the connection")
 }
 
+/// Blocking client helper for streaming mode: submit round `round` of
+/// stream `stream_id` (best-effort class). The reply is
+/// [`Msg::StreamCompressReply`] — or [`Msg::Busy`] when the service has
+/// no streaming configured or is overloaded.
+pub fn compress_remote_stream(
+    addr: &str,
+    request_id: u64,
+    stream_id: u64,
+    round: u64,
+    s: u32,
+    data: &[f32],
+) -> Result<Msg> {
+    compress_remote_stream_with(addr, request_id, stream_id, round, s, 0, 0, data)
+}
+
+/// [`compress_remote_stream`] with an explicit tenant class: streaming
+/// rounds ride the same scheduler as one-shot requests, so `class` and
+/// `deadline_ms` mean exactly what they do on
+/// [`compress_remote_with`] (and a deadline makes the round sheddable
+/// under `--shed-expired`).
+#[allow(clippy::too_many_arguments)]
+pub fn compress_remote_stream_with(
+    addr: &str,
+    request_id: u64,
+    stream_id: u64,
+    round: u64,
+    s: u32,
+    class: u8,
+    deadline_ms: u32,
+    data: &[f32],
+) -> Result<Msg> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    send(
+        &mut stream,
+        &Msg::StreamCompressRequest {
+            request_id,
+            stream_id,
+            round,
+            s,
+            class,
+            deadline_ms,
+            data: data.to_vec(),
+        },
+    )?;
+    let mut rd = std::io::BufReader::new(stream);
+    recv(&mut rd)?.context("service closed the connection")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -415,6 +667,35 @@ mod tests {
         assert!(c.queue_capacity >= c.max_batch);
         assert_eq!(c.batch_small_d, crate::par::CHUNK);
         assert_eq!(c.admission, 1, "cross-batch packing is opt-in");
+        assert!(c.stream.is_none(), "streaming mode is opt-in");
+        assert!(!c.shed_expired, "deadline shedding is opt-in");
+        let sc = StreamServiceConfig::default();
+        assert!(sc.tuning.drift_reuse_max <= sc.tuning.drift_warm_max);
+        assert!(sc.tuning.cache_cap > 0);
+        assert!(sc.max_streams > 0, "the stream map must be bounded");
+    }
+
+    #[test]
+    fn stream_map_caps_and_evicts_oldest() {
+        let state = StreamState {
+            cfg: Some(StreamServiceConfig { max_streams: 2, ..Default::default() }),
+            solvers: Mutex::new(StreamMap::default()),
+        };
+        let router = Router::default();
+        let a = state.solver(&router, 1).unwrap();
+        let _b = state.solver(&router, 2).unwrap();
+        // Same id returns the same solver instance.
+        assert!(Arc::ptr_eq(&a, &state.solver(&router, 1).unwrap()));
+        // A third id evicts the oldest (id 1); re-requesting id 1 creates
+        // a fresh solver rather than growing the map.
+        let _c = state.solver(&router, 3).unwrap();
+        assert_eq!(state.solvers.lock().unwrap().map.len(), 2);
+        let a2 = state.solver(&router, 1).unwrap();
+        assert!(!Arc::ptr_eq(&a, &a2), "evicted stream re-creates fresh state");
+        assert_eq!(state.solvers.lock().unwrap().map.len(), 2);
+        // Streaming disabled: no solver, no growth.
+        let off = StreamState { cfg: None, solvers: Mutex::new(StreamMap::default()) };
+        assert!(off.solver(&router, 1).is_none());
     }
     // Live service round-trips are tested in
     // rust/tests/coordinator_integration.rs.

@@ -141,8 +141,26 @@ pub fn build_sharded(
     if xs.is_empty() {
         return Err(AvqError::EmptyInput);
     }
-    assert!(m >= 1, "need at least one bin");
     let base = rng.next_u64();
+    build_sharded_with_base(xs, m, base, shards)
+}
+
+/// [`build_sharded`] with the per-chunk stream base supplied explicitly —
+/// the sharded sibling of
+/// [`GridHistogram::build_with_base`]: same phases, same exact merges,
+/// but the caller keys the base (the round-based streaming layer derives
+/// one base per training round, so the round × shard × thread matrix is
+/// bitwise-reproducible from `(base, xs)` alone).
+pub fn build_sharded_with_base(
+    xs: &[f64],
+    m: usize,
+    base: u64,
+    shards: usize,
+) -> Result<GridHistogram, AvqError> {
+    if xs.is_empty() {
+        return Err(AvqError::EmptyInput);
+    }
+    assert!(m >= 1, "need at least one bin");
     let plan = ShardPlan::new(xs.len(), shards);
     let slices = plan.slices(xs);
     // Phase 1: per-shard scan partials, folded in global chunk order.
@@ -617,6 +635,21 @@ mod tests {
         let h = build_sharded(&xs, 128, &mut r1, 4).unwrap();
         assert_eq!(h.grid, vec![-7.25]);
         assert_eq!(h.weights, vec![640.0]);
+    }
+
+    #[test]
+    fn build_sharded_with_base_matches_build_with_base() {
+        // The explicit-base sharded build merges to the explicit-base
+        // single-node build bitwise, for any shard count.
+        let d = 2 * par::CHUNK + 345;
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, 77);
+        let want = GridHistogram::build_with_base(&xs, 96, 0xFEED_F00D).unwrap();
+        for shards in [1usize, 2, 4, 8] {
+            let got = build_sharded_with_base(&xs, 96, 0xFEED_F00D, shards).unwrap();
+            assert_eq!(got.weights, want.weights, "shards={shards}");
+            assert_eq!(got.grid, want.grid, "shards={shards}");
+            assert_eq!(got.norm2_sq.to_bits(), want.norm2_sq.to_bits());
+        }
     }
 
     #[test]

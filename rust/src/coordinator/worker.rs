@@ -10,6 +10,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::protocol::{recv, send, Msg};
 use super::router::Router;
 use crate::sq;
+use crate::stream::{StreamConfig, StreamMetrics, StreamSolver, StreamTuning};
 use crate::util::rng::Xoshiro256pp;
 
 /// Produces local gradients for a given parameter vector. Implementations:
@@ -32,6 +33,14 @@ pub struct WorkerConfig {
     pub router: Router,
     /// Seed for the stochastic quantization stream.
     pub seed: u64,
+    /// Opt-in streaming mode ([`crate::stream`]): `Some` keeps one
+    /// incremental solver across the worker's rounds with the given
+    /// decision-ladder knobs — the server's round id keys the round's
+    /// RNG streams, the drift tracker decides reuse / warm-start /
+    /// re-solve per round, and the level cache serves re-driven rounds
+    /// exactly. `None` (the classic mode) routes every gradient from
+    /// scratch.
+    pub stream: Option<StreamTuning>,
 }
 
 /// Worker-side statistics.
@@ -45,6 +54,9 @@ pub struct WorkerStats {
     pub bytes_raw: usize,
     /// Loss reported with the most recent gradient.
     pub last_loss: f32,
+    /// Streaming-mode decision counters (populated when
+    /// [`WorkerConfig::stream`] was set).
+    pub stream: Option<StreamMetrics>,
 }
 
 /// Run a worker until the server shuts the job down.
@@ -63,6 +75,19 @@ pub fn run_worker(
         bail!("expected Welcome, got {welcome:?}");
     };
     let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    // Streaming mode: one incremental solver for the worker's whole run,
+    // seeded from the worker seed — round `r`'s compression is then a
+    // pure function of `(seed, r, gradient)` (plus the drift decisions of
+    // the rounds processed before it; see `crate::stream`).
+    let mut stream_solver: Option<StreamSolver> = cfg.stream.map(|tuning| {
+        StreamSolver::new(StreamConfig {
+            m: cfg.router.cfg.hist_m,
+            seed: cfg.seed,
+            shards: cfg.router.cfg.shards.max(1),
+            tuning,
+            ..StreamConfig::default()
+        })
+    });
     let mut stats = WorkerStats::default();
     loop {
         match recv(&mut rd)? {
@@ -71,7 +96,10 @@ pub fn run_worker(
                     bail!("round {round}: got {} params, expected {dim}", params.len());
                 }
                 let (loss, grad) = source.grad(&params, round)?;
-                let compressed = compress_gradient(&grad, cfg.s, &cfg.router, &mut rng)?;
+                let compressed = match &mut stream_solver {
+                    Some(solver) => compress_gradient_stream(&grad, cfg.s, solver, round)?,
+                    None => compress_gradient(&grad, cfg.s, &cfg.router, &mut rng)?,
+                };
                 stats.bytes_sent += compressed.wire_size();
                 stats.bytes_raw += grad.len() * 4;
                 stats.last_loss = loss;
@@ -87,6 +115,7 @@ pub fn run_worker(
             Some(other) => bail!("unexpected message: {other:?}"),
         }
     }
+    stats.stream = stream_solver.map(|s| s.metrics());
     Ok(stats)
 }
 
@@ -107,6 +136,23 @@ pub fn compress_gradient(
     let xs: Vec<f64> = crate::par::map_elems(grad, |&g| g as f64);
     let (sol, _route) = router.solve(&xs, s).map_err(|e| anyhow!("AVQ solve: {e}"))?;
     Ok(sq::compress(&xs, &sol.q, rng))
+}
+
+/// The streaming sibling of [`compress_gradient`]: serve the round
+/// through the worker's incremental solver (cache / reuse / warm-start /
+/// re-solve per the drift tracker) and quantize with the round-keyed
+/// stream, so re-driving a round reproduces its uplink bytes exactly.
+pub fn compress_gradient_stream(
+    grad: &[f32],
+    s: usize,
+    solver: &mut StreamSolver,
+    round: u64,
+) -> Result<sq::CompressedVec> {
+    let xs: Vec<f64> = crate::par::map_elems(grad, |&g| g as f64);
+    let (_outcome, compressed) = solver
+        .round_compress(round, &xs, s)
+        .map_err(|e| anyhow!("stream AVQ round {round}: {e}"))?;
+    Ok(compressed)
 }
 
 /// Compress many small tenant gradients as **one** batched dispatch — the
@@ -214,8 +260,39 @@ mod tests {
             s: 4,
             router: Router::default(),
             seed: 0,
+            stream: None,
         };
         // Port 1 is never listening.
         assert!(run_worker("127.0.0.1:1", cfg, Nope).is_err());
+    }
+
+    #[test]
+    fn stream_compression_is_round_reproducible() {
+        use crate::stream::{StreamConfig, StreamSolver};
+        let grad: Vec<f32> =
+            (0..6000).map(|i| ((i as f32 * 0.01).sin() * 0.8).exp() - 1.0).collect();
+        let mk = || {
+            StreamSolver::new(StreamConfig {
+                m: 128,
+                seed: 0x77,
+                ..StreamConfig::default()
+            })
+        };
+        // Two independent workers driving the same rounds produce the
+        // same uplink bytes round for round.
+        let mut a = mk();
+        let mut b = mk();
+        for round in 0..3u64 {
+            let ca = compress_gradient_stream(&grad, 8, &mut a, round).unwrap();
+            let cb = compress_gradient_stream(&grad, 8, &mut b, round).unwrap();
+            assert_eq!(ca, cb, "round {round}");
+        }
+        // Re-driving a round (a retry) reproduces it bitwise — and is
+        // served from the level cache.
+        let mut c = mk();
+        let first = compress_gradient_stream(&grad, 8, &mut c, 1).unwrap();
+        let again = compress_gradient_stream(&grad, 8, &mut c, 1).unwrap();
+        assert_eq!(first, again);
+        assert_eq!(c.metrics().cached, 1);
     }
 }

@@ -19,6 +19,10 @@
 //!   ([`coordinator::shard`](coordinator::shard)) that splits one
 //!   10⁸-coordinate vector across shard nodes with bitwise-exact
 //!   histogram merge.
+//! * **[`stream`]** — incremental AVQ across training rounds: round-keyed
+//!   histogram streams, a drift tracker deciding reuse / warm-start /
+//!   re-solve, warm-started solvers, and a fingerprinted level cache —
+//!   round `N+1` pays only for how much the input drifted since round `N`.
 //! * **[`par`]** — the deterministic chunked executor every O(d) hot pass
 //!   (scan, histogram build, sort, quantize, encode) runs on: fixed chunk
 //!   size + per-chunk RNG streams ⇒ bitwise-identical results for any
@@ -72,5 +76,6 @@ pub mod metrics;
 pub mod par;
 pub mod runtime;
 pub mod sq;
+pub mod stream;
 pub mod testutil;
 pub mod util;

@@ -5,10 +5,13 @@
 //!                   [--shards N | --shard-nodes host:port,host:port]
 //! quiver figure     <1a|1b|1c|2|3a|3b|3c|3d|4|headline|all> [--dist D] [--max-pow N]
 //! quiver serve      [--addr 127.0.0.1:7071] [--threads 2] [--exact-max-d 65536]
-//!                   [--shards N] [--admission N]
+//!                   [--shards N] [--admission N] [--shed-expired true]
+//!                   [--stream true] [--drift-threshold T] [--drift-reuse T] [--drift-warm T]
 //! quiver client     --addr HOST:PORT --d 100000 --s 16 [--tenant-class N] [--deadline-ms MS]
+//!                   [--stream-id ID [--round R | --stream-rounds K]]
 //! quiver shard-node [--addr 127.0.0.1:7171]
 //! quiver train      [--workers 4] [--rounds 50] [--s 16] [--lr 0.05]
+//!                   [--stream true] [--drift-threshold T] [--shards N] [--start-round R]
 //! ```
 //!
 //! Every subcommand accepts `--config FILE` (`key = value` lines) with CLI
@@ -31,6 +34,22 @@
 //! standalone TCP shard node; point `solve --shard-nodes a,b,c` at a
 //! fleet of them to solve one vector across machines with bitwise-exact
 //! histogram merge (see `quiver::coordinator::shard`).
+//!
+//! Streaming (`quiver::stream`): `serve --stream true` accepts
+//! incremental-session rounds (one drift-tracked solver per stream id,
+//! capped at `--stream-max` live streams with oldest-first eviction);
+//! `--drift-threshold T` sets the warm-start threshold with reuse at
+//! `T/5` (override individually with `--drift-reuse`/`--drift-warm`),
+//! `--stream-cache N` sizes the per-stream level cache, and
+//! `--shed-expired true` enables deadline shedding. `client --stream-id
+//! ID --round R` sends one round; `--stream-rounds K` sweeps rounds
+//! `0..K` (fresh round-keyed sample each); `--tenant-class` /
+//! `--deadline-ms` apply to streaming rounds exactly as to one-shot
+//! requests. `train --stream true` gives
+//! every federated worker an incremental solver keyed by the server's
+//! round ids, `--start-round R` resumes a checkpointed job's round
+//! numbering, and `--shards N` makes workers shard each gradient's
+//! histogram solve (bit-identical to unsharded).
 
 use std::time::Duration;
 
@@ -39,10 +58,14 @@ use quiver::avq::{self, SolverKind};
 use quiver::config::Config;
 use quiver::coordinator::router::{Router, RouterConfig};
 use quiver::coordinator::server::{Server, ServerConfig};
-use quiver::coordinator::service::{compress_remote_with, Service, ServiceConfig};
+use quiver::coordinator::service::{
+    compress_remote_stream_with, compress_remote_with, Service, ServiceConfig,
+    StreamServiceConfig,
+};
 use quiver::coordinator::shard::{ShardConfig, ShardCoordinator, ShardNode};
 use quiver::coordinator::tasks::{RuntimeGradSource, MODEL_DIM};
 use quiver::coordinator::worker::{run_worker, WorkerConfig};
+use quiver::stream::StreamTuning;
 use quiver::dist::Dist;
 use quiver::figures::{self, FigOpts};
 use quiver::metrics::vnmse;
@@ -227,8 +250,37 @@ fn cmd_figure(id: &str, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// Parse the streaming knobs shared by `serve` and `train`:
+/// `--drift-threshold T` sets warm = T and reuse = T/5;
+/// `--drift-reuse` / `--drift-warm` override individually;
+/// `--stream-cache N` sizes the level cache.
+fn parse_tuning(cfg: &Config) -> Result<StreamTuning> {
+    let defaults = StreamTuning::default();
+    let (mut reuse, mut warm) = (defaults.drift_reuse_max, defaults.drift_warm_max);
+    if let Some(t) = cfg.get("drift_threshold") {
+        let t: f64 = t.parse().with_context(|| format!("drift_threshold={t} is not a number"))?;
+        warm = t;
+        reuse = t / 5.0;
+    }
+    Ok(StreamTuning {
+        drift_reuse_max: cfg.f64_or("drift_reuse", reuse)?,
+        drift_warm_max: cfg.f64_or("drift_warm", warm)?,
+        cache_cap: cfg.usize_or("stream_cache", defaults.cache_cap)?,
+        ..defaults
+    })
+}
+
 /// Run the AVQ compression service until killed.
 fn cmd_serve(cfg: &Config) -> Result<()> {
+    let stream = if cfg.bool_or("stream", false)? {
+        Some(StreamServiceConfig {
+            tuning: parse_tuning(cfg)?,
+            seed: cfg.u64_or("stream_seed", 0x57A3A)?,
+            max_streams: cfg.usize_or("stream_max", 64)?,
+        })
+    } else {
+        None
+    };
     let service = Service::start(ServiceConfig {
         addr: cfg.get_or("addr", "127.0.0.1:7071"),
         threads: cfg.usize_or("threads", 2)?,
@@ -244,6 +296,8 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         seed: cfg.u64_or("sq_seed", 0x5E71CE)?,
         batch_small_d: cfg.usize_or("batch_small_d", quiver::par::CHUNK)?,
         admission: cfg.usize_or("admission", 1)?,
+        stream,
+        shed_expired: cfg.bool_or("shed_expired", false)?,
     })?;
     println!("quiver compression service listening on {}", service.addr());
     let period = cfg.u64_or("stats_secs", 10)?;
@@ -253,20 +307,76 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     }
 }
 
-/// Fire one request at a running service.
+/// Fire one request at a running service — or, with `--stream-id`, one or
+/// more rounds of an incremental session.
 fn cmd_client(cfg: &Config) -> Result<()> {
     let addr = cfg.get_or("addr", "127.0.0.1:7071");
     let d = cfg.usize_or("d", 100_000)?;
     let s = cfg.usize_or("s", 16)? as u32;
     let dist = parse_dist(cfg)?;
-    let data: Vec<f32> = dist
-        .sample_vec(d, cfg.u64_or("seed", 1)?)
-        .into_iter()
-        .map(|x| x as f32)
-        .collect();
+    let seed = cfg.u64_or("seed", 1)?;
     // Scheduler class: priority (higher pulls earlier) + deadline budget.
+    // Streaming rounds ride the same scheduler, so both flags apply there
+    // too (and a deadline makes a round sheddable under --shed-expired).
     let class = cfg.usize_or("tenant_class", 0)?.min(u8::MAX as usize) as u8;
     let deadline_ms = cfg.u64_or("deadline_ms", 0)?.min(u32::MAX as u64) as u32;
+    // Streaming session: send round(s) keyed by --stream-id.
+    if let Some(stream_id) = cfg.get("stream_id") {
+        let stream_id: u64 =
+            stream_id.parse().with_context(|| format!("stream_id={stream_id:?}"))?;
+        let rounds = cfg.u64_or("stream_rounds", 0)?;
+        let rounds: Vec<u64> = if rounds > 0 {
+            (0..rounds).collect()
+        } else {
+            vec![cfg.u64_or("round", 0)?]
+        };
+        for round in rounds {
+            // A fresh round-keyed sample per round — the stationary
+            // workload the drift tracker exists for.
+            let data: Vec<f32> = dist
+                .sample_vec(d, seed.wrapping_add(round))
+                .into_iter()
+                .map(|x| x as f32)
+                .collect();
+            let t0 = std::time::Instant::now();
+            let reply = compress_remote_stream_with(
+                &addr, round, stream_id, round, s, class, deadline_ms, &data,
+            )?;
+            let rtt = t0.elapsed();
+            match reply {
+                quiver::coordinator::protocol::Msg::StreamCompressReply {
+                    round,
+                    decision,
+                    drift,
+                    compressed,
+                    solver,
+                    solve_us,
+                    ..
+                } => {
+                    let decision = quiver::stream::Decision::from_code(decision)
+                        .map(|d| d.name())
+                        .unwrap_or("?");
+                    println!(
+                        "stream {stream_id} round {round} [{decision}, drift {drift:.4}] \
+                         with {solver}: {} -> {} bytes ({:.2}x), solve {}µs, rtt {}",
+                        d * 4,
+                        compressed.wire_size(),
+                        compressed.ratio_vs_f32(),
+                        solve_us,
+                        quiver::benchfw::fmt_duration(rtt)
+                    );
+                }
+                quiver::coordinator::protocol::Msg::Busy { .. } => {
+                    println!(
+                        "round {round}: service busy (no --stream on the server, or overload)"
+                    );
+                }
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+        return Ok(());
+    }
+    let data: Vec<f32> = dist.sample_vec(d, seed).into_iter().map(|x| x as f32).collect();
     let t0 = std::time::Instant::now();
     let reply = compress_remote_with(&addr, 1, s, class, deadline_ms, &data)?;
     let rtt = t0.elapsed();
@@ -297,9 +407,16 @@ fn cmd_client(cfg: &Config) -> Result<()> {
 fn cmd_train(cfg: &Config) -> Result<()> {
     let workers = cfg.usize_or("workers", 4)?;
     let rounds = cfg.u64_or("rounds", 50)?;
+    let start_round = cfg.u64_or("start_round", 0)?;
     let s = cfg.usize_or("s", 16)?;
     let lr = cfg.f64_or("lr", 0.05)? as f32;
     let artifacts = cfg.get_or("artifacts", "artifacts");
+    // Streaming workers: one incremental solver per worker, keyed by the
+    // server's round ids. `--shards` makes each worker shard its
+    // gradient's histogram solve (bit-identical results either way).
+    let stream_cfg: Option<StreamTuning> =
+        if cfg.bool_or("stream", false)? { Some(parse_tuning(cfg)?) } else { None };
+    let shards = cfg.usize_or("shards", 1)?.max(1);
 
     let runtime = RuntimeHandle::spawn(&artifacts)?;
     runtime.warmup("model_grad")?;
@@ -314,6 +431,7 @@ fn cmd_train(cfg: &Config) -> Result<()> {
     let server = Server::bind(ServerConfig {
         workers,
         rounds,
+        start_round,
         dim: MODEL_DIM,
         lr,
         round_timeout: Duration::from_secs(120),
@@ -328,19 +446,24 @@ fn cmd_train(cfg: &Config) -> Result<()> {
             let cfg = WorkerConfig {
                 id: w as u64,
                 s,
-                router: Router::default(),
+                router: Router::new(RouterConfig { shards, ..RouterConfig::default() }),
                 seed: 7000 + w as u64,
+                stream: stream_cfg,
             };
             let source = RuntimeGradSource::new(rt, 1234, 500 + w as u64);
             run_worker(&addr, cfg, source)
         }));
     }
     let (final_params, log) = server.run(params)?;
+    let mut worker_stats = vec![];
     for j in joins {
-        j.join().unwrap()?;
+        worker_stats.push(j.join().unwrap()?);
+    }
+    if let Some(sm) = worker_stats.first().and_then(|s| s.stream) {
+        println!("worker 0 stream decisions: {}", sm.summary());
     }
     for r in &log.rounds {
-        if r.round % 10 == 0 || r.round + 1 == rounds {
+        if r.round % 10 == 0 || r.round + 1 == start_round + rounds {
             println!(
                 "round {:>4}  loss {:.4}  uplink {}B (raw {}B)  {:?}",
                 r.round, r.mean_loss, r.bytes_up, r.bytes_up_raw, r.elapsed

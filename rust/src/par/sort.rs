@@ -19,8 +19,27 @@
 //! executor, so with the persistent pool backend a whole `sort_f64` costs
 //! `1 + ⌈log₂(d/RUN)⌉` sealed queue handoffs and **zero** thread spawns
 //! after warm-up (previously each round spawned its own scoped threads).
+//!
+//! The merge scratch buffer is **thread-local and reused across calls**
+//! (ROADMAP item): the rounds ping-pong between the input and one
+//! per-thread buffer that survives the call, so a thread sorting many
+//! vectors (the service's solver threads, the figure sweeps) pays one
+//! allocation ever instead of one per sort. The buffer is *taken out* of
+//! the thread-local slot for the duration of the sort — never borrowed
+//! across the parallel waves — so a pool submitter that helps execute
+//! another job which itself sorts (nested via help-and-wait) simply
+//! allocates fresh instead of deadlocking or aliasing; the larger buffer
+//! wins the slot on the way back. Outputs are bit-identical either way
+//! (the buffer is fully overwritten before any element is read), asserted
+//! in `tests/par_invariance.rs`.
 
+use std::cell::RefCell;
 use std::cmp::Ordering;
+
+thread_local! {
+    /// Per-thread merge scratch, reused across [`sort_f64`] calls.
+    static SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Fixed run size for the parallel sort (`= 4·CHUNK`). Sorting has an
 /// O(log) factor per element, so slightly coarser grains than the linear
@@ -39,22 +58,41 @@ pub fn sort_f64(v: &mut [f64]) {
     }
     // 1) Sort fixed-size runs in parallel, in place.
     super::for_each_chunk_mut(v, RUN, |_, run| run.sort_unstable_by(f64::total_cmp));
-    // 2) Merge adjacent runs in parallel rounds.
-    let mut buf = vec![0.0f64; n];
-    let mut in_v = true; // current data lives in `v`
-    let mut width = RUN;
-    while width < n {
-        if in_v {
-            merge_pass(v, &mut buf, width);
-        } else {
-            merge_pass(&buf, v, width);
+    // 2) Merge adjacent runs in parallel rounds, ping-ponging between `v`
+    // and the reusable per-thread scratch. Take the buffer *out* of the
+    // slot (a nested sort on this thread — possible through the pool's
+    // help-and-wait — then finds an empty slot and allocates its own).
+    let mut scratch = SCRATCH.with(|cell| std::mem::take(&mut *cell.borrow_mut()));
+    if scratch.len() < n {
+        // Stale contents are fine: every merge round fully overwrites its
+        // destination before anything is read back.
+        scratch.resize(n, 0.0);
+    }
+    {
+        let buf = &mut scratch[..n];
+        let mut in_v = true; // current data lives in `v`
+        let mut width = RUN;
+        while width < n {
+            if in_v {
+                merge_pass(v, buf, width);
+            } else {
+                merge_pass(buf, v, width);
+            }
+            in_v = !in_v;
+            width *= 2;
         }
-        in_v = !in_v;
-        width *= 2;
+        if !in_v {
+            v.copy_from_slice(buf);
+        }
     }
-    if !in_v {
-        v.copy_from_slice(&buf);
-    }
+    // Return the buffer to the slot; keep whichever is larger so repeated
+    // mixed-size sorts converge on one allocation per thread.
+    SCRATCH.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.capacity() < scratch.capacity() {
+            *slot = scratch;
+        }
+    });
 }
 
 /// One round: merge each adjacent pair of `width`-sized sorted runs from
@@ -135,6 +173,24 @@ mod tests {
         let bits: Vec<u64> = v.iter().map(|x| x.to_bits()).collect();
         let want: Vec<u64> = [-1.0, -0.0, -0.0, 0.0, 0.0, 1.0].iter().map(|x: &f64| x.to_bits()).collect();
         assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn scratch_reuse_across_calls_is_bit_identical() {
+        // Back-to-back sorts on one thread reuse the scratch buffer; a
+        // smaller second sort sees the first sort's stale tail beyond its
+        // own length, which must be invisible in the output. Mixed sizes
+        // exercise both odd and even merge-round counts (data ends in `v`
+        // vs in the scratch).
+        for &n in &[2 * RUN + 5, 3 * RUN + RUN / 2, RUN + 1, 5 * RUN + 17] {
+            let xs = Dist::Normal { mu: 0.0, sigma: 3.0 }.sample_vec(n, n as u64);
+            let want = reference_sorted(xs.clone());
+            let mut v = xs;
+            sort_f64(&mut v);
+            let bits: Vec<u64> = v.iter().map(|x| x.to_bits()).collect();
+            let want_bits: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, want_bits, "n={n}");
+        }
     }
 
     #[test]

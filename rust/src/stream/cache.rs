@@ -1,0 +1,214 @@
+//! The level-set cache: fingerprint a histogram, serve an identical
+//! round's solved levels in O(1) solve cost.
+//!
+//! With round-keyed histogram streams (DESIGN.md rule 6), two rounds
+//! fingerprint identically exactly when they carry the same round id and
+//! the same data — the replay/retry/replica case (a re-driven federated
+//! round, a duplicated service request, the bench's repeated sweep).
+//! Rounds that are merely *statistically* identical differ by rounding
+//! noise and are served by the drift tracker's reuse decision instead
+//! (bounded excess — see [`super::hist`]); the cache is the exact tier
+//! above it.
+//!
+//! Hits are verified against the stored histogram bits (`lo`/`hi`/`d` and
+//! every weight), so a fingerprint collision degrades to a miss, never to
+//! wrong levels. Eviction is insertion-order FIFO at a fixed capacity.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::avq::histogram::GridHistogram;
+use crate::avq::binsearch::DpTrace;
+use crate::avq::Solution;
+use crate::util::rng::SplitMix64;
+
+/// Compute the cache key of `(histogram, budget)`: a SplitMix64 chain over
+/// the histogram's defining bits and the level budget.
+pub fn fingerprint(h: &GridHistogram, s: usize) -> u64 {
+    let mut acc = 0x517c_c1b7_2722_0a95u64;
+    let mut mix = |word: u64| {
+        acc = SplitMix64::new(acc ^ word).next_u64();
+    };
+    mix(h.d as u64);
+    mix(s as u64);
+    mix(h.weights.len() as u64);
+    mix(h.lo.to_bits());
+    mix(h.hi.to_bits());
+    for w in &h.weights {
+        mix(w.to_bits());
+    }
+    acc
+}
+
+/// Hit/miss/churn counters (see [`LevelCache::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Verified fingerprint hits.
+    pub hits: u64,
+    /// Lookups that found nothing (or failed verification).
+    pub misses: u64,
+    /// Entries inserted.
+    pub inserts: u64,
+    /// Entries evicted at capacity.
+    pub evictions: u64,
+}
+
+struct Entry {
+    d: usize,
+    s: usize,
+    lo: u64,
+    hi: u64,
+    weights: Vec<u64>,
+    solution: Solution,
+    trace: Option<DpTrace>,
+}
+
+/// Bounded map from histogram fingerprints to solved level sets (plus the
+/// DP trace for warm starts after a hit).
+pub struct LevelCache {
+    cap: usize,
+    map: HashMap<u64, Entry>,
+    order: VecDeque<u64>,
+    stats: CacheStats,
+}
+
+impl LevelCache {
+    /// Cache holding at most `cap` entries (`cap = 0` disables caching —
+    /// every lookup misses, inserts are dropped).
+    pub fn new(cap: usize) -> Self {
+        Self { cap, map: HashMap::new(), order: VecDeque::new(), stats: CacheStats::default() }
+    }
+
+    /// Look up the solved levels of an identical `(histogram, s)` pair.
+    /// A hit is verified bit-for-bit against the stored histogram before
+    /// being served.
+    pub fn get(&mut self, h: &GridHistogram, s: usize) -> Option<(Solution, Option<DpTrace>)> {
+        if self.cap == 0 {
+            self.stats.misses += 1;
+            return None;
+        }
+        let fp = fingerprint(h, s);
+        if let Some(e) = self.map.get(&fp) {
+            if Self::verify(e, h, s) {
+                self.stats.hits += 1;
+                return Some((e.solution.clone(), e.trace.clone()));
+            }
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Store a solved round. Replaces an existing entry with the same
+    /// fingerprint; evicts the oldest entry at capacity.
+    pub fn put(&mut self, h: &GridHistogram, s: usize, sol: &Solution, trace: Option<&DpTrace>) {
+        if self.cap == 0 {
+            return;
+        }
+        let fp = fingerprint(h, s);
+        let entry = Entry {
+            d: h.d,
+            s,
+            lo: h.lo.to_bits(),
+            hi: h.hi.to_bits(),
+            weights: h.weights.iter().map(|w| w.to_bits()).collect(),
+            solution: sol.clone(),
+            trace: trace.cloned(),
+        };
+        if self.map.insert(fp, entry).is_none() {
+            self.order.push_back(fp);
+            self.stats.inserts += 1;
+            while self.map.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                    self.stats.evictions += 1;
+                }
+            }
+        }
+    }
+
+    fn verify(e: &Entry, h: &GridHistogram, s: usize) -> bool {
+        e.s == s
+            && e.d == h.d
+            && e.lo == h.lo.to_bits()
+            && e.hi == h.hi.to_bits()
+            && e.weights.len() == h.weights.len()
+            && e.weights.iter().zip(&h.weights).all(|(a, b)| *a == b.to_bits())
+    }
+
+    /// Hit/miss/insert/eviction counters.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no entries are cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::histogram::solve_on;
+    use crate::avq::SolverKind;
+    use crate::dist::Dist;
+
+    fn hist(seed: u64, base: u64) -> GridHistogram {
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(3000, seed);
+        GridHistogram::build_with_base(&xs, 48, base).unwrap()
+    }
+
+    #[test]
+    fn identical_histograms_hit_different_ones_miss() {
+        let h = hist(1, 7);
+        let sol = solve_on(&h, 6, SolverKind::BinSearch).unwrap();
+        let mut c = LevelCache::new(4);
+        assert!(c.get(&h, 6).is_none());
+        c.put(&h, 6, &sol, None);
+        let (got, _) = c.get(&h, 6).expect("identical histogram must hit");
+        assert_eq!(got.q_idx, sol.q_idx);
+        assert_eq!(got.mse.to_bits(), sol.mse.to_bits());
+        // Different budget, different data, different base: all miss.
+        assert!(c.get(&h, 7).is_none());
+        assert!(c.get(&hist(2, 7), 6).is_none());
+        assert!(c.get(&hist(1, 8), 6).is_none());
+        let st = c.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 4);
+        assert_eq!(st.inserts, 1);
+    }
+
+    #[test]
+    fn capacity_evicts_fifo_and_zero_disables() {
+        let mut c = LevelCache::new(2);
+        let hs: Vec<GridHistogram> = (0..3).map(|i| hist(10 + i, 1)).collect();
+        let sols: Vec<Solution> =
+            hs.iter().map(|h| solve_on(h, 4, SolverKind::BinSearch).unwrap()).collect();
+        for (h, s) in hs.iter().zip(&sols) {
+            c.put(h, 4, s, None);
+        }
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.get(&hs[0], 4).is_none(), "oldest entry was evicted");
+        assert!(c.get(&hs[2], 4).is_some());
+        let mut off = LevelCache::new(0);
+        off.put(&hs[0], 4, &sols[0], None);
+        assert!(off.get(&hs[0], 4).is_none());
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn reinserting_same_fingerprint_replaces_without_growth() {
+        let h = hist(5, 5);
+        let sol = solve_on(&h, 4, SolverKind::BinSearch).unwrap();
+        let mut c = LevelCache::new(2);
+        c.put(&h, 4, &sol, None);
+        c.put(&h, 4, &sol, None);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().inserts, 1);
+    }
+}

@@ -1,0 +1,315 @@
+//! Round histograms and the drift tracker — the statistics half of the
+//! incremental subsystem.
+//!
+//! [`RoundHistogram`] refreshes a [`GridHistogram`] once per training
+//! round with **round-keyed RNG streams**: the stream's one base `B`
+//! derives per-round bases via `Xoshiro256pp::stream(B, round)`, which
+//! then compose with the executor's per-chunk derivation
+//! (`stream(round_base, chunk)`) — so round `r`'s histogram is a pure
+//! function of `(B, r, xs)`, bitwise-independent of the thread count, the
+//! shard count, **and of how many rounds preceded it** (DESIGN.md
+//! determinism rule 6). The previous round's histogram is retained so the
+//! [`drift`] between consecutive rounds is one cheap O(M) pass.
+//!
+//! # The drift → objective bound (normative for reuse)
+//!
+//! Let `H`, `H'` be two histograms on the **identical grid** (same
+//! `lo`/`hi` bit patterns, same bin count, same total mass `d`), with
+//! normalized L1 weight distance `ℓ = ½·Σᵢ|wᵢ − w'ᵢ|/d`, and let `Q` be
+//! the optimal `s`-level set for `H`. Every grid point's
+//! stochastic-quantization variance under any covering level set is at
+//! most `span²/4` (`span = hi − lo`), so for any `Q̃`:
+//! `|F(H,Q̃) − F(H',Q̃)| ≤ Σᵢ|wᵢ − w'ᵢ|·span²/4 = ℓ·d·span²/2`. Applying
+//! this twice (once to `Q`, once to `H'`'s own optimum):
+//!
+//! ```text
+//! F(H', Q) − opt(H')  ≤  ℓ · d · span²        (reuse excess bound)
+//! ```
+//!
+//! [`reuse_excess_bound`] computes the right-hand side. The bound
+//! composes along a **chain** of reused rounds by the triangle inequality
+//! over the intermediate histograms: serving levels solved `k` rounds ago
+//! costs at most `(ℓ₁ + … + ℓₖ)·d·span²` — which is why the stream
+//! solver's reuse threshold compares the drift *accumulated since the
+//! last solve* (`RoundOutcome::accum_l1`), not just the consecutive-round
+//! distance. The bound above is stated for levels anchored at an **exact**
+//! solve (a Resolve, a cache hit, or a warm fallback); levels anchored at
+//! an *accepted* warm candidate additionally inherit that candidate's
+//! objective-bracket slack (`warm_slack · previous optimum`).
+//! `tests/stream_invariance.rs` property-tests the exact-anchor bound.
+
+use crate::avq::histogram::GridHistogram;
+use crate::avq::AvqError;
+use crate::coordinator::shard;
+use crate::util::rng::Xoshiro256pp;
+
+/// Derive the two per-round RNG stream bases of round `round` from the
+/// stream's base `B`: `(hist_base, qbase)` — the first seeds the
+/// histogram build's per-chunk streams, the second the quantize pass's.
+/// A pure function of `(B, round)`.
+pub fn round_bases(base: u64, round: u64) -> (u64, u64) {
+    let mut r = Xoshiro256pp::stream(base, round);
+    (r.next_u64(), r.next_u64())
+}
+
+/// Drift between two consecutive merged histograms — cheap (O(M)) and
+/// sufficient for the reuse/warm-start/re-solve decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Drift {
+    /// Normalized L1 distance over bins: `½·Σ|wᵢ/d − w'ᵢ/d'|` ∈ [0, 1]
+    /// (`∞` when the bin counts differ).
+    pub l1: f64,
+    /// Range shift: `(|Δlo| + |Δhi|) / max(span, span')` (0 for identical
+    /// ranges; `∞` for incomparable shapes).
+    pub range_shift: f64,
+    /// Whether the grids are *identical*: same bin count, bitwise-equal
+    /// `lo` and `hi`, same total mass — the precondition for serving
+    /// cached levels under the reuse bound.
+    pub exact_grid: bool,
+}
+
+impl Drift {
+    /// The scalar the thresholds compare against: `l1 + range_shift`.
+    pub fn total(&self) -> f64 {
+        self.l1 + self.range_shift
+    }
+}
+
+/// Measure the drift between two histograms (see [`Drift`]).
+pub fn drift(prev: &GridHistogram, cur: &GridHistogram) -> Drift {
+    if prev.weights.len() != cur.weights.len() || prev.d == 0 || cur.d == 0 {
+        return Drift { l1: f64::INFINITY, range_shift: f64::INFINITY, exact_grid: false };
+    }
+    let (dp, dc) = (prev.d as f64, cur.d as f64);
+    let l1 = 0.5
+        * prev
+            .weights
+            .iter()
+            .zip(&cur.weights)
+            .map(|(a, b)| (a / dp - b / dc).abs())
+            .sum::<f64>();
+    let span = (prev.hi - prev.lo).max(cur.hi - cur.lo);
+    let range_shift = if span > 0.0 {
+        ((prev.lo - cur.lo).abs() + (prev.hi - cur.hi).abs()) / span
+    } else if prev.lo.to_bits() == cur.lo.to_bits() {
+        0.0
+    } else {
+        f64::INFINITY
+    };
+    let exact_grid = prev.lo.to_bits() == cur.lo.to_bits()
+        && prev.hi.to_bits() == cur.hi.to_bits()
+        && prev.d == cur.d;
+    Drift { l1, range_shift, exact_grid }
+}
+
+/// The documented reuse bound (module docs): serving levels that were
+/// optimal for the previous histogram costs at most `ℓ·d·span²` extra
+/// weighted MSE on the current one, provided the grids are identical.
+pub fn reuse_excess_bound(l1: f64, d: usize, span: f64) -> f64 {
+    l1 * d as f64 * span * span
+}
+
+/// O(M) weighted objective of a level set given by **grid positions** on a
+/// histogram — no [`crate::avq::Prefix`] build (and none of its O(d) α⁻¹
+/// array), which is what makes the reuse decision effectively free next
+/// to a re-solve. Positions must be strictly increasing, starting at 0
+/// and ending at the last grid point (a [`crate::avq::Solution`]'s
+/// `q_idx` on the same grid).
+pub fn levels_objective(h: &GridHistogram, q_idx: &[usize]) -> f64 {
+    let n = h.grid.len();
+    assert!(!q_idx.is_empty() && q_idx[0] == 0 && q_idx[q_idx.len() - 1] == n - 1);
+    // Inclusive cumulative moments over the grid (the same expansion
+    // Prefix::cost uses, just without retaining the arrays).
+    let mut alpha = vec![0.0f64; n];
+    let mut beta = vec![0.0f64; n];
+    let mut gamma = vec![0.0f64; n];
+    let (mut a, mut b, mut g) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..n {
+        let (y, w) = (h.grid[i], h.weights[i]);
+        a += w;
+        b += w * y;
+        g += w * y * y;
+        alpha[i] = a;
+        beta[i] = b;
+        gamma[i] = g;
+    }
+    q_idx
+        .windows(2)
+        .map(|w| {
+            let (k, j) = (w[0], w[1]);
+            let (yk, yj) = (h.grid[k], h.grid[j]);
+            let da = alpha[j] - alpha[k];
+            let db = beta[j] - beta[k];
+            let dg = gamma[j] - gamma[k];
+            ((yj + yk) * db - dg - yj * yk * da).max(0.0)
+        })
+        .sum()
+}
+
+/// Per-round histogram state: builds round `r`'s histogram with the
+/// round-keyed base and keeps the previous round's for drift tracking.
+/// The two live side by side and swap roles each round, so steady-state
+/// rounds churn no state beyond the build itself.
+#[derive(Debug)]
+pub struct RoundHistogram {
+    m: usize,
+    base: u64,
+    shards: usize,
+    cur: Option<GridHistogram>,
+    prev: Option<GridHistogram>,
+}
+
+impl RoundHistogram {
+    /// State for a stream with `m` grid intervals, stream base `base`
+    /// (see [`round_bases`]), and `shards` in-process shard ranges
+    /// (1 = unsharded; results are bitwise-identical either way).
+    pub fn new(m: usize, base: u64, shards: usize) -> Self {
+        assert!(m >= 1, "need at least one bin");
+        Self { m, base, shards: shards.max(1), cur: None, prev: None }
+    }
+
+    /// Build round `round`'s histogram from `xs` and rotate the previous
+    /// one into the drift slot. Returns the round's quantize-pass stream
+    /// base (the second derived base — see [`round_bases`]).
+    pub fn update(&mut self, round: u64, xs: &[f64]) -> Result<u64, AvqError> {
+        let (hist_base, qbase) = round_bases(self.base, round);
+        let h = if self.shards > 1 {
+            shard::build_sharded_with_base(xs, self.m, hist_base, self.shards)?
+        } else {
+            GridHistogram::build_with_base(xs, self.m, hist_base)?
+        };
+        self.prev = self.cur.take();
+        self.cur = Some(h);
+        Ok(qbase)
+    }
+
+    /// The current round's histogram (after at least one [`update`]).
+    ///
+    /// [`update`]: RoundHistogram::update
+    pub fn current(&self) -> Option<&GridHistogram> {
+        self.cur.as_ref()
+    }
+
+    /// Drift between the previous and current rounds' histograms; `None`
+    /// before two rounds have been observed.
+    pub fn drift(&self) -> Option<Drift> {
+        match (&self.prev, &self.cur) {
+            (Some(p), Some(c)) => Some(drift(p, c)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avq::histogram::solve_on;
+    use crate::avq::SolverKind;
+    use crate::dist::Dist;
+
+    #[test]
+    fn round_bases_are_pure_and_decorrelated() {
+        assert_eq!(round_bases(7, 3), round_bases(7, 3));
+        assert_ne!(round_bases(7, 3), round_bases(7, 4));
+        assert_ne!(round_bases(7, 3), round_bases(8, 3));
+        let (h, q) = round_bases(7, 3);
+        assert_ne!(h, q, "hist and quantize bases must differ");
+    }
+
+    #[test]
+    fn update_is_a_pure_function_of_round_and_data() {
+        // Round r's histogram must not depend on which rounds ran before —
+        // a fresh state jumping straight to round 5 matches a state that
+        // walked rounds 0..=5.
+        let xs: Vec<Vec<f64>> = (0..6u64)
+            .map(|r| Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(4000, 100 + r))
+            .collect();
+        let mut walked = RoundHistogram::new(64, 0xB0B, 1);
+        for (r, v) in xs.iter().enumerate() {
+            walked.update(r as u64, v).unwrap();
+        }
+        let mut jumped = RoundHistogram::new(64, 0xB0B, 1);
+        jumped.update(5, &xs[5]).unwrap();
+        let (a, b) = (walked.current().unwrap(), jumped.current().unwrap());
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.grid, b.grid);
+        assert_eq!(a.norm2_sq.to_bits(), b.norm2_sq.to_bits());
+        // And it matches the explicit-base build directly.
+        let (hb, _) = round_bases(0xB0B, 5);
+        let direct = GridHistogram::build_with_base(&xs[5], 64, hb).unwrap();
+        assert_eq!(a.weights, direct.weights);
+    }
+
+    #[test]
+    fn sharded_round_update_is_bit_identical() {
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }
+            .sample_vec(2 * crate::par::CHUNK + 123, 9);
+        let mut plain = RoundHistogram::new(96, 0xCAFE, 1);
+        let mut sharded = RoundHistogram::new(96, 0xCAFE, 4);
+        plain.update(3, &xs).unwrap();
+        sharded.update(3, &xs).unwrap();
+        assert_eq!(plain.current().unwrap().weights, sharded.current().unwrap().weights);
+        assert_eq!(plain.current().unwrap().grid, sharded.current().unwrap().grid);
+    }
+
+    #[test]
+    fn drift_zero_on_identical_histograms_and_grows_with_change() {
+        let xs = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(8000, 5);
+        let h1 = GridHistogram::build_with_base(&xs, 64, 1).unwrap();
+        let h1b = GridHistogram::build_with_base(&xs, 64, 1).unwrap();
+        let d0 = drift(&h1, &h1b);
+        assert_eq!(d0.l1, 0.0);
+        assert_eq!(d0.range_shift, 0.0);
+        assert!(d0.exact_grid);
+        // Same data, different rounding base: same grid, tiny L1 drift.
+        let h2 = GridHistogram::build_with_base(&xs, 64, 2).unwrap();
+        let d1 = drift(&h1, &h2);
+        assert!(d1.exact_grid);
+        assert!(d1.l1 > 0.0 && d1.l1 < 0.05, "rounding noise only: {}", d1.l1);
+        // Different data: larger drift, range shift engaged.
+        let ys = Dist::Normal { mu: 2.0, sigma: 3.0 }.sample_vec(8000, 6);
+        let h3 = GridHistogram::build_with_base(&ys, 64, 1).unwrap();
+        let d2 = drift(&h1, &h3);
+        assert!(!d2.exact_grid);
+        assert!(d2.total() > d1.total());
+        // Incomparable shapes are infinitely far.
+        let h4 = GridHistogram::build_with_base(&xs, 32, 1).unwrap();
+        assert_eq!(drift(&h1, &h4).total(), f64::INFINITY);
+    }
+
+    #[test]
+    fn levels_objective_matches_prefix_recompute() {
+        let xs = Dist::Exponential { lambda: 1.0 }.sample_vec(10_000, 11);
+        let h = GridHistogram::build_with_base(&xs, 200, 3).unwrap();
+        let sol = solve_on(&h, 8, SolverKind::BinSearch).unwrap();
+        let fast = levels_objective(&h, &sol.q_idx);
+        let slow = sol.recompute_mse(&h.prefix());
+        assert!(
+            crate::util::approx_eq(fast, slow, 1e-9, 1e-12),
+            "O(M) objective {fast} vs Prefix recompute {slow}"
+        );
+        assert!(crate::util::approx_eq(fast, sol.mse, 1e-9, 1e-12));
+    }
+
+    #[test]
+    fn reuse_bound_holds_between_rerounded_histograms() {
+        // Same data, two rounding bases: identical grid, drift = rounding
+        // noise. The previous optimum evaluated on the new histogram must
+        // stay within the documented bound of the new optimum.
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(20_000, 13);
+        let h1 = GridHistogram::build_with_base(&xs, 128, 21).unwrap();
+        let h2 = GridHistogram::build_with_base(&xs, 128, 22).unwrap();
+        let d = drift(&h1, &h2);
+        assert!(d.exact_grid);
+        let s = 8;
+        let q1 = solve_on(&h1, s, SolverKind::BinSearch).unwrap();
+        let q2 = solve_on(&h2, s, SolverKind::BinSearch).unwrap();
+        let served = levels_objective(&h2, &q1.q_idx);
+        let bound = reuse_excess_bound(d.l1, h2.d, h2.hi - h2.lo);
+        assert!(
+            served <= q2.mse + bound + 1e-9 * q2.mse.max(1.0),
+            "served {served} vs opt {} + bound {bound}",
+            q2.mse
+        );
+    }
+}

@@ -1,0 +1,656 @@
+//! Incremental AVQ across training rounds — make round `N+1` pay only for
+//! how much the input drifted since round `N`.
+//!
+//! The paper's headline workload compresses gradients round after round,
+//! yet a from-scratch pipeline rebuilds its histogram and re-runs the DP
+//! every round even when consecutive rounds are statistically
+//! near-identical (Faghri et al. 2020 show cross-round reuse of
+//! quantization statistics loses almost nothing). This module is the
+//! round-aware tier on top of [`crate::avq`]:
+//!
+//! * [`hist::RoundHistogram`] — per-round histogram refresh on
+//!   **round-keyed RNG streams** (`Xoshiro256pp::stream(base, round)`
+//!   composed with the executor's per-chunk derivation), extending the
+//!   determinism contract to the round count: round `r`'s statistics are
+//!   a pure function of `(stream base, r, data)` at any thread and shard
+//!   count (DESIGN.md rule 6).
+//! * [`hist::drift`] — a cheap O(M) distance between consecutive merged
+//!   histograms (normalized L1 over bins + range shift) driving the
+//!   three-way decision below.
+//! * Warm-started solvers — [`crate::avq::binsearch::solve_warm`] (DP
+//!   windows around the previous round's argmins, accepted against the
+//!   previous objective bracket), with
+//!   [`crate::baselines::alq::solve_warm`] and
+//!   [`crate::baselines::zipml_2apx::solve_bracketed`] as the baseline
+//!   counterparts; iteration-count wins are measured in
+//!   `bench_pipeline`'s multi-round section.
+//! * [`cache::LevelCache`] — fingerprint-keyed exact replay tier: an
+//!   identical round (same round id + data) serves its solved levels in
+//!   O(1) solve cost.
+//!
+//! [`StreamSolver::round`] stitches these into a per-round decision:
+//!
+//! ```text
+//! cache hit                         → Cached   (O(1): serve stored levels)
+//! drift ≤ reuse_max on same grid    → Reuse    (O(M): re-evaluate stored levels;
+//!                                               excess ≤ ℓ·d·span², see hist)
+//! drift ≤ warm_max                  → WarmStart (windowed DP around prior argmins,
+//!                                               objective-bracket checked)
+//! otherwise                         → Resolve  (exact solve, bitwise equal to
+//!                                               the from-scratch path)
+//! ```
+//!
+//! Determinism: every **Resolve** (and warm-fallback) round is
+//! bitwise-identical to [`solve_round_from_scratch`] at any thread/shard
+//! count; Reuse/WarmStart rounds additionally depend on the *sequence* of
+//! rounds processed before them (that is what cross-round state means),
+//! so a replay of the same round sequence is bitwise-reproducible —
+//! `tests/stream_invariance.rs` asserts both properties.
+
+pub mod cache;
+pub mod hist;
+
+pub use cache::LevelCache;
+pub use hist::{drift, levels_objective, reuse_excess_bound, round_bases, Drift, RoundHistogram};
+
+use std::time::Instant;
+
+use crate::avq::binsearch::{self, DpTrace};
+use crate::avq::histogram::solve_on;
+use crate::avq::{self, AvqError, Solution, SolverKind};
+use crate::sq::{self, CompressedVec};
+use crate::util::rng::Xoshiro256pp;
+
+/// The operator-tunable streaming knobs, shared by every deployment
+/// (library [`StreamConfig`], the service's per-tenant streams, the
+/// federated workers) — one source of truth for defaults, so a new knob
+/// is added exactly once.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamTuning {
+    /// Serve the previous round's levels (Reuse) when the drift
+    /// **accumulated since the last solve** is at or below this and the
+    /// grids match exactly. 0 disables reuse.
+    pub drift_reuse_max: f64,
+    /// Warm-start the DP when the consecutive-round drift total is at or
+    /// below this (checked after the reuse tier). Values below
+    /// `drift_reuse_max` effectively disable warm starts.
+    pub drift_warm_max: f64,
+    /// Initial half-width of the warm DP's argmin windows.
+    pub warm_window: usize,
+    /// Relative objective bracket for accepting a warm candidate
+    /// ([`binsearch::solve_warm`]).
+    pub warm_slack: f64,
+    /// [`LevelCache`] capacity (0 disables the exact replay tier).
+    pub cache_cap: usize,
+}
+
+impl Default for StreamTuning {
+    fn default() -> Self {
+        Self {
+            drift_reuse_max: 0.05,
+            drift_warm_max: 0.25,
+            warm_window: 2,
+            warm_slack: 0.05,
+            cache_cap: 32,
+        }
+    }
+}
+
+/// Configuration of one incremental stream.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Histogram grid intervals M (the paper's practical 100–1000 range).
+    pub m: usize,
+    /// Exact solver for full re-solves. [`SolverKind::BinSearch`] (the
+    /// default) additionally enables the warm-start tier — its DP trace
+    /// is the warm state; other solvers degrade WarmStart to Resolve.
+    pub inner: SolverKind,
+    /// Stream seed; the per-round bases derive from it ([`round_bases`]).
+    pub seed: u64,
+    /// In-process shard ranges for the histogram build (1 = off; results
+    /// bitwise-identical for any value).
+    pub shards: usize,
+    /// The decision-ladder knobs ([`StreamTuning`]).
+    pub tuning: StreamTuning,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        Self {
+            m: 400,
+            inner: SolverKind::BinSearch,
+            seed: 0x57A3A,
+            shards: 1,
+            tuning: StreamTuning::default(),
+        }
+    }
+}
+
+/// How a round was served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Full exact re-solve (bitwise equal to the from-scratch path).
+    Resolve,
+    /// Warm-started DP from the previous round's trace.
+    WarmStart,
+    /// Previous round's levels served under the drift bound.
+    Reuse,
+    /// Exact fingerprint hit in the [`LevelCache`].
+    Cached,
+}
+
+impl Decision {
+    /// Stable wire/JSON code.
+    pub fn code(&self) -> u8 {
+        match self {
+            Decision::Resolve => 0,
+            Decision::WarmStart => 1,
+            Decision::Reuse => 2,
+            Decision::Cached => 3,
+        }
+    }
+
+    /// Parse a wire code.
+    pub fn from_code(c: u8) -> Option<Decision> {
+        match c {
+            0 => Some(Decision::Resolve),
+            1 => Some(Decision::WarmStart),
+            2 => Some(Decision::Reuse),
+            3 => Some(Decision::Cached),
+            _ => None,
+        }
+    }
+
+    /// Metrics/log label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Decision::Resolve => "resolve",
+            Decision::WarmStart => "warm",
+            Decision::Reuse => "reuse",
+            Decision::Cached => "cached",
+        }
+    }
+}
+
+/// The result of one [`StreamSolver::round`].
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// The round id served.
+    pub round: u64,
+    /// The level set (and its objective on *this* round's histogram).
+    pub solution: Solution,
+    /// How the round was served.
+    pub decision: Decision,
+    /// Normalized L1 drift vs the previous processed round (0 when there
+    /// was none).
+    pub drift_l1: f64,
+    /// Total drift (L1 + range shift; `∞` when incomparable).
+    pub drift_total: f64,
+    /// **Accumulated** L1 drift since the round the served levels were
+    /// last solved on (Reuse rounds only; 0 otherwise). This — not the
+    /// consecutive-round drift — is what the reuse decision thresholds
+    /// and what the documented excess bound
+    /// ([`reuse_excess_bound`]`(accum_l1, d, span)`) is stated in: by the
+    /// triangle inequality over the intermediate histograms, a chain of
+    /// reuses accumulates at most the sum of the per-round deviations.
+    pub accum_l1: f64,
+    /// The round's quantize-pass stream base (feed to [`compress_round`]).
+    pub qbase: u64,
+    /// Decision + solve wall time in microseconds (histogram build
+    /// excluded — that cost is identical on every path).
+    pub solve_us: u64,
+    /// Interval-cost evaluations spent by the DP (0 for Cached/Reuse).
+    pub evals: u64,
+    /// Whether a warm start missed its objective bracket and fell back to
+    /// the exact solve (the served solution is then exact).
+    pub fallback: bool,
+}
+
+/// Per-stream decision counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamMetrics {
+    /// Rounds processed.
+    pub rounds: u64,
+    /// Rounds served from the exact cache.
+    pub cached: u64,
+    /// Rounds served by drift-bounded reuse.
+    pub reused: u64,
+    /// Rounds served by an accepted warm start.
+    pub warm: u64,
+    /// Warm starts that missed the bracket and re-solved exactly.
+    pub warm_fallbacks: u64,
+    /// Full exact re-solves (drift too large, or no prior state).
+    pub resolved: u64,
+}
+
+impl StreamMetrics {
+    /// One-line summary for service logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "rounds={} cached={} reused={} warm={} (fallbacks={}) resolved={}",
+            self.rounds, self.cached, self.reused, self.warm, self.warm_fallbacks, self.resolved
+        )
+    }
+}
+
+struct PrevRound {
+    s: usize,
+    solution: Solution,
+    trace: Option<DpTrace>,
+}
+
+/// The incremental solver: one instance per stream (per tenant, per
+/// training job), fed rounds in order.
+pub struct StreamSolver {
+    cfg: StreamConfig,
+    base: u64,
+    hist: RoundHistogram,
+    cache: LevelCache,
+    prev: Option<PrevRound>,
+    /// Accumulated L1 drift since `prev.solution` was last *solved*
+    /// (reset by Resolve/WarmStart/Cached; grows along Reuse chains). The
+    /// reuse threshold compares against this, so a slow cumulative drift
+    /// cannot serve arbitrarily stale levels round after round.
+    reuse_l1_accum: f64,
+    metrics: StreamMetrics,
+}
+
+/// Derive a stream's base from its seed (one fixed draw, so the base is a
+/// pure function of the seed — shared by [`StreamSolver`] and
+/// [`solve_round_from_scratch`]).
+pub fn stream_base(seed: u64) -> u64 {
+    Xoshiro256pp::seed_from_u64(seed).next_u64()
+}
+
+impl StreamSolver {
+    /// New stream state.
+    pub fn new(cfg: StreamConfig) -> Self {
+        let base = stream_base(cfg.seed);
+        Self {
+            cfg,
+            base,
+            hist: RoundHistogram::new(cfg.m, base, cfg.shards),
+            cache: LevelCache::new(cfg.tuning.cache_cap),
+            prev: None,
+            reuse_l1_accum: 0.0,
+            metrics: StreamMetrics::default(),
+        }
+    }
+
+    /// The stream's configuration.
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+
+    /// Decision counters so far.
+    pub fn metrics(&self) -> StreamMetrics {
+        self.metrics
+    }
+
+    /// Level-cache counters so far.
+    pub fn cache_stats(&self) -> cache::CacheStats {
+        self.cache.stats()
+    }
+
+    /// Serve round `round` with budget `s`: refresh the round histogram,
+    /// decide cache / reuse / warm-start / re-solve, and return the level
+    /// set (see the module docs for the decision ladder and its
+    /// guarantees).
+    pub fn round(&mut self, round: u64, xs: &[f64], s: usize) -> Result<RoundOutcome, AvqError> {
+        let qbase = self.hist.update(round, xs)?;
+        let t0 = Instant::now();
+        let dr = self.hist.drift();
+        let (drift_l1, drift_total) =
+            dr.map(|d| (d.l1, d.total())).unwrap_or((0.0, f64::INFINITY));
+        let h = self.hist.current().expect("update just succeeded");
+
+        // Tier 1: exact replay.
+        if let Some((solution, trace)) = self.cache.get(h, s) {
+            self.metrics.rounds += 1;
+            self.metrics.cached += 1;
+            self.prev = Some(PrevRound { s, solution: solution.clone(), trace });
+            // Cached levels were solved on this exact histogram: fresh
+            // anchor for any reuse chain that follows.
+            self.reuse_l1_accum = 0.0;
+            return Ok(RoundOutcome {
+                round,
+                solution,
+                decision: Decision::Cached,
+                drift_l1,
+                drift_total,
+                accum_l1: 0.0,
+                qbase,
+                solve_us: t0.elapsed().as_micros().max(1) as u64,
+                evals: 0,
+                fallback: false,
+            });
+        }
+
+        // Tier 2: drift-bounded reuse of the previously *solved* levels.
+        // The threshold governs the drift **accumulated since that
+        // solve** (`reuse_l1_accum + this round's ℓ`), so a chain of
+        // reuses stays inside the documented `ℓ·d·span²` excess bound —
+        // consecutive-round drift alone would let staleness build up
+        // unboundedly.
+        if let (Some(d), Some(prev)) = (dr, &self.prev) {
+            let accum = self.reuse_l1_accum + d.l1;
+            if d.exact_grid
+                && accum <= self.cfg.tuning.drift_reuse_max
+                && prev.s == s
+                && prev.solution.q_idx.last() == Some(&(h.grid.len() - 1))
+            {
+                let mse = levels_objective(h, &prev.solution.q_idx);
+                let solution =
+                    Solution { q_idx: prev.solution.q_idx.clone(), q: prev.solution.q.clone(), mse };
+                self.metrics.rounds += 1;
+                self.metrics.reused += 1;
+                self.reuse_l1_accum = accum;
+                return Ok(RoundOutcome {
+                    round,
+                    solution,
+                    decision: Decision::Reuse,
+                    drift_l1,
+                    drift_total,
+                    accum_l1: accum,
+                    qbase,
+                    solve_us: t0.elapsed().as_micros().max(1) as u64,
+                    evals: 0,
+                    fallback: false,
+                });
+            }
+        }
+
+        // Tier 3: warm-started DP (BinSearch inner, trace available, and
+        // the non-degenerate DP preconditions hold on this histogram).
+        // Bin-Search only evaluates interval costs, so its Prefix skips
+        // the O(d) α⁻¹ array — bit-identical costs, O(M) build — while
+        // other inner solvers keep the full build for their O(1) b*.
+        let p = if self.cfg.inner == SolverKind::BinSearch {
+            crate::avq::Prefix::weighted_no_inverse(&h.grid, &h.weights)
+        } else {
+            h.prefix()
+        };
+        let n = p.len();
+        let dp_ok = s >= 2 && s < n && p.value(0) < p.value(n - 1);
+        if let (Some(d), Some(prev)) = (dr, &self.prev) {
+            if d.total() <= self.cfg.tuning.drift_warm_max
+                && self.cfg.inner == SolverKind::BinSearch
+                && dp_ok
+                && prev.s == s
+            {
+                if let Some(trace) = &prev.trace {
+                    let ws = binsearch::solve_warm(
+                        &p,
+                        s,
+                        trace,
+                        self.cfg.tuning.warm_window,
+                        self.cfg.tuning.warm_slack,
+                    );
+                    self.metrics.rounds += 1;
+                    self.metrics.warm += 1;
+                    if ws.fallback {
+                        self.metrics.warm_fallbacks += 1;
+                        // The fallback solution is exact: cache it.
+                        self.cache.put(h, s, &ws.solution, Some(&ws.trace));
+                    }
+                    // The served candidate was solved on *this* histogram:
+                    // fresh anchor.
+                    self.reuse_l1_accum = 0.0;
+                    let outcome = RoundOutcome {
+                        round,
+                        solution: ws.solution.clone(),
+                        decision: Decision::WarmStart,
+                        drift_l1,
+                        drift_total,
+                        accum_l1: 0.0,
+                        qbase,
+                        solve_us: t0.elapsed().as_micros().max(1) as u64,
+                        evals: ws.evals,
+                        fallback: ws.fallback,
+                    };
+                    self.prev =
+                        Some(PrevRound { s, solution: ws.solution, trace: Some(ws.trace) });
+                    return Ok(outcome);
+                }
+            }
+        }
+
+        // Tier 4: full exact re-solve — bitwise equal to the from-scratch
+        // path ([`solve_round_from_scratch`]): same histogram (round-keyed
+        // base), same Prefix, same solver.
+        let (solution, trace) = if self.cfg.inner == SolverKind::BinSearch && dp_ok {
+            let (sol, trace) = binsearch::solve_traced(&p, s);
+            (sol, Some(trace))
+        } else {
+            (avq::solve(&p, s, self.cfg.inner)?, None)
+        };
+        let evals = trace.as_ref().map_or(0, |t| t.evals);
+        self.metrics.rounds += 1;
+        self.metrics.resolved += 1;
+        self.cache.put(h, s, &solution, trace.as_ref());
+        self.reuse_l1_accum = 0.0;
+        let outcome = RoundOutcome {
+            round,
+            solution: solution.clone(),
+            decision: Decision::Resolve,
+            drift_l1,
+            drift_total,
+            accum_l1: 0.0,
+            qbase,
+            solve_us: t0.elapsed().as_micros().max(1) as u64,
+            evals,
+            fallback: false,
+        };
+        self.prev = Some(PrevRound { s, solution, trace });
+        Ok(outcome)
+    }
+
+    /// [`round`](Self::round) plus the round's compressed payload
+    /// ([`compress_round`] with the round-keyed quantize base).
+    pub fn round_compress(
+        &mut self,
+        round: u64,
+        xs: &[f64],
+        s: usize,
+    ) -> Result<(RoundOutcome, CompressedVec), AvqError> {
+        let outcome = self.round(round, xs, s)?;
+        let compressed = compress_round(xs, &outcome.solution.q, outcome.qbase);
+        Ok((outcome, compressed))
+    }
+
+    /// The stream's derived base (testing/diagnostics).
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+}
+
+/// Stochastically quantize + bit-pack `xs` against `qs` with the explicit
+/// round-keyed base — the streaming sibling of [`sq::compress`]: a pure
+/// function of `(qbase, xs, qs)` (per-chunk streams
+/// `stream(qbase, chunk)`, exactly the single-shard quantize contract).
+pub fn compress_round(xs: &[f64], qs: &[f64], qbase: u64) -> CompressedVec {
+    let idx = sq::quantize_shard(xs, qs, qbase, 0);
+    sq::encode(&idx, qs)
+}
+
+/// The from-scratch reference for round `round`: what a fresh,
+/// stateless pipeline produces — build the round-keyed histogram, solve
+/// exactly, compress with the round-keyed quantize base. Every
+/// [`Decision::Resolve`] round of a [`StreamSolver`] with the same config
+/// is bitwise-identical to this, at any thread and shard count
+/// (`tests/stream_invariance.rs`).
+pub fn solve_round_from_scratch(
+    cfg: &StreamConfig,
+    round: u64,
+    xs: &[f64],
+    s: usize,
+) -> Result<(Solution, CompressedVec), AvqError> {
+    let base = stream_base(cfg.seed);
+    let (hist_base, qbase) = round_bases(base, round);
+    let h = if cfg.shards > 1 {
+        crate::coordinator::shard::build_sharded_with_base(xs, cfg.m, hist_base, cfg.shards)?
+    } else {
+        crate::avq::histogram::GridHistogram::build_with_base(xs, cfg.m, hist_base)?
+    };
+    let sol = solve_on(&h, s, cfg.inner)?;
+    let compressed = compress_round(xs, &sol.q, qbase);
+    Ok((sol, compressed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    fn cfg(reuse: f64, warm: f64, cache: usize) -> StreamConfig {
+        StreamConfig {
+            m: 64,
+            tuning: StreamTuning {
+                drift_reuse_max: reuse,
+                drift_warm_max: warm,
+                cache_cap: cache,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn rounds_data(n: u64, d: usize, seed: u64) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|r| Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(d, seed + r))
+            .collect()
+    }
+
+    #[test]
+    fn first_round_resolves_and_matches_from_scratch() {
+        let c = cfg(0.05, 0.25, 8);
+        let mut solver = StreamSolver::new(c);
+        let xs = rounds_data(1, 6000, 1).pop().unwrap();
+        let (outcome, payload) = solver.round_compress(0, &xs, 8).unwrap();
+        assert_eq!(outcome.decision, Decision::Resolve);
+        let (want_sol, want_c) = solve_round_from_scratch(&c, 0, &xs, 8).unwrap();
+        assert_eq!(outcome.solution.q_idx, want_sol.q_idx);
+        assert_eq!(outcome.solution.mse.to_bits(), want_sol.mse.to_bits());
+        assert_eq!(payload, want_c);
+    }
+
+    #[test]
+    fn replayed_round_hits_the_cache() {
+        let mut solver = StreamSolver::new(cfg(0.0, 0.0, 8));
+        let xs = rounds_data(1, 6000, 2).pop().unwrap();
+        let a = solver.round(7, &xs, 8).unwrap();
+        assert_eq!(a.decision, Decision::Resolve);
+        // Same round id + same data = identical histogram = cache hit,
+        // identical levels.
+        let b = solver.round(7, &xs, 8).unwrap();
+        assert_eq!(b.decision, Decision::Cached);
+        assert_eq!(b.solution.q_idx, a.solution.q_idx);
+        assert_eq!(b.solution.mse.to_bits(), a.solution.mse.to_bits());
+        // A different round id re-keys the rounding noise: no cache hit.
+        let c = solver.round(8, &xs, 8).unwrap();
+        assert_ne!(c.decision, Decision::Cached);
+        let m = solver.metrics();
+        assert_eq!((m.rounds, m.cached), (3, 1));
+    }
+
+    #[test]
+    fn stationary_rounds_reuse_within_bound() {
+        // Sentinel endpoints pin the grid so consecutive stationary rounds
+        // share it exactly; interior drift is sampling noise → Reuse.
+        let d = 8000;
+        let mk = |r: u64| {
+            let mut v = Dist::Uniform { lo: -1.0, hi: 1.0 }.sample_vec(d - 2, 50 + r);
+            v.push(-1.5);
+            v.push(1.5);
+            v
+        };
+        let c = cfg(0.2, 0.5, 0);
+        let mut solver = StreamSolver::new(c);
+        let s = 8;
+        let first = solver.round(0, &mk(0), s).unwrap();
+        assert_eq!(first.decision, Decision::Resolve);
+        for r in 1..5u64 {
+            let xs = mk(r);
+            let out = solver.round(r, &xs, s).unwrap();
+            assert_eq!(out.decision, Decision::Reuse, "round {r}: drift {}", out.drift_total);
+            assert_eq!(out.evals, 0);
+            // The documented bound (accumulated ℓ since the last solve)
+            // vs this round's exact optimum.
+            let (exact, _) = solve_round_from_scratch(&c, r, &xs, s).unwrap();
+            let h_span = 3.0; // [-1.5, 1.5]
+            assert!(out.accum_l1 >= out.drift_l1, "chain accumulates");
+            let bound = reuse_excess_bound(out.accum_l1, d, h_span);
+            assert!(
+                out.solution.mse <= exact.mse + bound + 1e-9 * exact.mse.max(1.0),
+                "round {r}: served {} vs exact {} + bound {bound}",
+                out.solution.mse,
+                exact.mse
+            );
+        }
+        assert_eq!(solver.metrics().reused, 4);
+    }
+
+    #[test]
+    fn warm_tier_engages_between_reuse_and_resolve() {
+        // Moderate drift (range changes each round): too much for reuse,
+        // inside the warm threshold.
+        let d = 6000;
+        let mk = |r: u64| {
+            Dist::Normal { mu: 0.002 * r as f64, sigma: 1.0 + 0.001 * r as f64 }
+                .sample_vec(d, 70 + r)
+        };
+        let mut solver = StreamSolver::new(cfg(0.0, f64::INFINITY, 0));
+        let s = 8;
+        assert_eq!(solver.round(0, &mk(0), s).unwrap().decision, Decision::Resolve);
+        for r in 1..4u64 {
+            let out = solver.round(r, &mk(r), s).unwrap();
+            assert_eq!(out.decision, Decision::WarmStart, "round {r}");
+            assert!(out.evals > 0);
+        }
+        let m = solver.metrics();
+        assert_eq!((m.resolved, m.warm), (1, 3));
+    }
+
+    #[test]
+    fn zero_thresholds_force_resolve_bitwise_equal_to_scratch() {
+        let c = cfg(0.0, 0.0, 0);
+        let mut solver = StreamSolver::new(c);
+        for (r, xs) in rounds_data(4, 5000, 90).iter().enumerate() {
+            let (out, payload) = solver.round_compress(r as u64, xs, 8).unwrap();
+            assert_eq!(out.decision, Decision::Resolve);
+            let (want_sol, want_c) = solve_round_from_scratch(&c, r as u64, xs, 8).unwrap();
+            assert_eq!(out.solution.q_idx, want_sol.q_idx, "round {r}");
+            assert_eq!(out.solution.mse.to_bits(), want_sol.mse.to_bits(), "round {r}");
+            assert_eq!(payload, want_c, "round {r}");
+        }
+        assert_eq!(solver.metrics().resolved, 4);
+    }
+
+    #[test]
+    fn degenerate_and_error_rounds_behave_like_the_substrate() {
+        let mut solver = StreamSolver::new(cfg(0.05, 0.25, 4));
+        // Constant round: single-level solution, zero-bit payload.
+        let xs = vec![2.5f64; 3000];
+        let (out, c) = solver.round_compress(0, &xs, 8).unwrap();
+        assert_eq!(out.solution.q, vec![2.5]);
+        assert_eq!(out.solution.mse, 0.0);
+        assert_eq!(c.bits, 0);
+        // Errors propagate.
+        assert_eq!(solver.round(1, &[], 8).unwrap_err(), AvqError::EmptyInput);
+        assert_eq!(
+            solver.round(2, &[1.0, f64::NAN], 8).unwrap_err(),
+            AvqError::NonFinite
+        );
+        // The stream recovers afterwards.
+        let ys = rounds_data(1, 3000, 99).pop().unwrap();
+        assert!(solver.round(3, &ys, 8).is_ok());
+    }
+
+    #[test]
+    fn decision_codes_roundtrip() {
+        for d in [Decision::Resolve, Decision::WarmStart, Decision::Reuse, Decision::Cached] {
+            assert_eq!(Decision::from_code(d.code()), Some(d));
+        }
+        assert_eq!(Decision::from_code(9), None);
+    }
+}

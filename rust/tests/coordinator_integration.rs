@@ -8,12 +8,14 @@ use quiver::coordinator::protocol::Msg;
 use quiver::coordinator::router::{Router, RouterConfig};
 use quiver::coordinator::server::{Server, ServerConfig};
 use quiver::coordinator::service::{
-    compress_remote, compress_remote_with, Service, ServiceConfig,
+    compress_remote, compress_remote_stream, compress_remote_with, Service, ServiceConfig,
+    StreamServiceConfig,
 };
 use quiver::coordinator::shard::{ShardConfig, ShardCoordinator, ShardNode};
 use quiver::coordinator::tasks::QuadraticToy;
-use quiver::coordinator::worker::{run_worker, WorkerConfig};
+use quiver::coordinator::worker::{run_worker, WorkerConfig, WorkerStats};
 use quiver::sq;
+use quiver::stream::{Decision, StreamTuning};
 
 /// Federated training over loopback TCP: 4 workers on a convex toy task.
 /// The loss must collapse and the uplink must be ~8× smaller than raw.
@@ -45,6 +47,7 @@ fn federated_round_trip_converges() {
                 s: 16,
                 router: Router::default(),
                 seed: 1000 + w as u64,
+                stream: None,
             };
             let toy = QuadraticToy::new(target, 0.01, 2000 + w as u64);
             run_worker(&addr, cfg, toy).expect("worker")
@@ -100,7 +103,8 @@ fn server_survives_dead_worker_with_timeout() {
     // Worker 0: healthy.
     let a0 = addr.clone();
     let healthy = std::thread::spawn(move || {
-        let cfg = WorkerConfig { id: 0, s: 4, router: Router::default(), seed: 1 };
+        let cfg =
+            WorkerConfig { id: 0, s: 4, router: Router::default(), seed: 1, stream: None };
         let toy = QuadraticToy::new(vec![1.0; 50], 0.0, 2);
         // May error when the server aborts early — either way it must return.
         let _ = run_worker(&a0, cfg, toy);
@@ -393,6 +397,216 @@ fn admission_packing_and_tenant_classes_stay_correct() {
     // `packed` counts waves that coalesced extra batches — can be zero on
     // a fast machine (queue never backed up), so only sanity-bound it.
     assert!(m.packed.load(std::sync::atomic::Ordering::Relaxed) <= clients);
+    service.shutdown();
+}
+
+/// One full loopback training run; returns the final parameters, the
+/// per-round uplink byte counts, and the worker stats. With two workers
+/// the aggregation is a commutative two-term sum, so the whole run is
+/// bitwise-deterministic regardless of submission arrival order — which
+/// lets the sharded-vs-unsharded and streaming comparisons below assert
+/// bit equality end to end.
+fn run_train(shards: usize, stream: bool) -> (Vec<f32>, Vec<usize>, Vec<WorkerStats>) {
+    let dim = 5000;
+    let workers = 2;
+    let rounds = 8;
+    let target: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.01).sin() * 2.0).collect();
+    let server = Server::bind(ServerConfig {
+        workers,
+        rounds,
+        dim,
+        lr: 0.3,
+        round_timeout: Duration::from_secs(20),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().unwrap();
+    let mut joins = vec![];
+    for w in 0..workers {
+        let addr = addr.clone();
+        let target = target.clone();
+        joins.push(std::thread::spawn(move || {
+            let cfg = WorkerConfig {
+                id: w as u64,
+                s: 16,
+                // Gradients (d = 5000) exceed the crossover, so the
+                // histogram route — the one sharding applies to — serves
+                // every round.
+                router: Router::new(RouterConfig {
+                    exact_max_d: 64,
+                    hist_m: 128,
+                    seed: 5,
+                    shards,
+                }),
+                seed: 1000 + w as u64,
+                stream: stream.then(|| StreamTuning {
+                    drift_warm_max: 10.0, // converging gradients drift hard
+                    ..StreamTuning::default()
+                }),
+            };
+            let toy = QuadraticToy::new(target, 0.0, 2000 + w as u64);
+            run_worker(&addr, cfg, toy).expect("worker")
+        }));
+    }
+    let (final_params, log) = server.run(vec![0f32; dim]).expect("server run");
+    let stats: Vec<WorkerStats> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let bytes: Vec<usize> = log.rounds.iter().map(|r| r.bytes_up).collect();
+    // Sanity on every variant: training converges.
+    let first = log.rounds.first().unwrap().mean_loss;
+    let last = log.rounds.last().unwrap().mean_loss;
+    assert!(last < first * 0.2, "loss should drop: {first} -> {last}");
+    (final_params, bytes, stats)
+}
+
+/// The ROADMAP's sharded federated round path: routing one model's
+/// gradient through `RouterConfig::shards` (so a single gradient can span
+/// trainer nodes) must be invisible in training — final parameters and
+/// every round's uplink bytes bit-equal to the unsharded run. Holds in
+/// classic mode and in streaming mode (where the stream solver itself
+/// shards its round histograms).
+#[test]
+fn sharded_federated_rounds_bit_equal_unsharded() {
+    let (p1, b1, _) = run_train(1, false);
+    let (p2, b2, _) = run_train(2, false);
+    assert_eq!(b1, b2, "per-round uplink bytes must not change with sharding");
+    let bits = |p: &[f32]| p.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&p1), bits(&p2), "final parameters must be bit-equal");
+
+    let (p3, b3, s3) = run_train(1, true);
+    let (p4, b4, _) = run_train(4, true);
+    assert_eq!(b3, b4, "streaming: uplink bytes must not change with sharding");
+    assert_eq!(bits(&p3), bits(&p4), "streaming: final parameters bit-equal");
+    // The streaming workers actually ran the incremental path.
+    let m = s3[0].stream.expect("streaming stats recorded");
+    assert_eq!(m.rounds, 8);
+    assert!(m.resolved >= 1, "round 0 is always a re-solve");
+}
+
+/// Streaming service over real TCP: rounds of a stationary stream resolve
+/// once then reuse/warm-start; a fresh service instance with the same
+/// stream seed reproduces every round's bytes exactly; and a service
+/// without streaming configured answers `Busy`.
+#[test]
+fn streaming_service_rounds_reproducible_over_tcp() {
+    let mk = || {
+        Service::start(ServiceConfig {
+            threads: 2,
+            queue_capacity: 64,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            router: Router::new(RouterConfig { exact_max_d: 1024, hist_m: 128, seed: 9, shards: 1 }),
+            stream: Some(StreamServiceConfig { seed: 0xFEED, ..Default::default() }),
+            ..Default::default()
+        })
+        .expect("service")
+    };
+    // Stationary rounds with pinned endpoints (sentinels survive the f32
+    // round-trip exactly), so the grid repeats and reuse can engage.
+    let round_data = |r: u64| -> Vec<f32> {
+        let mut v: Vec<f32> = (0..3000)
+            .map(|i| (((i as f32) * 0.37 + r as f32 * 11.0).sin() * 1.7).clamp(-3.9, 3.9))
+            .collect();
+        v[0] = -4.0;
+        v[1] = 4.0;
+        v
+    };
+    let drive = |addr: &str| -> Vec<(u8, Vec<u8>, u64)> {
+        (0..4u64)
+            .map(|r| {
+                match compress_remote_stream(addr, r, 42, r, 8, &round_data(r)).expect("rpc") {
+                    Msg::StreamCompressReply { request_id, round, decision, compressed, solver, .. } => {
+                        assert_eq!(request_id, r);
+                        assert_eq!(round, r);
+                        assert_eq!(solver, "quiver-stream(M=128)");
+                        assert_eq!(compressed.d, 3000);
+                        (decision, compressed.payload, compressed.q.len() as u64)
+                    }
+                    other => panic!("round {r}: unexpected {other:?}"),
+                }
+            })
+            .collect()
+    };
+    let s1 = mk();
+    let run1 = drive(s1.addr());
+    assert_eq!(run1[0].0, Decision::Resolve.code(), "first round must re-solve");
+    assert!(
+        run1[1..].iter().any(|(d, _, _)| *d != Decision::Resolve.code()),
+        "stationary rounds should reuse/warm at least once: {:?}",
+        run1.iter().map(|(d, _, _)| *d).collect::<Vec<_>>()
+    );
+    let m = &s1.metrics;
+    let resolved = m.stream_resolved.load(std::sync::atomic::Ordering::Relaxed);
+    let non_resolve = m.stream_reused.load(std::sync::atomic::Ordering::Relaxed)
+        + m.stream_warm.load(std::sync::atomic::Ordering::Relaxed)
+        + m.stream_cached.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(resolved + non_resolve, 4);
+    assert!(m.summary().contains("stream="));
+    s1.shutdown();
+
+    // A brand-new service instance with the same stream seed replays the
+    // same rounds to the same bytes — per-tenant streams are reproducible
+    // from (seed, stream_id, round, data) alone.
+    let s2 = mk();
+    let run2 = drive(s2.addr());
+    assert_eq!(run1, run2, "fresh instance must reproduce every round");
+    // Plain one-shot traffic coexists with streaming.
+    match compress_remote(s2.addr(), 7, 8, &round_data(0)).expect("rpc") {
+        Msg::CompressReply { request_id, .. } => assert_eq!(request_id, 7),
+        other => panic!("unexpected {other:?}"),
+    }
+    s2.shutdown();
+
+    // Streaming traffic to a non-streaming service: clean Busy.
+    let plain = Service::start(ServiceConfig::default()).expect("service");
+    match compress_remote_stream(plain.addr(), 1, 1, 0, 8, &round_data(0)).expect("rpc") {
+        Msg::Busy { request_id } => assert_eq!(request_id, 1),
+        other => panic!("expected Busy, got {other:?}"),
+    }
+    plain.shutdown();
+}
+
+/// Deadline shedding (`--shed-expired`): a request whose deadline expires
+/// while it queues behind a slow solve is answered `Busy` at pop time and
+/// counted by the `shed=` metric, instead of burning a solve.
+#[test]
+fn shed_expired_service_answers_busy_for_late_jobs() {
+    let service = Service::start(ServiceConfig {
+        threads: 1,
+        queue_capacity: 8,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        shed_expired: true,
+        // Exact route for a large vector = a deliberately slow first job.
+        router: Router::new(RouterConfig { exact_max_d: 1 << 22, hist_m: 256, seed: 9, shards: 1 }),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = service.addr().to_string();
+
+    // Job A: slow exact solve (1M coordinates on the exact route takes
+    // well over the sleep below on any machine) occupying the single
+    // solver thread.
+    let a_addr = addr.clone();
+    let a = std::thread::spawn(move || {
+        let data: Vec<f32> = (0..1 << 20).map(|i| (i as f32 * 0.001).sin()).collect();
+        compress_remote(&a_addr, 1, 16, &data).expect("rpc A")
+    });
+    // Give A time to be pulled (pull happens within the 1 ms linger),
+    // then queue B with a 1 ms deadline: by the time the solver pops it —
+    // after A's solve — it is long expired.
+    std::thread::sleep(Duration::from_millis(20));
+    let data_b: Vec<f32> = (0..2000).map(|i| (i as f32 * 0.01).cos()).collect();
+    let b = compress_remote_with(&addr, 2, 8, 0, 1, &data_b).expect("rpc B");
+    match b {
+        Msg::Busy { request_id } => assert_eq!(request_id, 2),
+        other => panic!("expected shed Busy, got {other:?}"),
+    }
+    match a.join().unwrap() {
+        Msg::CompressReply { request_id, .. } => assert_eq!(request_id, 1),
+        other => panic!("unexpected {other:?}"),
+    }
+    let shed = service.metrics.shed.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(shed, 1, "exactly the expired job was shed");
     service.shutdown();
 }
 

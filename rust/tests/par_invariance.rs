@@ -261,6 +261,56 @@ fn solve_unsorted_invariant_and_correct() {
     par::set_threads(prev);
 }
 
+/// The sort's per-thread scratch buffer (reused across calls since the
+/// ROADMAP follow-up landed) must be invisible in results: back-to-back
+/// sorts of different sizes — where a later, smaller sort sees the stale
+/// tail of an earlier sort's scratch — stay bit-identical to the
+/// sequential reference at every width and on both backends, and
+/// repeated sorts of the same data are bit-identical to each other.
+#[test]
+fn sort_scratch_reuse_bit_identical_across_widths() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    // Sizes chosen to flip the merge-round parity (data ending in the
+    // scratch vs in place) and to shrink after growing.
+    let sizes = [
+        2 * par::sort::RUN + 5,
+        4 * par::sort::RUN + 999,
+        par::sort::RUN + 1,
+        3 * par::sort::RUN + par::sort::RUN / 2,
+    ];
+    let inputs: Vec<Vec<f64>> = sizes
+        .iter()
+        .map(|&n| Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(n, n as u64))
+        .collect();
+    let reference: Vec<Vec<u64>> = inputs
+        .iter()
+        .map(|xs| {
+            let mut v = xs.clone();
+            v.sort_unstable_by(f64::total_cmp);
+            bits(&v)
+        })
+        .collect();
+    for backend in [par::Backend::Pool, par::Backend::Scoped] {
+        par::set_backend(backend);
+        for t in [1usize, 2, 8] {
+            par::set_threads(t);
+            for pass in 0..2 {
+                for (xs, want) in inputs.iter().zip(&reference) {
+                    let mut v = xs.clone();
+                    par::sort::sort_f64(&mut v);
+                    assert_eq!(
+                        bits(&v),
+                        *want,
+                        "n={} pass={pass} t={t} on {backend:?}",
+                        xs.len()
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Decode is the inverse of encode under any width, and dequantize
 /// round-trips through the parallel paths.
 #[test]

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Compare two directories of BENCH_*.json records and emit a Markdown report.
+
+Usage: perf_compare.py BASELINE_DIR CURRENT_DIR [--threshold PCT]
+
+Each BENCH_*.json is a flat array of
+``{name, d, s, median_ns, mad_ns, elems_per_s}`` records (see
+``rust/src/benchfw``). Records are matched by ``(file, name, d, s)`` —
+EXPERIMENTS.md's rule: only compare records whose name *and* shape match.
+The report flags regressions/improvements beyond the threshold (default
+15%, the documented noise floor for shared runners) and is written to
+stdout (the CI job pipes it into $GITHUB_STEP_SUMMARY). Purely
+informational: the exit code is always 0 — perf-smoke stays non-gating.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load(dirpath: pathlib.Path):
+    records = {}
+    for f in sorted(dirpath.glob("BENCH_*.json")):
+        try:
+            data = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"<!-- skipping {f.name}: {e} -->")
+            continue
+        for r in data:
+            key = (f.name, r.get("name"), r.get("d"), r.get("s"))
+            records[key] = r
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", type=pathlib.Path)
+    ap.add_argument("current", type=pathlib.Path)
+    ap.add_argument("--threshold", type=float, default=15.0,
+                    help="percent change considered signal (default 15)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    if not base:
+        print("### Perf comparison\n\nNo baseline BENCH_*.json found "
+              "(first run, or the previous run uploaded no artifacts) — "
+              "nothing to compare.")
+        return 0
+    if not cur:
+        print("### Perf comparison\n\nNo current BENCH_*.json found — "
+              "did the bench step fail?")
+        return 0
+
+    regressions, improvements, stable = [], [], 0
+    rows = []
+    for key in sorted(set(base) & set(cur)):
+        b, c = base[key], cur[key]
+        b_ns, c_ns = b.get("median_ns"), c.get("median_ns")
+        if not b_ns or not c_ns:
+            continue
+        pct = (c_ns - b_ns) / b_ns * 100.0
+        if pct >= args.threshold:
+            regressions.append((key, b_ns, c_ns, pct))
+        elif pct <= -args.threshold:
+            improvements.append((key, b_ns, c_ns, pct))
+        else:
+            stable += 1
+        rows.append((key, b_ns, c_ns, pct))
+
+    only_base = sorted(set(base) - set(cur))
+    only_cur = sorted(set(cur) - set(base))
+
+    print("### Perf comparison vs previous run (non-gating)\n")
+    print(f"{len(rows)} matched records · {stable} within ±{args.threshold:.0f}% · "
+          f"{len(regressions)} slower · {len(improvements)} faster · "
+          f"{len(only_cur)} new · {len(only_base)} removed\n")
+    print(f"Timings from shared runners are noisy — treat ≤ ~{args.threshold:.0f}% "
+          "as noise and only chase steps that persist across commits "
+          "(see EXPERIMENTS.md).\n")
+
+    def table(title, items):
+        if not items:
+            return
+        print(f"#### {title}\n")
+        print("| file | benchmark | baseline | current | Δ |")
+        print("|---|---|---:|---:|---:|")
+        for (fname, name, _d, _s), b_ns, c_ns, pct in items:
+            print(f"| {fname} | {name} | {b_ns / 1e6:.3f} ms | "
+                  f"{c_ns / 1e6:.3f} ms | {pct:+.1f}% |")
+        print()
+
+    table(f"Slower by ≥ {args.threshold:.0f}%", regressions)
+    table(f"Faster by ≥ {args.threshold:.0f}%", improvements)
+    if only_cur:
+        names = ", ".join(f"`{n}`" for (_f, n, _d, _s) in only_cur[:20])
+        print(f"New benchmarks: {names}\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
