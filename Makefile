@@ -3,7 +3,7 @@
 # manifest + golden dumps under rust/artifacts/ (requires jax; see
 # python/compile/aot.py).
 
-.PHONY: artifacts build test bench bench-smoke clean
+.PHONY: artifacts build test bench bench-smoke lint-contract sanitize clean
 
 artifacts:
 	cd python/compile && python3 aot.py --out ../../rust/artifacts
@@ -23,6 +23,26 @@ bench:
 bench-smoke:
 	cd rust && QUIVER_MAX_POW=13 cargo bench --bench bench_solvers
 	cd rust && QUIVER_SMOKE=1 cargo bench --bench bench_pipeline
+
+# Gating determinism-contract lint (rules C1-C5; DESIGN.md "Enforcement").
+# Runs from the workspace root so `-p contract-lint` resolves; scans
+# rust/src and cross-checks the committed waiver inventory at
+# tools/contract-lint/waivers.txt. To record a new `// contract-allow`
+# waiver, run `cargo run -p contract-lint -- --write-waivers rust/src`
+# and commit the diff.
+lint-contract:
+	cargo run -p contract-lint -- --check rust/src
+
+# Nightly-toolchain sanitizer lane (non-gating in CI): Miri interprets
+# the par::pool unit tests — the one `unsafe` transmute in the tree,
+# allowlisted under lint rule C4 — then ThreadSanitizer runs the pool
+# and batcher/scheduler tests. Needs `rustup toolchain install nightly
+# --component miri,rust-src`.
+sanitize:
+	cd rust && cargo +nightly miri test par::pool::
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test \
+		-Zbuild-std --target x86_64-unknown-linux-gnu \
+		-- par::pool:: coordinator::batcher::
 
 clean:
 	cd rust && cargo clean

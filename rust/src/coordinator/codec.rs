@@ -17,6 +17,7 @@ impl Writer {
 
     /// Empty writer with `cap` bytes pre-allocated.
     pub fn with_capacity(cap: usize) -> Self {
+        // contract-allow(C5): serializer capacity chosen by the writing caller, not wire-decoded
         Self { buf: Vec::with_capacity(cap) }
     }
 

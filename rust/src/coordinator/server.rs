@@ -7,7 +7,7 @@
 //! the update, and acks. Python never runs here — workers obtain
 //! gradients through the PJRT runtime artifacts.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
@@ -115,8 +115,11 @@ impl Server {
             bail!("params have {} elements, config says {}", params.len(), cfg.dim);
         }
         let dim = params.len();
-        // ---- Admission: accept exactly cfg.workers clients. ----
-        let mut writers: HashMap<u64, TcpStream> = HashMap::new();
+        // ---- Admission: accept exactly cfg.workers clients. A BTreeMap
+        // keyed by worker id, so every broadcast below iterates in worker
+        // order — broadcast and log order are deterministic across runs
+        // (contract rule C2), unlike hash order which varies per process.
+        let mut writers: BTreeMap<u64, TcpStream> = BTreeMap::new();
         let (sub_tx, sub_rx) = mpsc::channel::<(u64, u64, f32, crate::sq::CompressedVec)>();
         let mut reader_joins = Vec::new();
         for _ in 0..cfg.workers {
@@ -176,7 +179,7 @@ impl Server {
     fn run_rounds(
         cfg: &ServerConfig,
         dim: usize,
-        writers: &mut HashMap<u64, TcpStream>,
+        writers: &mut BTreeMap<u64, TcpStream>,
         sub_rx: &mpsc::Receiver<(u64, u64, f32, crate::sq::CompressedVec)>,
         params: &mut Vec<f32>,
         log: &mut TrainLog,
@@ -188,7 +191,7 @@ impl Server {
             }
             // Collect one submission per worker (straggler timeout).
             let mut subs: Vec<(f32, crate::sq::CompressedVec)> = Vec::new();
-            let mut seen: HashMap<u64, ()> = HashMap::new();
+            let mut seen: BTreeSet<u64> = BTreeSet::new();
             let deadline = Instant::now() + cfg.round_timeout;
             while seen.len() < cfg.workers {
                 let now = Instant::now();
@@ -201,7 +204,19 @@ impl Server {
                             // Stale submission from a slow worker; ignore.
                             continue;
                         }
-                        if seen.insert(wid, ()).is_none() {
+                        if grad.d as usize != dim {
+                            // A malformed submission must not poison the
+                            // round (or drive a d-sized aggregation
+                            // buffer); drop it and let the timeout or the
+                            // other workers carry the round.
+                            eprintln!(
+                                "worker {wid}: gradient dimension {} != model dimension \
+                                 {dim}; dropping submission",
+                                grad.d
+                            );
+                            continue;
+                        }
+                        if seen.insert(wid) {
                             subs.push((loss, grad));
                         }
                     }

@@ -58,7 +58,7 @@
 //!   data parallelism. A batch of 1K-element tenant vectors thus costs
 //!   one pool handoff rather than 1K per-pass spawn waves.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -160,7 +160,10 @@ impl Default for StreamServiceConfig {
 type SharedSolver = Arc<Mutex<StreamSolver>>;
 #[derive(Default)]
 struct StreamMap {
-    map: HashMap<u64, SharedSolver>,
+    // BTreeMap, not HashMap: lookups are keyed-only today, but contract
+    // rule C2 keeps hash order out of the coordinator wholesale so no
+    // future iteration can pick up a per-process order.
+    map: BTreeMap<u64, SharedSolver>,
     order: std::collections::VecDeque<u64>,
 }
 

@@ -58,7 +58,7 @@
 //!   exactly as in-process. `quiver shard-node` runs a standalone node;
 //!   `quiver solve --shard-nodes a,b,c` drives them.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -495,7 +495,9 @@ fn handle_shard_conn(stream: TcpStream) {
         Err(_) => return,
     };
     let mut rd = BufReader::new(stream);
-    let mut sessions: HashMap<u64, (u64, Vec<f64>)> = HashMap::new();
+    // Keyed-only today, but BTreeMap per contract rule C2: nothing in the
+    // coordinator gets to depend on a per-process hash order.
+    let mut sessions: BTreeMap<u64, (u64, Vec<f64>)> = BTreeMap::new();
     loop {
         match recv(&mut rd) {
             Ok(Some(Msg::ShardInit { task_id, first_chunk, data })) => {

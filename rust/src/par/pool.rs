@@ -211,14 +211,36 @@ pub(crate) fn run_wave(jobs: Vec<Job<'_>>) {
                 let _g = lock_state();
                 POOL.done_cv.notify_all();
             });
-            // SAFETY: the wrapped job borrows caller data with lifetime
-            // 'a. We erase 'a to 'static only to store it in the global
-            // queue; the loop below does not let run_wave return (or
-            // unwind) before `wave.remaining == 0`, i.e. before every
-            // wrapped job has finished and dropped its borrows. Queued
-            // tasks are never dropped unexecuted: workers drain the queue
-            // even on shutdown, and the submitter itself pops jobs while
-            // waiting.
+            // SAFETY: lifetime erasure of a scoped job. `wrapped` is a
+            // `Job<'a>` borrowing the caller's stack data; the transmute
+            // only widens `'a` to `'static` (`Job` and `Task` are the
+            // same boxed-closure type otherwise) so it can sit in the
+            // global queue. That is sound iff no erased closure can run
+            // or be dropped after `'a` ends, i.e. after run_wave returns
+            // or unwinds. The invariants that guarantee it:
+            //
+            // 1. run_wave cannot return before the wave drains: the
+            //    help-and-wait loop below exits only on observing
+            //    `wave.remaining == 0` (Acquire, pairing with each job's
+            //    Release decrement — so every job's side effects
+            //    happen-before the exit, not just the count).
+            // 2. run_wave cannot unwind before the wave drains: the
+            //    wrapped closure routes job panics into `wave.panic` via
+            //    `catch_unwind` and still decrements `remaining`; the
+            //    submitter re-raises a captured panic only after the
+            //    `remaining == 0` exit. Nothing else in the loop panics
+            //    (poisoned mutexes are unwrapped via `into_inner`).
+            // 3. No erased task outlives the wave in the queue: tasks are
+            //    executed-or-drained, never silently dropped — workers
+            //    drain the queue even on shutdown, and the submitter
+            //    itself pops queued jobs while it waits, so every queued
+            //    closure is consumed before its wave completes.
+            //
+            // Any refactor that lets run_wave exit early, drops queued
+            // tasks, or moves the decrement before the job body runs
+            // breaks this argument. See DESIGN.md §Enforcement (rule C4);
+            // the nightly Miri/TSan CI lane exercises exactly this
+            // protocol.
             unsafe { std::mem::transmute::<Job<'_>, Task>(wrapped) }
         })
         .collect();

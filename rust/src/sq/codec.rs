@@ -3,10 +3,14 @@
 //! Layout (little-endian):
 //!
 //! ```text
-//! [ d: u64 ][ s: u16 ][ bits: u8 ][ pad: u8 ]
+//! [ d: u64 ][ s: u32 ][ bits: u8 ][ pad: u8 ]
 //! [ q values: s × f64 ]
 //! [ packed indices: ceil(d·bits / 8) bytes ]
 //! ```
+//!
+//! `s` is a u32: level counts above `u16::MAX` are legitimate on the exact
+//! route (`s` approaching `d` at the 64K crossover), and a narrower field
+//! would silently truncate them on serialization.
 //!
 //! `bits = ceil(log2 s)` — with `s = 16` a coordinate costs 4 bits instead
 //! of 64, an ~16× reduction before any entropy coding (which the paper
@@ -37,10 +41,22 @@ pub struct CompressedVec {
     pub payload: Vec<u8>,
 }
 
+/// Header bytes preceding the q values: `d`, `s`, `bits`, pad.
+const HEADER: usize = 8 + 4 + 1 + 1;
+
+/// Largest dimension [`CompressedVec::from_bytes`] accepts. Wire input
+/// beyond this is rejected before any length arithmetic or allocation —
+/// it is far above every supported workload (the service caps requests at
+/// `MAX_FRAME` f32s ≈ 2^28 coordinates, the paper's largest inputs are
+/// ~2^27), and bounding `d` keeps `d · bits` comfortably inside `usize`
+/// even on 32-bit hosts' u64 arithmetic and stops a 12-byte header with a
+/// huge `d` and `bits = 0` from driving multi-terabyte decode allocations.
+pub const MAX_D: u64 = 1 << 31;
+
 impl CompressedVec {
     /// Total serialized size in bytes.
     pub fn wire_size(&self) -> usize {
-        12 + self.q.len() * 8 + self.payload.len()
+        HEADER + self.q.len() * 8 + self.payload.len()
     }
 
     /// Compression ratio vs. f32 transport of the raw vector.
@@ -49,10 +65,14 @@ impl CompressedVec {
     }
 
     /// Serialize to bytes (the coordinator protocol embeds this directly).
+    ///
+    /// Panics if the level count exceeds `u32::MAX` — the wire field could
+    /// not represent it and a wrapped count would corrupt the stream.
     pub fn to_bytes(&self) -> Vec<u8> {
+        let s = u32::try_from(self.q.len()).expect("level count exceeds the u32 wire field");
         let mut out = Vec::with_capacity(self.wire_size());
         out.extend_from_slice(&self.d.to_le_bytes());
-        out.extend_from_slice(&(self.q.len() as u16).to_le_bytes());
+        out.extend_from_slice(&s.to_le_bytes());
         out.push(self.bits);
         out.push(0); // pad
         for q in &self.q {
@@ -63,25 +83,34 @@ impl CompressedVec {
     }
 
     /// Parse from bytes; `None` on malformed input (never panics).
+    ///
+    /// Every length is bounds-checked before it reaches an allocation or
+    /// an index: `d` is capped at [`MAX_D`], the payload length comes from
+    /// [`packed_len_checked`] (overflow-checked multiply), and both the q
+    /// block and the payload must actually be present in `b` — so the
+    /// memory this touches is proportional to the input, never to a
+    /// wire-supplied number.
     pub fn from_bytes(b: &[u8]) -> Option<Self> {
-        if b.len() < 12 {
+        if b.len() < HEADER {
             return None;
         }
         let d = u64::from_le_bytes(b[0..8].try_into().ok()?);
-        let s = u16::from_le_bytes(b[8..10].try_into().ok()?) as usize;
-        let bits = b[10];
-        if bits > 32 {
+        let s = usize::try_from(u32::from_le_bytes(b[8..12].try_into().ok()?)).ok()?;
+        let bits = b[12];
+        if bits > 32 || d > MAX_D {
             return None;
         }
-        let qs_end = 12 + s * 8;
+        let qs_end = HEADER.checked_add(s.checked_mul(8)?)?;
         if b.len() < qs_end {
             return None;
         }
         let q: Vec<f64> = (0..s)
-            .map(|i| f64::from_le_bytes(b[12 + i * 8..12 + (i + 1) * 8].try_into().unwrap()))
+            .map(|i| {
+                f64::from_le_bytes(b[HEADER + i * 8..HEADER + (i + 1) * 8].try_into().unwrap())
+            })
             .collect();
-        let need = packed_len(d as usize, bits);
-        if b.len() < qs_end + need {
+        let need = packed_len_checked(d, bits)?;
+        if b.len() < qs_end.checked_add(need)? {
             return None;
         }
         let payload = b[qs_end..qs_end + need].to_vec();
@@ -102,7 +131,16 @@ pub fn bits_for(s: usize) -> u8 {
 /// Packed payload length in bytes.
 #[inline]
 pub fn packed_len(d: usize, bits: u8) -> usize {
-    (d * bits as usize).div_ceil(8)
+    (d * usize::from(bits)).div_ceil(8)
+}
+
+/// [`packed_len`] with overflow-checked arithmetic, for wire-supplied
+/// dimensions: `None` when `d` does not fit `usize` or `d · bits` would
+/// wrap (a wrapped length is how a tiny malicious blob smuggles a huge
+/// `d` past the payload-presence check).
+#[inline]
+pub fn packed_len_checked(d: u64, bits: u8) -> Option<usize> {
+    usize::try_from(d).ok()?.checked_mul(usize::from(bits)).map(|n| n.div_ceil(8))
 }
 
 /// Bit-pack `idx` (each `< 2^bits`) with `bits = ceil(log2 |qs|)`.
@@ -115,7 +153,7 @@ pub fn encode(idx: &[u32], qs: &[f64]) -> CompressedVec {
     let bits = bits_for(qs.len());
     let mut payload = vec![0u8; packed_len(idx.len(), bits)];
     if bits > 0 {
-        let chunk_bytes = par::CHUNK * bits as usize / 8; // CHUNK % 8 == 0
+        let chunk_bytes = par::CHUNK * usize::from(bits) / 8; // CHUNK % 8 == 0
         par::zip_chunks_mut(&mut payload, chunk_bytes, idx, par::CHUNK, |_, window, chunk| {
             let mut bitpos = 0usize; // chunk-local; windows are byte-aligned
             for &v in chunk {
@@ -130,7 +168,7 @@ pub fn encode(idx: &[u32], qs: &[f64]) -> CompressedVec {
                     w >>= 8;
                     b += 1;
                 }
-                bitpos += bits as usize;
+                bitpos += usize::from(bits);
             }
         });
     }
@@ -195,8 +233,8 @@ pub fn assemble(parts: &[CompressedVec]) -> CompressedVec {
 /// window (the 8-byte read at a boundary), which is safe — the payload is
 /// shared read-only.
 pub fn decode(c: &CompressedVec) -> (Vec<u32>, Vec<f64>) {
-    let d = c.d as usize;
-    let bits = c.bits as usize;
+    let d = usize::try_from(c.d).expect("dimension exceeds usize");
+    let bits = usize::from(c.bits);
     if bits == 0 {
         return (vec![0; d], c.q.clone());
     }
@@ -272,6 +310,51 @@ mod tests {
         let mut bytes = encode(&idx, &qs).to_bytes();
         bytes.truncate(bytes.len() - 1);
         assert!(CompressedVec::from_bytes(&bytes).is_none());
+    }
+
+    /// A 14-byte header carrying a huge `d` must be rejected outright: a
+    /// wrapping `d · bits` used to shrink the required payload length to
+    /// ~zero in release builds, so the blob parsed "successfully" and the
+    /// decode allocation aborted the process.
+    #[test]
+    fn from_bytes_rejects_oversized_dimension() {
+        let header = |d: u64, s: u32, bits: u8| {
+            let mut b = Vec::new();
+            b.extend_from_slice(&d.to_le_bytes());
+            b.extend_from_slice(&s.to_le_bytes());
+            b.push(bits);
+            b.push(0);
+            b.extend_from_slice(&[0u8; 64]); // generous "payload"
+            b
+        };
+        // d·bits ≡ 0 (mod 2^64): the wrap that defeated the length check.
+        assert!(CompressedVec::from_bytes(&header(1 << 61, 0, 8)).is_none());
+        assert!(CompressedVec::from_bytes(&header(u64::MAX, 0, 32)).is_none());
+        // bits = 0 needs no payload at all — the MAX_D cap is the only
+        // thing standing between a 14-byte blob and a d-sized allocation.
+        assert!(CompressedVec::from_bytes(&header(MAX_D + 1, 1, 0)).is_none());
+        // At the cap with bits = 0 the same shape parses fine.
+        let ok = header(MAX_D, 1, 0);
+        let c = CompressedVec::from_bytes(&ok).expect("d = MAX_D, bits = 0 is legal");
+        assert_eq!(c.d, MAX_D);
+        assert!(c.payload.is_empty());
+    }
+
+    /// Level counts beyond `u16::MAX` must survive serialization: the old
+    /// u16 wire field silently wrapped `q.len()` (70_000 → 4_464), so the
+    /// parsed vector came back with the wrong level set.
+    #[test]
+    fn serialization_roundtrip_beyond_u16_levels() {
+        let s = 70_000usize;
+        let qs: Vec<f64> = (0..s).map(|i| i as f64 * 0.125).collect();
+        let idx: Vec<u32> = (0..100u32).map(|i| i * 699).collect();
+        let c = encode(&idx, &qs);
+        assert_eq!(c.q.len(), s);
+        let c2 = CompressedVec::from_bytes(&c.to_bytes()).expect("roundtrip");
+        assert_eq!(c, c2);
+        let (back, qs2) = decode(&c2);
+        assert_eq!(back, idx);
+        assert_eq!(qs2, qs);
     }
 
     #[test]

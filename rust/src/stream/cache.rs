@@ -14,7 +14,7 @@
 //! every weight), so a fingerprint collision degrades to a miss, never to
 //! wrong levels. Eviction is insertion-order FIFO at a fixed capacity.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::avq::histogram::GridHistogram;
 use crate::avq::binsearch::DpTrace;
@@ -66,7 +66,10 @@ struct Entry {
 /// DP trace for warm starts after a hit).
 pub struct LevelCache {
     cap: usize,
-    map: HashMap<u64, Entry>,
+    // BTreeMap per contract rule C2: the cache is keyed-only, but numeric
+    // modules carry no hash-ordered containers at all, so no later
+    // iteration (stats dumps, debugging) can observe a per-process order.
+    map: BTreeMap<u64, Entry>,
     order: VecDeque<u64>,
     stats: CacheStats,
 }
@@ -75,7 +78,7 @@ impl LevelCache {
     /// Cache holding at most `cap` entries (`cap = 0` disables caching —
     /// every lookup misses, inserts are dropped).
     pub fn new(cap: usize) -> Self {
-        Self { cap, map: HashMap::new(), order: VecDeque::new(), stats: CacheStats::default() }
+        Self { cap, map: BTreeMap::new(), order: VecDeque::new(), stats: CacheStats::default() }
     }
 
     /// Look up the solved levels of an identical `(histogram, s)` pair.

@@ -298,6 +298,7 @@ impl StreamSolver {
     /// guarantees).
     pub fn round(&mut self, round: u64, xs: &[f64], s: usize) -> Result<RoundOutcome, AvqError> {
         let qbase = self.hist.update(round, xs)?;
+        // contract-allow(C3): wall-clock telemetry only (solve_us); never feeds numeric state
         let t0 = Instant::now();
         let dr = self.hist.drift();
         let (drift_l1, drift_total) =

@@ -1,0 +1,899 @@
+//! The determinism/safety contract as machine-checkable rules.
+//!
+//! `quiver`'s bitwise-determinism contract (DESIGN.md rules 1–6) is
+//! enforced dynamically by the invariance test suites; this crate is the
+//! static half: a dependency-free lexer plus a line-based syntax walk over
+//! `rust/src/**` that rejects contract-violating *code shapes* at CI time.
+//! Five rules, stable IDs:
+//!
+//! - **C1** — RNG roots (`Xoshiro256pp::new` / `seed_from_u64` /
+//!   `from_seed`) may appear only in allow-listed derivation sites
+//!   ([`C1_ALLOWED`]); everywhere else must derive via
+//!   `Xoshiro256pp::stream(base, idx)` so seeding stays a pure function of
+//!   config seeds (DESIGN.md rule 2).
+//! - **C2** — no `HashMap`/`HashSet` in the numeric modules or in
+//!   `coordinator`: hash iteration order is nondeterministic per process,
+//!   so it can leak into results and wire output. Use `BTreeMap` /
+//!   `BTreeSet` / `Vec` (DESIGN.md rules 3–5).
+//! - **C3** — no `Instant::now` / `SystemTime` / ad-hoc thread spawns in
+//!   the numeric modules; wall-clock time and threads belong to
+//!   `coordinator` and the `par` executor core ([`C3_THREAD_EXEMPT`]).
+//! - **C4** — every `unsafe` must carry a `// SAFETY:` comment and a
+//!   matching entry in the checked-in allowlist
+//!   (`tools/contract-lint/unsafe_allowlist.txt`); stale allowlist entries
+//!   are errors too, so the audit surface never drifts.
+//! - **C5** — in the wire-decoding files ([`C5_FILES`]) every `as usize`
+//!   cast and `with_capacity` call must sit next to a visible bounds check
+//!   ([`C5_GUARDS`], within [`C5_BEFORE`]/[`C5_AFTER`] lines): a
+//!   wire-supplied length used raw is an allocation-bomb / wraparound bug.
+//!   Capacities that cannot be wire-controlled are exempt: function
+//!   *definitions* (`fn with_capacity(…)`), integer-literal capacities,
+//!   and capacities derived from `.len()` of data already in memory.
+//!
+//! Any rule can be waived per site with `// contract-allow(Cn): reason`
+//! (same line or the line above). Waivers are not free: the linter records
+//! every one into a committed inventory (`tools/contract-lint/waivers.txt`)
+//! and `--check` fails when tree and inventory disagree — so adding a
+//! waiver is a reviewable diff, and a waiver that stops matching anything
+//! is an error, not silence.
+//!
+//! The lexer strips comments, strings and char literals (so tokens inside
+//! them never match) and tracks `#[cfg(test)]` / `#[test]` regions by brace
+//! depth: C1/C2/C3/C5 skip test code (tests seed RNGs and build fixtures
+//! freely), C4 applies everywhere. This is a *lexical* checker by design:
+//! it cannot resolve aliases (`use Xoshiro256pp as R`) or dataflow, and
+//! trades those false negatives for zero dependencies and sub-second runs.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Rule identifiers, stable across releases (waiver comments, the
+/// inventory file and CI logs all refer to these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    /// RNG roots only in allow-listed derivation sites.
+    C1,
+    /// No hash-ordered containers in numeric modules or `coordinator`.
+    C2,
+    /// No wall-clock / ad-hoc threads in numeric modules.
+    C3,
+    /// `unsafe` requires a `// SAFETY:` comment + allowlist entry.
+    C4,
+    /// Wire-length casts/allocations require a nearby bounds check.
+    C5,
+}
+
+impl Rule {
+    /// All rules, in ID order.
+    pub const ALL: [Rule; 5] = [Rule::C1, Rule::C2, Rule::C3, Rule::C4, Rule::C5];
+
+    /// The stable ID string (`"C1"` … `"C5"`).
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::C1 => "C1",
+            Rule::C2 => "C2",
+            Rule::C3 => "C3",
+            Rule::C4 => "C4",
+            Rule::C5 => "C5",
+        }
+    }
+
+    /// Parse an ID string (as written in waiver comments / the inventory).
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s.trim() {
+            "C1" => Some(Rule::C1),
+            "C2" => Some(Rule::C2),
+            "C3" => Some(Rule::C3),
+            "C4" => Some(Rule::C4),
+            "C5" => Some(Rule::C5),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One violation (or audit error) at a source location. `line` is 1-based;
+/// 0 means "whole file / inventory" (stale-entry errors).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// The rule that fired.
+    pub rule: Rule,
+    /// Path relative to the scan root, `/`-separated.
+    pub path: String,
+    /// 1-based line, 0 for file-level errors.
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+}
+
+/// A used `// contract-allow` escape hatch, as recorded in the inventory.
+/// Identity is `(rule, path, reason)` — line numbers are deliberately not
+/// part of it, so unrelated edits above a waiver don't churn the file.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Waiver {
+    /// The rule being waived.
+    pub rule: Rule,
+    /// Path relative to the scan root, `/`-separated.
+    pub path: String,
+    /// The justification text after `contract-allow(Cn):`.
+    pub reason: String,
+}
+
+/// Result of a full-tree lint.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Violations plus audit errors (unused waivers, stale allowlist
+    /// entries), in path/line order.
+    pub findings: Vec<Finding>,
+    /// Every waiver that suppressed at least one finding, sorted, deduped.
+    pub waivers: Vec<Waiver>,
+}
+
+/// Linter configuration: where to scan and the C4 unsafe allowlist
+/// (`(relative path, line fragment)` pairs).
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Scan root (e.g. `rust/src`); every `.rs` file under it is linted.
+    pub root: PathBuf,
+    /// C4 allowlist: an `unsafe` line is accepted when some entry's path
+    /// equals the file and its fragment appears in the line's code.
+    pub allowlist: Vec<(String, String)>,
+}
+
+// ---------------------------------------------------------------------------
+// Rule tables. These are the contract's ground truth: reviewed in this
+// file, referenced from DESIGN.md §Enforcement.
+// ---------------------------------------------------------------------------
+
+/// Modules whose outputs are numeric results (bitwise-compared by the
+/// invariance suites). Rules C2/C3 cover these.
+pub const NUMERIC_MODULES: &[&str] = &["avq", "baselines", "sq", "stream", "dist", "par"];
+
+/// C1 token patterns: calls that *root* a generator instead of deriving it.
+pub const C1_ROOTS: &[&str] =
+    &["Xoshiro256pp::new(", "Xoshiro256pp::seed_from_u64(", "Xoshiro256pp::from_seed("];
+
+/// C1 allow-listed derivation sites (path-prefix match, relative to the
+/// scan root). Each is a place where rooting a generator from a config
+/// seed is the *design*, not a leak:
+///
+/// - `util/rng.rs` — defines the generator and the `stream`/`fork`
+///   derivation itself.
+/// - `dist.rs` — dataset sampling roots; the seed is an explicit argument.
+/// - `main.rs` — CLI entry points root from the parsed config.
+/// - `figures/` — figure harnesses use fixed, documented seeds.
+/// - `testutil/` — test-data generation helpers.
+/// - `avq/histogram.rs` — `solve_hist` roots from `HistConfig.seed`, then
+///   derives per-chunk streams (DESIGN.md rule 2).
+/// - `stream/mod.rs` — `stream_base`: one fixed draw mapping a stream seed
+///   to its round base.
+/// - `coordinator/tasks.rs` — synthetic-task teacher/stream roots.
+/// - `coordinator/worker.rs` — per-worker root from `WorkerConfig.seed`.
+/// - `coordinator/shard.rs` — shard-local histogram roots from the config
+///   seed (bit-equal to the unsharded root by construction).
+/// - `coordinator/service.rs` — per-solver-thread and per-stream roots
+///   from the service seed.
+pub const C1_ALLOWED: &[&str] = &[
+    "util/rng.rs",
+    "dist.rs",
+    "main.rs",
+    "figures/",
+    "testutil/",
+    "avq/histogram.rs",
+    "stream/mod.rs",
+    "coordinator/tasks.rs",
+    "coordinator/worker.rs",
+    "coordinator/shard.rs",
+    "coordinator/service.rs",
+];
+
+/// C3 wall-clock patterns.
+pub const C3_TIME: &[&str] = &["Instant::now(", "SystemTime"];
+
+/// C3 thread patterns.
+pub const C3_THREADS: &[&str] = &["thread::spawn", "thread::scope", "thread::Builder"];
+
+/// Files exempt from C3's *thread* patterns: the executor substrate itself
+/// (`par::pool` owns the worker threads; `par/mod.rs` hosts the scoped
+/// reference backend). Wall-clock patterns still apply to them.
+pub const C3_THREAD_EXEMPT: &[&str] = &["par/mod.rs", "par/pool.rs"];
+
+/// Files C5 covers: everything that decodes attacker-controlled bytes.
+pub const C5_FILES: &[&str] =
+    &["coordinator/protocol.rs", "coordinator/codec.rs", "coordinator/shard.rs", "sq/codec.rs"];
+
+/// Tokens that count as a visible bounds check for C5. Substring match
+/// against nearby *code* (comments never count).
+pub const C5_GUARDS: &[&str] = &[
+    "checked_mul",
+    "checked_add",
+    "checked_sub",
+    "try_from(",
+    "ensure!",
+    "assert!",
+    "assert_eq!",
+    "bail!",
+    ".remaining()",
+    ".min(",
+    "MAX_",
+];
+
+/// C5 guard window: lines searched above a flagged cast/allocation.
+pub const C5_BEFORE: usize = 6;
+/// C5 guard window: lines searched below a flagged cast/allocation.
+pub const C5_AFTER: usize = 3;
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+/// One lexed source line: `code` has comments and string/char-literal
+/// contents blanked to spaces (same length as the input), `comment` holds
+/// the text of any `//` comment on the line, and `in_test` marks lines
+/// inside `#[cfg(test)]` / `#[test]` regions.
+#[derive(Debug, Clone, Default)]
+pub struct SrcLine {
+    /// Code text with non-code bytes blanked.
+    pub code: String,
+    /// Line-comment text (empty when the line has none).
+    pub comment: String,
+    /// True inside test modules/functions (tracked by brace depth).
+    pub in_test: bool,
+}
+
+#[derive(PartialEq)]
+enum LexState {
+    Normal,
+    LineComment,
+    Block(u32),
+    Cooked,
+    Raw(usize),
+}
+
+fn starts_with_at(cs: &[char], i: usize, pat: &str) -> bool {
+    pat.chars().enumerate().all(|(k, pc)| cs.get(i + k) == Some(&pc))
+}
+
+/// Lex a file into [`SrcLine`]s (1 input line = 1 output line).
+pub fn lex(source: &str) -> Vec<SrcLine> {
+    let cs: Vec<char> = source.chars().collect();
+    let n = cs.len();
+    let mut lines: Vec<SrcLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = LexState::Normal;
+    let mut depth: usize = 0;
+    let mut test_stack: Vec<usize> = Vec::new();
+    let mut pending_test = false;
+    // `was_test`: whether the current line *started* inside a test region
+    // (or right after a test attribute) — so a region closing mid-line
+    // still flags the line, and `#[test] fn f() {` flags from the brace on.
+    let mut was_test = false;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            let in_test = was_test || !test_stack.is_empty();
+            lines.push(SrcLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test,
+            });
+            was_test = !test_stack.is_empty() || pending_test;
+            if st == LexState::LineComment {
+                st = LexState::Normal;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            LexState::Normal => {
+                match c {
+                    '/' if cs.get(i + 1) == Some(&'/') => {
+                        comment.push_str(&collect_to_eol(&cs, i));
+                        code.push(' ');
+                        code.push(' ');
+                        st = LexState::LineComment;
+                        i += 2;
+                    }
+                    '/' if cs.get(i + 1) == Some(&'*') => {
+                        code.push(' ');
+                        code.push(' ');
+                        st = LexState::Block(1);
+                        i += 2;
+                    }
+                    '"' => {
+                        code.push('"');
+                        st = LexState::Cooked;
+                        i += 1;
+                    }
+                    'r' | 'b' if !prev_is_ident(&cs, i) => {
+                        let (consumed, hashes, cooked) = string_prefix(&cs, i);
+                        if consumed > 0 {
+                            for k in 0..consumed {
+                                code.push(cs[i + k]);
+                            }
+                            st = if cooked { LexState::Cooked } else { LexState::Raw(hashes) };
+                            i += consumed;
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                    '\'' => {
+                        // Char literal vs lifetime: a backslash or a
+                        // closing quote two chars on means literal.
+                        if cs.get(i + 1) == Some(&'\\') {
+                            code.push('\'');
+                            code.push(' ');
+                            i += 2;
+                            while i < n && cs[i] != '\'' && cs[i] != '\n' {
+                                code.push(' ');
+                                i += 1;
+                            }
+                            if i < n && cs[i] == '\'' {
+                                code.push('\'');
+                                i += 1;
+                            }
+                        } else if cs.get(i + 2) == Some(&'\'') {
+                            code.push('\'');
+                            code.push(' ');
+                            code.push('\'');
+                            i += 3;
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                    '#' => {
+                        if starts_with_at(&cs, i, "#[cfg(test)]")
+                            || starts_with_at(&cs, i, "#[test]")
+                        {
+                            pending_test = true;
+                        }
+                        code.push('#');
+                        i += 1;
+                    }
+                    '{' => {
+                        depth += 1;
+                        if pending_test {
+                            test_stack.push(depth);
+                            pending_test = false;
+                        }
+                        code.push('{');
+                        i += 1;
+                    }
+                    '}' => {
+                        if test_stack.last() == Some(&depth) {
+                            test_stack.pop();
+                        }
+                        depth = depth.saturating_sub(1);
+                        code.push('}');
+                        i += 1;
+                    }
+                    _ => {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            LexState::LineComment => {
+                // Comment text was captured wholesale on entry.
+                code.push(' ');
+                i += 1;
+            }
+            LexState::Block(d) => {
+                if c == '*' && cs.get(i + 1) == Some(&'/') {
+                    code.push(' ');
+                    code.push(' ');
+                    st = if d == 1 { LexState::Normal } else { LexState::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    code.push(' ');
+                    code.push(' ');
+                    st = LexState::Block(d + 1);
+                    i += 2;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::Cooked => {
+                if c == '\\' {
+                    if cs.get(i + 1) == Some(&'\n') {
+                        code.push(' ');
+                        i += 1; // newline handled by the main loop
+                    } else {
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    st = LexState::Normal;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::Raw(h) => {
+                if c == '"' && (0..h).all(|k| cs.get(i + 1 + k) == Some(&'#')) {
+                    code.push('"');
+                    for _ in 0..h {
+                        code.push('#');
+                    }
+                    st = LexState::Normal;
+                    i += 1 + h;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        let in_test = was_test || !test_stack.is_empty();
+        lines.push(SrcLine { code, comment, in_test });
+    }
+    lines
+}
+
+fn collect_to_eol(cs: &[char], i: usize) -> String {
+    cs[i..].iter().take_while(|&&c| c != '\n').collect()
+}
+
+fn prev_is_ident(cs: &[char], i: usize) -> bool {
+    i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_')
+}
+
+/// Detect a string-literal prefix at `i` (`b"`, `r"`, `r#"`, `br#"` …).
+/// Returns `(chars consumed through the opening quote, hash count,
+/// is_cooked)`; consumed 0 means "not a string prefix".
+fn string_prefix(cs: &[char], i: usize) -> (usize, usize, bool) {
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+        if cs.get(j) == Some(&'"') {
+            return (j + 1 - i, 0, true); // b"..." — cooked byte string
+        }
+    }
+    if cs.get(j) == Some(&'r') {
+        j += 1;
+        let mut hashes = 0usize;
+        while cs.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if cs.get(j) == Some(&'"') {
+            return (j + 1 - i, hashes, false); // r"…", r#"…"#, br#"…"#
+        }
+    }
+    (0, 0, false)
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// Whole-word substring search (no identifier chars adjacent to the hit).
+fn word_hit(code: &str, pat: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(pat) {
+        let p = start + pos;
+        let before_ok =
+            p == 0 || !(bytes[p - 1].is_ascii_alphanumeric() || bytes[p - 1] == b'_');
+        let end = p + pat.len();
+        let after_ok =
+            end >= bytes.len() || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+/// The module a relative path belongs to: its first directory, or the file
+/// stem for root-level files (`dist.rs` → `dist`).
+fn module_of(rel: &str) -> &str {
+    match rel.find('/') {
+        Some(k) => &rel[..k],
+        None => rel.strip_suffix(".rs").unwrap_or(rel),
+    }
+}
+
+fn path_allowed(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel == *p || rel.starts_with(p))
+}
+
+/// The argument of a call whose `(` sits at `open` (matching-paren scan);
+/// `None` when the call spans lines (treated as risky).
+fn capacity_arg(code: &str, open: usize) -> Option<&str> {
+    let bytes = code.as_bytes();
+    let mut depth = 0i32;
+    for k in open..bytes.len() {
+        match bytes[k] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(code[open + 1..k].trim());
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// True when the line holds a `with_capacity` *call* whose capacity could
+/// be wire-controlled. Exempt: definitions (`fn with_capacity(…)`),
+/// integer-literal capacities, and capacities derived from `.len()` of
+/// data already in memory (an allocation bounded by an existing one).
+fn has_risky_capacity(code: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find("with_capacity(") {
+        let p = start + pos;
+        let is_definition = code[..p].contains("fn ");
+        let open = p + "with_capacity".len();
+        let benign = match capacity_arg(code, open) {
+            Some(arg) => {
+                !arg.is_empty()
+                    && (arg.chars().all(|c| c.is_ascii_digit() || c == '_')
+                        || arg.contains(".len()"))
+            }
+            None => false,
+        };
+        if !is_definition && !benign {
+            return true;
+        }
+        start = open;
+    }
+    false
+}
+
+/// True when some comment directly above `idx` (through a contiguous run
+/// of comment-only/blank lines, same-line included) contains `SAFETY:`.
+fn has_safety_comment(lines: &[SrcLine], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if !l.code.trim().is_empty() {
+            return false;
+        }
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+fn parse_waiver(comment: &str) -> Option<(Rule, String)> {
+    let k = comment.find("contract-allow(")?;
+    let rest = &comment[k + "contract-allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = Rule::parse(&rest[..close])?;
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':').unwrap_or(after).trim().to_string();
+    Some((rule, reason))
+}
+
+/// Lint one lexed file. `used_allow` collects indices of C4 allowlist
+/// entries that matched (for the stale-entry check across the whole tree).
+fn lint_file(
+    rel: &str,
+    lines: &[SrcLine],
+    cfg: &Config,
+    used_allow: &mut BTreeSet<usize>,
+) -> (Vec<Finding>, Vec<Waiver>) {
+    let module = module_of(rel);
+    let numeric = NUMERIC_MODULES.contains(&module);
+    let c2_covered = numeric || module == "coordinator";
+    let c5_covered = path_allowed(rel, C5_FILES);
+
+    // (line index, rule, message), deduped per (line, rule).
+    let mut raw: Vec<(usize, Rule, String)> = Vec::new();
+    let mut seen: BTreeSet<(usize, Rule)> = BTreeSet::new();
+    let mut push = |raw: &mut Vec<(usize, Rule, String)>,
+                    seen: &mut BTreeSet<(usize, Rule)>,
+                    idx: usize,
+                    rule: Rule,
+                    msg: String| {
+        if seen.insert((idx, rule)) {
+            raw.push((idx, rule, msg));
+        }
+    };
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+
+        // C4 applies everywhere, tests included.
+        if word_hit(code, "unsafe") {
+            if !has_safety_comment(lines, idx) {
+                push(
+                    &mut raw,
+                    &mut seen,
+                    idx,
+                    Rule::C4,
+                    "`unsafe` without a `// SAFETY:` comment".into(),
+                );
+            }
+            let mut listed = false;
+            for (k, (path, fragment)) in cfg.allowlist.iter().enumerate() {
+                if path == rel && code.contains(fragment.as_str()) {
+                    used_allow.insert(k);
+                    listed = true;
+                }
+            }
+            if !listed {
+                push(
+                    &mut raw,
+                    &mut seen,
+                    idx,
+                    Rule::C4,
+                    "`unsafe` not covered by tools/contract-lint/unsafe_allowlist.txt".into(),
+                );
+            }
+        }
+
+        if line.in_test {
+            continue;
+        }
+
+        // C1: RNG roots outside the derivation allowlist.
+        if !path_allowed(rel, C1_ALLOWED) {
+            for pat in C1_ROOTS {
+                if code.contains(pat) {
+                    push(
+                        &mut raw,
+                        &mut seen,
+                        idx,
+                        Rule::C1,
+                        format!(
+                            "RNG root `{}` outside allow-listed derivation sites; \
+                             derive via Xoshiro256pp::stream(base, idx)",
+                            pat.trim_end_matches('(')
+                        ),
+                    );
+                }
+            }
+        }
+
+        // C2: hash-ordered containers where order can leak out.
+        if c2_covered {
+            for pat in ["HashMap", "HashSet"] {
+                if word_hit(code, pat) {
+                    push(
+                        &mut raw,
+                        &mut seen,
+                        idx,
+                        Rule::C2,
+                        format!(
+                            "`{pat}` in `{module}`: iteration order is nondeterministic; \
+                             use BTreeMap/BTreeSet or a Vec"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // C3: wall-clock / ad-hoc threads in numeric modules.
+        if numeric {
+            for pat in C3_TIME {
+                if code.contains(pat) {
+                    push(
+                        &mut raw,
+                        &mut seen,
+                        idx,
+                        Rule::C3,
+                        format!("wall-clock `{}` in numeric module `{module}`", pat.trim_end_matches('(')),
+                    );
+                }
+            }
+            if !path_allowed(rel, C3_THREAD_EXEMPT) {
+                for pat in C3_THREADS {
+                    if code.contains(pat) {
+                        push(
+                            &mut raw,
+                            &mut seen,
+                            idx,
+                            Rule::C3,
+                            format!(
+                                "`{pat}` in numeric module `{module}`: threads belong to \
+                                 coordinator/par::pool"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // C5: raw wire-length casts/allocations without a nearby guard.
+        if c5_covered {
+            let cast = word_hit(code, "as usize");
+            let cap = has_risky_capacity(code);
+            if cast || cap {
+                let lo = idx.saturating_sub(C5_BEFORE);
+                let hi = (idx + C5_AFTER).min(lines.len().saturating_sub(1));
+                let guarded = (lo..=hi).any(|j| {
+                    !lines[j].in_test
+                        && C5_GUARDS.iter().any(|g| lines[j].code.contains(g))
+                });
+                if !guarded {
+                    let what = if cast { "`as usize` cast" } else { "`with_capacity` call" };
+                    push(
+                        &mut raw,
+                        &mut seen,
+                        idx,
+                        Rule::C5,
+                        format!(
+                            "{what} on a wire-decoded value with no bounds check within \
+                             {C5_BEFORE} lines above / {C5_AFTER} below"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // Waivers: `// contract-allow(Cn): reason` suppresses findings of rule
+    // Cn on its own line and the line below.
+    let mut waiver_sites: Vec<(usize, Rule, String, bool)> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if let Some((rule, reason)) = parse_waiver(&line.comment) {
+            waiver_sites.push((idx, rule, reason, false));
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut waivers = Vec::new();
+    for (idx, rule, msg) in raw {
+        let mut suppressed = false;
+        for (widx, wrule, reason, used) in waiver_sites.iter_mut() {
+            if *wrule == rule && (*widx == idx || *widx + 1 == idx) {
+                *used = true;
+                suppressed = true;
+                waivers.push(Waiver { rule, path: rel.to_string(), reason: reason.clone() });
+            }
+        }
+        if !suppressed {
+            findings.push(Finding { rule, path: rel.to_string(), line: idx + 1, message: msg });
+        }
+    }
+    for (widx, wrule, _, used) in &waiver_sites {
+        if !used {
+            findings.push(Finding {
+                rule: *wrule,
+                path: rel.to_string(),
+                line: widx + 1,
+                message: format!(
+                    "unused `contract-allow({wrule})` waiver (suppresses nothing — remove it)"
+                ),
+            });
+        }
+    }
+    (findings, waivers)
+}
+
+// ---------------------------------------------------------------------------
+// Tree walk + entry point
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `cfg.root`.
+pub fn run(cfg: &Config) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(&cfg.root, &mut files)?;
+    files.sort();
+
+    let mut report = Report::default();
+    let mut used_allow: BTreeSet<usize> = BTreeSet::new();
+    let mut waiver_set: BTreeSet<Waiver> = BTreeSet::new();
+
+    for path in &files {
+        let rel = path
+            .strip_prefix(&cfg.root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = fs::read_to_string(path)?;
+        let lines = lex(&source);
+        let (findings, waivers) = lint_file(&rel, &lines, cfg, &mut used_allow);
+        report.findings.extend(findings);
+        waiver_set.extend(waivers);
+        report.files += 1;
+    }
+
+    for (k, (path, fragment)) in cfg.allowlist.iter().enumerate() {
+        if !used_allow.contains(&k) {
+            report.findings.push(Finding {
+                rule: Rule::C4,
+                path: path.clone(),
+                line: 0,
+                message: format!(
+                    "stale unsafe_allowlist entry (no matching `unsafe` line): `{fragment}`"
+                ),
+            });
+        }
+    }
+
+    report.waivers = waiver_set.into_iter().collect();
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// Allowlist / inventory file formats (tab-separated, `#` comments)
+// ---------------------------------------------------------------------------
+
+/// Parse `unsafe_allowlist.txt`: `path<TAB>line fragment` per entry.
+pub fn parse_allowlist(text: &str) -> Vec<(String, String)> {
+    text.lines()
+        .map(str::trim_end)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let (path, fragment) = l.split_once('\t')?;
+            Some((path.trim().to_string(), fragment.trim().to_string()))
+        })
+        .collect()
+}
+
+/// Parse `waivers.txt`: `rule<TAB>path<TAB>reason` per entry.
+pub fn parse_inventory(text: &str) -> Vec<Waiver> {
+    text.lines()
+        .map(str::trim_end)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let mut parts = l.splitn(3, '\t');
+            let rule = Rule::parse(parts.next()?)?;
+            let path = parts.next()?.trim().to_string();
+            let reason = parts.next()?.trim().to_string();
+            Some(Waiver { rule, path, reason })
+        })
+        .collect()
+}
+
+/// Render a waiver set in `waivers.txt` format (stable order).
+pub fn render_inventory(waivers: &[Waiver]) -> String {
+    let mut out = String::from(
+        "# contract-lint waiver inventory — generated by `contract-lint --write-waivers`.\n\
+         # One line per `// contract-allow(Cn): reason` site that suppresses a finding:\n\
+         # rule<TAB>path (relative to the scan root)<TAB>reason.\n\
+         # `--check` fails when this file and the tree disagree; review diffs here\n\
+         # like code.\n",
+    );
+    let mut sorted: Vec<&Waiver> = waivers.iter().collect();
+    sorted.sort();
+    for w in sorted {
+        out.push_str(&format!("{}\t{}\t{}\n", w.rule, w.path, w.reason));
+    }
+    out
+}

@@ -1,0 +1,151 @@
+//! CLI for the determinism/safety contract linter.
+//!
+//! ```text
+//! cargo run -p contract-lint -- --check rust/src          # gate (CI)
+//! cargo run -p contract-lint -- --write-waivers rust/src  # refresh inventory
+//! ```
+//!
+//! `--check` exits non-zero on any rule violation, on an unused waiver
+//! comment, on a stale unsafe-allowlist entry, or when the waivers found
+//! in the tree disagree with the committed inventory
+//! (`tools/contract-lint/waivers.txt`). `--write-waivers` regenerates the
+//! inventory from the tree so the diff can be reviewed and committed.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use contract_lint::{
+    parse_allowlist, parse_inventory, render_inventory, run, Config, Waiver,
+};
+
+fn manifest_file(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(name)
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: contract-lint (--check | --write-waivers) <root> \
+         [--waivers FILE] [--unsafe-allowlist FILE]"
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut mode: Option<&str> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut waivers_path = manifest_file("waivers.txt");
+    let mut allowlist_path = manifest_file("unsafe_allowlist.txt");
+
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--check" => mode = Some("check"),
+            "--write-waivers" => mode = Some("write"),
+            "--waivers" => match it.next() {
+                Some(p) => waivers_path = PathBuf::from(p),
+                None => return usage(),
+            },
+            "--unsafe-allowlist" => match it.next() {
+                Some(p) => allowlist_path = PathBuf::from(p),
+                None => return usage(),
+            },
+            other if !other.starts_with('-') && root.is_none() => {
+                root = Some(PathBuf::from(other));
+            }
+            _ => return usage(),
+        }
+    }
+    let (Some(mode), Some(root)) = (mode, root) else {
+        return usage();
+    };
+
+    let allowlist = match fs::read_to_string(&allowlist_path) {
+        Ok(text) => parse_allowlist(&text),
+        Err(e) => {
+            eprintln!("contract-lint: cannot read {}: {e}", allowlist_path.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let cfg = Config { root: root.clone(), allowlist };
+    let report = match run(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("contract-lint: scan of {} failed: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if mode == "write" {
+        let text = render_inventory(&report.waivers);
+        if let Err(e) = fs::write(&waivers_path, text) {
+            eprintln!("contract-lint: cannot write {}: {e}", waivers_path.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "contract-lint: wrote {} waiver(s) to {}",
+            report.waivers.len(),
+            waivers_path.display()
+        );
+        // Violations still fail the write mode, so a forgotten fix cannot
+        // hide behind an inventory refresh.
+        for f in &report.findings {
+            eprintln!("{}/{}:{}: [{}] {}", root.display(), f.path, f.line, f.rule, f.message);
+        }
+        return if report.findings.is_empty() { ExitCode::SUCCESS } else { ExitCode::FAILURE };
+    }
+
+    // --check: violations + inventory drift.
+    let mut errors = report.findings.len();
+    for f in &report.findings {
+        eprintln!("{}/{}:{}: [{}] {}", root.display(), f.path, f.line, f.rule, f.message);
+    }
+
+    let inventory: Vec<Waiver> = match fs::read_to_string(&waivers_path) {
+        Ok(text) => parse_inventory(&text),
+        Err(e) => {
+            eprintln!("contract-lint: cannot read {}: {e}", waivers_path.display());
+            return ExitCode::from(2);
+        }
+    };
+    for w in &report.waivers {
+        if !inventory.contains(w) {
+            errors += 1;
+            eprintln!(
+                "{}: [{}] waiver not recorded in {} — run `cargo run -p contract-lint -- \
+                 --write-waivers {}` and commit the diff: {}",
+                w.path,
+                w.rule,
+                waivers_path.display(),
+                root.display(),
+                w.reason
+            );
+        }
+    }
+    for w in &inventory {
+        if !report.waivers.contains(w) {
+            errors += 1;
+            eprintln!(
+                "{}: [{}] stale inventory entry in {} (no matching waiver in the tree): {}",
+                w.path,
+                w.rule,
+                waivers_path.display(),
+                w.reason
+            );
+        }
+    }
+
+    println!(
+        "contract-lint: {} file(s), {} finding(s), {} waiver(s)",
+        report.files,
+        errors,
+        report.waivers.len()
+    );
+    if errors == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

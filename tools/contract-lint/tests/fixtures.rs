@@ -1,0 +1,89 @@
+//! Fixture suite for the contract linter: one minimal bad-code snippet per
+//! rule ID, each asserted to trip exactly its rule and nothing else, plus
+//! the waiver, allowlist and test-exemption paths.
+
+use std::path::PathBuf;
+
+use contract_lint::{run, Config, Report, Rule, Waiver};
+
+fn fixture_root(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join(name)
+}
+
+fn lint(name: &str, allowlist: Vec<(String, String)>) -> Report {
+    run(&Config { root: fixture_root(name), allowlist })
+        .unwrap_or_else(|e| panic!("fixture {name} scan failed: {e}"))
+}
+
+#[test]
+fn each_rule_fires_on_its_fixture_and_nothing_else() {
+    let cases =
+        [("c1", Rule::C1), ("c2", Rule::C2), ("c3", Rule::C3), ("c4", Rule::C4), ("c5", Rule::C5)];
+    for (name, rule) in cases {
+        let rep = lint(name, Vec::new());
+        assert!(!rep.findings.is_empty(), "{name}: expected at least one finding");
+        for f in &rep.findings {
+            assert_eq!(
+                f.rule, rule,
+                "{name}: unexpected {} at {}:{} — {}",
+                f.rule, f.path, f.line, f.message
+            );
+        }
+        assert!(rep.waivers.is_empty(), "{name}: unexpected waiver recorded");
+    }
+}
+
+#[test]
+fn fixture_findings_point_at_the_bad_lines() {
+    // Spot-check locations so a lexer regression can't pass by firing the
+    // right rule on the wrong line.
+    let c3 = lint("c3", Vec::new());
+    assert_eq!(c3.findings.len(), 1);
+    assert_eq!((c3.findings[0].path.as_str(), c3.findings[0].line), ("sq/bad.rs", 5));
+
+    let c5 = lint("c5", Vec::new());
+    let lines: Vec<usize> = c5.findings.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![5, 6], "one finding per bad line, deduped per (line, rule)");
+}
+
+#[test]
+fn waiver_suppresses_the_finding_and_is_recorded() {
+    let rep = lint("waiver", Vec::new());
+    assert!(
+        rep.findings.is_empty(),
+        "waived site must produce no findings, got {:?}",
+        rep.findings
+    );
+    assert_eq!(
+        rep.waivers,
+        vec![Waiver {
+            rule: Rule::C3,
+            path: "stream/bad.rs".into(),
+            reason: "fixture telemetry only".into(),
+        }]
+    );
+}
+
+#[test]
+fn safety_comment_plus_allowlist_entry_passes_c4() {
+    let allow = vec![("par/ok.rs".to_string(), "unsafe { *p }".to_string())];
+    let rep = lint("c4ok", allow);
+    assert!(rep.findings.is_empty(), "accepted unsafe shape flagged: {:?}", rep.findings);
+}
+
+#[test]
+fn stale_allowlist_entry_is_an_error() {
+    let allow = vec![("par/ok.rs".to_string(), "no such fragment".to_string())];
+    let rep = lint("c4ok", allow);
+    // The unsafe site loses its allowlist cover AND the entry is stale.
+    let stale: Vec<_> = rep.findings.iter().filter(|f| f.line == 0).collect();
+    assert_eq!(stale.len(), 1, "expected one stale-entry error, got {:?}", rep.findings);
+    assert_eq!(stale[0].rule, Rule::C4);
+    assert!(rep.findings.iter().any(|f| f.line != 0 && f.rule == Rule::C4));
+}
+
+#[test]
+fn test_regions_are_exempt_from_c1_c2_c3() {
+    let rep = lint("testexempt", Vec::new());
+    assert!(rep.findings.is_empty(), "test-region code flagged: {:?}", rep.findings);
+}

@@ -1,0 +1,8 @@
+// Fixture: C1 — roots a generator outside the allow-listed derivation
+// sites (must derive via `Xoshiro256pp::stream(base, idx)` instead).
+use crate::util::rng::Xoshiro256pp;
+
+pub fn chunk_noise(seed: u64) -> u64 {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    rng.next_u64()
+}

@@ -1,0 +1,7 @@
+// Fixture: C2 — hash-ordered container in a numeric module; iteration
+// order differs per process and leaks into the sum.
+use std::collections::HashMap;
+
+pub fn sum_in_hash_order(m: &HashMap<u64, f64>) -> f64 {
+    m.values().sum()
+}

@@ -1,0 +1,7 @@
+// Fixture: C3 — wall-clock read inside a numeric module.
+use std::time::Instant;
+
+pub fn solve_micros() -> u128 {
+    let t0 = Instant::now();
+    t0.elapsed().as_micros()
+}

@@ -1,0 +1,5 @@
+// Fixture: C4 — `unsafe` with neither a safety comment nor an allowlist
+// entry (findings dedupe per line, so exactly one C4 finding fires here).
+pub fn read_raw(p: *const u64) -> u64 {
+    unsafe { *p }
+}

@@ -1,0 +1,5 @@
+// Fixture: the accepted C4 shape — SAFETY comment plus allowlist entry.
+pub fn read_raw(p: *const u64) -> u64 {
+    // SAFETY: callers pass a pointer to a live, aligned u64 (fixture).
+    unsafe { *p }
+}

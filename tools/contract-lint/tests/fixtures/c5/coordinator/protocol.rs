@@ -1,0 +1,8 @@
+// Fixture: C5 — wire-decoded length cast to usize and used for an
+// allocation with no bounds check anywhere nearby.
+pub fn read_vec(b: &[u8]) -> Vec<u8> {
+    let len = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    let mut out = Vec::with_capacity(len as usize);
+    out.extend_from_slice(&b[4..4 + len as usize]);
+    out
+}

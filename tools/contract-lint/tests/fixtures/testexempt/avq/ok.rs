@@ -1,0 +1,21 @@
+// Fixture: test regions are exempt from C1/C2/C3 — seeding, hash maps and
+// wall-clock reads are fine inside `#[cfg(test)]`.
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn seeded_fixture() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut m = HashMap::new();
+        m.insert(rng.next_u64(), Instant::now());
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,9 @@
+// Fixture: a waived C3 site — the waiver suppresses the finding and is
+// recorded for the inventory.
+use std::time::Instant;
+
+pub fn telemetry() -> u128 {
+    // contract-allow(C3): fixture telemetry only
+    let t0 = Instant::now();
+    t0.elapsed().as_micros()
+}
