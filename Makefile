@@ -3,7 +3,7 @@
 # manifest + golden dumps under rust/artifacts/ (requires jax; see
 # python/compile/aot.py).
 
-.PHONY: artifacts build test bench bench-smoke lint-contract sanitize clean
+.PHONY: artifacts build test bench bench-smoke chaos lint-contract sanitize clean
 
 artifacts:
 	cd python/compile && python3 aot.py --out ../../rust/artifacts
@@ -24,7 +24,14 @@ bench-smoke:
 	cd rust && QUIVER_MAX_POW=13 cargo bench --bench bench_solvers
 	cd rust && QUIVER_SMOKE=1 cargo bench --bench bench_pipeline
 
-# Gating determinism-contract lint (rules C1-C5; DESIGN.md "Enforcement").
+# Gating fault-injection chaos suite: every faultnet::FaultAction driven
+# against a live shard fleet through the deterministic fault proxy,
+# asserting bitwise-identical recovery or a clean typed error before the
+# deadline (DESIGN.md determinism rule 7).
+chaos:
+	cd rust && cargo test -q --test fault_injection
+
+# Gating determinism-contract lint (rules C1-C6; DESIGN.md "Enforcement").
 # Runs from the workspace root so `-p contract-lint` resolves; scans
 # rust/src and cross-checks the committed waiver inventory at
 # tools/contract-lint/waivers.txt. To record a new `// contract-allow`

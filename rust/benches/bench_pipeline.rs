@@ -306,6 +306,67 @@ fn main() {
             shard_records.push(BenchRecord::from_stats(&st, d, 16));
         }
         t.print();
+
+        // Remote fleet recovery on the same input: one dead node of
+        // three, driven over loopback TCP through the fault-tolerant
+        // driver. Determinism rule 7 is asserted inline (recovered bits
+        // == healthy in-process run), and the recovery counters — which
+        // are deterministic, the same fault replays identically — ride
+        // in the record name so the CI perf-smoke job can surface them.
+        {
+            use quiver::coordinator::fault::{FleetConfig, FleetState};
+            use quiver::coordinator::shard::ShardNode;
+            let fcoord =
+                ShardCoordinator::new(ShardConfig { m: 1024, ..Default::default() });
+            let mut rng = Xoshiro256pp::seed_from_u64(99);
+            let want = fcoord.compress(&xs, 16, &mut rng).expect("healthy compress");
+            let nodes: Vec<ShardNode> = (0..2)
+                .map(|_| ShardNode::start("127.0.0.1:0").expect("shard node"))
+                .collect();
+            // An address that refuses connections: bind, then drop.
+            let dead = {
+                let l = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+                l.local_addr().expect("addr").to_string()
+            };
+            let mut addrs = vec![dead];
+            addrs.extend(nodes.iter().map(|n| n.addr().to_string()));
+            let net = FleetConfig {
+                connect_timeout: Duration::from_millis(500),
+                retries: 0,
+                ..Default::default()
+            };
+            let st = benchfw::bench(
+                &format!("remote-ft 1-dead-of-3 d=2^{shard_pow}"),
+                1,
+                samples,
+                || {
+                    let state = FleetState::new(&net);
+                    let mut rng = Xoshiro256pp::seed_from_u64(99);
+                    fcoord
+                        .compress_remote_ft(&addrs, &xs, 16, &mut rng, &net, &state)
+                        .expect("fleet recovery")
+                },
+            );
+            let state = FleetState::new(&net);
+            let mut rng = Xoshiro256pp::seed_from_u64(99);
+            let got = fcoord
+                .compress_remote_ft(&addrs, &xs, 16, &mut rng, &net, &state)
+                .expect("fleet recovery");
+            assert_eq!(got.1, want.1, "recovered payload diverged from the healthy run");
+            let (f, r, b, l) = state.stats.snapshot();
+            println!(
+                "remote-ft recovery: {} over 2 survivors, median {}",
+                state.stats.summary(),
+                benchfw::fmt_duration(st.median()),
+            );
+            let mut rec = BenchRecord::from_stats(&st, d, 16);
+            rec.name = format!("{} fault={f} retry={r} breaker={b} fallback={l}", rec.name);
+            shard_records.push(rec);
+            for n in nodes {
+                n.shutdown();
+            }
+        }
+
         let json = write_bench_json(&repo_root.join("BENCH_shard.json"), &shard_records)
             .expect("write BENCH_shard.json");
         println!("wrote {} records to {}", shard_records.len(), json.display());

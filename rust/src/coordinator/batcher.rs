@@ -307,12 +307,13 @@ impl<T> Scheduler<T> {
             while g.heap.len() < self.max_batch && !g.closed {
                 match deadline {
                     Some(deadline) => {
-                        let now = Instant::now();
-                        if now >= deadline {
+                        // Saturating remaining-time arithmetic: never a
+                        // panicking `deadline - now` near the expiry edge.
+                        let remaining = deadline.saturating_duration_since(Instant::now());
+                        if remaining.is_zero() {
                             break;
                         }
-                        let (gg, timeout) =
-                            self.not_empty.wait_timeout(g, deadline - now).unwrap();
+                        let (gg, timeout) = self.not_empty.wait_timeout(g, remaining).unwrap();
                         g = gg;
                         if timeout.timed_out() {
                             break;

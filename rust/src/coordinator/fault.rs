@@ -1,0 +1,481 @@
+//! Fault taxonomy, deadlines, and deterministic retry policy for every
+//! wire path in the coordinator (DESIGN.md rule 7).
+//!
+//! The distributed layer treats failure as a first-class input: every
+//! socket carries a connect deadline and read/write timeouts
+//! ([`FleetConfig`]), every failure is classified into a typed
+//! [`FaultKind`] (never a stringly error), and every recovery action —
+//! bounded exponential [`backoff`], shard re-planning, the in-process
+//! fallback — is a *pure function of configuration*: no jitter, no
+//! wall-clock-dependent decisions beyond the timeouts themselves, and
+//! crucially **no draws from any caller's RNG**. Re-driving an idempotent
+//! phase therefore reproduces the fault-free bytes bit for bit (the
+//! chunk- and round-keyed stream bases of DESIGN.md rules 2/4/6 make each
+//! phase a function of `(seed, round, data)` alone), which is what lets
+//! the chaos suite (`tests/fault_injection.rs`) demand bitwise-identical
+//! recovery rather than "close enough".
+//!
+//! Deadline arithmetic throughout uses the checked forms via [`Deadline`]
+//! — a submission racing the deadline must saturate, never panic.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// What went wrong on a wire path, classified. Replaces stringly errors
+/// on every coordinator/shard/worker/client socket so callers (and the
+/// chaos suite) can branch on the failure class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// TCP connect failed (refused, unreachable, or no address resolved).
+    Connect,
+    /// An I/O deadline expired (connect, read, or write timeout).
+    Timeout,
+    /// The peer closed or reset the connection at a frame boundary.
+    Disconnected,
+    /// A frame was cut off mid-body (unexpected EOF inside a read).
+    Truncated,
+    /// A frame decoded to garbage: bad length, unknown tag, bad payload.
+    Corrupt,
+    /// A structurally valid reply that violates the phase protocol
+    /// (unexpected message kind, failed count/length validation).
+    Protocol,
+    /// Every fleet node is dead or breaker-open; nothing left to try.
+    Exhausted,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FaultKind::Connect => "connect",
+            FaultKind::Timeout => "timeout",
+            FaultKind::Disconnected => "disconnected",
+            FaultKind::Truncated => "truncated",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Protocol => "protocol",
+            FaultKind::Exhausted => "exhausted",
+        })
+    }
+}
+
+/// A typed error on a wire path: the fault class, the peer it happened
+/// against, and a human-readable detail line.
+#[derive(Debug)]
+pub struct WireError {
+    /// The classified failure.
+    pub kind: FaultKind,
+    /// Peer address (or a role label when no address applies).
+    pub peer: String,
+    /// What exactly happened, for logs.
+    pub detail: String,
+}
+
+impl WireError {
+    /// Build a typed wire error.
+    pub fn new(kind: FaultKind, peer: impl Into<String>, detail: impl Into<String>) -> Self {
+        Self { kind, peer: peer.into(), detail: detail.into() }
+    }
+
+    /// Classify and wrap an [`io::Error`] from a socket against `peer`.
+    pub fn from_io(peer: impl Into<String>, e: &io::Error) -> Self {
+        Self::new(classify_io(e), peer, e.to_string())
+    }
+
+    /// Convert into an [`io::Error`] with the closest matching
+    /// [`io::ErrorKind`], keeping `self` as the source (so callers on the
+    /// `io::Result` surfaces can still downcast to [`WireError`]).
+    pub fn into_io(self) -> io::Error {
+        let kind = match self.kind {
+            FaultKind::Connect => io::ErrorKind::ConnectionRefused,
+            FaultKind::Timeout => io::ErrorKind::TimedOut,
+            FaultKind::Disconnected => io::ErrorKind::ConnectionAborted,
+            FaultKind::Truncated => io::ErrorKind::UnexpectedEof,
+            FaultKind::Corrupt => io::ErrorKind::InvalidData,
+            FaultKind::Protocol => io::ErrorKind::InvalidData,
+            FaultKind::Exhausted => io::ErrorKind::NotConnected,
+        };
+        io::Error::new(kind, self)
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} fault at {}: {}", self.kind, self.peer, self.detail)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Map an [`io::Error`] onto the fault taxonomy. Timeouts surface as
+/// `WouldBlock` or `TimedOut` depending on platform; both are deadline
+/// expiries here.
+pub fn classify_io(e: &io::Error) -> FaultKind {
+    use io::ErrorKind as K;
+    match e.kind() {
+        K::WouldBlock | K::TimedOut => FaultKind::Timeout,
+        K::ConnectionRefused | K::AddrNotAvailable | K::AddrInUse | K::NotConnected => {
+            FaultKind::Connect
+        }
+        K::UnexpectedEof => FaultKind::Truncated,
+        K::InvalidData => FaultKind::Corrupt,
+        _ => FaultKind::Disconnected,
+    }
+}
+
+/// Deadlines and retry policy for one side of the fleet. Threaded through
+/// [`ShardCoordinator::compress_remote_ft`](super::shard::ShardCoordinator::compress_remote_ft),
+/// the service client helpers, [`WorkerConfig`](super::worker::WorkerConfig),
+/// and the CLI flags (`--connect-timeout-ms`, `--io-timeout-ms`,
+/// `--retries`, `--retry-backoff-ms`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// TCP connect deadline per attempt.
+    pub connect_timeout: Duration,
+    /// Read *and* write timeout armed on every socket
+    /// ([`Duration::ZERO`] disables — sockets block indefinitely).
+    pub io_timeout: Duration,
+    /// Additional attempts after the first (so `retries + 1` tries total)
+    /// for idempotent operations: connects, client requests answered
+    /// `Busy`, stream rounds.
+    pub retries: u32,
+    /// Base backoff slept between attempts; attempt `i` sleeps
+    /// `backoff(retry_backoff, i)` — deterministic, no jitter.
+    pub retry_backoff: Duration,
+    /// Consecutive faults that open a node's circuit breaker.
+    pub breaker_threshold: u32,
+    /// Breaker-open admissions skipped before one half-open probe is let
+    /// through. Count-based (not wall-clock) so recovery is deterministic.
+    pub breaker_cooldown: u32,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(120),
+            retries: 2,
+            retry_backoff: Duration::from_millis(50),
+            breaker_threshold: 3,
+            breaker_cooldown: 2,
+        }
+    }
+}
+
+/// Deterministic bounded exponential backoff: `base << attempt`, capped
+/// at ten seconds. No jitter by design — the determinism contract keeps
+/// the transport out of every RNG stream, and two coordinators retrying
+/// the same idempotent phase produce the same bytes anyway.
+pub fn backoff(base: Duration, attempt: u32) -> Duration {
+    const CAP: Duration = Duration::from_secs(10);
+    let factor = 1u32.checked_shl(attempt.min(16)).unwrap_or(u32::MAX);
+    base.saturating_mul(factor).min(CAP)
+}
+
+/// A panic-free deadline: construction and remaining-time queries use
+/// checked/saturating arithmetic only, so a deadline in the past (or a
+/// `Duration::MAX` budget) degrades gracefully instead of panicking.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline(Option<Instant>);
+
+impl Deadline {
+    /// Deadline `budget` from now; saturates to "never" on overflow.
+    pub fn after(budget: Duration) -> Self {
+        Deadline(Instant::now().checked_add(budget))
+    }
+
+    /// A deadline that never expires.
+    pub fn unbounded() -> Self {
+        Deadline(None)
+    }
+
+    /// Time left, or `None` once expired. Unbounded deadlines always
+    /// report [`Duration::MAX`] remaining.
+    pub fn remaining(&self) -> Option<Duration> {
+        match self.0 {
+            None => Some(Duration::MAX),
+            Some(d) => d.checked_duration_since(Instant::now()).filter(|t| !t.is_zero()),
+        }
+    }
+
+    /// Whether the deadline has passed.
+    pub fn expired(&self) -> bool {
+        self.remaining().is_none()
+    }
+}
+
+/// Arm read/write timeouts on a socket (accepted or connected).
+/// [`Duration::ZERO`] disables both — `set_read_timeout(Some(0))` is an
+/// error in std, so zero is the documented "no deadline" sentinel.
+pub fn io_timeouts(stream: &TcpStream, io_timeout: Duration) -> io::Result<()> {
+    let t = if io_timeout.is_zero() { None } else { Some(io_timeout) };
+    stream.set_read_timeout(t)?;
+    stream.set_write_timeout(t)
+}
+
+/// Connect to `addr` under [`FleetConfig::connect_timeout`] and arm the
+/// I/O timeouts — the one approved way to open a coordinator-side socket
+/// (lint rule C6 flags raw `TcpStream::connect`).
+pub fn connect(addr: &str, net: &FleetConfig) -> Result<TcpStream, WireError> {
+    let addrs = addr
+        .to_socket_addrs()
+        .map_err(|e| WireError::new(FaultKind::Connect, addr, format!("resolve: {e}")))?;
+    let mut last: Option<io::Error> = None;
+    for sa in addrs {
+        match TcpStream::connect_timeout(&sa, net.connect_timeout) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                io_timeouts(&stream, net.io_timeout)
+                    .map_err(|e| WireError::from_io(addr, &e))?;
+                return Ok(stream);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => WireError::from_io(addr, &e),
+        None => WireError::new(FaultKind::Connect, addr, "no addresses resolved"),
+    })
+}
+
+/// [`connect`] with the config's bounded retry: up to `retries + 1`
+/// attempts, sleeping `backoff(retry_backoff, attempt)` between them.
+/// Each re-attempt bumps `stats` retries; the final failure is returned
+/// typed.
+pub fn connect_retry(
+    addr: &str,
+    net: &FleetConfig,
+    stats: &FaultStats,
+) -> Result<TcpStream, WireError> {
+    let mut attempt = 0u32;
+    loop {
+        match connect(addr, net) {
+            Ok(s) => return Ok(s),
+            Err(e) if attempt < net.retries => {
+                stats.retries.fetch_add(1, Ordering::Relaxed);
+                eprintln!("fleet: {e}; retrying ({}/{})", attempt + 1, net.retries);
+                std::thread::sleep(backoff(net.retry_backoff, attempt));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Fault-layer counters, rendered as the `fault= retry= breaker=`
+/// segment of [`Metrics::summary`](super::metrics::Metrics::summary) and
+/// recorded by the shard bench into `BENCH_shard.json`.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    /// Classified wire faults observed (one per failed node/phase).
+    pub faults: AtomicU64,
+    /// Retry attempts taken (connect re-attempts, Busy re-requests,
+    /// fleet re-plans).
+    pub retries: AtomicU64,
+    /// Admissions skipped because a node's breaker was open.
+    pub breaker_skips: AtomicU64,
+    /// Times the fleet was exhausted and the local fallback ran.
+    pub fallbacks: AtomicU64,
+}
+
+impl FaultStats {
+    /// `(faults, retries, breaker_skips, fallbacks)` snapshot.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.faults.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.breaker_skips.load(Ordering::Relaxed),
+            self.fallbacks.load(Ordering::Relaxed),
+        )
+    }
+
+    /// One-line render, matching the service metrics segment.
+    pub fn summary(&self) -> String {
+        let (f, r, b, l) = self.snapshot();
+        format!("fault={f} retry={r} breaker={b} fallback={l}")
+    }
+}
+
+/// A count-based per-node circuit breaker: a node opens after
+/// [`FleetConfig::breaker_threshold`] consecutive faults, is skipped
+/// while open, and after [`FleetConfig::breaker_cooldown`] skipped
+/// admissions lets one half-open probe through. Counting admissions
+/// instead of wall-clock keeps recovery deterministic and testable.
+#[derive(Debug)]
+pub struct Breaker {
+    threshold: u32,
+    cooldown: u32,
+    // Keyed by node address. BTreeMap per contract rule C2.
+    state: Mutex<BTreeMap<String, BreakerEntry>>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct BreakerEntry {
+    consecutive: u32,
+    skips: u32,
+}
+
+impl Breaker {
+    /// Breaker with the given open threshold and half-open cooldown.
+    pub fn new(threshold: u32, cooldown: u32) -> Self {
+        Self { threshold: threshold.max(1), cooldown, state: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Whether `addr` may be tried now. Skipping while open counts toward
+    /// the half-open cooldown and bumps `stats`.
+    pub fn admit(&self, addr: &str, stats: &FaultStats) -> bool {
+        let mut st = self.state.lock().expect("breaker lock");
+        let e = st.entry(addr.to_string()).or_default();
+        if e.consecutive < self.threshold {
+            return true;
+        }
+        if e.skips >= self.cooldown {
+            // Half-open: let one probe through; a fault re-opens at once.
+            e.skips = 0;
+            return true;
+        }
+        e.skips += 1;
+        stats.breaker_skips.fetch_add(1, Ordering::Relaxed);
+        false
+    }
+
+    /// Record a successful interaction with `addr` (closes its breaker).
+    pub fn record_ok(&self, addr: &str) {
+        let mut st = self.state.lock().expect("breaker lock");
+        st.insert(addr.to_string(), BreakerEntry::default());
+    }
+
+    /// Record a fault against `addr`; returns true if the breaker is now
+    /// open.
+    pub fn record_fault(&self, addr: &str) -> bool {
+        let mut st = self.state.lock().expect("breaker lock");
+        let e = st.entry(addr.to_string()).or_default();
+        e.consecutive = e.consecutive.saturating_add(1);
+        e.skips = 0;
+        e.consecutive >= self.threshold
+    }
+}
+
+/// Shared fault-layer state carried across
+/// [`compress_remote_ft`](super::shard::ShardCoordinator::compress_remote_ft)
+/// calls: the counters and the per-node breaker. One per fleet; cheap to
+/// create per call when cross-call breaker memory is not wanted.
+#[derive(Debug)]
+pub struct FleetState {
+    /// Observability counters.
+    pub stats: FaultStats,
+    /// Per-node circuit breaker.
+    pub breaker: Breaker,
+}
+
+impl FleetState {
+    /// Fresh state with the config's breaker parameters.
+    pub fn new(net: &FleetConfig) -> Self {
+        Self {
+            stats: FaultStats::default(),
+            breaker: Breaker::new(net.breaker_threshold, net.breaker_cooldown),
+        }
+    }
+}
+
+impl Default for FleetState {
+    fn default() -> Self {
+        Self::new(&FleetConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_and_monotone() {
+        let base = Duration::from_millis(50);
+        assert_eq!(backoff(base, 0), base);
+        assert_eq!(backoff(base, 1), base * 2);
+        assert_eq!(backoff(base, 3), base * 8);
+        // Large attempt counts saturate at the cap instead of overflowing.
+        assert_eq!(backoff(base, 63), Duration::from_secs(10));
+        assert_eq!(backoff(Duration::MAX, 2), Duration::from_secs(10));
+    }
+
+    #[test]
+    fn deadline_arithmetic_never_panics() {
+        let d = Deadline::after(Duration::ZERO);
+        assert!(d.expired());
+        assert_eq!(d.remaining(), None);
+        let far = Deadline::after(Duration::MAX); // saturates to "never"
+        assert!(!far.expired());
+        assert!(Deadline::unbounded().remaining() == Some(Duration::MAX));
+    }
+
+    #[test]
+    fn classification_covers_the_fault_classes() {
+        let cases = [
+            (io::ErrorKind::WouldBlock, FaultKind::Timeout),
+            (io::ErrorKind::TimedOut, FaultKind::Timeout),
+            (io::ErrorKind::ConnectionRefused, FaultKind::Connect),
+            (io::ErrorKind::UnexpectedEof, FaultKind::Truncated),
+            (io::ErrorKind::InvalidData, FaultKind::Corrupt),
+            (io::ErrorKind::BrokenPipe, FaultKind::Disconnected),
+        ];
+        for (k, want) in cases {
+            assert_eq!(classify_io(&io::Error::new(k, "x")), want, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn wire_error_roundtrips_through_io_error() {
+        let e = WireError::new(FaultKind::Timeout, "127.0.0.1:9", "read timed out");
+        let io_e = e.into_io();
+        assert_eq!(io_e.kind(), io::ErrorKind::TimedOut);
+        let back = io_e.get_ref().and_then(|s| s.downcast_ref::<WireError>()).unwrap();
+        assert_eq!(back.kind, FaultKind::Timeout);
+        assert_eq!(back.peer, "127.0.0.1:9");
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_half_opens_after_cooldown() {
+        let b = Breaker::new(2, 2);
+        let stats = FaultStats::default();
+        assert!(b.admit("n1", &stats));
+        assert!(!b.record_fault("n1"));
+        assert!(b.admit("n1", &stats), "one fault stays closed");
+        assert!(b.record_fault("n1"), "second fault opens");
+        assert!(!b.admit("n1", &stats), "open: skip 1");
+        assert!(!b.admit("n1", &stats), "open: skip 2");
+        assert!(b.admit("n1", &stats), "half-open probe after cooldown");
+        assert!(b.record_fault("n1"), "probe fault re-opens immediately");
+        assert!(!b.admit("n1", &stats));
+        assert_eq!(stats.breaker_skips.load(Ordering::Relaxed), 3);
+        b.record_ok("n1");
+        assert!(b.admit("n1", &stats), "success closes the breaker");
+    }
+
+    #[test]
+    fn connect_refused_is_typed_and_bounded() {
+        // Bind-then-drop guarantees a port with no listener.
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let net = FleetConfig {
+            connect_timeout: Duration::from_millis(500),
+            retries: 1,
+            retry_backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let stats = FaultStats::default();
+        let t0 = Instant::now();
+        let err = connect_retry(&format!("127.0.0.1:{port}"), &net, &stats).unwrap_err();
+        assert!(
+            matches!(err.kind, FaultKind::Connect | FaultKind::Timeout),
+            "got {err}"
+        );
+        assert_eq!(stats.retries.load(Ordering::Relaxed), 1);
+        assert!(t0.elapsed() < Duration::from_secs(10), "bounded, no hang");
+    }
+}

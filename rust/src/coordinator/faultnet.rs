@@ -1,0 +1,368 @@
+//! Deterministic fault injection for the framed TCP protocol.
+//!
+//! [`FaultProxy`] sits between a coordinator and a real server (a
+//! [`ShardNode`](super::shard::ShardNode), a
+//! [`Service`](super::service::Service), …) and perturbs the byte stream
+//! according to a config-keyed [`FaultSchedule`]: refuse the connection,
+//! drop or stall after N reply frames, truncate or corrupt a specific
+//! frame, or delay every frame. Nothing here is random — a schedule is a
+//! pure function of `(connection index, frame index)`, so a chaos test
+//! replays the exact same failure on every run (the repo's determinism
+//! contract applied to the failures themselves).
+//!
+//! Faults are injected on the **reply direction** (upstream → client);
+//! the request direction is a transparent byte pump. Frame indices count
+//! reply frames from 0 per connection. The chaos suite
+//! (`tests/fault_injection.rs`) drives every [`FaultAction`] against a
+//! live shard fleet and asserts bitwise-identical recovery or a clean
+//! typed error — never a hang, never silently wrong bits.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::fault::{self, FleetConfig};
+use super::protocol::MAX_FRAME;
+
+/// One injected failure mode, applied to a connection's reply stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Pass every frame through untouched.
+    None,
+    /// Accept the TCP connection, then close it immediately (the
+    /// proxy-level stand-in for a refused/reset connect).
+    Refuse,
+    /// Forward `n` reply frames, then close both directions.
+    DropAfterFrames(u32),
+    /// Forward `n` reply frames, then go silent while holding the
+    /// connection open — the peer's read deadline must fire.
+    StallAfterFrames(u32),
+    /// Forward reply frames before `n` intact; announce frame `n` at full
+    /// length but deliver only half its bytes, then close.
+    TruncateFrame(u32),
+    /// Forward reply frames before `n` intact; overwrite frame `n`'s tag
+    /// byte with `0xFF` (no valid message has that tag, so decoding
+    /// fails loudly rather than yielding wrong data).
+    CorruptFrame(u32),
+    /// Sleep this many milliseconds before forwarding each reply frame
+    /// (a slow-but-correct peer; recovers identically when the delay
+    /// stays under the I/O deadline).
+    DelayMs(u64),
+}
+
+/// Which [`FaultAction`] each connection gets, keyed by accept order
+/// (0-based per proxy). Connections without an explicit entry get the
+/// default action — so `FaultSchedule::all(...)` models a persistently
+/// bad node and `transparent().with_conn(0, ...)` a node that fails once
+/// and recovers.
+#[derive(Debug, Clone)]
+pub struct FaultSchedule {
+    default_action: FaultAction,
+    // Keyed by connection index. BTreeMap per contract rule C2.
+    per_conn: BTreeMap<u64, FaultAction>,
+}
+
+impl FaultSchedule {
+    /// Every connection passes through untouched.
+    pub fn transparent() -> Self {
+        Self::all(FaultAction::None)
+    }
+
+    /// Every connection gets `action` (a persistently faulty node).
+    pub fn all(action: FaultAction) -> Self {
+        Self { default_action: action, per_conn: BTreeMap::new() }
+    }
+
+    /// Override the action for connection `idx` (accept order, 0-based).
+    pub fn with_conn(mut self, idx: u64, action: FaultAction) -> Self {
+        self.per_conn.insert(idx, action);
+        self
+    }
+
+    /// The action connection `idx` receives.
+    pub fn action(&self, idx: u64) -> FaultAction {
+        self.per_conn.get(&idx).copied().unwrap_or(self.default_action)
+    }
+}
+
+/// A TCP proxy that forwards framed traffic to `upstream` while applying
+/// a [`FaultSchedule`]. Bind is on `127.0.0.1:0`; point the coordinator
+/// at [`addr`](Self::addr) instead of the real node.
+pub struct FaultProxy {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Start proxying to `upstream` under `schedule`.
+    pub fn start(upstream: &str, schedule: FaultSchedule) -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind fault proxy")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let upstream = upstream.to_string();
+        let conn_idx = AtomicU64::new(0);
+        let join = std::thread::Builder::new()
+            .name("avq-fault-proxy".into())
+            .spawn(move || {
+                super::run_accept_loop(&listener, &stop2, |client| {
+                    let idx = conn_idx.fetch_add(1, Ordering::Relaxed);
+                    let action = schedule.action(idx);
+                    let upstream = upstream.clone();
+                    let stop = stop2.clone();
+                    std::thread::spawn(move || pump_conn(client, &upstream, action, &stop));
+                });
+            })?;
+        Ok(Self { addr, stop, join: Some(join) })
+    }
+
+    /// Bound address (`host:port`) for the coordinator to dial.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting and tear down; per-connection pumps notice the stop
+    /// flag within one poll interval.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Poll interval for the stop flag while blocked on socket reads.
+const POLL: Duration = Duration::from_millis(25);
+
+/// `read_exact` that survives read-timeout polls: resumes at the partial
+/// offset and bails out when the stop flag rises. Returns false on EOF,
+/// error, or stop.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> bool {
+    let mut at = 0usize;
+    while at < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        match stream.read(&mut buf[at..]) {
+            Ok(0) => return false,
+            Ok(n) => at += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Drive one proxied connection: transparent request pump client→upstream
+/// on a helper thread, frame-aware fault-applying reply pump inline.
+fn pump_conn(client: TcpStream, upstream: &str, action: FaultAction, stop: &Arc<AtomicBool>) {
+    if action == FaultAction::Refuse {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    }
+    let net = FleetConfig { connect_timeout: Duration::from_secs(2), ..Default::default() };
+    let Ok(up) = fault::connect(upstream, &net) else {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    };
+    // Short read timeouts implement the stop-flag poll in read_full;
+    // writes stay bounded but roomy enough for a full shard frame.
+    for s in [&client, &up] {
+        let _ = s.set_read_timeout(Some(POLL));
+        let _ = s.set_write_timeout(Some(Duration::from_secs(10)));
+    }
+
+    // Request direction: raw byte pump until EOF/error/stop.
+    let (mut c_rd, mut u_wr) = match (client.try_clone(), up.try_clone()) {
+        (Ok(c), Ok(u)) => (c, u),
+        _ => return,
+    };
+    let stop_req = stop.clone();
+    let req_pump = std::thread::spawn(move || {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            if stop_req.load(Ordering::Relaxed) {
+                break;
+            }
+            match c_rd.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    if u_wr.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+        // Tell the upstream node the client is gone so its handler exits.
+        let _ = u_wr.shutdown(Shutdown::Write);
+    });
+
+    pump_replies(up, client, action, stop);
+    let _ = req_pump.join();
+}
+
+/// Frame-aware reply pump: forwards `len:u32 body` frames from `up` to
+/// `client`, applying `action` keyed by the 0-based reply frame index.
+fn pump_replies(mut up: TcpStream, mut client: TcpStream, action: FaultAction, stop: &AtomicBool) {
+    let mut frame_idx = 0u32;
+    loop {
+        match action {
+            FaultAction::DropAfterFrames(n) | FaultAction::StallAfterFrames(n)
+                if frame_idx >= n =>
+            {
+                if matches!(action, FaultAction::StallAfterFrames(_)) {
+                    // Hold the connection open, forward nothing: the
+                    // peer's read deadline is the only way out.
+                    while !stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(POLL);
+                    }
+                }
+                break;
+            }
+            _ => {}
+        }
+        let mut hdr = [0u8; 4];
+        if !read_full(&mut up, &mut hdr, stop) {
+            break;
+        }
+        let len = u32::from_le_bytes(hdr);
+        if len == 0 || len > MAX_FRAME {
+            break; // malformed upstream; fail closed
+        }
+        let mut body = vec![0u8; len as usize];
+        if !read_full(&mut up, &mut body, stop) {
+            break;
+        }
+        match action {
+            FaultAction::DelayMs(ms) => std::thread::sleep(Duration::from_millis(ms)),
+            FaultAction::TruncateFrame(n) if frame_idx == n => {
+                // Announce the full length, deliver half the bytes.
+                let _ = client.write_all(&hdr);
+                let _ = client.write_all(&body[..body.len() / 2]);
+                break;
+            }
+            FaultAction::CorruptFrame(n) if frame_idx == n => {
+                body[0] = 0xFF; // no valid tag: decodes loudly, never silently
+            }
+            _ => {}
+        }
+        if client.write_all(&hdr).is_err() || client.write_all(&body).is_err() {
+            break;
+        }
+        frame_idx = frame_idx.saturating_add(1);
+    }
+    let _ = up.shutdown(Shutdown::Both);
+    let _ = client.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{recv, send, Msg};
+    use std::io::BufReader;
+
+    /// Echo server speaking the framed protocol: replies `Busy{request_id}`
+    /// to every decodable request.
+    fn echo_node() -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::spawn(move || {
+            crate::coordinator::run_accept_loop(&listener, &stop2, |stream| {
+                std::thread::spawn(move || {
+                    let mut wr = stream.try_clone().unwrap();
+                    let mut rd = BufReader::new(stream);
+                    while let Ok(Some(Msg::CompressRequest { request_id, .. })) = recv(&mut rd) {
+                        if send(&mut wr, &Msg::Busy { request_id }).is_err() {
+                            break;
+                        }
+                    }
+                });
+            });
+        });
+        (addr, stop, join)
+    }
+
+    fn request_via(proxy: &FaultProxy, id: u64) -> std::io::Result<Option<Msg>> {
+        let net = FleetConfig {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        let stream = fault::connect(proxy.addr(), &net).map_err(|e| e.into_io())?;
+        let mut wr = stream.try_clone()?;
+        let mut rd = BufReader::new(stream);
+        send(&mut wr, &Msg::CompressRequest { request_id: id, s: 2, class: 0, deadline_ms: 0, data: vec![1.0, 2.0] })?;
+        recv(&mut rd)
+    }
+
+    #[test]
+    fn schedule_actions_apply_per_connection() {
+        let (addr, stop, join) = echo_node();
+        let proxy = FaultProxy::start(
+            &addr,
+            FaultSchedule::transparent()
+                .with_conn(1, FaultAction::Refuse)
+                .with_conn(2, FaultAction::CorruptFrame(0))
+                .with_conn(3, FaultAction::TruncateFrame(0))
+                .with_conn(4, FaultAction::DropAfterFrames(0))
+                .with_conn(5, FaultAction::StallAfterFrames(0)),
+        )
+        .unwrap();
+
+        // conn 0: transparent — the Busy echo comes back intact.
+        match request_via(&proxy, 7) {
+            Ok(Some(Msg::Busy { request_id: 7 })) => {}
+            other => panic!("transparent conn: {other:?}"),
+        }
+        // conn 1: refused — clean error or EOF, never a hang.
+        match request_via(&proxy, 8) {
+            Ok(None) | Err(_) => {}
+            other => panic!("refused conn: {other:?}"),
+        }
+        // conn 2: corrupt tag — decodes as InvalidData.
+        let err = request_via(&proxy, 9).expect_err("corrupt frame must error");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // conn 3: truncated — unexpected EOF mid-frame.
+        let err = request_via(&proxy, 10).expect_err("truncated frame must error");
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        // conn 4: dropped before any reply — clean EOF at a frame boundary.
+        match request_via(&proxy, 11) {
+            Ok(None) | Err(_) => {}
+            other => panic!("dropped conn: {other:?}"),
+        }
+        // conn 5: stalled — the client read deadline fires (timeout kind).
+        let t0 = std::time::Instant::now();
+        let err = request_via(&proxy, 12).expect_err("stall must time out");
+        assert!(
+            matches!(err.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut),
+            "stall: {err:?}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(10), "stall is deadline-bounded");
+
+        proxy.shutdown();
+        stop.store(true, Ordering::Relaxed);
+        let _ = join.join();
+    }
+}

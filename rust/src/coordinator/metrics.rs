@@ -3,6 +3,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::fault::FaultStats;
+
 /// Microsecond latency histogram with power-of-two buckets from 1µs to
 /// ~67s (27 buckets).
 #[derive(Debug, Default)]
@@ -87,6 +89,9 @@ pub struct Metrics {
     pub latency: LatencyHisto,
     /// Solver-only latency.
     pub solve_latency: LatencyHisto,
+    /// Fault-layer counters (classified wire faults, retries, breaker
+    /// skips, local fallbacks — DESIGN.md rule 7).
+    pub fleet: FaultStats,
 }
 
 impl Metrics {
@@ -130,6 +135,12 @@ impl Metrics {
         if c + r + w + f > 0 {
             line.push_str(&format!(" stream=c{c}/r{r}/w{w}/s{f}"));
         }
+        // The fault segment appears once the fault layer has seen action,
+        // mirroring the stream segment's on-demand rendering.
+        let (faults, retries, breaker, fallbacks) = self.fleet.snapshot();
+        if faults + retries + breaker + fallbacks > 0 {
+            line.push_str(&format!(" {}", self.fleet.summary()));
+        }
         line
     }
 }
@@ -172,6 +183,12 @@ mod tests {
         m.add(&m.stream_reused, 3);
         m.add(&m.stream_resolved, 1);
         assert!(m.summary().contains("stream=c0/r3/w0/s1"));
+        // Same for the fault segment: absent while clean, rendered once
+        // the fault layer sees action.
+        assert!(!m.summary().contains("fault="));
+        m.add(&m.fleet.faults, 2);
+        m.add(&m.fleet.retries, 1);
+        assert!(m.summary().contains("fault=2 retry=1 breaker=0 fallback=0"));
     }
 
     #[test]

@@ -17,11 +17,17 @@
 //!   solve on the merged statistics, per-shard quantize/encode — with
 //!   results bitwise-identical to a single node for any shard count.
 //!
-//! Shared plumbing: binary [`codec`], framed [`protocol`], [`metrics`].
+//! Shared plumbing: binary [`codec`], framed [`protocol`], [`metrics`],
+//! and the fault-tolerance layer ([`fault`]: typed fault taxonomy,
+//! deadlines on every socket, deterministic retry/re-plan policy;
+//! [`faultnet`]: the deterministic fault-injection proxy the chaos suite
+//! drives).
 
 pub mod aggregator;
 pub mod batcher;
 pub mod codec;
+pub mod fault;
+pub mod faultnet;
 pub mod metrics;
 pub mod protocol;
 pub mod router;

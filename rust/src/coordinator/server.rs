@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::aggregator::{aggregate, sgd_step};
+use super::fault;
 use super::protocol::{recv, send, Msg};
 
 /// Leader configuration.
@@ -39,6 +40,11 @@ pub struct ServerConfig {
     pub lr: f32,
     /// Per-round straggler timeout.
     pub round_timeout: Duration,
+    /// Per-socket read/write deadline on every admitted worker
+    /// connection (CLI: `--io-timeout-ms`; [`Duration::ZERO`] disables).
+    /// A worker wedged past it is disconnected by its reader thread
+    /// instead of parking the thread forever (DESIGN.md rule 7).
+    pub io_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -51,6 +57,7 @@ impl Default for ServerConfig {
             dim: 0,
             lr: 0.1,
             round_timeout: Duration::from_secs(30),
+            io_timeout: Duration::from_secs(120),
         }
     }
 }
@@ -125,6 +132,11 @@ impl Server {
         for _ in 0..cfg.workers {
             let (stream, peer) = self.listener.accept().context("accept")?;
             stream.set_nodelay(true).ok();
+            // Deadline the socket before the first read: a worker that
+            // wedges mid-handshake (or mid-round) times out and is
+            // dropped; it can never park a reader thread forever.
+            fault::io_timeouts(&stream, cfg.io_timeout)
+                .with_context(|| format!("{peer}: setting io timeouts"))?;
             let mut rd = BufReader::new(stream.try_clone()?);
             let hello = recv(&mut rd)?
                 .ok_or_else(|| anyhow!("{peer}: closed before Hello"))?;
@@ -192,13 +204,15 @@ impl Server {
             // Collect one submission per worker (straggler timeout).
             let mut subs: Vec<(f32, crate::sq::CompressedVec)> = Vec::new();
             let mut seen: BTreeSet<u64> = BTreeSet::new();
-            let deadline = Instant::now() + cfg.round_timeout;
+            // Checked deadline arithmetic: `remaining()` is `None` once
+            // the budget is spent, and saturates instead of panicking
+            // near the expiry edge (no `deadline - now` underflow).
+            let deadline = fault::Deadline::after(cfg.round_timeout);
             while seen.len() < cfg.workers {
-                let now = Instant::now();
-                if now >= deadline {
+                let Some(remaining) = deadline.remaining() else {
                     break;
-                }
-                match sub_rx.recv_timeout(deadline - now) {
+                };
+                match sub_rx.recv_timeout(remaining) {
                     Ok((wid, r, loss, grad)) => {
                         if r != round {
                             // Stale submission from a slow worker; ignore.

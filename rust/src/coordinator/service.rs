@@ -67,6 +67,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::batcher::{Scheduler, TenantClass};
+use super::fault::{self, FleetConfig};
 use super::metrics::Metrics;
 use super::protocol::{recv, send, Msg};
 use super::router::Router;
@@ -127,6 +128,11 @@ pub struct ServiceConfig {
     /// metric). Off by default — the scheduler then only *orders* by
     /// deadline, never drops.
     pub shed_expired: bool,
+    /// Per-connection read/write deadline (CLI: `--io-timeout-ms`;
+    /// [`Duration::ZERO`] disables). A client idle or wedged past it is
+    /// disconnected and counted as a `fault=` — bounded resource hold,
+    /// never a hung reader thread (DESIGN.md rule 7).
+    pub io_timeout: Duration,
 }
 
 /// Streaming-mode knobs ([`ServiceConfig::stream`]).
@@ -222,6 +228,7 @@ impl Default for ServiceConfig {
             admission: 1,
             stream: None,
             shed_expired: false,
+            io_timeout: Duration::from_secs(120),
         }
     }
 }
@@ -320,6 +327,7 @@ impl Service {
             let stop = stop.clone();
             let sched = sched.clone();
             let metrics = metrics.clone();
+            let io_timeout = cfg.io_timeout;
             joins.push(
                 std::thread::Builder::new()
                     .name("avq-accept".into())
@@ -329,7 +337,7 @@ impl Service {
                             let metrics = metrics.clone();
                             let stop = stop.clone();
                             std::thread::spawn(move || {
-                                handle_conn(stream, &sched, &metrics, &stop);
+                                handle_conn(stream, io_timeout, &sched, &metrics, &stop);
                             });
                         });
                     })
@@ -357,10 +365,16 @@ impl Service {
 
 fn handle_conn(
     stream: TcpStream,
+    io_timeout: Duration,
     sched: &Scheduler<Job>,
     metrics: &Metrics,
     stop: &AtomicBool,
 ) {
+    // Deadline every socket before the first read: a wedged client is a
+    // classified fault, not a permanently parked reader thread.
+    if fault::io_timeouts(&stream, io_timeout).is_err() {
+        return;
+    }
     let reply = Arc::new(Mutex::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -389,7 +403,18 @@ fn handle_conn(
                 eprintln!("compression service: unexpected {}", other.kind());
                 continue;
             }
-            Ok(None) | Err(_) => break,
+            Ok(None) => break,
+            Err(e) => {
+                // Clean EOF is the `Ok(None)` arm above; anything else —
+                // idle past the io deadline, a truncated or corrupt frame
+                // — is a classified client fault worth counting.
+                metrics.add(&metrics.fleet.faults, 1);
+                eprintln!(
+                    "compression service: dropping client ({} fault): {e}",
+                    fault::classify_io(&e)
+                );
+                break;
+            }
         };
         metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
         let job = Job {
@@ -582,6 +607,41 @@ fn send_reply(job: Job, reply: Msg, metrics: &Metrics) {
         .record_us(job.accepted_at.elapsed().as_micros().max(1) as u64);
 }
 
+/// One request/reply exchange with the service: connect with the
+/// [`FleetConfig`] deadlines, send `msg`, read exactly one reply.
+///
+/// Every client helper funnels through here, so every client socket
+/// carries connect/read/write timeouts — a wedged service yields a typed
+/// timeout error, never a hang (DESIGN.md rule 7).
+fn request_once(addr: &str, msg: &Msg, net: &FleetConfig) -> Result<Msg> {
+    let mut stream = fault::connect(addr, net).map_err(anyhow::Error::new)?;
+    send(&mut stream, msg)?;
+    let mut rd = std::io::BufReader::new(stream);
+    recv(&mut rd)?.context("service closed the connection")
+}
+
+/// [`request_once`] with bounded deterministic retry: `Busy` replies and
+/// transport errors are retried up to `net.retries` times with
+/// jitter-free exponential backoff ([`fault::backoff`]). The last reply
+/// (possibly still `Busy`) or error is returned once attempts run out.
+///
+/// Safe to retry because one-shot and streaming compression requests are
+/// idempotent: the service derives all randomness from its own seed and
+/// per-round counters, so a re-sent request computes the same bits.
+fn request_retry(addr: &str, msg: &Msg, net: &FleetConfig) -> Result<Msg> {
+    let mut attempt = 0u32;
+    loop {
+        match request_once(addr, msg, net) {
+            Ok(Msg::Busy { .. }) if attempt < net.retries => {}
+            Ok(reply) => return Ok(reply),
+            Err(_) if attempt < net.retries => {}
+            Err(e) => return Err(e),
+        }
+        std::thread::sleep(fault::backoff(net.retry_backoff, attempt));
+        attempt += 1;
+    }
+}
+
 /// Blocking client helper: compress `data` remotely as a best-effort
 /// tenant (priority 0, no deadline).
 pub fn compress_remote(addr: &str, request_id: u64, s: u32, data: &[f32]) -> Result<Msg> {
@@ -600,14 +660,26 @@ pub fn compress_remote_with(
     deadline_ms: u32,
     data: &[f32],
 ) -> Result<Msg> {
-    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-    stream.set_nodelay(true).ok();
-    send(
-        &mut stream,
-        &Msg::CompressRequest { request_id, s, class, deadline_ms, data: data.to_vec() },
-    )?;
-    let mut rd = std::io::BufReader::new(stream);
-    recv(&mut rd)?.context("service closed the connection")
+    let msg = Msg::CompressRequest { request_id, s, class, deadline_ms, data: data.to_vec() };
+    request_once(addr, &msg, &FleetConfig::default())
+}
+
+/// [`compress_remote_with`] plus bounded retry on `Busy`/transport
+/// faults, governed by `net` (CLI: `quiver client --retries N
+/// --retry-backoff-ms MS`). Returns the last reply when retries run out
+/// — a caller seeing `Busy` from this function knows the budget is
+/// spent.
+pub fn compress_remote_retry(
+    addr: &str,
+    request_id: u64,
+    s: u32,
+    class: u8,
+    deadline_ms: u32,
+    data: &[f32],
+    net: &FleetConfig,
+) -> Result<Msg> {
+    let msg = Msg::CompressRequest { request_id, s, class, deadline_ms, data: data.to_vec() };
+    request_retry(addr, &msg, net)
 }
 
 /// Blocking client helper for streaming mode: submit round `round` of
@@ -641,22 +713,45 @@ pub fn compress_remote_stream_with(
     deadline_ms: u32,
     data: &[f32],
 ) -> Result<Msg> {
-    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-    stream.set_nodelay(true).ok();
-    send(
-        &mut stream,
-        &Msg::StreamCompressRequest {
-            request_id,
-            stream_id,
-            round,
-            s,
-            class,
-            deadline_ms,
-            data: data.to_vec(),
-        },
-    )?;
-    let mut rd = std::io::BufReader::new(stream);
-    recv(&mut rd)?.context("service closed the connection")
+    let msg = Msg::StreamCompressRequest {
+        request_id,
+        stream_id,
+        round,
+        s,
+        class,
+        deadline_ms,
+        data: data.to_vec(),
+    };
+    request_once(addr, &msg, &FleetConfig::default())
+}
+
+/// [`compress_remote_stream_with`] plus bounded retry on
+/// `Busy`/transport faults (see [`compress_remote_retry`]). Streaming
+/// rounds are idempotent — the server keys incremental state on
+/// `(stream_id, round)`, so a retried round recomputes identical bits —
+/// which is what makes this retry safe.
+#[allow(clippy::too_many_arguments)]
+pub fn compress_remote_stream_retry(
+    addr: &str,
+    request_id: u64,
+    stream_id: u64,
+    round: u64,
+    s: u32,
+    class: u8,
+    deadline_ms: u32,
+    data: &[f32],
+    net: &FleetConfig,
+) -> Result<Msg> {
+    let msg = Msg::StreamCompressRequest {
+        request_id,
+        stream_id,
+        round,
+        s,
+        class,
+        deadline_ms,
+        data: data.to_vec(),
+    };
+    request_retry(addr, &msg, net)
 }
 
 #[cfg(test)]
@@ -672,6 +767,7 @@ mod tests {
         assert_eq!(c.admission, 1, "cross-batch packing is opt-in");
         assert!(c.stream.is_none(), "streaming mode is opt-in");
         assert!(!c.shed_expired, "deadline shedding is opt-in");
+        assert!(!c.io_timeout.is_zero(), "client sockets carry a deadline by default");
         let sc = StreamServiceConfig::default();
         assert!(sc.tuning.drift_reuse_max <= sc.tuning.drift_warm_max);
         assert!(sc.tuning.cache_cap > 0);
@@ -700,6 +796,74 @@ mod tests {
         let off = StreamState { cfg: None, solvers: Mutex::new(StreamMap::default()) };
         assert!(off.solver(&router, 1).is_none());
     }
+    /// Scripted server: accepts `replies.len()` connections in order and
+    /// answers each request with the scripted reply (`false` → `Busy`,
+    /// `true` → an empty `CompressReply`), so retry behaviour is tested
+    /// against an exact Busy/Ok sequence rather than real load.
+    fn scripted_server(replies: Vec<bool>) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let join = std::thread::spawn(move || {
+            for ok in replies {
+                let (mut stream, _) = listener.accept().unwrap();
+                let mut rd = std::io::BufReader::new(stream.try_clone().unwrap());
+                let request_id = match recv(&mut rd).unwrap() {
+                    Some(Msg::CompressRequest { request_id, .. }) => request_id,
+                    other => panic!("scripted server: unexpected {other:?}"),
+                };
+                let reply = if ok {
+                    Msg::CompressReply {
+                        request_id,
+                        compressed: sq::CompressedVec {
+                            d: 0,
+                            q: vec![],
+                            bits: 0,
+                            payload: vec![],
+                        },
+                        solver: String::new(),
+                        solve_us: 0,
+                    }
+                } else {
+                    Msg::Busy { request_id }
+                };
+                send(&mut stream, &reply).unwrap();
+            }
+        });
+        (addr, join)
+    }
+
+    #[test]
+    fn client_retry_recovers_from_scripted_busy() {
+        // Busy, Busy, then Ok: a retry budget of 2 lands on the Ok.
+        let (addr, join) = scripted_server(vec![false, false, true]);
+        let net = FleetConfig {
+            retries: 2,
+            retry_backoff: Duration::from_millis(1),
+            ..FleetConfig::default()
+        };
+        let reply = compress_remote_retry(&addr, 7, 4, 0, 0, &[1.0, 2.0], &net).unwrap();
+        match reply {
+            Msg::CompressReply { request_id, .. } => assert_eq!(request_id, 7),
+            other => panic!("expected CompressReply, got {other:?}"),
+        }
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn client_retry_budget_exhaustion_surfaces_busy() {
+        // One Busy and a zero retry budget: the Busy comes straight back
+        // (bounded — no extra connection is attempted, so the scripted
+        // single-accept server joins cleanly).
+        let (addr, join) = scripted_server(vec![false]);
+        let net = FleetConfig { retries: 0, ..FleetConfig::default() };
+        let reply = compress_remote_retry(&addr, 9, 4, 0, 0, &[1.0], &net).unwrap();
+        match reply {
+            Msg::Busy { request_id } => assert_eq!(request_id, 9),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        join.join().unwrap();
+    }
+
     // Live service round-trips are tested in
     // rust/tests/coordinator_integration.rs.
 }

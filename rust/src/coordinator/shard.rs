@@ -63,9 +63,11 @@ use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use super::fault::{self, FaultKind, FaultStats, FleetConfig, FleetState, WireError};
 use super::protocol::{recv, send, Msg, MAX_FRAME};
 use crate::avq::histogram::{solve_on, GridHistogram, HistConfig};
 use crate::avq::{AvqError, Solution, SolverKind};
@@ -280,12 +282,10 @@ impl ShardCoordinator {
     /// Produces the same `(Solution, CompressedVec)` as the in-process
     /// path (and therefore as a single node), bit for bit.
     ///
-    /// Each shard ships as one `ShardInit` frame, so a shard is bounded
-    /// by the protocol's `MAX_FRAME` (2³⁰ bytes ≈ 1.3·10⁸ `f64`
-    /// coordinates); `send` rejects larger shards cleanly — use more
-    /// nodes. Every reply is validated (chunk-partial count, bin count,
-    /// payload length) so a skewed or buggy node surfaces as an error,
-    /// never as silently wrong bits.
+    /// Equivalent to [`compress_remote_ft`](Self::compress_remote_ft)
+    /// with the default [`FleetConfig`] and a fresh (per-call)
+    /// [`FleetState`]: deadlines and degraded-mode recovery on, no
+    /// cross-call breaker memory.
     pub fn compress_remote(
         &self,
         nodes: &[String],
@@ -293,35 +293,186 @@ impl ShardCoordinator {
         s: usize,
         rng: &mut Xoshiro256pp,
     ) -> Result<(Solution, CompressedVec)> {
+        let net = FleetConfig::default();
+        self.compress_remote_ft(nodes, xs, s, rng, &net, &FleetState::new(&net))
+    }
+
+    /// Fault-tolerant remote compress (DESIGN.md rule 7): drive the three
+    /// shard phases across `nodes` under the deadlines and retry policy
+    /// of `net`, re-planning over the survivors when a node faults and
+    /// falling back to the in-process solve when the fleet is exhausted.
+    ///
+    /// **Every recovery path returns the same bits.** The histogram base
+    /// derives from `cfg.seed` and the quantize base is drawn from `rng`
+    /// exactly once, up front — so a retried attempt, a re-planned
+    /// smaller fleet (global chunk keys make the shard count invisible,
+    /// module docs), and the local fallback all compute the identical
+    /// `(Solution, CompressedVec)`, and the caller's generator advances
+    /// identically on every path. Failures are classified per node
+    /// ([`WireError`]), charged to `state` (counters + circuit breaker),
+    /// and never hang: each socket carries `net.connect_timeout` and
+    /// `net.io_timeout`.
+    ///
+    /// Each shard ships as one `ShardInit` frame, so a shard is bounded
+    /// by the protocol's `MAX_FRAME` (2³⁰ bytes ≈ 1.3·10⁸ `f64`
+    /// coordinates); an oversized shard is a hard error on the full
+    /// fleet, and exhausts to the local fallback once the fleet has
+    /// degraded below the required node count. Every reply is validated
+    /// (chunk-partial count, bin count, payload length) so a skewed or
+    /// buggy node surfaces as a typed fault, never as silently wrong
+    /// bits.
+    pub fn compress_remote_ft(
+        &self,
+        nodes: &[String],
+        xs: &[f64],
+        s: usize,
+        rng: &mut Xoshiro256pp,
+        net: &FleetConfig,
+        state: &FleetState,
+    ) -> Result<(Solution, CompressedVec)> {
         anyhow::ensure!(!nodes.is_empty(), "need at least one shard node");
         anyhow::ensure!(!xs.is_empty(), "cannot shard an empty vector");
         // Mirror solve_hist's RNG derivation: the build consumes one draw
-        // from a generator seeded with cfg.seed.
+        // from a generator seeded with cfg.seed. The quantize base is
+        // drawn here, before any network I/O, so every attempt reuses the
+        // same qbase and the caller's rng advances by exactly one draw on
+        // success, fault, and fallback alike.
         let mut hist_rng = Xoshiro256pp::seed_from_u64(self.cfg.seed);
         let base = hist_rng.next_u64();
-        let task_id = NEXT_TASK.fetch_add(1, Ordering::Relaxed);
-        let plan = ShardPlan::new(xs.len(), nodes.len());
-        let slices = plan.slices(xs);
-        // Reject oversized shards before serializing anything: a
-        // ShardInit body is 8 bytes per coordinate plus a small header
-        // and must fit one protocol frame.
-        for (k, sl) in slices.iter().enumerate() {
-            let bytes = sl.len() * 8 + 64;
-            anyhow::ensure!(
-                bytes <= MAX_FRAME as usize,
-                "shard {k} ({} coordinates, ~{bytes} bytes) exceeds MAX_FRAME \
-                 ({MAX_FRAME}); split across more shard nodes",
-                sl.len()
-            );
-        }
+        let qbase = rng.next_u64();
 
-        let mut conns: Vec<(BufReader<TcpStream>, TcpStream)> = Vec::with_capacity(nodes.len());
-        for addr in nodes {
-            let stream = TcpStream::connect(addr)
-                .with_context(|| format!("connecting shard node {addr}"))?;
-            stream.set_nodelay(true).ok();
-            let wr = stream.try_clone()?;
-            conns.push((BufReader::new(stream), wr));
+        let mut alive: Vec<&String> =
+            nodes.iter().filter(|a| state.breaker.admit(a, &state.stats)).collect();
+        let mut degraded = alive.len() < nodes.len();
+        loop {
+            if alive.is_empty() {
+                eprintln!("fleet: exhausted ({} nodes down), local fallback", nodes.len());
+                state.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                return Ok(self.compress_with_bases(xs, s, base, qbase)?);
+            }
+            let plan = ShardPlan::new(xs.len(), alive.len());
+            let slices = plan.slices(xs);
+            // Reject oversized shards before serializing anything: a
+            // ShardInit body is 8 bytes per coordinate plus a small
+            // header and must fit one protocol frame. On the full fleet
+            // that is a caller error; on a degraded fleet the shards only
+            // grew because nodes died, so degrade the rest of the way.
+            if let Some((k, n)) = slices
+                .iter()
+                .enumerate()
+                .map(|(k, sl)| (k, sl.len() * 8 + 64))
+                .find(|&(_, bytes)| bytes > MAX_FRAME as usize)
+            {
+                if degraded {
+                    eprintln!(
+                        "fleet: shard {k} (~{n} bytes) exceeds MAX_FRAME on the \
+                         degraded fleet, local fallback"
+                    );
+                    state.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    return Ok(self.compress_with_bases(xs, s, base, qbase)?);
+                }
+                bail!(
+                    "shard {k} (~{n} bytes) exceeds MAX_FRAME ({MAX_FRAME}); \
+                     split across more shard nodes"
+                );
+            }
+            match self.try_fleet(&alive, &plan, &slices, s, base, qbase, net, &state.stats) {
+                Ok(out) => {
+                    for addr in &alive {
+                        state.breaker.record_ok(addr);
+                    }
+                    return Ok(out);
+                }
+                Err(FleetFailure::Hard(e)) => return Err(e),
+                Err(FleetFailure::Nodes(dead)) => {
+                    // Re-plan over the survivors: dropping chunk-aligned
+                    // ranges onto fewer nodes preserves the global chunk
+                    // keys, so the re-driven result is bit-identical.
+                    for &k in dead.iter().rev() {
+                        state.breaker.record_fault(alive[k]);
+                        alive.remove(k);
+                    }
+                    state.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    degraded = true;
+                }
+            }
+        }
+    }
+
+    /// The in-process compress from explicit stream bases — degraded-mode
+    /// fallback of [`compress_remote_ft`](Self::compress_remote_ft) and
+    /// the healthy-run reference of the chaos suite: with the same
+    /// `(base, qbase)` it reproduces the remote result bit for bit (the
+    /// shard count is invisible by the module-level invariance argument).
+    pub fn compress_with_bases(
+        &self,
+        xs: &[f64],
+        s: usize,
+        base: u64,
+        qbase: u64,
+    ) -> Result<(Solution, CompressedVec), AvqError> {
+        let h = build_sharded_with_base(xs, self.cfg.m, base, self.cfg.shards)?;
+        let sol = solve_on(&h, s, self.cfg.inner)?;
+        let plan = ShardPlan::new(xs.len(), self.cfg.shards);
+        let parts: Vec<CompressedVec> = par::dispatch_batch(plan.slices(xs), |k, slice| {
+            let idx = sq::quantize_shard(slice, &sol.q, qbase, plan.first_chunk(k));
+            sq::encode(&idx, &sol.q)
+        });
+        Ok((sol, sq::assemble(&parts)))
+    }
+
+    /// One attempt over one fixed plan: connect, drive the three phases,
+    /// validate every reply. Node-attributable failures come back as
+    /// [`FleetFailure::Nodes`] (the caller re-plans without them);
+    /// input/solver problems are [`FleetFailure::Hard`].
+    #[allow(clippy::too_many_arguments)]
+    fn try_fleet(
+        &self,
+        alive: &[&String],
+        plan: &ShardPlan,
+        slices: &[&[f64]],
+        s: usize,
+        base: u64,
+        qbase: u64,
+        net: &FleetConfig,
+        stats: &FaultStats,
+    ) -> Result<(Solution, CompressedVec), FleetFailure> {
+        let task_id = NEXT_TASK.fetch_add(1, Ordering::Relaxed);
+        // One classified fault: log it, count it, name the node.
+        let node_fault = |k: usize, kind: FaultKind, detail: String| {
+            let e = WireError::new(kind, alive[k].as_str(), detail);
+            eprintln!("fleet: {e}; re-planning over survivors");
+            stats.faults.fetch_add(1, Ordering::Relaxed);
+            FleetFailure::Nodes(vec![k])
+        };
+        let io_fault = |k: usize, what: &str, e: &std::io::Error| {
+            node_fault(k, fault::classify_io(e), format!("{what}: {e}"))
+        };
+
+        // Connect every node first (bounded retry per node, breaker-aware
+        // caller), collecting *all* connect failures so one re-plan
+        // absorbs a multi-node outage.
+        let mut conns: Vec<(BufReader<TcpStream>, TcpStream)> = Vec::with_capacity(alive.len());
+        let mut dead: Vec<usize> = Vec::new();
+        for (k, addr) in alive.iter().enumerate() {
+            match fault::connect_retry(addr, net, stats) {
+                Ok(stream) => match stream.try_clone() {
+                    Ok(wr) => conns.push((BufReader::new(stream), wr)),
+                    Err(e) => {
+                        eprintln!("fleet: clone {addr}: {e}");
+                        stats.faults.fetch_add(1, Ordering::Relaxed);
+                        dead.push(k);
+                    }
+                },
+                Err(e) => {
+                    eprintln!("fleet: {e}");
+                    stats.faults.fetch_add(1, Ordering::Relaxed);
+                    dead.push(k);
+                }
+            }
+        }
+        if !dead.is_empty() {
+            return Err(FleetFailure::Nodes(dead));
         }
 
         // Phase 1: ship the shards, collect per-chunk scan partials. The
@@ -350,94 +501,145 @@ impl ShardCoordinator {
                 .map(|h| h.join().expect("shard send thread panicked"))
                 .collect()
         });
-        for (k, r) in init_results.into_iter().enumerate() {
-            r.with_context(|| format!("sending shard {k}"))?;
+        if let Some((k, Err(e))) = init_results.iter().enumerate().find(|(_, r)| r.is_err()) {
+            return Err(io_fault(k, "sending shard", e));
         }
         let mut all_chunks: Vec<ChunkStats> = Vec::new();
         for (k, (rd, _)) in conns.iter_mut().enumerate() {
-            match recv(rd)?.with_context(|| format!("shard node {k} closed"))? {
-                Msg::ShardScanned { task_id: t, chunks } if t == task_id => {
+            match recv(rd) {
+                Ok(Some(Msg::ShardScanned { task_id: t, chunks })) if t == task_id => {
                     // Validate before merging: a skewed or buggy node must
-                    // surface as an error, never as silently wrong stats.
+                    // surface as a fault, never as silently wrong stats.
                     let want = slices[k].len().div_ceil(par::CHUNK);
-                    anyhow::ensure!(
-                        chunks.len() == want,
-                        "shard node {k} returned {} chunk partials, expected {want}",
-                        chunks.len()
-                    );
+                    if chunks.len() != want {
+                        return Err(node_fault(
+                            k,
+                            FaultKind::Protocol,
+                            format!("{} chunk partials, expected {want}", chunks.len()),
+                        ));
+                    }
                     all_chunks.extend(chunks);
                 }
-                other => bail!("shard node {k}: expected ShardScanned, got {}", other.kind()),
+                Ok(Some(other)) => {
+                    return Err(node_fault(
+                        k,
+                        FaultKind::Protocol,
+                        format!("expected ShardScanned, got {}", other.kind()),
+                    ));
+                }
+                Ok(None) => {
+                    return Err(node_fault(k, FaultKind::Disconnected, "closed".into()));
+                }
+                Err(e) => return Err(io_fault(k, "awaiting scan", &e)),
             }
         }
         let st = par::scan::fold_stats(all_chunks);
-        anyhow::ensure!(st.finite, "input contains non-finite values");
+        if !st.finite {
+            return Err(FleetFailure::Hard(anyhow::anyhow!(
+                "input contains non-finite values"
+            )));
+        }
 
         // Phase 2: broadcast the merged grid, merge the counts, solve.
         let h = if st.hi == st.lo {
-            GridHistogram::from_shards(self.cfg.m, st, xs.len(), &[])?
+            GridHistogram::from_shards(self.cfg.m, st, plan.d, &[])
+                .map_err(|e| FleetFailure::Hard(e.into()))?
         } else {
             for (k, (_, wr)) in conns.iter_mut().enumerate() {
-                send(
-                    wr,
-                    &Msg::ShardHistRequest {
-                        task_id,
-                        m: self.cfg.m as u64,
-                        lo: st.lo,
-                        hi: st.hi,
-                        base,
-                    },
-                )
-                .with_context(|| format!("requesting counts from shard {k}"))?;
+                let req = Msg::ShardHistRequest {
+                    task_id,
+                    m: self.cfg.m as u64,
+                    lo: st.lo,
+                    hi: st.hi,
+                    base,
+                };
+                if let Err(e) = send(wr, &req) {
+                    return Err(io_fault(k, "requesting counts", &e));
+                }
             }
             let mut weights: Vec<Vec<f64>> = Vec::with_capacity(conns.len());
             for (k, (rd, _)) in conns.iter_mut().enumerate() {
-                match recv(rd)?.with_context(|| format!("shard node {k} closed"))? {
-                    Msg::ShardWeights { task_id: t, weights: w } if t == task_id => {
-                        anyhow::ensure!(
-                            w.len() == self.cfg.m + 1,
-                            "shard node {k} returned {} bins, expected {}",
-                            w.len(),
-                            self.cfg.m + 1
-                        );
+                match recv(rd) {
+                    Ok(Some(Msg::ShardWeights { task_id: t, weights: w })) if t == task_id => {
+                        if w.len() != self.cfg.m + 1 {
+                            return Err(node_fault(
+                                k,
+                                FaultKind::Protocol,
+                                format!("{} bins, expected {}", w.len(), self.cfg.m + 1),
+                            ));
+                        }
                         weights.push(w);
                     }
-                    other => bail!("shard node {k}: expected ShardWeights, got {}", other.kind()),
+                    Ok(Some(other)) => {
+                        return Err(node_fault(
+                            k,
+                            FaultKind::Protocol,
+                            format!("expected ShardWeights, got {}", other.kind()),
+                        ));
+                    }
+                    Ok(None) => {
+                        return Err(node_fault(k, FaultKind::Disconnected, "closed".into()));
+                    }
+                    Err(e) => return Err(io_fault(k, "awaiting counts", &e)),
                 }
             }
-            GridHistogram::from_shards(self.cfg.m, st, xs.len(), &weights)?
+            GridHistogram::from_shards(self.cfg.m, st, plan.d, &weights)
+                .map_err(|e| FleetFailure::Hard(e.into()))?
         };
-        let sol = solve_on(&h, s, self.cfg.inner)?;
+        let sol = solve_on(&h, s, self.cfg.inner).map_err(|e| FleetFailure::Hard(e.into()))?;
 
-        // Phase 3: broadcast the levels, collect the byte-aligned payloads.
-        let qbase = rng.next_u64();
+        // Phase 3: broadcast the levels, collect the byte-aligned
+        // payloads. The quantize base was fixed before any attempt ran.
         for (k, (_, wr)) in conns.iter_mut().enumerate() {
-            send(wr, &Msg::ShardEncodeRequest { task_id, levels: sol.q.clone(), qbase })
-                .with_context(|| format!("requesting encode from shard {k}"))?;
+            let req = Msg::ShardEncodeRequest { task_id, levels: sol.q.clone(), qbase };
+            if let Err(e) = send(wr, &req) {
+                return Err(io_fault(k, "requesting encode", &e));
+            }
         }
         let bits = sq::codec::bits_for(sol.q.len());
         let mut parts: Vec<CompressedVec> = Vec::with_capacity(conns.len());
         for (k, (rd, _)) in conns.iter_mut().enumerate() {
-            match recv(rd)?.with_context(|| format!("shard node {k} closed"))? {
-                Msg::ShardPayload { task_id: t, d, payload } if t == task_id => {
-                    anyhow::ensure!(
-                        d as usize == slices[k].len(),
-                        "shard node {k} covered {d} of {} coordinates",
-                        slices[k].len()
-                    );
-                    let want = sq::codec::packed_len(d as usize, bits);
-                    anyhow::ensure!(
-                        payload.len() == want,
-                        "shard node {k} returned a {}-byte payload, expected {want}",
-                        payload.len()
-                    );
+            match recv(rd) {
+                Ok(Some(Msg::ShardPayload { task_id: t, d, payload })) if t == task_id => {
+                    let want_d = slices[k].len();
+                    let want = sq::codec::packed_len(want_d, bits);
+                    if usize::try_from(d).ok() != Some(want_d) || payload.len() != want {
+                        return Err(node_fault(
+                            k,
+                            FaultKind::Protocol,
+                            format!(
+                                "payload covers {d} coords / {} bytes, expected \
+                                 {want_d} / {want}",
+                                payload.len()
+                            ),
+                        ));
+                    }
                     parts.push(CompressedVec { d, q: sol.q.clone(), bits, payload });
                 }
-                other => bail!("shard node {k}: expected ShardPayload, got {}", other.kind()),
+                Ok(Some(other)) => {
+                    return Err(node_fault(
+                        k,
+                        FaultKind::Protocol,
+                        format!("expected ShardPayload, got {}", other.kind()),
+                    ));
+                }
+                Ok(None) => {
+                    return Err(node_fault(k, FaultKind::Disconnected, "closed".into()));
+                }
+                Err(e) => return Err(io_fault(k, "awaiting payload", &e)),
             }
         }
         Ok((sol, sq::assemble(&parts)))
     }
+}
+
+/// Why one fleet attempt failed: nodes to drop and re-plan around, or a
+/// hard (input/solver) error that no amount of retrying fixes.
+enum FleetFailure {
+    /// Indices (into the attempt's alive list) of faulted nodes.
+    Nodes(Vec<usize>),
+    /// Not a node's fault — propagate to the caller as-is.
+    Hard(anyhow::Error),
 }
 
 /// A standalone TCP shard node: accepts coordinator connections and
@@ -451,9 +653,23 @@ pub struct ShardNode {
 }
 
 impl ShardNode {
+    /// Default per-connection read/write deadline: generous enough for
+    /// any in-flight phase, bounded so a wedged coordinator can never
+    /// pin a session's shard data forever.
+    pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(120);
+
     /// Bind and start the accept loop (`host:port`; port 0 picks a free
-    /// one).
+    /// one) with the default connection deadline.
     pub fn start(addr: &str) -> Result<Self> {
+        Self::start_with(addr, Self::DEFAULT_IO_TIMEOUT)
+    }
+
+    /// [`start`](Self::start) with an explicit per-connection read/write
+    /// deadline ([`Duration::ZERO`] disables; CLI: `--io-timeout-ms`). A
+    /// connection idle past the deadline is dropped, which frees its
+    /// sessions — coordinators open fresh connections per task, so the
+    /// only peers this cuts off are dead ones.
+    pub fn start_with(addr: &str, io_timeout: Duration) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?.to_string();
@@ -462,8 +678,8 @@ impl ShardNode {
         let join = std::thread::Builder::new()
             .name("avq-shard-node".into())
             .spawn(move || {
-                super::run_accept_loop(&listener, &stop2, |stream| {
-                    std::thread::spawn(move || handle_shard_conn(stream));
+                super::run_accept_loop(&listener, &stop2, move |stream| {
+                    std::thread::spawn(move || handle_shard_conn(stream, io_timeout));
                 });
             })?;
         Ok(Self { addr, stop, join: Some(join) })
@@ -486,10 +702,13 @@ impl ShardNode {
 
 /// One coordinator connection: a session of tasks keyed by `task_id`,
 /// each holding the shard data and chunk offset between phases. Malformed
-/// phase sequences (unknown task, degenerate grid, empty level set) drop
-/// the connection rather than panic — the coordinator surfaces the closed
-/// socket as an error.
-fn handle_shard_conn(stream: TcpStream) {
+/// phase sequences (unknown task, degenerate grid, empty level set) and
+/// expired I/O deadlines drop the connection rather than panic — the
+/// coordinator surfaces the closed socket as a typed fault.
+fn handle_shard_conn(stream: TcpStream, io_timeout: Duration) {
+    if fault::io_timeouts(&stream, io_timeout).is_err() {
+        return;
+    }
     let mut wr = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -652,6 +871,25 @@ mod tests {
             assert_eq!(got.grid, want.grid, "shards={shards}");
             assert_eq!(got.norm2_sq.to_bits(), want.norm2_sq.to_bits());
         }
+    }
+
+    #[test]
+    fn compress_with_bases_matches_compress_bitwise() {
+        // The degraded-mode fallback path (explicit bases) must reproduce
+        // the normal compress exactly when fed the same base and qbase —
+        // this is what makes fleet exhaustion bit-invisible.
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 0.7 }.sample_vec(4000, 11);
+        let coord = ShardCoordinator::new(ShardConfig { shards: 2, m: 96, ..Default::default() });
+        let mut rng = Xoshiro256pp::seed_from_u64(0xC0FFEE);
+        let (sol_a, c_a) = coord.compress(&xs, 8, &mut rng).unwrap();
+        let mut hist_rng = Xoshiro256pp::seed_from_u64(coord.cfg.seed);
+        let base = hist_rng.next_u64();
+        let mut rng2 = Xoshiro256pp::seed_from_u64(0xC0FFEE);
+        let qbase = rng2.next_u64();
+        let (sol_b, c_b) = coord.compress_with_bases(&xs, 8, base, qbase).unwrap();
+        assert_eq!(sol_a.q_idx, sol_b.q_idx);
+        assert_eq!(c_a.payload, c_b.payload);
+        assert_eq!(c_a.q, c_b.q);
     }
 
     #[test]

@@ -3,10 +3,10 @@
 //! solver, and submits.
 
 use std::io::BufReader;
-use std::net::TcpStream;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
+use super::fault::{self, FleetConfig};
 use super::protocol::{recv, send, Msg};
 use super::router::Router;
 use crate::sq;
@@ -41,6 +41,10 @@ pub struct WorkerConfig {
     /// exactly. `None` (the classic mode) routes every gradient from
     /// scratch.
     pub stream: Option<StreamTuning>,
+    /// Network deadlines and retry budget for the server connection
+    /// (connect timeout, per-socket read/write timeouts, bounded
+    /// deterministic connect retry — DESIGN.md rule 7).
+    pub net: FleetConfig,
 }
 
 /// Worker-side statistics.
@@ -65,8 +69,11 @@ pub fn run_worker(
     cfg: WorkerConfig,
     mut source: impl GradSource,
 ) -> Result<WorkerStats> {
-    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    stream.set_nodelay(true).ok();
+    // Deadlined connect with bounded deterministic retry; the returned
+    // socket already carries the configured read/write timeouts, so a
+    // wedged server surfaces as a typed timeout error, never a hang.
+    let fstats = fault::FaultStats::default();
+    let stream = fault::connect_retry(addr, &cfg.net, &fstats).map_err(anyhow::Error::new)?;
     let mut wr = stream.try_clone()?;
     let mut rd = BufReader::new(stream);
     send(&mut wr, &Msg::Hello { worker_id: cfg.id })?;
@@ -261,6 +268,13 @@ mod tests {
             router: Router::default(),
             seed: 0,
             stream: None,
+            // Keep the test fast: one retry, short timeouts.
+            net: FleetConfig {
+                connect_timeout: std::time::Duration::from_millis(200),
+                retries: 1,
+                retry_backoff: std::time::Duration::from_millis(1),
+                ..FleetConfig::default()
+            },
         };
         // Port 1 is never listening.
         assert!(run_worker("127.0.0.1:1", cfg, Nope).is_err());

@@ -9,7 +9,8 @@
 //!                   [--stream true] [--drift-threshold T] [--drift-reuse T] [--drift-warm T]
 //! quiver client     --addr HOST:PORT --d 100000 --s 16 [--tenant-class N] [--deadline-ms MS]
 //!                   [--stream-id ID [--round R | --stream-rounds K]]
-//! quiver shard-node [--addr 127.0.0.1:7171]
+//!                   [--retries N] [--retry-backoff-ms MS]
+//! quiver shard-node [--addr 127.0.0.1:7171] [--io-timeout-ms MS]
 //! quiver train      [--workers 4] [--rounds 50] [--s 16] [--lr 0.05]
 //!                   [--stream true] [--drift-threshold T] [--shards N] [--start-round R]
 //! ```
@@ -21,6 +22,18 @@
 //! `QUIVER_BACKEND`) to pick between the persistent worker pool (default)
 //! and per-call scoped spawning; results are identical for any value of
 //! either (see `quiver::par` and `DESIGN.md`).
+//!
+//! Every networked subcommand also takes the fleet fault-tolerance knobs
+//! (DESIGN.md rule 7): `--connect-timeout-ms MS` and `--io-timeout-ms
+//! MS` deadline every socket (0 disables the io deadline), `--retries N`
+//! bounds the deterministic retry budget, `--retry-backoff-ms MS` seeds
+//! the jitter-free doubling backoff, and `--breaker-threshold N` /
+//! `--breaker-cooldown N` tune the per-node circuit breaker.
+//! `solve --shard-nodes ...`
+//! additionally re-plans the sharded solve over surviving nodes when one
+//! dies (bit-identical results, see `quiver::coordinator::fault`) and
+//! prints the `fault=/retry=/breaker=/fallback=` recovery counters when
+//! any recovery happened.
 //!
 //! `serve` additionally takes `--batch-small-d N` (jobs with dimension
 //! ≤ N ride the multi-tenant batched dispatch — one pool handoff per
@@ -56,10 +69,11 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 use quiver::avq::{self, SolverKind};
 use quiver::config::Config;
+use quiver::coordinator::fault::{FleetConfig, FleetState};
 use quiver::coordinator::router::{Router, RouterConfig};
 use quiver::coordinator::server::{Server, ServerConfig};
 use quiver::coordinator::service::{
-    compress_remote_stream_with, compress_remote_with, Service, ServiceConfig,
+    compress_remote_retry, compress_remote_stream_retry, Service, ServiceConfig,
     StreamServiceConfig,
 };
 use quiver::coordinator::shard::{ShardConfig, ShardCoordinator, ShardNode};
@@ -205,7 +219,16 @@ fn cmd_solve_sharded(
         let (sol, c) = coord.compress(&xs, s, &mut qrng)?;
         (sol, c, "in-process".to_string())
     } else {
-        let (sol, c) = coord.compress_remote(&shard_nodes, &xs, s, &mut qrng)?;
+        // Fault-tolerant fleet path: deadlines + bounded retry +
+        // degraded-mode re-planning, with the fault counters reported
+        // below (bit-identical results on every recovery path).
+        let net = parse_fleet(cfg)?;
+        let state = FleetState::new(&net);
+        let (sol, c) = coord.compress_remote_ft(&shard_nodes, &xs, s, &mut qrng, &net, &state)?;
+        let (f, r, b, l) = state.stats.snapshot();
+        if f + r + b + l > 0 {
+            println!("fleet recovery: {}", state.stats.summary());
+        }
         (sol, c, format!("nodes [{}]", shard_nodes.join(", ")))
     };
     let dt = t0.elapsed();
@@ -226,7 +249,10 @@ fn cmd_solve_sharded(
 /// `quiver::coordinator::shard`): serves the scan/count/encode phases for
 /// any coordinator that connects, e.g. `quiver solve --shard-nodes ...`.
 fn cmd_shard_node(cfg: &Config) -> Result<()> {
-    let node = ShardNode::start(&cfg.get_or("addr", "127.0.0.1:7171"))?;
+    let io_timeout = Duration::from_millis(
+        cfg.u64_or("io_timeout_ms", ShardNode::DEFAULT_IO_TIMEOUT.as_millis() as u64)?,
+    );
+    let node = ShardNode::start_with(&cfg.get_or("addr", "127.0.0.1:7171"), io_timeout)?;
     println!("quiver shard node listening on {}", node.addr());
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -248,6 +274,35 @@ fn cmd_figure(id: &str, cfg: &Config) -> Result<()> {
         println!("saved {}", path.display());
     }
     Ok(())
+}
+
+/// Parse the fleet fault-tolerance knobs shared by every networked
+/// subcommand (DESIGN.md rule 7): `--connect-timeout-ms` and
+/// `--io-timeout-ms` deadline every socket (0 disables the io deadline),
+/// `--retries N` bounds the deterministic retry budget,
+/// `--retry-backoff-ms MS` seeds the jitter-free doubling backoff, and
+/// `--breaker-threshold N` / `--breaker-cooldown N` tune the per-node
+/// circuit breaker (consecutive faults to open / skips until the
+/// half-open probe).
+fn parse_fleet(cfg: &Config) -> Result<FleetConfig> {
+    let d = FleetConfig::default();
+    let u32_or = |key: &str, def: u32| -> Result<u32> {
+        Ok(cfg.u64_or(key, u64::from(def))?.min(u64::from(u32::MAX)) as u32)
+    };
+    Ok(FleetConfig {
+        connect_timeout: Duration::from_millis(
+            cfg.u64_or("connect_timeout_ms", d.connect_timeout.as_millis() as u64)?,
+        ),
+        io_timeout: Duration::from_millis(
+            cfg.u64_or("io_timeout_ms", d.io_timeout.as_millis() as u64)?,
+        ),
+        retries: u32_or("retries", d.retries)?,
+        retry_backoff: Duration::from_millis(
+            cfg.u64_or("retry_backoff_ms", d.retry_backoff.as_millis() as u64)?,
+        ),
+        breaker_threshold: u32_or("breaker_threshold", d.breaker_threshold)?,
+        breaker_cooldown: u32_or("breaker_cooldown", d.breaker_cooldown)?,
+    })
 }
 
 /// Parse the streaming knobs shared by `serve` and `train`:
@@ -298,6 +353,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         admission: cfg.usize_or("admission", 1)?,
         stream,
         shed_expired: cfg.bool_or("shed_expired", false)?,
+        io_timeout: parse_fleet(cfg)?.io_timeout,
     })?;
     println!("quiver compression service listening on {}", service.addr());
     let period = cfg.u64_or("stats_secs", 10)?;
@@ -320,6 +376,9 @@ fn cmd_client(cfg: &Config) -> Result<()> {
     // too (and a deadline makes a round sheddable under --shed-expired).
     let class = cfg.usize_or("tenant_class", 0)?.min(u8::MAX as usize) as u8;
     let deadline_ms = cfg.u64_or("deadline_ms", 0)?.min(u32::MAX as u64) as u32;
+    // Bounded retry on Busy/transport faults: `--retries N
+    // --retry-backoff-ms MS` (plus the connect/io deadline flags).
+    let net = parse_fleet(cfg)?;
     // Streaming session: send round(s) keyed by --stream-id.
     if let Some(stream_id) = cfg.get("stream_id") {
         let stream_id: u64 =
@@ -339,8 +398,8 @@ fn cmd_client(cfg: &Config) -> Result<()> {
                 .map(|x| x as f32)
                 .collect();
             let t0 = std::time::Instant::now();
-            let reply = compress_remote_stream_with(
-                &addr, round, stream_id, round, s, class, deadline_ms, &data,
+            let reply = compress_remote_stream_retry(
+                &addr, round, stream_id, round, s, class, deadline_ms, &data, &net,
             )?;
             let rtt = t0.elapsed();
             match reply {
@@ -368,7 +427,9 @@ fn cmd_client(cfg: &Config) -> Result<()> {
                 }
                 quiver::coordinator::protocol::Msg::Busy { .. } => {
                     println!(
-                        "round {round}: service busy (no --stream on the server, or overload)"
+                        "round {round}: service busy after {} attempt(s) (no --stream on \
+                         the server, or overload)",
+                        net.retries + 1
                     );
                 }
                 other => bail!("unexpected reply {other:?}"),
@@ -378,7 +439,7 @@ fn cmd_client(cfg: &Config) -> Result<()> {
     }
     let data: Vec<f32> = dist.sample_vec(d, seed).into_iter().map(|x| x as f32).collect();
     let t0 = std::time::Instant::now();
-    let reply = compress_remote_with(&addr, 1, s, class, deadline_ms, &data)?;
+    let reply = compress_remote_retry(&addr, 1, s, class, deadline_ms, &data, &net)?;
     let rtt = t0.elapsed();
     match reply {
         quiver::coordinator::protocol::Msg::CompressReply {
@@ -394,7 +455,10 @@ fn cmd_client(cfg: &Config) -> Result<()> {
             );
         }
         quiver::coordinator::protocol::Msg::Busy { .. } => {
-            println!("service busy (backpressure) — retry later");
+            println!(
+                "service busy after {} attempt(s) (backpressure) — retry later",
+                net.retries + 1
+            );
         }
         other => bail!("unexpected reply {other:?}"),
     }
@@ -417,6 +481,7 @@ fn cmd_train(cfg: &Config) -> Result<()> {
     let stream_cfg: Option<StreamTuning> =
         if cfg.bool_or("stream", false)? { Some(parse_tuning(cfg)?) } else { None };
     let shards = cfg.usize_or("shards", 1)?.max(1);
+    let net = parse_fleet(cfg)?;
 
     let runtime = RuntimeHandle::spawn(&artifacts)?;
     runtime.warmup("model_grad")?;
@@ -435,6 +500,7 @@ fn cmd_train(cfg: &Config) -> Result<()> {
         dim: MODEL_DIM,
         lr,
         round_timeout: Duration::from_secs(120),
+        io_timeout: net.io_timeout,
         ..Default::default()
     })?;
     let addr = server.addr()?;
@@ -449,6 +515,7 @@ fn cmd_train(cfg: &Config) -> Result<()> {
                 router: Router::new(RouterConfig { shards, ..RouterConfig::default() }),
                 seed: 7000 + w as u64,
                 stream: stream_cfg,
+                net,
             };
             let source = RuntimeGradSource::new(rt, 1234, 500 + w as u64);
             run_worker(&addr, cfg, source)

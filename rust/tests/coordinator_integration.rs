@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use quiver::coordinator::fault::FleetConfig;
 use quiver::coordinator::protocol::Msg;
 use quiver::coordinator::router::{Router, RouterConfig};
 use quiver::coordinator::server::{Server, ServerConfig};
@@ -48,6 +49,7 @@ fn federated_round_trip_converges() {
                 router: Router::default(),
                 seed: 1000 + w as u64,
                 stream: None,
+                net: FleetConfig::default(),
             };
             let toy = QuadraticToy::new(target, 0.01, 2000 + w as u64);
             run_worker(&addr, cfg, toy).expect("worker")
@@ -103,8 +105,14 @@ fn server_survives_dead_worker_with_timeout() {
     // Worker 0: healthy.
     let a0 = addr.clone();
     let healthy = std::thread::spawn(move || {
-        let cfg =
-            WorkerConfig { id: 0, s: 4, router: Router::default(), seed: 1, stream: None };
+        let cfg = WorkerConfig {
+            id: 0,
+            s: 4,
+            router: Router::default(),
+            seed: 1,
+            stream: None,
+            net: FleetConfig::default(),
+        };
         let toy = QuadraticToy::new(vec![1.0; 50], 0.0, 2);
         // May error when the server aborts early — either way it must return.
         let _ = run_worker(&a0, cfg, toy);
@@ -443,6 +451,7 @@ fn run_train(shards: usize, stream: bool) -> (Vec<f32>, Vec<usize>, Vec<WorkerSt
                     drift_warm_max: 10.0, // converging gradients drift hard
                     ..StreamTuning::default()
                 }),
+                net: FleetConfig::default(),
             };
             let toy = QuadraticToy::new(target, 0.0, 2000 + w as u64);
             run_worker(&addr, cfg, toy).expect("worker")

@@ -1,0 +1,292 @@
+//! Chaos suite: every [`FaultAction`] driven against a live shard fleet
+//! through the deterministic fault proxy (`coordinator::faultnet`).
+//!
+//! The contract under test (DESIGN.md rule 7): whatever the failure —
+//! refused connect, mid-phase kill, stall, truncated frame, corrupt
+//! frame — the fault-tolerant coordinator either recovers a result that
+//! is **bitwise identical** to the healthy single-process run, or fails
+//! with a clean typed error, always before the configured deadlines.
+//! Never a hang, never silently wrong bits, and the caller's RNG
+//! advances identically on every path (so recovery is invisible to
+//! everything downstream).
+
+use std::time::{Duration, Instant};
+
+use quiver::coordinator::fault::{FleetConfig, FleetState};
+use quiver::coordinator::faultnet::{FaultAction, FaultProxy, FaultSchedule};
+use quiver::coordinator::shard::{ShardConfig, ShardCoordinator, ShardNode};
+use quiver::dist::Dist;
+use quiver::util::rng::Xoshiro256pp;
+
+const S: usize = 8;
+/// Seed of the caller-side quantize RNG — shared by the reference run and
+/// every fleet run so bit-equality is meaningful.
+const SEED: u64 = 0xFA17;
+
+/// A chunk-crossing input, so re-planning actually moves chunk ranges
+/// between nodes (the invariance being exercised).
+fn sample() -> Vec<f64> {
+    Dist::LogNormal { mu: 0.0, sigma: 0.8 }.sample_vec(2 * quiver::par::CHUNK + 345, 21)
+}
+
+fn coord() -> ShardCoordinator {
+    ShardCoordinator::new(ShardConfig { m: 96, ..Default::default() })
+}
+
+/// Short deadlines and a small retry budget: every fault class must
+/// resolve in seconds, not default-production minutes.
+fn short_net() -> FleetConfig {
+    FleetConfig {
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_millis(1000),
+        retries: 1,
+        retry_backoff: Duration::from_millis(10),
+        ..Default::default()
+    }
+}
+
+/// An address that refuses connections: bind an ephemeral port, then
+/// drop the listener.
+fn dead_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().to_string()
+}
+
+/// `schedules.len()` shard nodes, each behind its own fault proxy.
+struct Fleet {
+    nodes: Vec<ShardNode>,
+    proxies: Vec<FaultProxy>,
+}
+
+impl Fleet {
+    fn start(schedules: Vec<FaultSchedule>) -> Self {
+        let (mut nodes, mut proxies) = (Vec::new(), Vec::new());
+        for schedule in schedules {
+            let node = ShardNode::start("127.0.0.1:0").unwrap();
+            let proxy = FaultProxy::start(node.addr(), schedule).unwrap();
+            nodes.push(node);
+            proxies.push(proxy);
+        }
+        Self { nodes, proxies }
+    }
+
+    fn addrs(&self) -> Vec<String> {
+        self.proxies.iter().map(|p| p.addr().to_string()).collect()
+    }
+
+    fn shutdown(self) {
+        for p in self.proxies {
+            p.shutdown();
+        }
+        for n in self.nodes {
+            n.shutdown();
+        }
+    }
+}
+
+/// The healthy single-process run every recovery must reproduce.
+fn reference(xs: &[f64]) -> (quiver::avq::Solution, quiver::sq::CompressedVec) {
+    let mut rng = Xoshiro256pp::seed_from_u64(SEED);
+    coord().compress(xs, S, &mut rng).unwrap()
+}
+
+/// Drive the fleet path and assert the full recovery contract: same bits
+/// as the healthy reference, bounded wall clock, and exactly one caller
+/// RNG draw consumed.
+fn assert_recovers_bitwise(addrs: &[String], xs: &[f64], net: &FleetConfig, state: &FleetState) {
+    let (want_sol, want_c) = reference(xs);
+    let mut rng = Xoshiro256pp::seed_from_u64(SEED);
+    let t0 = Instant::now();
+    let (sol, c) = coord()
+        .compress_remote_ft(addrs, xs, S, &mut rng, net, state)
+        .expect("fleet must recover");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "recovery must beat the deadline, took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(sol.q_idx, want_sol.q_idx, "recovered level set must match");
+    assert_eq!(c, want_c, "recovered bits must be identical to the healthy run");
+    let mut ref_rng = Xoshiro256pp::seed_from_u64(SEED);
+    let _ = ref_rng.next_u64();
+    assert_eq!(
+        rng.next_u64(),
+        ref_rng.next_u64(),
+        "fleet path must consume exactly one caller draw, like the healthy path"
+    );
+}
+
+#[test]
+fn connect_refused_node_replans_bitwise() {
+    let fleet = Fleet::start(vec![FaultSchedule::transparent(); 2]);
+    let mut addrs = vec![dead_addr()];
+    addrs.extend(fleet.addrs());
+    let xs = sample();
+    let net = short_net();
+    let state = FleetState::new(&net);
+    assert_recovers_bitwise(&addrs, &xs, &net, &state);
+    let (faults, retries, _, fallbacks) = state.stats.snapshot();
+    assert!(faults >= 1, "the refused connect must be counted as a fault");
+    assert!(retries >= 1, "connect retry and/or re-plan must be counted");
+    assert_eq!(fallbacks, 0, "two healthy nodes remain — no local fallback");
+    fleet.shutdown();
+}
+
+#[test]
+fn mid_phase_drop_replans_bitwise_over_survivors() {
+    // Node 0 dies *mid-task*: it serves the scan reply (one frame), then
+    // the connection drops before the histogram phase — the degraded-mode
+    // equivalence case (kill 1 of 3 after phase 1).
+    let fleet = Fleet::start(vec![
+        FaultSchedule::all(FaultAction::DropAfterFrames(1)),
+        FaultSchedule::transparent(),
+        FaultSchedule::transparent(),
+    ]);
+    let xs = sample();
+    let net = short_net();
+    let state = FleetState::new(&net);
+    assert_recovers_bitwise(&fleet.addrs(), &xs, &net, &state);
+    let (faults, retries, _, fallbacks) = state.stats.snapshot();
+    assert!(faults >= 1, "the mid-phase drop must be counted");
+    assert!(retries >= 1, "the re-plan must be counted");
+    assert_eq!(fallbacks, 0);
+    fleet.shutdown();
+}
+
+#[test]
+fn stalled_node_times_out_and_replans_bitwise() {
+    // Node 1 accepts, then goes silent holding the connection open: only
+    // the io deadline can unblock the coordinator.
+    let fleet = Fleet::start(vec![
+        FaultSchedule::transparent(),
+        FaultSchedule::all(FaultAction::StallAfterFrames(0)),
+        FaultSchedule::transparent(),
+    ]);
+    let xs = sample();
+    let net = short_net();
+    let state = FleetState::new(&net);
+    assert_recovers_bitwise(&fleet.addrs(), &xs, &net, &state);
+    let (faults, ..) = state.stats.snapshot();
+    assert!(faults >= 1, "the stall must surface as a classified timeout fault");
+    fleet.shutdown();
+}
+
+#[test]
+fn truncated_frame_replans_bitwise() {
+    // Node 2's first reply frame announces its full length but carries
+    // half the bytes: a clean UnexpectedEof, then re-plan.
+    let fleet = Fleet::start(vec![
+        FaultSchedule::transparent(),
+        FaultSchedule::transparent(),
+        FaultSchedule::all(FaultAction::TruncateFrame(0)),
+    ]);
+    let xs = sample();
+    let net = short_net();
+    let state = FleetState::new(&net);
+    assert_recovers_bitwise(&fleet.addrs(), &xs, &net, &state);
+    let (faults, ..) = state.stats.snapshot();
+    assert!(faults >= 1, "the truncated frame must be counted");
+    fleet.shutdown();
+}
+
+#[test]
+fn corrupt_frame_fails_loudly_and_replans_bitwise() {
+    // Node 0's first reply frame arrives with a poisoned tag byte: the
+    // codec must reject it (InvalidData) — corruption is never allowed to
+    // decode into silently wrong statistics.
+    let fleet = Fleet::start(vec![
+        FaultSchedule::all(FaultAction::CorruptFrame(0)),
+        FaultSchedule::transparent(),
+        FaultSchedule::transparent(),
+    ]);
+    let xs = sample();
+    let net = short_net();
+    let state = FleetState::new(&net);
+    assert_recovers_bitwise(&fleet.addrs(), &xs, &net, &state);
+    let (faults, ..) = state.stats.snapshot();
+    assert!(faults >= 1, "the corrupt frame must be counted");
+    fleet.shutdown();
+}
+
+#[test]
+fn slow_but_correct_fleet_needs_no_recovery() {
+    // Per-frame delay well under the io deadline: the run is slower but
+    // fault-free, and of course bit-identical.
+    let fleet = Fleet::start(vec![FaultSchedule::all(FaultAction::DelayMs(25)); 3]);
+    let xs = sample();
+    let net = short_net();
+    let state = FleetState::new(&net);
+    assert_recovers_bitwise(&fleet.addrs(), &xs, &net, &state);
+    assert_eq!(
+        state.stats.snapshot(),
+        (0, 0, 0, 0),
+        "a slow-but-correct fleet must not be charged any fault"
+    );
+    fleet.shutdown();
+}
+
+#[test]
+fn exhausted_fleet_falls_back_locally_bitwise() {
+    // Every node is dead: after the bounded retries the coordinator must
+    // fall back to the in-process solve — same bits, counted as a
+    // fallback, still no hang.
+    let addrs = vec![dead_addr(), dead_addr()];
+    let xs = sample();
+    let net = FleetConfig { retries: 0, ..short_net() };
+    let state = FleetState::new(&net);
+    assert_recovers_bitwise(&addrs, &xs, &net, &state);
+    let (faults, _, _, fallbacks) = state.stats.snapshot();
+    assert!(faults >= 2, "both dead nodes must be counted");
+    assert_eq!(fallbacks, 1, "exactly one local fallback");
+}
+
+#[test]
+fn breaker_skips_persistently_dead_node_across_calls() {
+    // A shared FleetState across calls: the dead node is charged until
+    // the breaker opens, after which calls skip it up front (no connect
+    // latency) and still produce identical bits from the survivor.
+    let fleet = Fleet::start(vec![FaultSchedule::transparent()]);
+    let mut addrs = vec![dead_addr()];
+    addrs.extend(fleet.addrs());
+    let xs = sample();
+    let net = FleetConfig {
+        retries: 0,
+        breaker_threshold: 2,
+        breaker_cooldown: 100, // far beyond this test: no half-open probe
+        ..short_net()
+    };
+    let state = FleetState::new(&net);
+    for call in 0..4 {
+        assert_recovers_bitwise(&addrs, &xs, &net, &state);
+        let (_, _, skips, _) = state.stats.snapshot();
+        if call < 2 {
+            assert_eq!(skips, 0, "breaker must stay closed below the threshold");
+        }
+    }
+    let (faults, _, skips, fallbacks) = state.stats.snapshot();
+    assert_eq!(faults, 2, "charged only until the breaker opened");
+    assert_eq!(skips, 2, "calls 3 and 4 skip the dead node up front");
+    assert_eq!(fallbacks, 0);
+    fleet.shutdown();
+}
+
+#[test]
+fn non_finite_input_is_a_fast_typed_error_not_a_node_fault() {
+    // A hard input error through a healthy fleet: no amount of retrying
+    // fixes NaN, so it must come back as an error immediately, with no
+    // node charged and no fallback attempted.
+    let fleet = Fleet::start(vec![FaultSchedule::transparent(); 2]);
+    let mut xs = sample();
+    xs[quiver::par::CHUNK + 3] = f64::NAN;
+    let net = short_net();
+    let state = FleetState::new(&net);
+    let mut rng = Xoshiro256pp::seed_from_u64(SEED);
+    let t0 = Instant::now();
+    let err = coord()
+        .compress_remote_ft(&fleet.addrs(), &xs, S, &mut rng, &net, &state)
+        .expect_err("NaN input must fail");
+    assert!(t0.elapsed() < Duration::from_secs(30));
+    assert!(err.to_string().contains("non-finite"), "typed cause: {err:#}");
+    assert_eq!(state.stats.snapshot(), (0, 0, 0, 0), "hard errors charge no node");
+    fleet.shutdown();
+}

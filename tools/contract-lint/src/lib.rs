@@ -1,10 +1,10 @@
 //! The determinism/safety contract as machine-checkable rules.
 //!
-//! `quiver`'s bitwise-determinism contract (DESIGN.md rules 1–6) is
+//! `quiver`'s bitwise-determinism contract (DESIGN.md rules 1–7) is
 //! enforced dynamically by the invariance test suites; this crate is the
 //! static half: a dependency-free lexer plus a line-based syntax walk over
 //! `rust/src/**` that rejects contract-violating *code shapes* at CI time.
-//! Five rules, stable IDs:
+//! Six rules, stable IDs:
 //!
 //! - **C1** — RNG roots (`Xoshiro256pp::new` / `seed_from_u64` /
 //!   `from_seed`) may appear only in allow-listed derivation sites
@@ -29,6 +29,13 @@
 //!   Capacities that cannot be wire-controlled are exempt: function
 //!   *definitions* (`fn with_capacity(…)`), integer-literal capacities,
 //!   and capacities derived from `.len()` of data already in memory.
+//! - **C6** — no unbounded blocking I/O in `coordinator`: a raw
+//!   `TcpStream::connect(` (no deadline — use
+//!   `fault::connect`/`connect_timeout`) is always an error, and every
+//!   `BufReader::new(` over a socket must sit near a visible deadline
+//!   guard ([`C6_GUARDS`], within [`C6_BEFORE`]/[`C6_AFTER`] lines) — a
+//!   reader on an undeadlined socket can park a thread forever on one
+//!   wedged peer (DESIGN.md rule 7).
 //!
 //! Any rule can be waived per site with `// contract-allow(Cn): reason`
 //! (same line or the line above). Waivers are not free: the linter records
@@ -39,8 +46,8 @@
 //!
 //! The lexer strips comments, strings and char literals (so tokens inside
 //! them never match) and tracks `#[cfg(test)]` / `#[test]` regions by brace
-//! depth: C1/C2/C3/C5 skip test code (tests seed RNGs and build fixtures
-//! freely), C4 applies everywhere. This is a *lexical* checker by design:
+//! depth: C1/C2/C3/C5/C6 skip test code (tests seed RNGs and build
+//! fixtures freely), C4 applies everywhere. This is a *lexical* checker by design:
 //! it cannot resolve aliases (`use Xoshiro256pp as R`) or dataflow, and
 //! trades those false negatives for zero dependencies and sub-second runs.
 
@@ -64,13 +71,15 @@ pub enum Rule {
     C4,
     /// Wire-length casts/allocations require a nearby bounds check.
     C5,
+    /// No undeadlined blocking sockets in `coordinator`.
+    C6,
 }
 
 impl Rule {
     /// All rules, in ID order.
-    pub const ALL: [Rule; 5] = [Rule::C1, Rule::C2, Rule::C3, Rule::C4, Rule::C5];
+    pub const ALL: [Rule; 6] = [Rule::C1, Rule::C2, Rule::C3, Rule::C4, Rule::C5, Rule::C6];
 
-    /// The stable ID string (`"C1"` … `"C5"`).
+    /// The stable ID string (`"C1"` … `"C6"`).
     pub fn id(self) -> &'static str {
         match self {
             Rule::C1 => "C1",
@@ -78,6 +87,7 @@ impl Rule {
             Rule::C3 => "C3",
             Rule::C4 => "C4",
             Rule::C5 => "C5",
+            Rule::C6 => "C6",
         }
     }
 
@@ -89,6 +99,7 @@ impl Rule {
             "C3" => Some(Rule::C3),
             "C4" => Some(Rule::C4),
             "C5" => Some(Rule::C5),
+            "C6" => Some(Rule::C6),
             _ => None,
         }
     }
@@ -209,8 +220,13 @@ pub const C3_THREADS: &[&str] = &["thread::spawn", "thread::scope", "thread::Bui
 pub const C3_THREAD_EXEMPT: &[&str] = &["par/mod.rs", "par/pool.rs"];
 
 /// Files C5 covers: everything that decodes attacker-controlled bytes.
-pub const C5_FILES: &[&str] =
-    &["coordinator/protocol.rs", "coordinator/codec.rs", "coordinator/shard.rs", "sq/codec.rs"];
+pub const C5_FILES: &[&str] = &[
+    "coordinator/protocol.rs",
+    "coordinator/codec.rs",
+    "coordinator/faultnet.rs",
+    "coordinator/shard.rs",
+    "sq/codec.rs",
+];
 
 /// Tokens that count as a visible bounds check for C5. Substring match
 /// against nearby *code* (comments never count).
@@ -232,6 +248,26 @@ pub const C5_GUARDS: &[&str] = &[
 pub const C5_BEFORE: usize = 6;
 /// C5 guard window: lines searched below a flagged cast/allocation.
 pub const C5_AFTER: usize = 3;
+
+/// C6 banned pattern: a connect with no deadline. (Deliberately does not
+/// match `TcpStream::connect_timeout(`, the sanctioned form.)
+pub const C6_CONNECT: &str = "TcpStream::connect(";
+
+/// C6 reader patterns: blocking readers built over a socket.
+pub const C6_READERS: &[&str] = &["BufReader::new("];
+
+/// Tokens that count as a visible socket deadline for C6. Substring match
+/// against nearby *code* (comments never count). `fault::connect` also
+/// matches `fault::connect_retry`; both return deadlined sockets.
+pub const C6_GUARDS: &[&str] =
+    &["set_read_timeout", "set_write_timeout", "io_timeouts", "fault::connect"];
+
+/// C6 guard window: lines searched above a flagged reader. Wider than
+/// C5's — the deadline guard legitimately sits at the top of a handler,
+/// several declarations above the reader it covers.
+pub const C6_BEFORE: usize = 10;
+/// C6 guard window: lines searched below a flagged reader.
+pub const C6_AFTER: usize = 3;
 
 // ---------------------------------------------------------------------------
 // Lexer
@@ -607,6 +643,7 @@ fn lint_file(
     let numeric = NUMERIC_MODULES.contains(&module);
     let c2_covered = numeric || module == "coordinator";
     let c5_covered = path_allowed(rel, C5_FILES);
+    let c6_covered = module == "coordinator";
 
     // (line index, rule, message), deduped per (line, rule).
     let mut raw: Vec<(usize, Rule, String)> = Vec::new();
@@ -746,6 +783,41 @@ fn lint_file(
                         format!(
                             "{what} on a wire-decoded value with no bounds check within \
                              {C5_BEFORE} lines above / {C5_AFTER} below"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // C6: undeadlined blocking sockets in the coordinator.
+        if c6_covered {
+            if code.contains(C6_CONNECT) {
+                push(
+                    &mut raw,
+                    &mut seen,
+                    idx,
+                    Rule::C6,
+                    "`TcpStream::connect` has no deadline; use `fault::connect` \
+                     (or `TcpStream::connect_timeout`)"
+                        .into(),
+                );
+            }
+            if C6_READERS.iter().any(|p| code.contains(p)) {
+                let lo = idx.saturating_sub(C6_BEFORE);
+                let hi = (idx + C6_AFTER).min(lines.len().saturating_sub(1));
+                let guarded = (lo..=hi).any(|j| {
+                    !lines[j].in_test
+                        && C6_GUARDS.iter().any(|g| lines[j].code.contains(g))
+                });
+                if !guarded {
+                    push(
+                        &mut raw,
+                        &mut seen,
+                        idx,
+                        Rule::C6,
+                        format!(
+                            "blocking reader on a socket with no visible deadline guard \
+                             within {C6_BEFORE} lines above / {C6_AFTER} below"
                         ),
                     );
                 }

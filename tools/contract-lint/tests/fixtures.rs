@@ -17,8 +17,14 @@ fn lint(name: &str, allowlist: Vec<(String, String)>) -> Report {
 
 #[test]
 fn each_rule_fires_on_its_fixture_and_nothing_else() {
-    let cases =
-        [("c1", Rule::C1), ("c2", Rule::C2), ("c3", Rule::C3), ("c4", Rule::C4), ("c5", Rule::C5)];
+    let cases = [
+        ("c1", Rule::C1),
+        ("c2", Rule::C2),
+        ("c3", Rule::C3),
+        ("c4", Rule::C4),
+        ("c5", Rule::C5),
+        ("c6", Rule::C6),
+    ];
     for (name, rule) in cases {
         let rep = lint(name, Vec::new());
         assert!(!rep.findings.is_empty(), "{name}: expected at least one finding");
@@ -44,6 +50,10 @@ fn fixture_findings_point_at_the_bad_lines() {
     let c5 = lint("c5", Vec::new());
     let lines: Vec<usize> = c5.findings.iter().map(|f| f.line).collect();
     assert_eq!(lines, vec![5, 6], "one finding per bad line, deduped per (line, rule)");
+
+    let c6 = lint("c6", Vec::new());
+    let lines: Vec<usize> = c6.findings.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![4, 6], "the raw connect, then the unguarded reader");
 }
 
 #[test]

@@ -1,0 +1,7 @@
+// Fixture: C6 — a raw connect with no deadline, and a blocking reader
+// built on a socket with no timeout guard anywhere nearby.
+pub fn dial(addr: &str) -> std::io::Result<std::io::BufReader<std::net::TcpStream>> {
+    let stream = std::net::TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    Ok(std::io::BufReader::new(stream))
+}
