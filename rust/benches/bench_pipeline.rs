@@ -128,6 +128,78 @@ fn main() {
     par::set_threads(configured);
     t.print();
 
+    // --- SIMD vs scalar chunk kernels. ---
+    // The vectorized kernels are bit-identical to scalar by contract
+    // (tests/simd_parity.rs), so only throughput is compared here. On a
+    // CPU without AVX2 the section benches scalar twice (speedup 1.00x)
+    // instead of vanishing, keeping the JSON schema stable across
+    // machines.
+    {
+        let mut t = Table::new(
+            format!("SIMD vs scalar chunk kernels, d=2^{hot_pow} (speedup = scalar/simd)"),
+            &["kernel", "mode", "median", "elems/s", "speedup"],
+        );
+        let prev_mode = par::simd::simd();
+        let modes = if par::simd::detected_avx2() {
+            vec![par::simd::SimdMode::Scalar, par::simd::SimdMode::Avx2]
+        } else {
+            vec![par::simd::SimdMode::Scalar, par::simd::SimdMode::Scalar]
+        };
+        // Shared fixtures: a dequantize index stream over the s=16 levels,
+        // and a u8-aligned stream (s=256) for the byte-pack fast path.
+        let idx_deq = {
+            let mut rng = Xoshiro256pp::seed_from_u64(11);
+            sq::quantize(&xs, &qs, &mut rng)
+        };
+        let (xlo, xhi) = xs
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+        let qs256: Vec<f64> =
+            (0..256).map(|i| xlo + (xhi - xlo) * i as f64 / 255.0).collect();
+        let idx8 = {
+            let mut rng = Xoshiro256pp::seed_from_u64(23);
+            sq::quantize(&xs, &qs256, &mut rng)
+        };
+        for (kernel, rec_s) in
+            [("fused-scan", 0usize), ("quantize", s), ("dequantize", s), ("pack-u8", 256)]
+        {
+            let mut medians: Vec<f64> = vec![];
+            for &mode in &modes {
+                par::simd::set_simd(mode);
+                let name = format!("{kernel} d=2^{hot_pow} simd={}", mode.name());
+                let st = match kernel {
+                    "fused-scan" => {
+                        benchfw::bench(&name, 1, samples, || par::scan::stats(&xs))
+                    }
+                    "quantize" => benchfw::bench(&name, 1, samples, || {
+                        let mut rng = Xoshiro256pp::seed_from_u64(11);
+                        sq::quantize(&xs, &qs, &mut rng)
+                    }),
+                    "dequantize" => {
+                        benchfw::bench(&name, 1, samples, || sq::dequantize(&idx_deq, &qs))
+                    }
+                    _ => benchfw::bench(&name, 1, samples, || sq::encode(&idx8, &qs256)),
+                };
+                medians.push(st.median().as_secs_f64());
+                let speedup = if medians.len() > 1 {
+                    format!("{:.2}x", medians[0] / medians.last().unwrap())
+                } else {
+                    "1.00x".into()
+                };
+                t.row(vec![
+                    kernel.into(),
+                    mode.name().into(),
+                    benchfw::fmt_duration(st.median()),
+                    format!("{:.3e}", st.throughput(d)),
+                    speedup,
+                ]);
+                records.push(BenchRecord::from_stats(&st, d, rec_s));
+            }
+        }
+        par::simd::set_simd(prev_mode);
+        t.print();
+    }
+
     // --- Spawn-wave vs persistent pool. ---
     // A wave-heavy workload: many back-to-back chunked passes over a
     // mid-size vector, so per-wave overhead (thread spawn+join vs sealed

@@ -7,13 +7,15 @@
 //! minutes; the paper goes to 2^20+).
 //!
 //! Also writes `BENCH_solvers.json` at the repo root: one machine-readable
-//! record per (solver, d) on the LogNormal workload, so the exact-solver
-//! perf trajectory is diffable across commits.
+//! record per (solver, d) on the LogNormal workload — plus the row-parallel
+//! DP section (serial width-1 vs the configured executor, large `s`) — so
+//! the exact-solver perf trajectory is diffable across commits.
 
 use quiver::avq::{self, Prefix, SolverKind};
 use quiver::benchfw::{self, write_bench_json, BenchRecord};
 use quiver::dist::Dist;
 use quiver::figures::{self, FigOpts};
+use quiver::par;
 
 fn main() {
     let max_pow: u32 = std::env::var("QUIVER_MAX_POW")
@@ -61,6 +63,44 @@ fn main() {
             records.push(BenchRecord::from_stats(&st, d, s));
         }
     }
+    // --- Row-parallel DP layers: 1 thread vs the configured width. ---
+    // Each QuiverAccel layer is a SMAWK row-minima solve; above the block
+    // cutoff it fans out over the executor (`avq::smawk::row_minima_blocked`)
+    // with bit-identical minima, so only wall-clock differs. Large budgets
+    // multiply the number of layers — the regime the parallel solve is for.
+    {
+        let configured = par::threads();
+        let pow = max_pow.min(14);
+        let d = 1usize << pow;
+        let xs = dist.sample_sorted(d, 3);
+        let p = Prefix::unweighted(&xs);
+        let widths: Vec<usize> = if configured > 1 { vec![1, configured] } else { vec![1] };
+        for rs in [64usize, 128] {
+            let mut medians: Vec<f64> = vec![];
+            for &w in &widths {
+                par::set_threads(w);
+                let st = benchfw::bench(
+                    &format!("accel-rowpar d=2^{pow} s={rs} t={w}"),
+                    1,
+                    3,
+                    || avq::solve(&p, rs, SolverKind::QuiverAccel).unwrap(),
+                );
+                medians.push(st.median().as_secs_f64());
+                let speedup = if medians.len() > 1 {
+                    format!(" ({:.2}x vs t=1)", medians[0] / medians.last().unwrap())
+                } else {
+                    String::new()
+                };
+                println!(
+                    "accel-rowpar d=2^{pow} s={rs} t={w}: {}{speedup}",
+                    benchfw::fmt_duration(st.median())
+                );
+                records.push(BenchRecord::from_stats(&st, d, rs));
+            }
+        }
+        par::set_threads(configured);
+    }
+
     let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
     let json = write_bench_json(&repo_root.join("BENCH_solvers.json"), &records)
         .expect("write BENCH_solvers.json");

@@ -11,7 +11,7 @@
 //! MSE[3,j] = C₂[1,j],   MSE[2,j] = C[1,j]
 //! ```
 
-use super::smawk::{infeasible, smawk_with_values};
+use super::smawk::{infeasible, row_minima_blocked};
 use super::{Prefix, Solution};
 
 /// Solve via the two-values-per-layer DP. Caller guarantees `2 ≤ s < d` and
@@ -32,15 +32,18 @@ pub fn solve(p: &Prefix, s: usize) -> Solution {
     let mut parents: Vec<Vec<u32>> = Vec::with_capacity(steps);
     for _ in 0..steps {
         let minima = {
+            // Pure reads of the previous layer and the prefix tables, so
+            // the row evaluations are `Fn + Sync` and the layer can run
+            // row-parallel at large `n` (serial below the block cutoff).
             let prev_ref = &prev;
-            let mut f = |j: usize, k: usize| {
+            let f = |j: usize, k: usize| {
                 if k > j {
                     infeasible(k)
                 } else {
                     prev_ref[k] + p.cost2(k, j)
                 }
             };
-            smawk_with_values(n, n, &mut f)
+            row_minima_blocked(n, n, &f)
         };
         let mut cur = vec![0.0f64; n];
         let mut par = vec![0u32; n];

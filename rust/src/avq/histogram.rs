@@ -148,20 +148,29 @@ impl GridHistogram {
             || vec![0.0f64; m + 1],
             |acc, chunk_idx, chunk| {
                 let mut crng = Xoshiro256pp::stream(base, first_chunk + chunk_idx as u64);
-                for &x in chunk {
-                    // Position on the grid in units of Δ.
-                    let t = (x - lo) * inv_delta;
-                    let f = t.floor();
-                    let low_bin = (f as usize).min(m - 1); // guard x == hi
-                    let frac = (t - low_bin as f64).clamp(0.0, 1.0);
-                    // Round up with probability frac — unbiased. Aligned
-                    // coordinates skip the draw (see the stream contract).
-                    let bin = if frac > 0.0 && crng.next_f64() < frac {
-                        low_bin + 1
-                    } else {
-                        low_bin
-                    };
-                    acc[bin] += 1.0;
+                // Strip-mined: the data-independent grid positions (t and
+                // ⌊t⌋, in units of Δ) are computed per block by the SIMD
+                // kernel — elementwise IEEE ops, bit-identical on either
+                // path — while the bin pick and the RNG draw stay scalar
+                // and sequential, so the per-chunk stream is untouched.
+                let mut t_buf = [0.0f64; par::simd::BLOCK];
+                let mut f_buf = [0.0f64; par::simd::BLOCK];
+                for blk in chunk.chunks(par::simd::BLOCK) {
+                    let (ts, fs) = (&mut t_buf[..blk.len()], &mut f_buf[..blk.len()]);
+                    par::simd::grid_positions(blk, lo, inv_delta, ts, fs);
+                    for (&t, &f) in ts.iter().zip(fs.iter()) {
+                        let low_bin = (f as usize).min(m - 1); // guard x == hi
+                        let frac = (t - low_bin as f64).clamp(0.0, 1.0);
+                        // Round up with probability frac — unbiased.
+                        // Aligned coordinates skip the draw (see the
+                        // stream contract).
+                        let bin = if frac > 0.0 && crng.next_f64() < frac {
+                            low_bin + 1
+                        } else {
+                            low_bin
+                        };
+                        acc[bin] += 1.0;
+                    }
                 }
             },
         );

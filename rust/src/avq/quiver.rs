@@ -4,7 +4,7 @@
 //! Concave-1D row-minima computation ([`super::smawk`]), valid because the
 //! interval cost `C` satisfies the quadrangle inequality (Lemma 5.2).
 
-use super::smawk::{infeasible, smawk_with_values};
+use super::smawk::{infeasible, row_minima_blocked};
 use super::{traceback_single, Prefix, Solution};
 
 /// Solve via per-layer SMAWK. Caller guarantees `2 ≤ s < d` and a
@@ -16,15 +16,18 @@ pub fn solve(p: &Prefix, s: usize) -> Solution {
     let mut parents: Vec<Vec<u32>> = Vec::with_capacity(s.saturating_sub(2));
     for _level in 3..=s {
         let minima = {
+            // Pure reads (previous layer + prefix tables): `Fn + Sync`, so
+            // the layer solves row-parallel at large `n` (serial below the
+            // block cutoff — see [`super::smawk::row_minima_blocked`]).
             let prev_ref = &prev;
-            let mut f = |j: usize, k: usize| {
+            let f = |j: usize, k: usize| {
                 if k > j {
                     infeasible(k)
                 } else {
                     prev_ref[k] + p.cost(k, j)
                 }
             };
-            smawk_with_values(n, n, &mut f)
+            row_minima_blocked(n, n, &f)
         };
         let mut cur = vec![0.0f64; n];
         let mut par = vec![0u32; n];

@@ -17,7 +17,13 @@
 //! Performance notes (§Perf): index slices are `u32` (halving scratch
 //! bandwidth), and [`smawk_with_values`] returns the row-minimum *values*
 //! alongside the argmins so DP layers don't re-evaluate the cost at each
-//! winner.
+//! winner. At large `n` the DP layers go through [`row_minima_blocked`],
+//! which splits the rows into fixed blocks and solves the interior of
+//! each block as an independent SMAWK instance on the [`crate::par`]
+//! executor — the row evaluations are pure (RNG-free, contract-lint C3),
+//! so the parallel solve is deterministic by construction.
+
+use crate::par;
 
 /// Value used for infeasible (k > j) entries. Strictly increasing in the
 /// column index so that padded regions cannot break total monotonicity,
@@ -53,6 +59,80 @@ pub fn smawk_with_values(
     let cols: Vec<u32> = (0..n_cols as u32).collect();
     rec(&rows, &cols, f, &mut ans);
     ans
+}
+
+/// Interior block height for [`row_minima_blocked`]. A pure constant —
+/// never derived from the thread count — so the block partition, every
+/// cost evaluation, and every argmin are identical at any executor width
+/// and on either backend. The serial cutoff `2 · ROW_BLOCK` keeps every
+/// existing small-instance pin (and the evaluation-count test) on the
+/// plain [`smawk_with_values`] path.
+const ROW_BLOCK: usize = 1024;
+
+/// All row minima of an `n_rows × n_cols` totally monotone matrix, with
+/// the interior row blocks solved **in parallel** on the [`crate::par`]
+/// executor (`f` must therefore be `Fn + Sync`; DP cost closures are —
+/// they read only prefix tables).
+///
+/// Phase 1 runs serial SMAWK over the boundary rows `{0, B, 2B, …} ∪
+/// {n_rows − 1}` against all columns. Total monotonicity makes the
+/// leftmost argmin column nondecreasing in the row index (pinned by
+/// `argmin_is_nondecreasing` below), so rows strictly between two
+/// consecutive boundary rows can only attain their minima inside the
+/// closed column band their boundary argmins span. Phase 2 solves each
+/// interior band as an independent SMAWK instance via [`par::map_vec`].
+///
+/// Minimum *values* are identical to `smawk_with_values(n_rows, n_cols,
+/// f)` row for row; on an exact tie the reported argmin may be the
+/// leftmost *within the band* rather than the global leftmost — either
+/// attains the same minimum, and which one is reported is a fixed
+/// function of `(n_rows, n_cols)` alone, never of the thread count.
+///
+/// Small instances (`n_rows ≤ 2 · ROW_BLOCK`) take the serial path
+/// outright.
+pub fn row_minima_blocked(
+    n_rows: usize,
+    n_cols: usize,
+    f: &(impl Fn(usize, usize) -> f64 + Sync),
+) -> Vec<(usize, f64)> {
+    if n_rows <= 2 * ROW_BLOCK || n_cols == 0 {
+        let mut g = |r: usize, c: usize| f(r, c);
+        return smawk_with_values(n_rows, n_cols, &mut g);
+    }
+    // Phase 1: boundary rows (every ROW_BLOCK-th plus the last), all cols.
+    let mut bnd: Vec<usize> = (0..n_rows).step_by(ROW_BLOCK).collect();
+    if *bnd.last().unwrap() != n_rows - 1 {
+        bnd.push(n_rows - 1);
+    }
+    let mut g = |bi: usize, c: usize| f(bnd[bi], c);
+    let bres = smawk_with_values(bnd.len(), n_cols, &mut g);
+    // Phase 2: each interior segment (boundary rows excluded) against its
+    // column band, as one parallel work item per segment.
+    let segs: Vec<(usize, usize, usize, usize)> = bnd
+        .windows(2)
+        .zip(bres.windows(2))
+        .filter(|(rw, _)| rw[1] - rw[0] > 1)
+        .map(|(rw, cw)| (rw[0], rw[1], cw[0].0, cw[1].0))
+        .collect();
+    let interior = par::map_vec(segs, |(r0, r1, c0, c1)| {
+        debug_assert!(c0 <= c1, "boundary argmins must be nondecreasing");
+        let mut h = |ri: usize, k: usize| f(r0 + 1 + ri, c0 + k);
+        let rows = smawk_with_values(r1 - r0 - 1, c1 - c0 + 1, &mut h)
+            .into_iter()
+            .map(|(k, v)| (c0 + k, v))
+            .collect::<Vec<_>>();
+        (r0, rows)
+    });
+    let mut out = vec![(0usize, f64::INFINITY); n_rows];
+    for (&r, &bv) in bnd.iter().zip(&bres) {
+        out[r] = bv;
+    }
+    for (r0, part) in interior {
+        for (i, rv) in part.into_iter().enumerate() {
+            out[r0 + 1 + i] = rv;
+        }
+    }
+    out
 }
 
 fn rec(rows: &[u32], cols: &[u32], f: &mut impl FnMut(usize, usize) -> f64, ans: &mut [(usize, f64)]) {
@@ -232,6 +312,79 @@ mod tests {
             count < 40 * n,
             "evaluation count {count} is not O(n) for n={n}"
         );
+    }
+
+    /// Staircase DP-shaped cost used by the blocked-path tests: infeasible
+    /// padding above the diagonal, convex interior, no exact ties.
+    fn staircase(i: usize, j: usize) -> f64 {
+        if j > i {
+            infeasible(j)
+        } else {
+            let diff = (i - j) as f64 - 5.0;
+            diff * diff + (j as f64) * 0.25
+        }
+    }
+
+    #[test]
+    fn blocked_matches_serial_bitwise_on_large_staircase() {
+        // n > 2·ROW_BLOCK so the parallel path actually engages.
+        let n = 2 * ROW_BLOCK + 777;
+        let blocked = row_minima_blocked(n, n, &staircase);
+        let mut g = staircase;
+        let serial = smawk_with_values(n, n, &mut g);
+        for (r, (b, s)) in blocked.iter().zip(serial.iter()).enumerate() {
+            assert_eq!(
+                b.1.to_bits(),
+                s.1.to_bits(),
+                "row {r}: blocked min {} != serial min {}",
+                b.1,
+                s.1
+            );
+            assert_eq!(b.1, staircase(r, b.0), "row {r}: argmin must attain the min");
+        }
+    }
+
+    #[test]
+    fn blocked_is_thread_count_invariant() {
+        let _g = crate::par::test_width_lock();
+        let n = 2 * ROW_BLOCK + 123;
+        let prev = crate::par::threads();
+        let baseline = row_minima_blocked(n, n, &staircase);
+        for w in [1usize, 2, 5] {
+            crate::par::set_threads(w);
+            let got = row_minima_blocked(n, n, &staircase);
+            crate::par::set_threads(prev);
+            for (r, (a, b)) in baseline.iter().zip(got.iter()).enumerate() {
+                assert_eq!(a.0, b.0, "threads={w} row {r}: argmin drifted");
+                assert_eq!(
+                    a.1.to_bits(),
+                    b.1.to_bits(),
+                    "threads={w} row {r}: value drifted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_handles_exact_ties_and_edge_sizes() {
+        // Constant feasible region: every feasible column ties exactly. The
+        // blocked argmin may be leftmost-in-band rather than global
+        // leftmost, but must be feasible and attain the minimum.
+        let n = 2 * ROW_BLOCK + 64;
+        let tied = |i: usize, j: usize| if j > i { infeasible(j) } else { 1.25 };
+        for (r, &(c, v)) in row_minima_blocked(n, n, &tied).iter().enumerate() {
+            assert!(c <= r, "row {r}: argmin {c} is infeasible");
+            assert_eq!(v, 1.25, "row {r}");
+        }
+        // At or below the cutoff (and for degenerate shapes) the serial
+        // engine is used verbatim, so results match exactly.
+        let small = |i: usize, j: usize| (i as f64 * 0.3 - j as f64).abs();
+        for (rows, cols) in [(0usize, 5usize), (5, 0), (1, 1), (40, 17), (2 * ROW_BLOCK, 64)] {
+            let a = row_minima_blocked(rows, cols, &small);
+            let mut g = small;
+            let b = smawk_with_values(rows, cols, &mut g);
+            assert_eq!(a, b, "rows={rows} cols={cols}");
+        }
     }
 
     #[test]

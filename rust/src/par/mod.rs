@@ -33,6 +33,12 @@
 //! contract because a chunk's *result* never depends on which thread ran
 //! it — only the wall-clock schedule differs.
 //!
+//! Within a chunk, the hot kernel bodies are vectorized ([`simd`]):
+//! AVX2 on x86-64 CPUs that have it, a scalar fallback otherwise, both
+//! following the same fixed **lane order** so the selected instruction
+//! set — like the thread count and the backend — is invisible in the
+//! output bits (`tests/simd_parity.rs` asserts this across the matrix).
+//!
 //! # Execution backends
 //!
 //! Two interchangeable backends run the waves ([`Backend`]):
@@ -63,6 +69,7 @@
 
 pub mod pool;
 pub mod scan;
+pub mod simd;
 pub mod sort;
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -9,7 +9,10 @@
 //! Determinism: per-chunk partials are folded **in chunk-index order**, so
 //! the floating-point reduction tree is fixed by the input length alone —
 //! `norm2_sq` is bitwise-identical for every thread count and on either
-//! execution backend (see the module contract in [`crate::par`]).
+//! execution backend (see the module contract in [`crate::par`]). Within
+//! a chunk the kernel is vectorized ([`super::simd::scan_chunk`]) in the
+//! fixed lane order of the SIMD contract, so the instruction set (AVX2 or
+//! scalar) is equally invisible in the bits.
 //!
 //! The per-chunk partials are public ([`chunk_stats`] / [`fold_stats`])
 //! because the shard coordinator ([`crate::coordinator::shard`]) ships
@@ -18,7 +21,7 @@
 //! global chunk order — byte-for-byte the same reduction tree as a
 //! single-node [`stats`] call over the whole vector.
 
-use super::{map_chunks, CHUNK};
+use super::{map_chunks, simd, CHUNK};
 
 /// Fused single-pass statistics of a vector.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,7 +44,8 @@ pub struct ChunkStats {
     pub lo: f64,
     /// Chunk maximum (`−∞` for an empty chunk).
     pub hi: f64,
-    /// Chunk squared L2 norm (sequential sum within the chunk).
+    /// Chunk squared L2 norm (lane-ordered sum within the chunk — see
+    /// [`super::simd::scan_chunk`]).
     pub norm2_sq: f64,
     /// Whether every coordinate of the chunk is finite.
     pub finite: bool,
@@ -51,17 +55,8 @@ pub struct ChunkStats {
 /// [`CHUNK`]-sized chunk; empty input yields an empty vector).
 pub fn chunk_stats(xs: &[f64]) -> Vec<ChunkStats> {
     map_chunks(xs, CHUNK, |_, c| {
-        let mut lo = f64::INFINITY;
-        let mut hi = f64::NEG_INFINITY;
-        let mut n2 = 0.0;
-        let mut finite = true;
-        for &x in c {
-            finite &= x.is_finite();
-            lo = lo.min(x);
-            hi = hi.max(x);
-            n2 += x * x;
-        }
-        ChunkStats { lo, hi, norm2_sq: n2, finite }
+        let (lo, hi, norm2_sq, finite) = simd::scan_chunk(c);
+        ChunkStats { lo, hi, norm2_sq, finite }
     })
 }
 
@@ -111,16 +106,25 @@ mod tests {
         assert_eq!(st.lo, lo);
         assert_eq!(st.hi, hi);
         assert!(st.finite);
-        // Same chunked association as the reference fold below.
+        // Same chunk + lane association as the reference fold below: per
+        // chunk, LANES strided partial sums over the main part, merged
+        // pairwise, then the ragged tail — the SIMD lane-order contract.
         let mut want = 0.0;
         for c in xs.chunks(CHUNK) {
-            let mut n2 = 0.0;
-            for &x in c {
+            let main = c.len() & !(simd::LANES - 1);
+            let mut lane = [0.0f64; simd::LANES];
+            for group in c[..main].chunks_exact(simd::LANES) {
+                for (acc, &x) in lane.iter_mut().zip(group) {
+                    *acc += x * x;
+                }
+            }
+            let mut n2 = (lane[0] + lane[1]) + (lane[2] + lane[3]);
+            for &x in &c[main..] {
                 n2 += x * x;
             }
             want += n2;
         }
-        assert_eq!(st.norm2_sq, want, "chunk-ordered fold is the contract");
+        assert_eq!(st.norm2_sq, want, "chunk- and lane-ordered fold is the contract");
     }
 
     #[test]

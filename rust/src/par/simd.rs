@@ -1,0 +1,860 @@
+//! Runtime-dispatched SIMD chunk kernels with **scalar bit-parity**.
+//!
+//! The executor fixes chunk boundaries ([`super::CHUNK`]) and per-chunk
+//! RNG streams, so vectorizing *within* a chunk preserves determinism
+//! rules 1–6 as long as the in-chunk operation order is fixed. This
+//! module pins that order with the **lane-order contract**:
+//!
+//! * every reduction kernel runs [`LANES`] independent lane accumulators
+//!   over the chunk's *main part* (`len & !(LANES-1)` elements, lane `j`
+//!   accumulating elements `j, j+LANES, j+2·LANES, …`),
+//! * the lane partials merge in the fixed pairwise order
+//!   `(l₀ ⊕ l₁) ⊕ (l₂ ⊕ l₃)`,
+//! * the ragged tail (`< LANES` elements) folds sequentially into the
+//!   merged value.
+//!
+//! The scalar path implements this order directly; the AVX2 path computes
+//! the identical lane accumulators with 4-wide vector instructions. Both
+//! therefore produce **bit-identical** output by construction — asserted
+//! across the full matrix in `tests/simd_parity.rs` — so the runtime
+//! choice of instruction set is invisible to every consumer, exactly like
+//! the thread count and the executor backend.
+//!
+//! Elementwise kernels (grid positions, bracket search, gathers, byte
+//! packing) have no reduction order at all: the AVX2 paths perform the
+//! same IEEE operations per element (no FMA contraction, no
+//! re-association), so parity is elementwise.
+//!
+//! Selection mirrors [`super::backend`]: the last [`set_simd`] call wins,
+//! else the `QUIVER_SIMD` environment variable (`off` | `scalar` | `avx2`
+//! | `auto`), else runtime CPU detection. Requesting AVX2 on a CPU
+//! without it degrades loudly to scalar rather than faulting.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Which instruction set executes the chunk kernels. Results are
+/// bitwise-identical either way; only throughput differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Portable scalar kernels following the lane-order contract.
+    Scalar,
+    /// x86-64 AVX2 kernels (4 × f64 lanes), same lane order.
+    Avx2,
+}
+
+impl SimdMode {
+    /// Stable lowercase name (log lines, bench record names, panic
+    /// messages from the test matrix).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Scalar => "scalar",
+            SimdMode::Avx2 => "avx2",
+        }
+    }
+}
+
+/// f64 lanes per vector register — the width the lane-order contract is
+/// written against. Fixed at the AVX2 width even for the scalar path, so
+/// the reduction tree never depends on the selected mode.
+pub const LANES: usize = 4;
+
+/// Elements per stack-buffered block in the strip-mined kernels
+/// (histogram grid positions, quantize brackets): big enough to amortize
+/// dispatch, small enough to stay in L1.
+pub const BLOCK: usize = 256;
+
+/// Encoded [`SimdMode`]: 0 = unset, 1 = scalar, 2 = AVX2.
+static SIMD: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether this CPU supports the AVX2 kernels.
+#[cfg(target_arch = "x86_64")]
+pub fn detected_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Whether this CPU supports the AVX2 kernels (never, off x86-64).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn detected_avx2() -> bool {
+    false
+}
+
+/// The active SIMD mode.
+///
+/// Resolution order: the last [`set_simd`] call, else the `QUIVER_SIMD`
+/// environment variable (`off` | `scalar` → scalar, `avx2` → AVX2 if the
+/// CPU has it, `auto` → detect), else CPU detection.
+pub fn simd() -> SimdMode {
+    match SIMD.load(Ordering::Relaxed) {
+        1 => SimdMode::Scalar,
+        2 => SimdMode::Avx2,
+        _ => {
+            let auto = || if detected_avx2() { SimdMode::Avx2 } else { SimdMode::Scalar };
+            let resolved = match std::env::var("QUIVER_SIMD").ok().as_deref() {
+                Some("off") | Some("scalar") => SimdMode::Scalar,
+                Some("avx2") => {
+                    if detected_avx2() {
+                        SimdMode::Avx2
+                    } else {
+                        // Loud, not silent: a forced-AVX2 bench or CI leg
+                        // on the wrong machine must say it measured scalar.
+                        eprintln!(
+                            "warning: QUIVER_SIMD=avx2 but this CPU lacks AVX2; \
+                             using the scalar kernels"
+                        );
+                        SimdMode::Scalar
+                    }
+                }
+                Some("auto") | None => auto(),
+                Some(other) => {
+                    eprintln!(
+                        "warning: QUIVER_SIMD={other:?} not recognized (expected \
+                         `off`, `scalar`, `avx2`, or `auto`); auto-detecting"
+                    );
+                    auto()
+                }
+            };
+            let enc = if resolved == SimdMode::Avx2 { 2 } else { 1 };
+            // Install only if still unset — an explicit set_simd() that
+            // lands concurrently must win (same pattern as `backend()`).
+            match SIMD.compare_exchange(0, enc, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => resolved,
+                Err(2) => SimdMode::Avx2,
+                Err(_) => SimdMode::Scalar,
+            }
+        }
+    }
+}
+
+/// Pin the SIMD mode (the parity tests and benches flip this between
+/// [`SimdMode::Scalar`] and [`SimdMode::Avx2`] to compare them).
+///
+/// Requesting AVX2 on a CPU without it degrades to scalar with a warning
+/// — callers that need to know whether AVX2 actually runs should check
+/// [`detected_avx2`] first (the test matrix does).
+pub fn set_simd(mode: SimdMode) {
+    let effective = if mode == SimdMode::Avx2 && !detected_avx2() {
+        eprintln!("warning: set_simd(Avx2) on a CPU without AVX2; using the scalar kernels");
+        SimdMode::Scalar
+    } else {
+        mode
+    };
+    let enc = if effective == SimdMode::Avx2 { 2 } else { 1 };
+    SIMD.store(enc, Ordering::Relaxed);
+}
+
+// --------------------------------------------------------------------------
+// Fused scan: min / max / ‖X‖² / finiteness of one chunk.
+// --------------------------------------------------------------------------
+
+/// Fused single-pass statistics of one chunk: `(lo, hi, norm2_sq,
+/// finite)`, computed in lane order (see the module docs). Empty input
+/// yields the fold identities `(+∞, −∞, 0.0, true)`.
+///
+/// The min/max update rule is `if x < acc { acc = x }` (resp. `>`), which
+/// is exactly the AVX2 `vminpd(x, acc)` / `vmaxpd(x, acc)` semantics
+/// including NaN (a NaN `x` never replaces the accumulator) and signed
+/// zeros (on a tie the accumulator wins) — so the two paths agree on
+/// every bit pattern, not just on well-behaved data.
+pub fn scan_chunk(xs: &[f64]) -> (f64, f64, f64, bool) {
+    let main = xs.len() & !(LANES - 1);
+    let mut lo_l = [f64::INFINITY; LANES];
+    let mut hi_l = [f64::NEG_INFINITY; LANES];
+    let mut n2_l = [0.0f64; LANES];
+    let mut fin_l = [true; LANES];
+    match simd() {
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Avx2 =>
+        // SAFETY: `simd()` returns Avx2 only after `detected_avx2()`
+        // confirmed CPU support (see the selector and `set_simd`), so the
+        // `target_feature(enable = "avx2")` contract holds; `main` is a
+        // multiple of LANES as the callee requires.
+        unsafe { scan_lanes_avx2(&xs[..main], &mut lo_l, &mut hi_l, &mut n2_l, &mut fin_l) },
+        _ => scan_lanes_scalar(&xs[..main], &mut lo_l, &mut hi_l, &mut n2_l, &mut fin_l),
+    }
+    // Fixed pairwise lane merge, then the sequential tail — shared code,
+    // so the mode only ever decides how the lane partials were computed.
+    let mut lo = min2(min2(lo_l[0], lo_l[1]), min2(lo_l[2], lo_l[3]));
+    let mut hi = max2(max2(hi_l[0], hi_l[1]), max2(hi_l[2], hi_l[3]));
+    let mut n2 = (n2_l[0] + n2_l[1]) + (n2_l[2] + n2_l[3]);
+    let mut finite = fin_l[0] && fin_l[1] && fin_l[2] && fin_l[3];
+    for &x in &xs[main..] {
+        finite &= x.is_finite();
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+        n2 += x * x;
+    }
+    (lo, hi, n2, finite)
+}
+
+/// The scan's min rule: candidate wins only on a strict compare (NaN and
+/// equal-valued candidates keep the accumulator) — `vminpd(x, acc)`.
+#[inline]
+fn min2(acc: f64, x: f64) -> f64 {
+    if x < acc {
+        x
+    } else {
+        acc
+    }
+}
+
+/// The scan's max rule — `vmaxpd(x, acc)`; see [`min2`].
+#[inline]
+fn max2(acc: f64, x: f64) -> f64 {
+    if x > acc {
+        x
+    } else {
+        acc
+    }
+}
+
+/// Scalar lane accumulators over the main part (`xs.len() % LANES == 0`).
+fn scan_lanes_scalar(
+    xs: &[f64],
+    lo: &mut [f64; LANES],
+    hi: &mut [f64; LANES],
+    n2: &mut [f64; LANES],
+    fin: &mut [bool; LANES],
+) {
+    for group in xs.chunks_exact(LANES) {
+        for (j, &x) in group.iter().enumerate() {
+            fin[j] &= x.is_finite();
+            lo[j] = min2(lo[j], x);
+            hi[j] = max2(hi[j], x);
+            n2[j] += x * x;
+        }
+    }
+}
+
+/// AVX2 lane accumulators over the main part (`xs.len() % LANES == 0`).
+/// Bit-identical to [`scan_lanes_scalar`]: `vminpd`/`vmaxpd` match the
+/// `min2`/`max2` rules exactly (NaN and ±0 included), the norm uses a
+/// separate multiply and add (never FMA — contraction would change the
+/// rounding), and finiteness is `|x| < ∞` on the cleared sign bit, which
+/// agrees with `f64::is_finite` on every bit pattern including NaN.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: reached only through the dispatcher above, after runtime AVX2
+// detection (the selector invariant), on a LANES-multiple main part.
+unsafe fn scan_lanes_avx2(
+    xs: &[f64],
+    lo: &mut [f64; LANES],
+    hi: &mut [f64; LANES],
+    n2: &mut [f64; LANES],
+    fin: &mut [bool; LANES],
+) {
+    use core::arch::x86_64::*;
+    let mut lov = _mm256_loadu_pd(lo.as_ptr());
+    let mut hiv = _mm256_loadu_pd(hi.as_ptr());
+    let mut n2v = _mm256_loadu_pd(n2.as_ptr());
+    // All-true lane mask, AND-ed down by each element's finiteness.
+    let mut finv = _mm256_castsi256_pd(_mm256_set1_epi64x(-1));
+    let infv = _mm256_set1_pd(f64::INFINITY);
+    let abs_mask = _mm256_castsi256_pd(_mm256_set1_epi64x(i64::MAX));
+    for group in xs.chunks_exact(LANES) {
+        let xv = _mm256_loadu_pd(group.as_ptr());
+        lov = _mm256_min_pd(xv, lov);
+        hiv = _mm256_max_pd(xv, hiv);
+        n2v = _mm256_add_pd(n2v, _mm256_mul_pd(xv, xv));
+        let is_fin = _mm256_cmp_pd::<_CMP_LT_OQ>(_mm256_and_pd(xv, abs_mask), infv);
+        finv = _mm256_and_pd(finv, is_fin);
+    }
+    _mm256_storeu_pd(lo.as_mut_ptr(), lov);
+    _mm256_storeu_pd(hi.as_mut_ptr(), hiv);
+    _mm256_storeu_pd(n2.as_mut_ptr(), n2v);
+    let m = _mm256_movemask_pd(finv);
+    for (j, f) in fin.iter_mut().enumerate() {
+        *f &= ((m >> j) & 1) == 1;
+    }
+}
+
+// --------------------------------------------------------------------------
+// Histogram grid positions: t = (x − lo)·inv_delta and ⌊t⌋.
+// --------------------------------------------------------------------------
+
+/// Fill `t_out[i] = (xs[i] − lo) · inv_delta` and `f_out[i] =
+/// t_out[i].floor()` — the data-independent prefix of the histogram count
+/// pass. Elementwise IEEE sub/mul/floor, so the AVX2 path (`vroundpd`
+/// toward −∞ is exactly `f64::floor`) is bit-identical per element; the
+/// data-dependent remainder (bin pick + RNG draw) stays scalar at the
+/// call site so the RNG stream is untouched.
+pub fn grid_positions(xs: &[f64], lo: f64, inv_delta: f64, t_out: &mut [f64], f_out: &mut [f64]) {
+    assert_eq!(xs.len(), t_out.len());
+    assert_eq!(xs.len(), f_out.len());
+    let main = xs.len() & !(LANES - 1);
+    match simd() {
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Avx2 => {
+            let (xm, tm, fm) = (&xs[..main], &mut t_out[..main], &mut f_out[..main]);
+            // SAFETY: Avx2 is only ever selected on a CPU that reported
+            // AVX2 support (selector/`set_simd` invariant), and `main` is
+            // a multiple of LANES so the callee's exact-chunk walk covers
+            // it.
+            unsafe { grid_positions_avx2(xm, lo, inv_delta, tm, fm) }
+        }
+        _ => {
+            for ((&x, t), f) in xs[..main].iter().zip(&mut t_out[..main]).zip(&mut f_out[..main]) {
+                *t = (x - lo) * inv_delta;
+                *f = t.floor();
+            }
+        }
+    }
+    for ((&x, t), f) in xs[main..].iter().zip(&mut t_out[main..]).zip(&mut f_out[main..]) {
+        *t = (x - lo) * inv_delta;
+        *f = t.floor();
+    }
+}
+
+/// AVX2 body of [`grid_positions`] over the main part.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: reached only through the dispatcher above, after runtime AVX2
+// detection (the selector invariant), on LANES-multiple slices.
+unsafe fn grid_positions_avx2(
+    xs: &[f64],
+    lo: f64,
+    inv_delta: f64,
+    t_out: &mut [f64],
+    f_out: &mut [f64],
+) {
+    use core::arch::x86_64::*;
+    let lov = _mm256_set1_pd(lo);
+    let idv = _mm256_set1_pd(inv_delta);
+    for ((xc, tc), fc) in xs
+        .chunks_exact(LANES)
+        .zip(t_out.chunks_exact_mut(LANES))
+        .zip(f_out.chunks_exact_mut(LANES))
+    {
+        let xv = _mm256_loadu_pd(xc.as_ptr());
+        let tv = _mm256_mul_pd(_mm256_sub_pd(xv, lov), idv);
+        let fv = _mm256_floor_pd(tv);
+        _mm256_storeu_pd(tc.as_mut_ptr(), tv);
+        _mm256_storeu_pd(fc.as_mut_ptr(), fv);
+    }
+}
+
+// --------------------------------------------------------------------------
+// Quantize bracket search.
+// --------------------------------------------------------------------------
+
+/// For each `x`, find the quantizer bracket `(sel, hi)` the stochastic
+/// pick chooses between: `hi` is the first level `≥ x` (clamped to the
+/// last level) and `sel` is `hi` when `qs[hi] ≤ x`, else `hi − 1` — the
+/// exact semantics `sq`'s per-element binary search has always had. The
+/// RNG-consuming pick stays scalar at the call site.
+///
+/// Both paths run the same **branchless fixed-iteration** lower-bound
+/// search (the probe sequence is a pure function of `qs.len()`), so the
+/// AVX2 lanes execute it in lockstep with gathers and the outputs match
+/// the scalar path bit-for-bit — including on ties and repeated levels.
+pub fn fill_brackets(qs: &[f64], xs: &[f64], sel_out: &mut [u32], hi_out: &mut [u32]) {
+    assert!(!qs.is_empty());
+    assert_eq!(xs.len(), sel_out.len());
+    assert_eq!(xs.len(), hi_out.len());
+    debug_assert!(
+        xs.iter().all(|&x| qs[0] <= x + 1e-12 && x <= qs[qs.len() - 1] + 1e-12),
+        "input outside quantizer range [{}, {}]",
+        qs[0],
+        qs[qs.len() - 1]
+    );
+    let main = xs.len() & !(LANES - 1);
+    match simd() {
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Avx2 => {
+            let (xm, sm, hm) = (&xs[..main], &mut sel_out[..main], &mut hi_out[..main]);
+            // SAFETY: AVX2 support is guaranteed by the selector invariant
+            // (see `scan_chunk`); `main` is a multiple of LANES, and the
+            // callee's gather indices stay inside `qs` by the search
+            // invariant documented at its definition.
+            unsafe { fill_brackets_avx2(qs, xm, sm, hm) }
+        }
+        _ => {
+            for ((&x, s), h) in xs[..main].iter().zip(&mut sel_out[..main]).zip(&mut hi_out[..main])
+            {
+                (*s, *h) = bracket_scalar(qs, x);
+            }
+        }
+    }
+    for ((&x, s), h) in xs[main..].iter().zip(&mut sel_out[main..]).zip(&mut hi_out[main..]) {
+        (*s, *h) = bracket_scalar(qs, x);
+    }
+}
+
+/// Branchless scalar bracket: equivalent to
+/// `hi = qs.partition_point(|&q| q < x).min(qs.len() - 1)` followed by
+/// the `qs[hi] ≤ x` endpoint selection (NaN `x` falls through to
+/// `(0, 0)` in both formulations — every comparison is false).
+fn bracket_scalar(qs: &[f64], x: f64) -> (u32, u32) {
+    let mut base = 0usize;
+    let mut n = qs.len();
+    // Invariant: base + n ≤ qs.len() and the answer is in base..base+n, so
+    // every probe base + n/2 − 1 is in bounds.
+    while n > 1 {
+        let half = n / 2;
+        if qs[base + half - 1] < x {
+            base += half;
+        }
+        n -= half;
+    }
+    let pp = base + usize::from(qs[base] < x); // == partition_point(q < x)
+    let hi = pp - usize::from(pp == qs.len());
+    let lo = hi - usize::from(hi != 0);
+    let sel = if qs[hi] <= x { hi } else { lo };
+    (sel as u32, hi as u32)
+}
+
+/// AVX2 body of [`fill_brackets`]: 4 searches in lockstep. The loop
+/// structure (probe offsets, iteration count) depends only on `qs.len()`,
+/// never on the data, so the lanes never diverge; per-lane comparisons
+/// steer each lane's `base` exactly as [`bracket_scalar`] does. Gather
+/// indices satisfy `0 ≤ i < qs.len()` throughout: `base` starts at 0,
+/// grows only by `half` under the `base + n ≤ len` invariant, and
+/// `hi`/`sel` are clamped the same way as the scalar path.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: reached only through the dispatcher above, after runtime AVX2
+// detection; gathers are bounded by the bracket-search invariant below.
+unsafe fn fill_brackets_avx2(qs: &[f64], xs: &[f64], sel_out: &mut [u32], hi_out: &mut [u32]) {
+    use core::arch::x86_64::*;
+    let ptr = qs.as_ptr();
+    let len = qs.len();
+    let lenv = _mm256_set1_epi64x(len as i64);
+    let zero = _mm256_setzero_si256();
+    let neg1 = _mm256_set1_epi64x(-1);
+    for ((xc, sc), hc) in xs
+        .chunks_exact(LANES)
+        .zip(sel_out.chunks_exact_mut(LANES))
+        .zip(hi_out.chunks_exact_mut(LANES))
+    {
+        let xv = _mm256_loadu_pd(xc.as_ptr());
+        let mut basev = zero;
+        let mut n = len;
+        while n > 1 {
+            let half = n / 2;
+            let probe = _mm256_add_epi64(basev, _mm256_set1_epi64x((half - 1) as i64));
+            let qv = _mm256_i64gather_pd::<8>(ptr, probe);
+            let lt = _mm256_castpd_si256(_mm256_cmp_pd::<_CMP_LT_OQ>(qv, xv));
+            // base += half where qs[probe] < x (the mask is −1 there).
+            basev = _mm256_add_epi64(basev, _mm256_and_si256(lt, _mm256_set1_epi64x(half as i64)));
+            n -= half;
+        }
+        let qb = _mm256_i64gather_pd::<8>(ptr, basev);
+        let ltb = _mm256_castpd_si256(_mm256_cmp_pd::<_CMP_LT_OQ>(qb, xv));
+        let ppv = _mm256_sub_epi64(basev, ltb); // pp = base + (qs[base] < x)
+        let eqlen = _mm256_cmpeq_epi64(ppv, lenv);
+        let hiv = _mm256_add_epi64(ppv, eqlen); // hi = pp − (pp == len)
+        let hz = _mm256_cmpeq_epi64(hiv, zero);
+        let lov = _mm256_add_epi64(hiv, _mm256_andnot_si256(hz, neg1)); // lo = hi − (hi ≠ 0)
+        let qhi = _mm256_i64gather_pd::<8>(ptr, hiv);
+        let le = _mm256_castpd_si256(_mm256_cmp_pd::<_CMP_LE_OQ>(qhi, xv));
+        let selv = _mm256_blendv_epi8(lov, hiv, le); // sel = qs[hi] ≤ x ? hi : lo
+        let mut sel = [0i64; LANES];
+        let mut hi = [0i64; LANES];
+        _mm256_storeu_si256(sel.as_mut_ptr().cast(), selv);
+        _mm256_storeu_si256(hi.as_mut_ptr().cast(), hiv);
+        for ((s, h), (&sl, &hl)) in sc.iter_mut().zip(hc.iter_mut()).zip(sel.iter().zip(&hi)) {
+            *s = sl as u32;
+            *h = hl as u32;
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Dequantize gather.
+// --------------------------------------------------------------------------
+
+/// Fill `out[i] = qs[idx[i] as usize]` — the dequantize kernel. A pure
+/// table lookup, so parity is trivial; the AVX2 path bounds-checks every
+/// 4-lane group before its hardware gather and falls back to scalar
+/// loads for any group with an out-of-range index, so the panic (and its
+/// message and position) is identical to the scalar path.
+pub fn gather_levels(qs: &[f64], idx: &[u32], out: &mut [f64]) {
+    assert_eq!(idx.len(), out.len());
+    match simd() {
+        // The i32 gather compares indices as signed 32-bit values; a level
+        // table beyond i32::MAX entries (never reached in practice) takes
+        // the scalar path rather than complicating the bounds check.
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Avx2 if qs.len() <= i32::MAX as usize => {
+            let main = idx.len() & !(LANES - 1);
+            // SAFETY: AVX2 support per the selector invariant; `main` is a
+            // multiple of LANES; the callee gathers only after proving
+            // every lane index is in `0..qs.len()`.
+            unsafe { gather_levels_avx2(qs, &idx[..main], &mut out[..main]) }
+            for (o, &i) in out[main..].iter_mut().zip(&idx[main..]) {
+                *o = qs[i as usize];
+            }
+        }
+        _ => {
+            for (o, &i) in out.iter_mut().zip(idx) {
+                *o = qs[i as usize];
+            }
+        }
+    }
+}
+
+/// AVX2 body of [`gather_levels`] over the main part.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: reached only through the dispatcher above, after runtime AVX2
+// detection; every gather lane is range-checked before the load.
+unsafe fn gather_levels_avx2(qs: &[f64], idx: &[u32], out: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let lenv = _mm_set1_epi32(qs.len() as i32);
+    let negone = _mm_set1_epi32(-1);
+    for (oc, ic) in out.chunks_exact_mut(LANES).zip(idx.chunks_exact(LANES)) {
+        let iv = _mm_loadu_si128(ic.as_ptr().cast());
+        // In-bounds as *signed* i32: −1 < i < len. A u32 index ≥ 2³¹ reads
+        // as negative here and correctly fails the check.
+        let ok = _mm_and_si128(_mm_cmpgt_epi32(lenv, iv), _mm_cmpgt_epi32(iv, negone));
+        if _mm_movemask_epi8(ok) == 0xFFFF {
+            let gv = _mm256_i32gather_pd::<8>(qs.as_ptr(), iv);
+            _mm256_storeu_pd(oc.as_mut_ptr(), gv);
+        } else {
+            // Out-of-range index: take the scalar loads so the panic is
+            // byte-for-byte the scalar path's.
+            for (o, &i) in oc.iter_mut().zip(ic) {
+                *o = qs[i as usize];
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Byte-aligned bit-packing (bits ∈ {8, 16, 32}).
+// --------------------------------------------------------------------------
+
+/// Whether `bits` packs indices on byte boundaries — the widths with
+/// dedicated pack/unpack fast paths ([`pack_bytes`] / [`unpack_bytes`]).
+/// Chosen by the *wire parameter* alone, never by the SIMD mode, so the
+/// codec's dispatch decision is mode-independent.
+pub fn byte_aligned(bits: u8) -> bool {
+    matches!(bits, 8 | 16 | 32)
+}
+
+/// Pack `chunk` (each value `< 2^bits`) into `window` at a byte-aligned
+/// width, little-endian — exactly what the codec's general bit-window
+/// loop produces for these widths, element by element.
+pub fn pack_bytes(chunk: &[u32], window: &mut [u8], bits: u8) {
+    debug_assert!(byte_aligned(bits));
+    debug_assert!(bits == 32 || chunk.iter().all(|&v| u64::from(v) < 1u64 << bits));
+    let bpe = usize::from(bits) / 8;
+    assert_eq!(window.len(), chunk.len() * bpe);
+    match (simd(), bits) {
+        #[cfg(target_arch = "x86_64")]
+        (SimdMode::Avx2, 8 | 16) if chunk.len() >= 2 * LANES => {
+            let main = chunk.len() & !(2 * LANES - 1);
+            // SAFETY: AVX2 support per the selector invariant; `main` is a
+            // multiple of 8 so the callee's 8-element groups tile it, and
+            // the window slice is sized `main · bpe` to match.
+            unsafe { pack_bytes_avx2(&chunk[..main], &mut window[..main * bpe], bits) }
+            pack_bytes_scalar(&chunk[main..], &mut window[main * bpe..], bits);
+        }
+        _ => pack_bytes_scalar(chunk, window, bits),
+    }
+}
+
+/// Scalar body of [`pack_bytes`]: per-element `to_le_bytes` truncation.
+fn pack_bytes_scalar(chunk: &[u32], window: &mut [u8], bits: u8) {
+    match bits {
+        8 => {
+            for (w, &v) in window.iter_mut().zip(chunk) {
+                *w = v.to_le_bytes()[0];
+            }
+        }
+        16 => {
+            for (w, &v) in window.chunks_exact_mut(2).zip(chunk) {
+                w.copy_from_slice(&v.to_le_bytes()[..2]);
+            }
+        }
+        _ => {
+            for (w, &v) in window.chunks_exact_mut(4).zip(chunk) {
+                w.copy_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// AVX2 body of [`pack_bytes`] for bits ∈ {8, 16}: shuffle the low
+/// byte(s) of eight u32 values into place per 128-bit half, then stitch
+/// the halves. `bits == 32` is a plain copy and never routes here.
+/// Truncation (taking the low bytes) matches [`pack_bytes_scalar`] on
+/// every input, in and out of contract.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: reached only through the dispatcher above, after runtime AVX2
+// detection, with 8-multiple slices sized to each other.
+unsafe fn pack_bytes_avx2(chunk: &[u32], window: &mut [u8], bits: u8) {
+    use core::arch::x86_64::*;
+    if bits == 8 {
+        // Per 128-bit half: pick byte 0 of each dword into bytes 0..4.
+        let mask = _mm256_setr_epi8(
+            0, 4, 8, 12, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, //
+            0, 4, 8, 12, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1,
+        );
+        for (wc, ic) in window.chunks_exact_mut(2 * LANES).zip(chunk.chunks_exact(2 * LANES)) {
+            let v = _mm256_loadu_si256(ic.as_ptr().cast());
+            let s = _mm256_shuffle_epi8(v, mask);
+            let lo = _mm256_castsi256_si128(s);
+            let hi = _mm256_extracti128_si256::<1>(s);
+            let packed = _mm_unpacklo_epi32(lo, hi);
+            _mm_storel_epi64(wc.as_mut_ptr().cast(), packed);
+        }
+    } else {
+        // bits == 16. Per half: bytes 0..2 of each dword into bytes 0..8.
+        let mask = _mm256_setr_epi8(
+            0, 1, 4, 5, 8, 9, 12, 13, -1, -1, -1, -1, -1, -1, -1, -1, //
+            0, 1, 4, 5, 8, 9, 12, 13, -1, -1, -1, -1, -1, -1, -1, -1,
+        );
+        for (wc, ic) in window.chunks_exact_mut(4 * LANES).zip(chunk.chunks_exact(2 * LANES)) {
+            let v = _mm256_loadu_si256(ic.as_ptr().cast());
+            let s = _mm256_shuffle_epi8(v, mask);
+            let lo = _mm256_castsi256_si128(s);
+            let hi = _mm256_extracti128_si256::<1>(s);
+            let packed = _mm_unpacklo_epi64(lo, hi);
+            _mm_storeu_si128(wc.as_mut_ptr().cast(), packed);
+        }
+    }
+}
+
+/// Unpack a byte-aligned `window` back into u32 indices — the inverse of
+/// [`pack_bytes`], and exactly the codec's general 8-byte-window read for
+/// these widths.
+pub fn unpack_bytes(window: &[u8], out: &mut [u32], bits: u8) {
+    debug_assert!(byte_aligned(bits));
+    let bpe = usize::from(bits) / 8;
+    assert_eq!(window.len(), out.len() * bpe);
+    match (simd(), bits) {
+        #[cfg(target_arch = "x86_64")]
+        (SimdMode::Avx2, 8 | 16) if out.len() >= 2 * LANES => {
+            let main = out.len() & !(2 * LANES - 1);
+            // SAFETY: AVX2 support per the selector invariant; `main` is a
+            // multiple of 8 and the window slice is sized to match, so the
+            // callee's 8/16-byte loads stay inside its slice arguments.
+            unsafe { unpack_bytes_avx2(&window[..main * bpe], &mut out[..main], bits) }
+            unpack_bytes_scalar(&window[main * bpe..], &mut out[main..], bits);
+        }
+        _ => unpack_bytes_scalar(window, out, bits),
+    }
+}
+
+/// Scalar body of [`unpack_bytes`]: per-element `from_le_bytes`.
+fn unpack_bytes_scalar(window: &[u8], out: &mut [u32], bits: u8) {
+    match bits {
+        8 => {
+            for (o, &b) in out.iter_mut().zip(window) {
+                *o = u32::from(b);
+            }
+        }
+        16 => {
+            for (o, w) in out.iter_mut().zip(window.chunks_exact(2)) {
+                *o = u32::from(u16::from_le_bytes([w[0], w[1]]));
+            }
+        }
+        _ => {
+            for (o, w) in out.iter_mut().zip(window.chunks_exact(4)) {
+                *o = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+            }
+        }
+    }
+}
+
+/// AVX2 body of [`unpack_bytes`] for bits ∈ {8, 16}: zero-extend eight
+/// packed values to u32 per iteration.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: reached only through the dispatcher above, after runtime AVX2
+// detection, with 8-multiple slices sized to each other.
+unsafe fn unpack_bytes_avx2(window: &[u8], out: &mut [u32], bits: u8) {
+    use core::arch::x86_64::*;
+    if bits == 8 {
+        for (oc, wc) in out.chunks_exact_mut(2 * LANES).zip(window.chunks_exact(2 * LANES)) {
+            let b = _mm_loadl_epi64(wc.as_ptr().cast());
+            let v = _mm256_cvtepu8_epi32(b);
+            _mm256_storeu_si256(oc.as_mut_ptr().cast(), v);
+        }
+    } else {
+        for (oc, wc) in out.chunks_exact_mut(2 * LANES).zip(window.chunks_exact(4 * LANES)) {
+            let b = _mm_loadu_si128(wc.as_ptr().cast());
+            let v = _mm256_cvtepu16_epi32(b);
+            _mm256_storeu_si256(oc.as_mut_ptr().cast(), v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+    use std::sync::Mutex;
+
+    /// Unit tests here flip the global mode; serialize them (results are
+    /// mode-invariant by the parity contract, but the flips themselves
+    /// must not interleave with each other's restore).
+    static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Run `f` under every available mode and return the per-mode outputs.
+    fn under_modes<T>(f: impl Fn() -> T) -> Vec<(SimdMode, T)> {
+        let _g = MODE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let prev = simd();
+        let mut modes = vec![SimdMode::Scalar];
+        if detected_avx2() {
+            modes.push(SimdMode::Avx2);
+        }
+        let out = modes
+            .into_iter()
+            .map(|m| {
+                set_simd(m);
+                (m, f())
+            })
+            .collect();
+        set_simd(prev);
+        out
+    }
+
+    #[test]
+    fn selector_name_roundtrip() {
+        assert_eq!(SimdMode::Scalar.name(), "scalar");
+        assert_eq!(SimdMode::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn scan_chunk_empty_identities() {
+        for (_, (lo, hi, n2, fin)) in under_modes(|| scan_chunk(&[])) {
+            assert_eq!(lo, f64::INFINITY);
+            assert_eq!(hi, f64::NEG_INFINITY);
+            assert_eq!(n2, 0.0);
+            assert!(fin);
+        }
+    }
+
+    #[test]
+    fn scan_chunk_modes_agree_bitwise() {
+        let mut xs = Dist::Normal { mu: 0.3, sigma: 2.0 }.sample_vec(1021, 7);
+        xs[5] = f64::NAN;
+        xs[800] = f64::NEG_INFINITY;
+        xs[13] = -0.0;
+        xs[14] = 0.0;
+        let runs = under_modes(|| scan_chunk(&xs));
+        let (lo0, hi0, n20, f0) = runs[0].1;
+        for (m, (lo, hi, n2, fin)) in &runs[1..] {
+            assert_eq!(lo.to_bits(), lo0.to_bits(), "{}", m.name());
+            assert_eq!(hi.to_bits(), hi0.to_bits(), "{}", m.name());
+            assert_eq!(n2.to_bits(), n20.to_bits(), "{}", m.name());
+            assert_eq!(*fin, f0, "{}", m.name());
+        }
+        assert!(!f0);
+    }
+
+    #[test]
+    fn bracket_scalar_matches_partition_point() {
+        let qs = [-2.0, -1.0, -1.0, 0.0, 0.5, 0.5, 3.0];
+        for &x in &[-2.0, -1.5, -1.0, -0.999, 0.0, 0.25, 0.5, 2.9, 3.0] {
+            let pp = qs.partition_point(|&q| q < x);
+            let hi = pp.min(qs.len() - 1);
+            let lo = hi.saturating_sub(1);
+            let sel = if qs[hi] <= x { hi } else { lo };
+            assert_eq!(bracket_scalar(&qs, x), (sel as u32, hi as u32), "x={x}");
+        }
+    }
+
+    #[test]
+    fn fill_brackets_modes_agree() {
+        let qs: Vec<f64> = vec![-3.0, -1.0, -0.5, 0.0, 0.0, 1.25, 2.0, 7.5];
+        let xs: Vec<f64> = Dist::Uniform { lo: -3.0, hi: 7.5 }.sample_vec(257, 3);
+        let runs = under_modes(|| {
+            let mut sel = vec![0u32; xs.len()];
+            let mut hi = vec![0u32; xs.len()];
+            fill_brackets(&qs, &xs, &mut sel, &mut hi);
+            (sel, hi)
+        });
+        for (m, out) in &runs[1..] {
+            assert_eq!(*out, runs[0].1, "{}", m.name());
+        }
+        // And against the reference formulation.
+        let (sel, hi) = &runs[0].1;
+        for ((&x, &s), &h) in xs.iter().zip(sel).zip(hi) {
+            let pp = qs.partition_point(|&q| q < x).min(qs.len() - 1);
+            assert_eq!(h as usize, pp, "x={x}");
+            let want = if qs[pp] <= x { pp } else { pp.saturating_sub(1) };
+            assert_eq!(s as usize, want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn gather_levels_modes_agree() {
+        let qs: Vec<f64> = (0..1000).map(|i| f64::from(i) * 0.25 - 3.0).collect();
+        let idx: Vec<u32> = (0..317u32).map(|i| (i * 7919) % 1000).collect();
+        let runs = under_modes(|| {
+            let mut out = vec![0.0f64; idx.len()];
+            gather_levels(&qs, &idx, &mut out);
+            out
+        });
+        for (m, out) in &runs[1..] {
+            assert_eq!(*out, runs[0].1, "{}", m.name());
+        }
+        for (&i, &v) in idx.iter().zip(&runs[0].1) {
+            assert_eq!(v, qs[i as usize]);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_every_width_and_tail() {
+        for bits in [8u8, 16, 32] {
+            let max = if bits == 32 { u64::from(u32::MAX) } else { (1u64 << bits) - 1 };
+            for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 255, 256] {
+                let idx: Vec<u32> =
+                    (0..len as u64).map(|i| ((i * 2654435761) % (max + 1)) as u32).collect();
+                let runs = under_modes(|| {
+                    let mut window = vec![0u8; len * usize::from(bits) / 8];
+                    pack_bytes(&idx, &mut window, bits);
+                    let mut back = vec![0u32; len];
+                    unpack_bytes(&window, &mut back, bits);
+                    (window, back)
+                });
+                for (m, out) in &runs[1..] {
+                    assert_eq!(*out, runs[0].1, "bits={bits} len={len} {}", m.name());
+                }
+                assert_eq!(runs[0].1 .1, idx, "bits={bits} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_positions_modes_agree() {
+        let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(261, 11);
+        let (lo, hi) = xs
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+        let inv_delta = 64.0 / (hi - lo);
+        let runs = under_modes(|| {
+            let mut t = vec![0.0f64; xs.len()];
+            let mut f = vec![0.0f64; xs.len()];
+            grid_positions(&xs, lo, inv_delta, &mut t, &mut f);
+            (t, f)
+        });
+        for (m, out) in &runs[1..] {
+            assert_eq!(*out, runs[0].1, "{}", m.name());
+        }
+        for ((&x, &t), &f) in xs.iter().zip(&runs[0].1 .0).zip(&runs[0].1 .1) {
+            assert_eq!(t.to_bits(), ((x - lo) * inv_delta).to_bits());
+            assert_eq!(f.to_bits(), ((x - lo) * inv_delta).floor().to_bits());
+        }
+    }
+
+    #[test]
+    fn set_simd_degrades_gracefully_off_avx2() {
+        let _g = MODE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let prev = simd();
+        set_simd(SimdMode::Avx2);
+        if !detected_avx2() {
+            assert_eq!(simd(), SimdMode::Scalar);
+        } else {
+            assert_eq!(simd(), SimdMode::Avx2);
+        }
+        set_simd(prev);
+    }
+}

@@ -155,6 +155,13 @@ pub fn encode(idx: &[u32], qs: &[f64]) -> CompressedVec {
     if bits > 0 {
         let chunk_bytes = par::CHUNK * usize::from(bits) / 8; // CHUNK % 8 == 0
         par::zip_chunks_mut(&mut payload, chunk_bytes, idx, par::CHUNK, |_, window, chunk| {
+            // Byte-aligned widths take the SIMD fast path (scalar or AVX2,
+            // byte-identical either way — the dispatch decision depends
+            // only on `bits`, never on the selected mode).
+            if par::simd::byte_aligned(bits) {
+                par::simd::pack_bytes(chunk, window, bits);
+                return;
+            }
             let mut bitpos = 0usize; // chunk-local; windows are byte-aligned
             for &v in chunk {
                 debug_assert!((v as usize) < qs.len());
@@ -241,6 +248,15 @@ pub fn decode(c: &CompressedVec) -> (Vec<u32>, Vec<f64>) {
     let mask = (1u64 << bits) - 1;
     let mut idx = vec![0u32; d];
     par::for_each_chunk_mut(&mut idx, par::CHUNK, |ci, out| {
+        // Byte-aligned widths: unpack this chunk's exact payload window
+        // through the SIMD fast path (mode-invariant bytes in, mode-
+        // invariant indices out).
+        if par::simd::byte_aligned(c.bits) {
+            let bpe = bits / 8;
+            let start = ci * par::CHUNK * bpe;
+            par::simd::unpack_bytes(&c.payload[start..start + out.len() * bpe], out, c.bits);
+            return;
+        }
         let mut bitpos = ci * par::CHUNK * bits;
         for slot in out.iter_mut() {
             let byte = bitpos >> 3;

@@ -57,9 +57,23 @@ pub fn quantize_shard(xs: &[f64], qs: &[f64], base: u64, first_chunk: u64) -> Ve
     let mut out = vec![0u32; xs.len()];
     par::zip_chunks_mut(&mut out, par::CHUNK, xs, par::CHUNK, |c, slots, chunk| {
         let mut crng = Xoshiro256pp::stream(base, first_chunk + c as u64);
-        for (slot, &x) in slots.iter_mut().zip(chunk) {
-            let (lo, hi) = bracket(qs, x);
-            *slot = pick(qs, lo, hi, x, &mut crng);
+        // Strip-mined: the bracket search (data-independent, branchless —
+        // [`par::simd::fill_brackets`]) runs per block on either SIMD
+        // path with bit-identical results; the RNG-consuming pick stays
+        // scalar and sequential, so the per-chunk stream sees exactly the
+        // draws the fully scalar loop made.
+        let mut sel_buf = [0u32; par::simd::BLOCK];
+        let mut hi_buf = [0u32; par::simd::BLOCK];
+        for (slot_blk, blk) in
+            slots.chunks_mut(par::simd::BLOCK).zip(chunk.chunks(par::simd::BLOCK))
+        {
+            let (sels, his) = (&mut sel_buf[..blk.len()], &mut hi_buf[..blk.len()]);
+            par::simd::fill_brackets(qs, blk, sels, his);
+            for ((slot, &x), (&sel, &hi)) in
+                slot_blk.iter_mut().zip(blk).zip(sels.iter().zip(his.iter()))
+            {
+                *slot = pick(qs, sel as usize, hi as usize, x, &mut crng);
+            }
         }
     });
     out
@@ -86,28 +100,14 @@ pub fn quantize_sorted(xs: &[f64], qs: &[f64], rng: &mut Xoshiro256pp) -> Vec<u3
             while hi + 1 < qs.len() && qs[hi] < x {
                 hi += 1;
             }
-            // Mirror `bracket` exactly (incl. RNG-draw behaviour on exact
-            // hits) so both paths produce identical streams per seed.
+            // Mirror the bracket kernel ([`par::simd::fill_brackets`])
+            // exactly (incl. RNG-draw behaviour on exact hits) so both
+            // paths produce identical streams per seed.
             let lo = if qs[hi] <= x { hi } else { hi.saturating_sub(1) };
             *slot = pick(qs, lo, hi, x, &mut crng);
         }
     });
     out
-}
-
-/// Find `(lo, hi)` with `qs[lo] ≤ x ≤ qs[hi]`, `hi − lo ≤ 1`.
-#[inline]
-fn bracket(qs: &[f64], x: f64) -> (usize, usize) {
-    debug_assert!(
-        qs[0] <= x + 1e-12 && x <= qs[qs.len() - 1] + 1e-12,
-        "x={x} outside quantizer range [{}, {}]",
-        qs[0],
-        qs[qs.len() - 1]
-    );
-    // First index with qs[i] >= x.
-    let hi = qs.partition_point(|&q| q < x).min(qs.len() - 1);
-    let lo = hi.saturating_sub(1);
-    (if qs[hi] <= x { hi } else { lo }, hi)
 }
 
 /// Stochastic choice between bracket endpoints.
@@ -126,8 +126,17 @@ fn pick(qs: &[f64], lo: usize, hi: usize, x: f64, rng: &mut Xoshiro256pp) -> u32
 }
 
 /// Reconstruct the (unbiased estimate of the) vector from indices.
+///
+/// The per-chunk lookup runs through [`par::simd::gather_levels`] (AVX2
+/// hardware gather with a per-group bounds check, or scalar loads) — a
+/// pure table lookup, identical on either path including the panic on an
+/// out-of-range index.
 pub fn dequantize(idx: &[u32], qs: &[f64]) -> Vec<f64> {
-    par::map_elems(idx, |&i| qs[i as usize])
+    let mut out = vec![0.0f64; idx.len()];
+    par::zip_chunks_mut(&mut out, par::CHUNK, idx, par::CHUNK, |_, slots, chunk| {
+        par::simd::gather_levels(qs, chunk, slots);
+    });
+    out
 }
 
 /// One-shot unbiased compression: quantize + bit-pack.

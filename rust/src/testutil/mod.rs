@@ -1,5 +1,11 @@
 //! In-tree property-testing framework (the offline build has no proptest).
 //!
+//! Two pieces live here: the seeded random-case machinery ([`forall`] /
+//! [`forall_vec`] / [`Gen`]) and the execution-configuration matrix
+//! ([`for_each_exec_cell`]), which re-runs a body under every
+//! `threads × backend × SIMD` combination so determinism suites cover the
+//! whole configuration space in one process.
+//!
 //! Seeded, reproducible random-case generation with first-failure
 //! reporting and simple shrinking for vector inputs:
 //!
@@ -16,8 +22,107 @@
 //! ```
 
 use crate::dist::Dist;
+use crate::par::{self, simd::SimdMode, Backend};
 use crate::util::rng::Xoshiro256pp;
 use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+/// One cell of the execution-configuration matrix walked by
+/// [`for_each_exec_cell`]: the process-global knobs that must never change
+/// results, pinned to one concrete combination.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecCell {
+    /// Executor width pinned for this cell.
+    pub threads: usize,
+    /// Execution backend pinned for this cell.
+    pub backend: Backend,
+    /// SIMD instruction-set selection pinned for this cell.
+    pub simd: SimdMode,
+}
+
+impl std::fmt::Display for ExecCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "threads={} backend={:?} simd={}",
+            self.threads,
+            self.backend,
+            self.simd.name()
+        )
+    }
+}
+
+/// Serializes exec-matrix runs within one test binary — the pinned width,
+/// backend, and SIMD selection are process-global, so two matrices running
+/// concurrently would trample each other's cells.
+static EXEC_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores the process-global execution configuration on drop, so a
+/// panicking cell cannot leak its pin into later tests.
+struct RestoreExec {
+    threads: usize,
+    backend: Backend,
+    simd: SimdMode,
+}
+
+impl Drop for RestoreExec {
+    fn drop(&mut self) {
+        par::set_threads(self.threads);
+        par::set_backend(self.backend);
+        par::simd::set_simd(self.simd);
+    }
+}
+
+/// Run `body` once per cell of the full execution matrix: every width in
+/// `widths` × {pool, scoped} × every SIMD mode available on this machine
+/// (scalar always; AVX2 when the CPU has it). Each cell pins the
+/// process-global configuration before calling `body`; a failing cell
+/// re-panics with its full configuration prepended, so a red matrix test
+/// names the exact `(threads, backend, simd)` combination that broke
+/// instead of whichever cell happened to run last.
+///
+/// The walk holds an internal lock for its whole duration and takes no
+/// other lock, so callers may nest it inside their own file-level locks
+/// without ordering hazards.
+pub fn for_each_exec_cell(widths: &[usize], body: impl Fn(ExecCell)) {
+    let _g = EXEC_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Unit tests in this crate pin the width under `par::test_width_lock`;
+    // hold it as well so a lib-binary matrix cannot race them. Integration
+    // builds compile the lib without `cfg(test)`, so the lock (and this
+    // statement) doesn't exist there — each test binary is its own
+    // process. Lock order is always EXEC_LOCK → width lock, and only this
+    // function takes both.
+    #[cfg(test)]
+    let _w = crate::par::test_width_lock();
+    let _restore = RestoreExec {
+        threads: par::threads(),
+        backend: par::backend(),
+        simd: par::simd::simd(),
+    };
+    let mut simd_modes = vec![SimdMode::Scalar];
+    if par::simd::detected_avx2() {
+        simd_modes.push(SimdMode::Avx2);
+    }
+    for &threads in widths {
+        for backend in [Backend::Pool, Backend::Scoped] {
+            for &simd in &simd_modes {
+                let cell = ExecCell { threads, backend, simd };
+                par::set_threads(threads);
+                par::set_backend(backend);
+                par::simd::set_simd(simd);
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| body(cell))) {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .map(String::as_str)
+                        .or_else(|| payload.downcast_ref::<&'static str>().copied())
+                        .unwrap_or("<non-string panic payload>");
+                    panic!("[exec-matrix cell {cell}] {msg}");
+                }
+            }
+        }
+    }
+}
 
 /// Random value generator handed to each property case.
 pub struct Gen {
@@ -192,6 +297,34 @@ mod tests {
         });
         assert!(minimal.len() <= 2, "shrunk to {} elems", minimal.len());
         assert!(minimal.iter().any(|&x| x > 100.0));
+    }
+
+    #[test]
+    fn exec_matrix_pins_every_cell_and_restores() {
+        let prev = (par::threads(), par::backend(), par::simd::simd());
+        let seen = Mutex::new(Vec::new());
+        for_each_exec_cell(&[1, 2], |c| {
+            assert_eq!(par::threads(), c.threads, "cell {c}: width not pinned");
+            assert_eq!(par::backend(), c.backend, "cell {c}: backend not pinned");
+            assert_eq!(par::simd::simd(), c.simd, "cell {c}: simd not pinned");
+            seen.lock().unwrap().push((c.threads, c.backend, c.simd));
+        });
+        let n_simd = 1 + usize::from(par::simd::detected_avx2());
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 2 * 2 * n_simd, "matrix must cover every cell");
+        assert_eq!(
+            (par::threads(), par::backend(), par::simd::simd()),
+            prev,
+            "matrix must restore the prior configuration"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "exec-matrix cell threads=2")]
+    fn exec_matrix_names_the_failing_cell() {
+        for_each_exec_cell(&[1, 2], |c| {
+            assert!(c.threads < 2, "synthetic failure");
+        });
     }
 
     #[test]

@@ -1,24 +1,31 @@
 //! The determinism contract of `quiver::par`, tested end to end: every
 //! parallel hot pass — histogram build, `solve_hist`, quantize, bit-pack
 //! encode, and the parallel sort — must be **bitwise-identical** across
-//! thread counts 1/2/4/8 **and across execution backends** (persistent
-//! worker pool vs per-call scoped spawning), on every
-//! `dist::paper_suite()` family. Plus the pool lifecycle: shutdown,
-//! lazy reinit, and mid-run resize must neither lose work nor change
-//! results; and the multi-tenant batched dispatch must equal the
-//! one-vector-at-a-time path per tenant.
+//! thread counts 1/2/4/8, **across execution backends** (persistent
+//! worker pool vs per-call scoped spawning), **and across SIMD modes**
+//! (scalar vs AVX2 chunk kernels, when the CPU has AVX2), on every
+//! `dist::paper_suite()` family. The matrix tests walk the full
+//! `threads × backend × simd` cross product through
+//! `testutil::for_each_exec_cell`, so a red cell names its exact
+//! configuration. Plus the pool lifecycle: shutdown, lazy reinit, and
+//! mid-run resize must neither lose work nor change results; and the
+//! multi-tenant batched dispatch must equal the one-vector-at-a-time
+//! path per tenant.
 //!
-//! The tests mutate the process-global executor width/backend, and
-//! libtest runs tests of one binary concurrently — `WIDTH_LOCK`
-//! serializes them so a pinned width stays pinned while a snapshot is
-//! measured. (Every test in this file takes the lock, so pool worker
-//! counts are stable to assert on here — unlike in the lib unit tests.)
+//! The tests mutate the process-global executor width/backend/SIMD
+//! selection, and libtest runs tests of one binary concurrently —
+//! `WIDTH_LOCK` serializes them so a pinned width stays pinned while a
+//! snapshot is measured. (Every test in this file takes the lock, so
+//! pool worker counts are stable to assert on here — unlike in the lib
+//! unit tests. `for_each_exec_cell` takes its own inner lock and no
+//! other, so holding `WIDTH_LOCK` around it is deadlock-free.)
 
 use quiver::avq::histogram::{solve_hist, GridHistogram, HistConfig};
 use quiver::avq::{self, SolverKind};
 use quiver::dist::Dist;
 use quiver::par;
 use quiver::sq;
+use quiver::testutil::for_each_exec_cell;
 use quiver::util::rng::Xoshiro256pp;
 
 /// Crosses several chunk boundaries and ends in a ragged tail.
@@ -81,16 +88,17 @@ fn snapshot(xs: &[f64]) -> Snapshot {
     }
 }
 
-/// Restores width and backend even if an assertion panics, so a failure
-/// cannot leak a pinned configuration into later tests.
+/// Restores width, backend, and SIMD mode even if an assertion panics, so
+/// a failure cannot leak a pinned configuration into later tests.
 struct ParGuard {
     width: usize,
     backend: par::Backend,
+    simd: par::simd::SimdMode,
 }
 
 impl ParGuard {
     fn pin() -> Self {
-        Self { width: par::threads(), backend: par::backend() }
+        Self { width: par::threads(), backend: par::backend(), simd: par::simd::simd() }
     }
 }
 
@@ -98,6 +106,7 @@ impl Drop for ParGuard {
     fn drop(&mut self) {
         par::set_threads(self.width);
         par::set_backend(self.backend);
+        par::simd::set_simd(self.simd);
     }
 }
 
@@ -107,22 +116,19 @@ fn hot_passes_bitwise_identical_across_thread_counts_and_backends() {
     let _restore = ParGuard::pin();
     for (name, dist) in Dist::paper_suite() {
         let xs = dist.sample_vec(D, 0xC0FFEE);
+        // The reference is the most boring configuration there is: one
+        // thread, scoped spawning, forced-scalar kernels. Every matrix
+        // cell below must reproduce it bit for bit.
         par::set_backend(par::Backend::Scoped);
         par::set_threads(1);
+        par::simd::set_simd(par::simd::SimdMode::Scalar);
         let reference = snapshot(&xs);
         // Single-thread sanity: the sort really sorted, mass conserved.
         assert!(reference.sorted.windows(2).all(|w| f64::from_bits(w[0]) <= f64::from_bits(w[1])));
-        for backend in [par::Backend::Scoped, par::Backend::Pool] {
-            par::set_backend(backend);
-            for t in [1usize, 2, 4, 8] {
-                par::set_threads(t);
-                let got = snapshot(&xs);
-                assert_eq!(
-                    reference, got,
-                    "{name}: outputs diverged at {t} threads on {backend:?}"
-                );
-            }
-        }
+        for_each_exec_cell(&[1, 2, 4, 8], |cell| {
+            let got = snapshot(&xs);
+            assert_eq!(reference, got, "{name}: outputs diverged at cell [{cell}]");
+        });
     }
 }
 
@@ -200,18 +206,14 @@ fn batched_dispatch_equals_one_at_a_time() {
         .enumerate()
         .map(|(j, (xs, qs))| sq::compress(xs, qs, &mut Xoshiro256pp::stream(base, j as u64)))
         .collect();
-    for backend in [par::Backend::Pool, par::Backend::Scoped] {
-        par::set_backend(backend);
-        for t in [1usize, 2, 4, 8] {
-            par::set_threads(t);
-            let mut rng = Xoshiro256pp::seed_from_u64(0x5EED);
-            let got = sq::compress_batch(tenants.clone(), &mut rng);
-            assert_eq!(got.len(), reference.len());
-            for (j, (g, r)) in got.iter().zip(&reference).enumerate() {
-                assert_eq!(g, r, "tenant {j} diverged at {t} threads on {backend:?}");
-            }
+    for_each_exec_cell(&[1, 2, 4, 8], |cell| {
+        let mut rng = Xoshiro256pp::seed_from_u64(0x5EED);
+        let got = sq::compress_batch(tenants.clone(), &mut rng);
+        assert_eq!(got.len(), reference.len());
+        for (j, (g, r)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(g, r, "tenant {j} diverged at cell [{cell}]");
         }
-    }
+    });
 }
 
 /// One batch of small tenants costs exactly one pool wave (the sealed

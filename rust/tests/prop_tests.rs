@@ -1,5 +1,10 @@
 //! Property-based tests over the paper's invariants (in-tree framework —
-//! see `quiver::testutil`).
+//! see `quiver::testutil`), plus the differential fuzz harnesses: a
+//! seeded structure-aware generator drives random pipeline
+//! configurations `(d, s, distribution, level set)` through
+//! encode → decode and solver-vs-exhaustive comparisons. The fuzz
+//! iteration count is a fixed CI budget, overridable with
+//! `QUIVER_FUZZ_ITERS=<n>` for longer local soak runs.
 
 use quiver::avq::{self, Prefix, SolverKind};
 use quiver::dist::Dist;
@@ -340,6 +345,126 @@ fn prop_decoders_never_panic_on_garbage() {
         let bytes: Vec<u8> = (0..len).map(|_| g.usize_in(0..256) as u8).collect();
         let _ = Msg::from_body(&bytes); // must not panic
         let _ = sq::CompressedVec::from_bytes(&bytes); // must not panic
+        Ok(())
+    });
+}
+
+/// Iteration budget for the differential fuzz harnesses below: the fixed
+/// CI default unless `QUIVER_FUZZ_ITERS` overrides it (soak runs).
+fn fuzz_iters(default: usize) -> usize {
+    std::env::var("QUIVER_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Differential fuzz, pipeline half: a structure-aware draw of dimension
+/// (occasionally straddling a chunk boundary), distribution family, and
+/// level set (solver-produced or a synthetic covering grid, including the
+/// byte-aligned `s = 256` codec width) is round-tripped through
+/// quantize → encode → wire bytes → decode → dequantize. The index
+/// stream and level table must be lossless, and every reconstructed
+/// coordinate must be one of its input's two bracketing levels. Failures
+/// print the case seed for replay.
+#[test]
+fn fuzz_pipeline_roundtrip_structured() {
+    use quiver::avq::histogram::{solve_hist, HistConfig};
+    use quiver::util::rng::Xoshiro256pp;
+    forall(fuzz_iters(150), 0xF0, |g: &mut Gen, case| {
+        let d = if g.usize_in(0..10) == 0 {
+            g.usize_in(quiver::par::CHUNK - 2..quiver::par::CHUNK + 3)
+        } else {
+            g.usize_in(1..2000)
+        };
+        let suite = Dist::paper_suite();
+        let (_, dist) = suite[g.usize_in(0..suite.len())];
+        let xs = dist.sample_vec(d, g.u64());
+        let (lo, hi) = xs
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+        let qs: Vec<f64> = if lo == hi {
+            vec![lo]
+        } else if g.bool() {
+            // Solver-produced levels (small budgets; the realistic shape).
+            let s = g.usize_in(2..9);
+            solve_hist(&xs, s, &HistConfig::fixed(g.usize_in(16..512)))
+                .map_err(|e| e.to_string())?
+                .q
+        } else {
+            // Synthetic covering grid; half the time the u8 fast-path width.
+            let s = if g.bool() { 256 } else { g.usize_in(2..70) };
+            let mut qs: Vec<f64> = (0..s).map(|_| g.f64_in(lo..hi)).collect();
+            qs[0] = lo;
+            qs[s - 1] = hi;
+            qs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            qs
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(case);
+        let idx = sq::quantize(&xs, &qs, &mut rng);
+        let c = sq::encode(&idx, &qs);
+        let c2 = sq::CompressedVec::from_bytes(&c.to_bytes()).ok_or("wire parse failed")?;
+        if c2 != c {
+            return Err("wire roundtrip changed the record".into());
+        }
+        let (idx2, qs2) = sq::decode(&c2);
+        if idx2 != idx {
+            return Err(format!("index stream not lossless (d={d}, s={})", qs.len()));
+        }
+        if qs2.iter().zip(&qs).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err("level table not lossless".into());
+        }
+        let vals = sq::dequantize(&idx2, &qs2);
+        for (i, (&x, &v)) in xs.iter().zip(&vals).enumerate() {
+            let pos = qs.partition_point(|&q| q < x);
+            let lo_q = qs[pos.saturating_sub(1)];
+            let hi_q = qs[pos.min(qs.len() - 1)];
+            if v.to_bits() != lo_q.to_bits() && v.to_bits() != hi_q.to_bits() {
+                return Err(format!("coord {i}: x={x} decoded to non-neighbour {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Differential fuzz, solver half: random small instances — distribution
+/// family, optional exact duplicates, optional integral weights, random
+/// budget — are solved by every [`SolverKind`] and checked against the
+/// exhaustive oracle, with the traceback reproducing each reported
+/// objective.
+#[test]
+fn fuzz_solvers_vs_exhaustive_structured() {
+    forall(fuzz_iters(100), 0xF1, |g: &mut Gen, _| {
+        let suite = Dist::paper_suite();
+        let (_, dist) = suite[g.usize_in(0..suite.len())];
+        let d = g.usize_in(4..15);
+        let mut ys = dist.sample_sorted(d, g.u64());
+        let p = if g.bool() {
+            // Weighted path wants distinct support.
+            ys.dedup();
+            Prefix::weighted(&ys, &g.weights(ys.len(), 7))
+        } else {
+            if g.bool() {
+                ys[2] = ys[1]; // exact duplicate to stress tie handling
+            }
+            Prefix::unweighted(&ys)
+        };
+        if ys.len() < 4 {
+            return Ok(()); // dedup collapsed the draw below solvable sizes
+        }
+        let s = g.usize_in(2..ys.len());
+        let oracle = avq::solve(&p, s, SolverKind::Exhaustive).map_err(|e| e.to_string())?;
+        for kind in SolverKind::ALL {
+            let sol = avq::solve(&p, s, kind).map_err(|e| e.to_string())?;
+            if !approx_eq(sol.mse, oracle.mse, 1e-9, 1e-12) {
+                return Err(format!(
+                    "{}: {} vs oracle {} (d={}, s={s})",
+                    kind.name(),
+                    sol.mse,
+                    oracle.mse,
+                    ys.len()
+                ));
+            }
+            if !approx_eq(sol.recompute_mse(&p), sol.mse, 1e-9, 1e-12) {
+                return Err(format!("{} traceback mismatch at s={s}", kind.name()));
+            }
+        }
         Ok(())
     });
 }

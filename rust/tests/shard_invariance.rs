@@ -1,20 +1,28 @@
 //! The shard layer's determinism contract, tested end to end: splitting
 //! one vector across 1/2/4/8 shard ranges — on either execution backend
-//! (persistent pool vs scoped spawning) and at several executor widths —
-//! must leave the merged histogram, the chosen level set, and the encoded
-//! payload **bitwise-identical** to the single-node solve, on every
-//! `dist::paper_suite()` family. This is the `coordinator::shard`
-//! counterpart of `tests/par_invariance.rs`: thread count, backend, and
-//! now shard count are all invisible in results.
+//! (persistent pool vs scoped spawning), at several executor widths, and
+//! under either SIMD mode (scalar vs AVX2 chunk kernels, when available)
+//! — must leave the merged histogram, the chosen level set, and the
+//! encoded payload **bitwise-identical** to the single-node solve, on
+//! every `dist::paper_suite()` family. The matrix tests walk the full
+//! `threads × backend × simd` cross product through
+//! `testutil::for_each_exec_cell` (shard count is the extra, file-local
+//! axis), so a red cell names its exact configuration. This is the
+//! `coordinator::shard` counterpart of `tests/par_invariance.rs`: thread
+//! count, backend, SIMD mode, and shard count are all invisible in
+//! results.
 //!
 //! Tests here pin the process-global executor width/backend, so they all
-//! serialize on one lock (same pattern as par_invariance).
+//! serialize on one lock (same pattern as par_invariance;
+//! `for_each_exec_cell` only ever takes its own inner lock, so nesting it
+//! under `WIDTH_LOCK` is deadlock-free).
 
 use quiver::avq::histogram::{solve_hist, GridHistogram, HistConfig};
 use quiver::coordinator::shard::{build_sharded, ShardConfig, ShardCoordinator};
 use quiver::dist::Dist;
 use quiver::par;
 use quiver::sq;
+use quiver::testutil::for_each_exec_cell;
 use quiver::util::rng::Xoshiro256pp;
 
 /// Crosses several chunk boundaries and ends in a ragged tail.
@@ -23,15 +31,16 @@ const D: usize = 3 * par::CHUNK + 1234;
 /// Serializes tests that pin the global executor width/backend.
 static WIDTH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
-/// Restores width and backend even if an assertion panics.
+/// Restores width, backend, and SIMD mode even if an assertion panics.
 struct ParGuard {
     width: usize,
     backend: par::Backend,
+    simd: par::simd::SimdMode,
 }
 
 impl ParGuard {
     fn pin() -> Self {
-        Self { width: par::threads(), backend: par::backend() }
+        Self { width: par::threads(), backend: par::backend(), simd: par::simd::simd() }
     }
 }
 
@@ -39,6 +48,7 @@ impl Drop for ParGuard {
     fn drop(&mut self) {
         par::set_threads(self.width);
         par::set_backend(self.backend);
+        par::simd::set_simd(self.simd);
     }
 }
 
@@ -64,24 +74,22 @@ fn merged_histogram_bitwise_identical_across_shard_counts_and_backends() {
     let _restore = ParGuard::pin();
     for (name, dist) in Dist::paper_suite() {
         let xs = dist.sample_vec(D, 0x5AAD);
+        // Single-node reference under forced-scalar kernels; every matrix
+        // cell × shard count below must reproduce it bit for bit.
+        par::simd::set_simd(par::simd::SimdMode::Scalar);
         let mut ref_rng = Xoshiro256pp::seed_from_u64(0xD17E);
         let reference = hist_snapshot(&GridHistogram::build(&xs, 777, &mut ref_rng).unwrap());
-        for backend in [par::Backend::Pool, par::Backend::Scoped] {
-            par::set_backend(backend);
-            for t in [1usize, 2, 4] {
-                par::set_threads(t);
-                for shards in [1usize, 2, 4, 8] {
-                    let mut rng = Xoshiro256pp::seed_from_u64(0xD17E);
-                    let h = build_sharded(&xs, 777, &mut rng, shards).unwrap();
-                    assert_eq!(
-                        hist_snapshot(&h),
-                        reference,
-                        "{name}: histogram diverged at {shards} shards, \
-                         {t} threads on {backend:?}"
-                    );
-                }
+        for_each_exec_cell(&[1, 2, 4], |cell| {
+            for shards in [1usize, 2, 4, 8] {
+                let mut rng = Xoshiro256pp::seed_from_u64(0xD17E);
+                let h = build_sharded(&xs, 777, &mut rng, shards).unwrap();
+                assert_eq!(
+                    hist_snapshot(&h),
+                    reference,
+                    "{name}: histogram diverged at {shards} shards, cell [{cell}]"
+                );
             }
-        }
+        });
     }
 }
 
@@ -93,35 +101,30 @@ fn levels_and_payload_bitwise_identical_across_shard_counts_and_backends() {
         let xs = dist.sample_vec(D, 0xC0FFEE);
         // Single-node reference: solve + compress, exactly as the service
         // does it (HistConfig::fixed and ShardConfig share defaults).
+        par::simd::set_simd(par::simd::SimdMode::Scalar);
         let ref_sol = solve_hist(&xs, 16, &HistConfig::fixed(777)).unwrap();
         let mut ref_rng = Xoshiro256pp::seed_from_u64(0xBEEF);
         let ref_compressed = sq::compress(&xs, &ref_sol.q, &mut ref_rng);
-        for backend in [par::Backend::Pool, par::Backend::Scoped] {
-            par::set_backend(backend);
-            for t in [1usize, 4] {
-                par::set_threads(t);
-                for shards in [1usize, 2, 4, 8] {
-                    let coord = ShardCoordinator::new(ShardConfig {
-                        shards,
-                        m: 777,
-                        ..Default::default()
-                    });
-                    let mut rng = Xoshiro256pp::seed_from_u64(0xBEEF);
-                    let (sol, compressed) = coord.compress(&xs, 16, &mut rng).unwrap();
-                    let ctx = format!(
-                        "{name}: {shards} shards, {t} threads on {backend:?}"
-                    );
-                    assert_eq!(sol.q_idx, ref_sol.q_idx, "levels positions — {ctx}");
-                    assert_eq!(bits(&sol.q), bits(&ref_sol.q), "level values — {ctx}");
-                    assert_eq!(
-                        sol.mse.to_bits(),
-                        ref_sol.mse.to_bits(),
-                        "objective — {ctx}"
-                    );
-                    assert_eq!(compressed, ref_compressed, "payload — {ctx}");
-                }
+        for_each_exec_cell(&[1, 4], |cell| {
+            for shards in [1usize, 2, 4, 8] {
+                let coord = ShardCoordinator::new(ShardConfig {
+                    shards,
+                    m: 777,
+                    ..Default::default()
+                });
+                let mut rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+                let (sol, compressed) = coord.compress(&xs, 16, &mut rng).unwrap();
+                let ctx = format!("{name}: {shards} shards, cell [{cell}]");
+                assert_eq!(sol.q_idx, ref_sol.q_idx, "levels positions — {ctx}");
+                assert_eq!(bits(&sol.q), bits(&ref_sol.q), "level values — {ctx}");
+                assert_eq!(
+                    sol.mse.to_bits(),
+                    ref_sol.mse.to_bits(),
+                    "objective — {ctx}"
+                );
+                assert_eq!(compressed, ref_compressed, "payload — {ctx}");
             }
-        }
+        });
     }
 }
 

@@ -1,0 +1,324 @@
+//! Differential SIMD parity suite: every vectorized chunk kernel must be
+//! **bit-identical** to its scalar twin — same floats, same indices, same
+//! payload bytes — over the `dist::paper_suite()` families *and* over
+//! adversarial inputs the distributions never produce (NaN and ±∞ in
+//! every lane position, denormals, signed zeros, ragged chunk tails of
+//! every residue mod the lane width, and the `d = 0 / 1` degenerate
+//! shapes).
+//!
+//! Strategy: run the same computation under forced-scalar and — when the
+//! CPU has it — forced-AVX2 kernels (`par::simd::set_simd`), and compare
+//! via `f64::to_bits` / raw bytes, never `PartialEq` on floats (which
+//! would hide `-0.0` vs `0.0` and NaN payload differences). On a machine
+//! without AVX2 the suite still runs scalar-vs-scalar, so it never
+//! vacuously passes in CI's forced-scalar leg; the dedicated AVX2 leg
+//! compiles with `-Ctarget-feature=+avx2` and re-runs everything here.
+//!
+//! The SIMD selection is process-global, so tests that pin it serialize
+//! on `MODE_LOCK` (libtest runs one binary's tests concurrently).
+
+use quiver::avq::histogram::{solve_hist, GridHistogram, HistConfig};
+use quiver::dist::Dist;
+use quiver::par::{self, simd};
+use quiver::sq;
+use quiver::util::rng::Xoshiro256pp;
+use std::sync::Mutex;
+
+/// Serializes tests that pin the process-global SIMD mode.
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` once per SIMD mode available on this machine (scalar always,
+/// AVX2 when detected) and return the labelled results. Restores the
+/// prior selection even on panic via a drop guard.
+fn under_modes<T>(f: impl Fn() -> T) -> Vec<(simd::SimdMode, T)> {
+    struct Restore(simd::SimdMode);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            simd::set_simd(self.0);
+        }
+    }
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = Restore(simd::simd());
+    let mut modes = vec![simd::SimdMode::Scalar];
+    if simd::detected_avx2() {
+        modes.push(simd::SimdMode::Avx2);
+    }
+    modes
+        .into_iter()
+        .map(|m| {
+            simd::set_simd(m);
+            (m, f())
+        })
+        .collect()
+}
+
+/// Assert every mode produced the same `T` (which must already be a
+/// bit-exact representation — `to_bits`/bytes, not floats).
+fn assert_modes_agree<T: PartialEq + std::fmt::Debug>(results: Vec<(simd::SimdMode, T)>, ctx: &str) {
+    let (m0, r0) = &results[0];
+    for (m, r) in &results[1..] {
+        assert_eq!(r, r0, "{ctx}: {} diverged from {}", m.name(), m0.name());
+    }
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Lengths that exercise every ragged-tail residue mod the lane width,
+/// the empty and single-element shapes, and a couple of chunk-boundary
+/// straddlers.
+fn tail_lengths() -> Vec<usize> {
+    let mut v: Vec<usize> = (0..=2 * simd::LANES + 1).collect();
+    v.extend([100, 1000, par::CHUNK - 1, par::CHUNK, par::CHUNK + 13]);
+    v
+}
+
+/// Adversarial values the paper distributions never emit.
+const SPECIALS: &[f64] = &[
+    f64::NAN,
+    f64::INFINITY,
+    f64::NEG_INFINITY,
+    f64::MIN_POSITIVE,        // smallest normal
+    f64::MIN_POSITIVE / 2.0,  // denormal
+    -f64::MIN_POSITIVE / 2.0, // negative denormal
+    0.0,
+    -0.0,
+];
+
+#[test]
+fn scan_stats_parity_paper_suite_and_tails() {
+    for (name, dist) in Dist::paper_suite() {
+        for len in tail_lengths() {
+            let xs = dist.sample_vec(len, 0x51AD ^ len as u64);
+            let got = under_modes(|| {
+                let st = par::scan::stats(&xs);
+                (st.lo.to_bits(), st.hi.to_bits(), st.norm2_sq.to_bits(), st.finite)
+            });
+            assert_modes_agree(got, &format!("stats({name}, len={len})"));
+        }
+    }
+}
+
+#[test]
+fn scan_chunk_parity_adversarial_placements() {
+    // Every special value in every lane position of the head group, the
+    // pairwise-merge seams, and the ragged tail.
+    for len in [1usize, 3, 4, 5, 7, 8, 9, 12, 31] {
+        let base = Dist::Normal { mu: 0.0, sigma: 1.0 }.sample_vec(len, 77);
+        for &special in SPECIALS {
+            for pos in 0..len {
+                let mut xs = base.clone();
+                xs[pos] = special;
+                let got = under_modes(|| {
+                    let (lo, hi, n2, fin) = simd::scan_chunk(&xs);
+                    (lo.to_bits(), hi.to_bits(), n2.to_bits(), fin)
+                });
+                assert_modes_agree(
+                    got,
+                    &format!("scan_chunk(len={len}, xs[{pos}]={special:?})"),
+                );
+            }
+        }
+    }
+    // Empty-input identities hold in every mode.
+    let got = under_modes(|| {
+        let (lo, hi, n2, fin) = simd::scan_chunk(&[]);
+        (lo.to_bits(), hi.to_bits(), n2.to_bits(), fin)
+    });
+    for (m, (lo, hi, n2, fin)) in got {
+        assert_eq!(lo, f64::INFINITY.to_bits(), "{}", m.name());
+        assert_eq!(hi, f64::NEG_INFINITY.to_bits(), "{}", m.name());
+        assert_eq!(n2, 0.0f64.to_bits(), "{}", m.name());
+        assert!(fin, "{}", m.name());
+    }
+}
+
+#[test]
+fn grid_positions_parity_including_denormals() {
+    for len in tail_lengths() {
+        let mut xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(len, 0xAB ^ len as u64);
+        // Denormals and signed zeros are legal grid inputs (finite).
+        for (i, &s) in SPECIALS[3..].iter().enumerate() {
+            if !xs.is_empty() {
+                let k = (i * 5 + 1) % xs.len();
+                xs[k] = s;
+            }
+        }
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min).min(0.0) - 1.0;
+        let inv_delta = 0.37;
+        let got = under_modes(|| {
+            let mut t = vec![0.0f64; xs.len()];
+            let mut f = vec![0.0f64; xs.len()];
+            simd::grid_positions(&xs, lo, inv_delta, &mut t, &mut f);
+            (bits(&t), bits(&f))
+        });
+        assert_modes_agree(got, &format!("grid_positions(len={len})"));
+    }
+}
+
+#[test]
+fn fill_brackets_parity_exact_hits_and_edges() {
+    // Levels with exact duplicates of input values, so the `<=` tie rule
+    // is exercised, plus inputs pinned to the first/last level.
+    let qs: Vec<f64> = vec![-3.0, -1.5, -1.5 + 1e-12, 0.0, 0.25, 2.0, 7.5];
+    for len in tail_lengths() {
+        let mut g = Xoshiro256pp::seed_from_u64(len as u64 + 9);
+        let xs: Vec<f64> = (0..len)
+            .map(|i| match i % 5 {
+                0 => qs[i % qs.len()],                       // exact level hit
+                1 => *qs.first().unwrap(),                   // left edge
+                2 => *qs.last().unwrap(),                    // right edge
+                _ => -3.0 + 10.5 * g.next_f64(),             // interior
+            })
+            .collect();
+        let got = under_modes(|| {
+            let mut sel = vec![0u32; xs.len()];
+            let mut hi = vec![0u32; xs.len()];
+            simd::fill_brackets(&qs, &xs, &mut sel, &mut hi);
+            (sel, hi)
+        });
+        assert_modes_agree(got, &format!("fill_brackets(len={len})"));
+    }
+}
+
+#[test]
+fn gather_levels_parity_first_last_and_ragged() {
+    // Level tables around the i32-gather group size, indices slamming the
+    // first and last entries (the bounds the AVX2 guard watches).
+    for n_levels in [1usize, 2, 3, 4, 5, 300] {
+        let qs: Vec<f64> = (0..n_levels).map(|i| i as f64 * 0.5 - 3.0).collect();
+        for len in tail_lengths() {
+            let mut g = Xoshiro256pp::seed_from_u64((n_levels * 1000 + len) as u64);
+            let idx: Vec<u32> = (0..len)
+                .map(|i| match i % 4 {
+                    0 => 0,
+                    1 => (n_levels - 1) as u32,
+                    _ => g.next_below(n_levels as u64) as u32,
+                })
+                .collect();
+            let got = under_modes(|| {
+                let mut out = vec![0.0f64; idx.len()];
+                simd::gather_levels(&qs, &idx, &mut out);
+                bits(&out)
+            });
+            assert_modes_agree(got, &format!("gather_levels(levels={n_levels}, len={len})"));
+        }
+    }
+}
+
+#[test]
+fn histogram_counts_bitwise_equal_across_modes() {
+    for (name, dist) in Dist::paper_suite() {
+        for (d, m) in [(1usize, 2usize), (100, 64), (par::CHUNK + 777, 777), (2 * par::CHUNK + 3, 129)]
+        {
+            let xs = dist.sample_vec(d, 0xBADD ^ d as u64);
+            let got = under_modes(|| {
+                let mut rng = Xoshiro256pp::seed_from_u64(0xD17E);
+                let h = GridHistogram::build(&xs, m, &mut rng).unwrap();
+                (bits(&h.weights), bits(&h.grid), h.norm2_sq.to_bits(), h.lo.to_bits(), h.hi.to_bits())
+            });
+            assert_modes_agree(got, &format!("histogram({name}, d={d}, m={m})"));
+        }
+    }
+}
+
+#[test]
+fn quantize_dequantize_and_payload_parity() {
+    // s = 16 exercises the sub-byte general codec path, s = 256 the
+    // byte-aligned u8 fast path; both must be invisible in the bits.
+    for (name, dist) in Dist::paper_suite() {
+        for s in [3usize, 16, 256] {
+            for d in [1usize, 2, 7, 8, 9, 1000, par::CHUNK + 13] {
+                let xs = dist.sample_vec(d, 0xE44 ^ (d * s) as u64);
+                // Level set spanning the input range (quantize requires
+                // qs[0] ≤ x ≤ qs[last]), built without the solver to keep
+                // the matrix cheap.
+                let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let qs: Vec<f64> = (0..s)
+                    .map(|i| lo + (hi - lo) * i as f64 / (s - 1) as f64)
+                    .collect();
+                let got = under_modes(|| {
+                    let mut rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+                    let idx = sq::quantize(&xs, &qs, &mut rng);
+                    let c = sq::encode(&idx, &qs);
+                    let (back, back_qs) = sq::decode(&c);
+                    assert_eq!(back, idx, "decode(encode(idx)) != idx");
+                    let vals = sq::dequantize(&back, &back_qs);
+                    (idx, c.payload, bits(&vals))
+                });
+                assert_modes_agree(got, &format!("quantize({name}, s={s}, d={d})"));
+            }
+        }
+    }
+}
+
+#[test]
+fn solve_hist_levels_parity() {
+    // The full histogram → solver → levels path: the level *values* and
+    // positions must not depend on the instruction set.
+    for (name, dist) in Dist::paper_suite() {
+        let xs = dist.sample_vec(par::CHUNK + 321, 0xF00D);
+        let got = under_modes(|| {
+            let sol = solve_hist(&xs, 16, &HistConfig::fixed(777)).unwrap();
+            (bits(&sol.q), sol.q_idx.clone(), sol.mse.to_bits())
+        });
+        assert_modes_agree(got, &format!("solve_hist({name})"));
+    }
+}
+
+#[test]
+fn pack_unpack_parity_every_aligned_width() {
+    // bits = 8 and 16 are reachable through encode; bits = 32 would need
+    // more than 2³¹ levels, so the payload kernels are driven directly.
+    for bits in [8u8, 16, 32] {
+        let bpe = usize::from(bits) / 8;
+        for len in tail_lengths() {
+            if len > 4096 {
+                continue; // direct-call coverage doesn't need chunk-scale inputs
+            }
+            let mut g = Xoshiro256pp::seed_from_u64(len as u64 * 31 + u64::from(bits));
+            let max = if bits == 32 { u64::from(u32::MAX) + 1 } else { 1u64 << bits };
+            let chunk: Vec<u32> = (0..len)
+                .map(|i| match i % 3 {
+                    0 => 0,
+                    1 => (max - 1) as u32,
+                    _ => g.next_below(max) as u32,
+                })
+                .collect();
+            let packed = under_modes(|| {
+                let mut window = vec![0u8; chunk.len() * bpe];
+                simd::pack_bytes(&chunk, &mut window, bits);
+                window
+            });
+            let window = packed[0].1.clone();
+            assert_modes_agree(packed, &format!("pack_bytes(bits={bits}, len={len})"));
+            let unpacked = under_modes(|| {
+                let mut out = vec![0u32; len];
+                simd::unpack_bytes(&window, &mut out, bits);
+                out
+            });
+            assert_eq!(unpacked[0].1, chunk, "roundtrip(bits={bits}, len={len})");
+            assert_modes_agree(unpacked, &format!("unpack_bytes(bits={bits}, len={len})"));
+        }
+    }
+}
+
+#[test]
+fn wide_codec_roundtrip_u16_levels() {
+    // 65536 levels → 16-bit byte-aligned codec over a multi-chunk index
+    // stream with a ragged tail.
+    let s = 1usize << 16;
+    let qs: Vec<f64> = (0..s).map(|i| i as f64).collect();
+    let d = par::CHUNK + 4321;
+    let mut g = Xoshiro256pp::seed_from_u64(0x16B);
+    let idx: Vec<u32> = (0..d).map(|_| g.next_below(s as u64) as u32).collect();
+    let got = under_modes(|| {
+        let c = sq::encode(&idx, &qs);
+        let (back, _) = sq::decode(&c);
+        assert_eq!(back, idx, "u16 roundtrip");
+        c.payload
+    });
+    assert_modes_agree(got, "encode(s=65536)");
+}
