@@ -15,14 +15,16 @@ test:
 	cd rust && cargo test -q
 
 bench:
-	cd rust && cargo bench --bench bench_solvers && cargo bench --bench bench_approx && cargo bench --bench bench_pipeline
+	cd rust && cargo bench --bench bench_solvers && cargo bench --bench bench_approx && cargo bench --bench bench_pipeline && cargo bench --bench bench_ingest
 
-# Reduced-size run of both JSON-emitting bench binaries (seconds, not
+# Reduced-size run of the JSON-emitting bench binaries (seconds, not
 # minutes) — what the non-gating CI perf-smoke job executes. Leaves
-# BENCH_solvers.json / BENCH_pipeline.json at the repo root.
+# BENCH_solvers.json / BENCH_pipeline.json (+ shard/stream) and
+# BENCH_ingest.json at the repo root.
 bench-smoke:
 	cd rust && QUIVER_MAX_POW=13 cargo bench --bench bench_solvers
 	cd rust && QUIVER_SMOKE=1 cargo bench --bench bench_pipeline
+	cd rust && QUIVER_SMOKE=1 cargo bench --bench bench_ingest
 
 # Gating fault-injection chaos suite: every faultnet::FaultAction driven
 # against a live shard fleet through the deterministic fault proxy,

@@ -1,0 +1,138 @@
+//! `cargo bench --bench bench_ingest` — streaming-ingestion numbers:
+//!
+//! * chunked ingest (`coordinator::ingest::ingest_local`) vs the
+//!   monolithic whole-buffer pipeline on the same input, bit-equality
+//!   asserted inline before timing;
+//! * the peak-coordinator-memory proxy: the task's allocation high-water
+//!   mark (`IngestTask::peak_bytes`) over a multi-chunk ingest, asserted
+//!   against the O(M + CHUNK) budget and recorded so the CI perf-smoke
+//!   job surfaces it — this is the machine check that the service never
+//!   materializes the vector;
+//! * the end-to-end ingest RPC over loopback TCP (pipelined fill +
+//!   lock-step echo), wire bits asserted against the monolithic run.
+//!
+//! Machine-readable results land in `BENCH_ingest.json` at the repo root.
+//! Set `QUIVER_SMOKE=1` to shrink sizes so a full run finishes in seconds
+//! (the CI perf-smoke job and `make bench-smoke` use this).
+
+use quiver::benchfw::{self, write_bench_json, BenchRecord, Table};
+use quiver::coordinator::ingest::{self, IngestConfig, IngestTask};
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::service::{ingest_remote, Service, ServiceConfig};
+use quiver::dist::Dist;
+use quiver::par;
+
+fn main() {
+    let smoke = std::env::var("QUIVER_SMOKE").is_ok();
+    let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let mut records: Vec<BenchRecord> = vec![];
+    let samples = if smoke { 3 } else { 10 };
+    let pow = if smoke { 18 } else { 21 };
+    let d = (1usize << pow) + 777; // ragged tail: the general shape
+    let s = 16u32;
+    let m = 400usize;
+    let cfg = IngestConfig { m, ..Default::default() };
+    let data: Vec<f32> = Dist::LogNormal { mu: 0.0, sigma: 1.0 }
+        .sample_vec(d, 0x1A57)
+        .into_iter()
+        .map(|x| x as f32)
+        .collect();
+
+    // The invariance contract, asserted on the bench input before timing.
+    let (want, _) = ingest::monolithic_reference(&data, s, &cfg, 1).expect("monolithic");
+    let (got, _) = ingest::ingest_local(&data, s, &cfg, 1, None).expect("chunked");
+    assert_eq!(got, want, "chunked ingest diverged from monolithic on the bench input");
+
+    // --- Throughput: chunked fold-on-arrival vs whole-buffer pipeline. ---
+    let mut t = Table::new(
+        format!("chunked ingest vs monolithic, d=2^{pow}+777, M={m}, s={s}"),
+        &["path", "median", "elems/s", "vs monolithic"],
+    );
+    let mut medians: Vec<f64> = vec![];
+    for (label, chunked) in [("monolithic", false), ("chunked", true)] {
+        let st = benchfw::bench(&format!("ingest-{label} d=2^{pow}"), 1, samples, || {
+            if chunked {
+                ingest::ingest_local(&data, s, &cfg, 1, None).unwrap().0.payload.len()
+            } else {
+                ingest::monolithic_reference(&data, s, &cfg, 1).unwrap().0.payload.len()
+            }
+        });
+        medians.push(st.median().as_secs_f64());
+        let vs = format!("{:.2}x", medians[0] / medians.last().unwrap());
+        t.row(vec![
+            label.into(),
+            benchfw::fmt_duration(st.median()),
+            format!("{:.3e}", st.throughput(d)),
+            vs,
+        ]);
+        records.push(BenchRecord::from_stats(&st, d, s as usize));
+    }
+    t.print();
+
+    // --- Peak coordinator memory: the O(M + CHUNK) proxy. ---
+    // One full task lifecycle through the real state machine, tracking the
+    // allocation high-water mark. The budget mirrors the module's unit
+    // bound: grid counts + one in-flight chunk's transient buffers + one
+    // 40-byte record per chunk — and must stay far below d·4 (the bytes a
+    // materialized vector would pin).
+    {
+        let n = d.div_ceil(par::CHUNK) as u64;
+        let (lo, hi) = ingest::declared_range(&data);
+        let mut task = IngestTask::new(&cfg, 1, d as u64, s, lo, hi).expect("open");
+        for ci in 0..n {
+            task.add_chunk(ci, ingest::chunk_of(&data, ci)).expect("fold");
+        }
+        task.close().expect("close");
+        task.solve_close().expect("solve");
+        let mut payload = 0usize;
+        for ci in 0..n {
+            payload += task.encode_chunk(ci, ingest::chunk_of(&data, ci)).expect("encode").len();
+        }
+        let peak = task.peak_bytes();
+        let budget = (m + 1) * 8 * 2           // counts + count-pass return
+            + par::CHUNK * (4 + 8 + 4)          // frame + widened + indices
+            + n as usize * 40                   // scan slots + echo markers
+            + par::CHUNK * 4                    // packed window (≤ 4B/coord)
+            + 4096; // levels + slack
+        assert!(peak <= budget, "peak {peak}B exceeds the O(M + CHUNK) budget {budget}B");
+        assert!(
+            peak < d * 4,
+            "peak {peak}B must stay far below the materialized vector ({}B)",
+            d * 4
+        );
+        println!(
+            "ingest peak resident: {peak} B over {n} chunks (budget {budget} B; the \
+             vector itself would pin {} B; payload streamed out: {payload} B)",
+            d * 4
+        );
+        let st = benchfw::Stats {
+            name: format!("ingest-peak-bytes={peak} budget={budget}"),
+            samples: vec![std::time::Duration::from_nanos(peak as u64)],
+        };
+        records.push(BenchRecord::from_stats(&st, d, s as usize));
+    }
+
+    // --- End-to-end ingest RPC (loopback TCP). ---
+    {
+        let service = Service::start(ServiceConfig {
+            threads: 2,
+            router: Router::new(RouterConfig { exact_max_d: 4096, hist_m: m, seed: 3, shards: 1 }),
+            ..Default::default()
+        })
+        .expect("service");
+        let addr = service.addr().to_string();
+        let st = benchfw::bench(&format!("ingest-rpc d=2^{pow}"), 1, samples, || {
+            ingest_remote(&addr, 1, s, 0, 0, &data).expect("ingest rpc").0.payload.len()
+        });
+        let (cv, solver, _) = ingest_remote(&addr, 1, s, 0, 0, &data).expect("ingest rpc");
+        assert_eq!(cv, want, "wire ingest diverged from the monolithic run");
+        println!("ingest RPC ({solver}): median {}", benchfw::fmt_duration(st.median()));
+        records.push(BenchRecord::from_stats(&st, d, s as usize));
+        println!("service metrics: {}", service.metrics.summary());
+        service.shutdown();
+    }
+
+    let json = write_bench_json(&repo_root.join("BENCH_ingest.json"), &records)
+        .expect("write BENCH_ingest.json");
+    println!("wrote {} records to {}", records.len(), json.display());
+}

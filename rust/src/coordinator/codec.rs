@@ -181,6 +181,28 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
+    /// [`f32s`](Self::f32s) with a per-message element cap, for messages
+    /// whose slice has a protocol-level size bound tighter than the frame
+    /// limit (e.g. an ingest chunk is at most [`crate::par::CHUNK`]
+    /// coordinates). A wire-supplied count above `max` is a
+    /// [`DecodeError`] *before* any allocation — the whole-frame buffer
+    /// bound alone would still admit one frame-sized chunk, defeating the
+    /// streaming layer's O(CHUNK) memory promise.
+    pub fn f32s_max(&mut self, max: usize) -> R<Vec<f32>> {
+        let n = self.u64()? as usize;
+        if n > max {
+            return Err(DecodeError("f32 slice length exceeds message cap"));
+        }
+        if n.checked_mul(4).map_or(true, |b| b > self.remaining()) {
+            return Err(DecodeError("f32 slice length exceeds buffer"));
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     /// Read a `u64` count followed by that many `f64`s.
     pub fn f64s(&mut self) -> R<Vec<f64>> {
         let n = self.u64()? as usize;
@@ -253,6 +275,32 @@ mod tests {
             let mut r = Reader::new(&buf[..cut]);
             assert!(r.f32s().is_err(), "cut={cut}");
         }
+    }
+
+    #[test]
+    fn capped_f32s_rejects_counts_over_the_cap() {
+        // A count over the cap is rejected even when the bytes are all
+        // present — the cap is a protocol bound, not a buffer bound.
+        let mut w = Writer::new();
+        w.f32s(&[1.0, 2.0, 3.0, 4.0]);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.f32s_max(3), Err(DecodeError("f32 slice length exceeds message cap")));
+        // At or under the cap it reads exactly like f32s.
+        let mut r2 = Reader::new(&buf);
+        assert_eq!(r2.f32s_max(4).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r2.expect_end().is_ok());
+        // Truncation under the cap is still the buffer error.
+        for cut in 0..buf.len() {
+            let mut rt = Reader::new(&buf[..cut]);
+            assert!(rt.f32s_max(4).is_err(), "cut={cut}");
+        }
+        // A bogus huge count must not allocate, same as f32s.
+        let mut wb = Writer::new();
+        wb.u64(1u64 << 60);
+        let bogus = wb.finish();
+        let mut rb = Reader::new(&bogus);
+        assert!(rb.f32s_max(1 << 20).is_err());
     }
 
     #[test]

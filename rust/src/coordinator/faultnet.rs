@@ -10,12 +10,17 @@
 //! replays the exact same failure on every run (the repo's determinism
 //! contract applied to the failures themselves).
 //!
-//! Faults are injected on the **reply direction** (upstream → client);
-//! the request direction is a transparent byte pump. Frame indices count
-//! reply frames from 0 per connection. The chaos suite
+//! Faults are injected on the **reply direction** (upstream → client) by
+//! default, with the request direction a transparent byte pump; a
+//! schedule built with [`FaultSchedule::on_requests`] flips that — the
+//! *request* direction becomes the frame-aware fault-applying pump
+//! (chunk uploads dropped, truncated, or stalled mid-ingest) while
+//! replies pass through untouched. Frame indices count frames of the
+//! faulted direction from 0 per connection. The chaos suite
 //! (`tests/fault_injection.rs`) drives every [`FaultAction`] against a
-//! live shard fleet and asserts bitwise-identical recovery or a clean
-//! typed error — never a hang, never silently wrong bits.
+//! live shard fleet and a live ingest service and asserts
+//! bitwise-identical recovery or a clean typed error — never a hang,
+//! never silently wrong bits.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -65,6 +70,7 @@ pub struct FaultSchedule {
     default_action: FaultAction,
     // Keyed by connection index. BTreeMap per contract rule C2.
     per_conn: BTreeMap<u64, FaultAction>,
+    on_requests: bool,
 }
 
 impl FaultSchedule {
@@ -75,13 +81,30 @@ impl FaultSchedule {
 
     /// Every connection gets `action` (a persistently faulty node).
     pub fn all(action: FaultAction) -> Self {
-        Self { default_action: action, per_conn: BTreeMap::new() }
+        Self { default_action: action, per_conn: BTreeMap::new(), on_requests: false }
     }
 
     /// Override the action for connection `idx` (accept order, 0-based).
     pub fn with_conn(mut self, idx: u64, action: FaultAction) -> Self {
         self.per_conn.insert(idx, action);
         self
+    }
+
+    /// Apply the schedule to the **request** direction (client →
+    /// upstream) instead of the reply direction: frame indices then count
+    /// request frames, so `DropAfterFrames(n)` kills the connection after
+    /// the n-th uploaded frame (e.g. mid-ingest, after `IngestOpen` + n−1
+    /// chunks), `TruncateFrame(n)` cuts the n-th upload mid-frame, and
+    /// `StallAfterFrames(n)` wedges the upload until the server's read
+    /// deadline fires. Replies pass through untouched.
+    pub fn on_requests(mut self) -> Self {
+        self.on_requests = true;
+        self
+    }
+
+    /// Whether this schedule faults the request direction.
+    pub fn requests_faulted(&self) -> bool {
+        self.on_requests
     }
 
     /// The action connection `idx` receives.
@@ -115,9 +138,12 @@ impl FaultProxy {
                 super::run_accept_loop(&listener, &stop2, |client| {
                     let idx = conn_idx.fetch_add(1, Ordering::Relaxed);
                     let action = schedule.action(idx);
+                    let on_requests = schedule.requests_faulted();
                     let upstream = upstream.clone();
                     let stop = stop2.clone();
-                    std::thread::spawn(move || pump_conn(client, &upstream, action, &stop));
+                    std::thread::spawn(move || {
+                        pump_conn(client, &upstream, action, on_requests, &stop);
+                    });
                 });
             })?;
         Ok(Self { addr, stop, join: Some(join) })
@@ -165,9 +191,17 @@ fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> bool 
     true
 }
 
-/// Drive one proxied connection: transparent request pump client→upstream
-/// on a helper thread, frame-aware fault-applying reply pump inline.
-fn pump_conn(client: TcpStream, upstream: &str, action: FaultAction, stop: &Arc<AtomicBool>) {
+/// Drive one proxied connection: the faulted direction (replies by
+/// default, requests when the schedule was built `on_requests`) goes
+/// through the frame-aware fault-applying pump inline; the other
+/// direction is a transparent raw byte pump on a helper thread.
+fn pump_conn(
+    client: TcpStream,
+    upstream: &str,
+    action: FaultAction,
+    on_requests: bool,
+    stop: &Arc<AtomicBool>,
+) {
     if action == FaultAction::Refuse {
         let _ = client.shutdown(Shutdown::Both);
         return;
@@ -184,45 +218,56 @@ fn pump_conn(client: TcpStream, upstream: &str, action: FaultAction, stop: &Arc<
         let _ = s.set_write_timeout(Some(Duration::from_secs(10)));
     }
 
-    // Request direction: raw byte pump until EOF/error/stop.
-    let (mut c_rd, mut u_wr) = match (client.try_clone(), up.try_clone()) {
+    // Transparent direction on a helper thread, faulted direction inline.
+    let (c2, u2) = match (client.try_clone(), up.try_clone()) {
         (Ok(c), Ok(u)) => (c, u),
         _ => return,
     };
-    let stop_req = stop.clone();
-    let req_pump = std::thread::spawn(move || {
-        let mut buf = [0u8; 16 * 1024];
-        loop {
-            if stop_req.load(Ordering::Relaxed) {
-                break;
-            }
-            match c_rd.read(&mut buf) {
-                Ok(0) => break,
-                Ok(n) => {
-                    if u_wr.write_all(&buf[..n]).is_err() {
-                        break;
-                    }
-                }
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    continue;
-                }
-                Err(_) => break,
-            }
-        }
-        // Tell the upstream node the client is gone so its handler exits.
-        let _ = u_wr.shutdown(Shutdown::Write);
-    });
-
-    pump_replies(up, client, action, stop);
-    let _ = req_pump.join();
+    let stop_raw = stop.clone();
+    let raw = if on_requests {
+        // Replies pass through untouched; requests get the faults.
+        std::thread::spawn(move || raw_pump(u2, c2, &stop_raw))
+    } else {
+        std::thread::spawn(move || raw_pump(c2, u2, &stop_raw))
+    };
+    if on_requests {
+        pump_frames(client, up, action, stop);
+    } else {
+        pump_frames(up, client, action, stop);
+    }
+    let _ = raw.join();
 }
 
-/// Frame-aware reply pump: forwards `len:u32 body` frames from `up` to
-/// `client`, applying `action` keyed by the 0-based reply frame index.
-fn pump_replies(mut up: TcpStream, mut client: TcpStream, action: FaultAction, stop: &AtomicBool) {
+/// Transparent byte pump `rd` → `wr` until EOF/error/stop, then a write
+/// shutdown on `wr` so the peer's handler exits.
+fn raw_pump(mut rd: TcpStream, mut wr: TcpStream, stop: &AtomicBool) {
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match rd.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                if wr.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = wr.shutdown(Shutdown::Write);
+}
+
+/// Frame-aware pump: forwards `len:u32 body` frames from `src` to `dst`,
+/// applying `action` keyed by the 0-based frame index of this direction.
+fn pump_frames(mut src: TcpStream, mut dst: TcpStream, action: FaultAction, stop: &AtomicBool) {
     let mut frame_idx = 0u32;
     loop {
         match action {
@@ -241,23 +286,23 @@ fn pump_replies(mut up: TcpStream, mut client: TcpStream, action: FaultAction, s
             _ => {}
         }
         let mut hdr = [0u8; 4];
-        if !read_full(&mut up, &mut hdr, stop) {
+        if !read_full(&mut src, &mut hdr, stop) {
             break;
         }
         let len = u32::from_le_bytes(hdr);
         if len == 0 || len > MAX_FRAME {
-            break; // malformed upstream; fail closed
+            break; // malformed sender; fail closed
         }
         let mut body = vec![0u8; len as usize];
-        if !read_full(&mut up, &mut body, stop) {
+        if !read_full(&mut src, &mut body, stop) {
             break;
         }
         match action {
             FaultAction::DelayMs(ms) => std::thread::sleep(Duration::from_millis(ms)),
             FaultAction::TruncateFrame(n) if frame_idx == n => {
                 // Announce the full length, deliver half the bytes.
-                let _ = client.write_all(&hdr);
-                let _ = client.write_all(&body[..body.len() / 2]);
+                let _ = dst.write_all(&hdr);
+                let _ = dst.write_all(&body[..body.len() / 2]);
                 break;
             }
             FaultAction::CorruptFrame(n) if frame_idx == n => {
@@ -265,13 +310,13 @@ fn pump_replies(mut up: TcpStream, mut client: TcpStream, action: FaultAction, s
             }
             _ => {}
         }
-        if client.write_all(&hdr).is_err() || client.write_all(&body).is_err() {
+        if dst.write_all(&hdr).is_err() || dst.write_all(&body).is_err() {
             break;
         }
         frame_idx = frame_idx.saturating_add(1);
     }
-    let _ = up.shutdown(Shutdown::Both);
-    let _ = client.shutdown(Shutdown::Both);
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
 }
 
 #[cfg(test)]
@@ -360,6 +405,71 @@ mod tests {
             "stall: {err:?}"
         );
         assert!(t0.elapsed() < Duration::from_secs(10), "stall is deadline-bounded");
+
+        proxy.shutdown();
+        stop.store(true, Ordering::Relaxed);
+        let _ = join.join();
+    }
+
+    #[test]
+    fn request_direction_faults_hit_the_upload_stream() {
+        let (addr, stop, join) = echo_node();
+        let proxy = FaultProxy::start(
+            &addr,
+            FaultSchedule::transparent()
+                .with_conn(1, FaultAction::DropAfterFrames(2))
+                .with_conn(2, FaultAction::TruncateFrame(0))
+                .on_requests(),
+        )
+        .unwrap();
+
+        // conn 0: transparent schedule on the request direction — frames
+        // are re-framed but unmodified, and replies pass through raw.
+        match request_via(&proxy, 20) {
+            Ok(Some(Msg::Busy { request_id: 20 })) => {}
+            other => panic!("transparent conn: {other:?}"),
+        }
+
+        // conn 1: the first upload frame is forwarded and echoed, the
+        // connection dies cleanly once the upload budget is spent.
+        let net = FleetConfig {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        let stream = fault::connect(proxy.addr(), &net).map_err(|e| e.into_io()).unwrap();
+        let mut wr = stream.try_clone().unwrap();
+        let mut rd = BufReader::new(stream);
+        let req = |id: u64| Msg::CompressRequest {
+            request_id: id,
+            s: 2,
+            class: 0,
+            deadline_ms: 0,
+            data: vec![1.0],
+        };
+        send(&mut wr, &req(21)).unwrap();
+        match recv(&mut rd) {
+            Ok(Some(Msg::Busy { request_id: 21 })) => {}
+            other => panic!("frame 0 must pass before the drop: {other:?}"),
+        }
+        // Frames past the budget never reach the node; the client sees a
+        // clean EOF or error within its read deadline — never a hang.
+        let _ = send(&mut wr, &req(22));
+        let _ = send(&mut wr, &req(23));
+        loop {
+            match recv(&mut rd) {
+                Ok(Some(Msg::Busy { .. })) => continue, // racing in-flight reply
+                Ok(None) | Err(_) => break,
+                other => panic!("dropped upload: {other:?}"),
+            }
+        }
+
+        // conn 2: the very first upload frame is cut mid-body — the node
+        // never decodes a request, so no reply and a clean close.
+        match request_via(&proxy, 24) {
+            Ok(None) | Err(_) => {}
+            other => panic!("truncated upload: {other:?}"),
+        }
 
         proxy.shutdown();
         stop.store(true, Ordering::Relaxed);

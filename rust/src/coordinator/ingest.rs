@@ -1,0 +1,1025 @@
+//! Chunked streaming ingestion: build the histogram and the packed
+//! payload **without ever materializing the vector on the coordinator**.
+//!
+//! The paper's solvers only consume the grid histogram and prefix moments
+//! — never the raw coordinates — so a task's data can arrive one
+//! [`par::CHUNK`]-aligned chunk at a time ([`Msg::IngestChunk`]) and be
+//! folded away on arrival: each chunk contributes its scan partial
+//! ([`par::scan::ChunkStats`]) and its stochastic bin counts
+//! ([`GridHistogram::shard_counts`] at the chunk's *global* index), after
+//! which the chunk's coordinates are dropped. Peak task memory is
+//! `O(M + CHUNK)` plus one 32-byte scan slot per chunk — not `O(d)`.
+//!
+//! ## Arrival-order invariance
+//!
+//! Chunk *identity*, not arrival order, is the determinism key — a direct
+//! corollary of DESIGN.md rules 2 and 4: every RNG stream is keyed by
+//! global chunk index, scan partials are stored in per-chunk slots and
+//! folded once in global chunk order at close, and bin counts merge by
+//! exact integer-valued f64 addition (commutative — counts never exceed
+//! 2⁵³). The result is **bitwise-identical** to the monolithic pipeline
+//! ([`monolithic_reference`]) for every chunk arrival permutation, thread
+//! count, backend, and SIMD mode (`tests/ingest_invariance.rs`).
+//!
+//! ## Two phases, one declared range
+//!
+//! A strictly one-pass build is impossible with exact bit-parity: the grid
+//! needs the global `[lo, hi]` before the first count, and the quantizer
+//! needs the solved levels before the first packed byte. The protocol
+//! therefore makes two passes over the *wire* while the coordinator stays
+//! at `O(M + CHUNK)`:
+//!
+//! 1. **Fill** — [`Msg::IngestOpen`] declares `(d, s, lo, hi)` (the client
+//!    computes the range with the same chunk-stats fold this crate uses);
+//!    chunks arrive in any order and are folded immediately. At
+//!    [`Msg::IngestClose`] the coordinator folds the scan slots in chunk
+//!    order, **verifies the declared range bitwise** (a wrong declaration
+//!    fails the task — never wrong bits), assembles the histogram via
+//!    [`GridHistogram::from_shards`], and solves once.
+//! 2. **Encode** — after [`Msg::IngestSolved`] the client re-sends each
+//!    chunk; the coordinator checks the echo against the phase-1 scan slot
+//!    (bitwise), quantizes it with the task's quantize base at the chunk's
+//!    global stream index, and returns the packed window
+//!    ([`Msg::IngestPayloadChunk`]). Chunk windows are byte-aligned for
+//!    every bit width, so the client's in-order concatenation is
+//!    byte-for-byte the monolithic payload ([`crate::sq::assemble`]).
+//!
+//! A trainer-resident round is exactly this machine with chunks that never
+//! crossed the network: [`ingest_local`] (used by
+//! [`crate::coordinator::worker`]).
+//!
+//! ## Abuse bounds
+//!
+//! Task ids, dimensions, and chunk indices come off the wire, so every
+//! allocation they drive is capped: per-connection live-task and
+//! dimension caps ([`IngestConn`]), a per-frame chunk-size cap in the
+//! decoder ([`Msg`]), checked `chunk_idx · CHUNK` arithmetic, and a
+//! bounded dead-id set so a failed task yields exactly one `Busy` rather
+//! than a reply per stray frame.
+//!
+//! [`Msg`]: super::protocol::Msg
+//! [`Msg::IngestOpen`]: super::protocol::Msg::IngestOpen
+//! [`Msg::IngestChunk`]: super::protocol::Msg::IngestChunk
+//! [`Msg::IngestClose`]: super::protocol::Msg::IngestClose
+//! [`Msg::IngestSolved`]: super::protocol::Msg::IngestSolved
+//! [`Msg::IngestPayloadChunk`]: super::protocol::Msg::IngestPayloadChunk
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::avq::histogram::{solve_on, GridHistogram};
+use crate::avq::{AvqError, SolverKind};
+use crate::par::{self, scan::ChunkStats};
+use crate::sq::{self, codec::bits_for, CompressedVec};
+use crate::util::rng::Xoshiro256pp;
+
+/// Configuration of the ingest layer (service-wide; every task of every
+/// connection shares it).
+#[derive(Debug, Clone, Copy)]
+pub struct IngestConfig {
+    /// Histogram grid intervals M (the service uses its router's
+    /// `hist_m` so ingested and monolithic solves share a grid policy).
+    pub m: usize,
+    /// Inner solver for the close-time weighted solve.
+    pub inner: SolverKind,
+    /// Base seed; task `id` derives its two stream bases via
+    /// [`ingest_bases`], so a task's bits are a pure function of
+    /// `(seed, id, data)` — independent of scheduling, batching, or chunk
+    /// arrival order.
+    pub seed: u64,
+    /// Maximum live tasks per connection (task ids come off the wire; an
+    /// unbounded map would let a client open ids until the service OOMs).
+    pub max_tasks: usize,
+    /// Maximum task dimension (bounds the per-chunk scan-slot table).
+    pub max_d: u64,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        Self {
+            m: 400,
+            inner: SolverKind::QuiverAccel,
+            seed: 0x16E57,
+            max_tasks: 4,
+            max_d: sq::codec::MAX_D,
+        }
+    }
+}
+
+/// Derive the two RNG stream bases of ingest task `task_id`: the
+/// histogram-count base and the quantize base, in that order — the two
+/// draws the monolithic pipeline's generator would make. Keying them by
+/// task id (not by draw order on a shared generator) is what makes a
+/// task's bits independent of every other task in flight.
+pub fn ingest_bases(seed: u64, task_id: u64) -> (u64, u64) {
+    let mut rng = Xoshiro256pp::stream(seed, task_id);
+    (rng.next_u64(), rng.next_u64())
+}
+
+/// Typed ingest failure. On the wire every variant is answered with
+/// [`Busy`](super::protocol::Msg::Busy) (the task id echoed), and the
+/// variant is logged server-side; in-process callers ([`ingest_local`])
+/// get the variant directly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IngestError {
+    /// Task dimension was zero.
+    EmptyInput,
+    /// Task dimension exceeds [`IngestConfig::max_d`].
+    DimTooLarge,
+    /// Declared range is non-finite or `hi < lo`.
+    BadRange,
+    /// The connection already has [`IngestConfig::max_tasks`] live tasks.
+    TaskLimit,
+    /// Open for a task id that is already live on this connection.
+    DuplicateTask,
+    /// Frame for a task id this connection never opened.
+    UnknownTask,
+    /// `chunk_idx · CHUNK` overflows or lands at/after `d`.
+    ChunkOutOfRange,
+    /// A fill-phase chunk index arrived twice.
+    DuplicateChunk,
+    /// Chunk length differs from the fixed boundary the index implies.
+    WrongChunkLen,
+    /// A chunk carried a non-finite coordinate (failed fast — the
+    /// monolithic pipeline reports the same class at solve time).
+    NonFinite,
+    /// Close arrived before every chunk did.
+    Incomplete,
+    /// Folded scan range is not bitwise the declared range.
+    RangeMismatch,
+    /// Frame is not legal in the task's current phase.
+    WrongPhase,
+    /// An encode-phase echo's scan partial differs from the fill-phase
+    /// chunk — the client re-sent different bytes.
+    EchoMismatch,
+    /// The close-time solve failed.
+    Solve(AvqError),
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::EmptyInput => write!(f, "task dimension is zero"),
+            IngestError::DimTooLarge => write!(f, "task dimension exceeds the cap"),
+            IngestError::BadRange => write!(f, "declared range is non-finite or inverted"),
+            IngestError::TaskLimit => write!(f, "connection live-task cap reached"),
+            IngestError::DuplicateTask => write!(f, "task id already live"),
+            IngestError::UnknownTask => write!(f, "unknown task id"),
+            IngestError::ChunkOutOfRange => write!(f, "chunk index out of range"),
+            IngestError::DuplicateChunk => write!(f, "duplicate chunk index"),
+            IngestError::WrongChunkLen => write!(f, "chunk length off the fixed boundary"),
+            IngestError::NonFinite => write!(f, "chunk carries non-finite coordinates"),
+            IngestError::Incomplete => write!(f, "close before all chunks arrived"),
+            IngestError::RangeMismatch => write!(f, "declared range differs from scanned range"),
+            IngestError::WrongPhase => write!(f, "frame not legal in this task phase"),
+            IngestError::EchoMismatch => write!(f, "encode-phase chunk differs from fill phase"),
+            IngestError::Solve(e) => write!(f, "close-time solve failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+/// Task lifecycle (fill → close/solve → encode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Accepting fill-phase chunks.
+    Filling,
+    /// Close received; solve pending on a solver thread.
+    Closing,
+    /// Solved; accepting encode-phase chunk echoes.
+    Encoding,
+    /// Failed; buffers cleared, awaiting cleanup.
+    Failed,
+}
+
+/// One in-flight ingest task: the running fold state of a vector that is
+/// never materialized. See the module docs for the two-phase contract.
+#[derive(Debug)]
+pub struct IngestTask {
+    d: u64,
+    s: u32,
+    m: usize,
+    inner: SolverKind,
+    lo: f64,
+    hi: f64,
+    hist_base: u64,
+    quant_base: u64,
+    n_chunks: usize,
+    /// Per-chunk scan partials, slot-addressed by global chunk index so
+    /// out-of-order arrival is harmless; `Some` doubles as the
+    /// duplicate-arrival marker. Folded once, in index order, at close.
+    slots: Vec<Option<ChunkStats>>,
+    /// Running bin counts on the declared grid (empty for a degenerate
+    /// declared range, which has no count pass). Merging is exact
+    /// integer-valued f64 addition, so accumulation order is invisible.
+    counts: Vec<f64>,
+    /// Solved quantization values (set on phase transition to Encoding).
+    levels: Vec<f64>,
+    /// Encode-phase arrival markers.
+    echoed: Vec<bool>,
+    remaining_echo: usize,
+    phase: Phase,
+    /// High-water mark of resident + transient bytes this task ever held
+    /// at once — the bench's peak-allocation proxy for the `O(M + CHUNK)`
+    /// bound.
+    peak_bytes: usize,
+}
+
+impl IngestTask {
+    /// Open a task: validate the declared shape and derive the task's RNG
+    /// bases ([`ingest_bases`]).
+    pub fn new(
+        cfg: &IngestConfig,
+        task_id: u64,
+        d: u64,
+        s: u32,
+        lo: f64,
+        hi: f64,
+    ) -> Result<Self, IngestError> {
+        if d == 0 {
+            return Err(IngestError::EmptyInput);
+        }
+        if d > cfg.max_d {
+            return Err(IngestError::DimTooLarge);
+        }
+        if !lo.is_finite() || !hi.is_finite() || hi < lo {
+            return Err(IngestError::BadRange);
+        }
+        let (hist_base, quant_base) = ingest_bases(cfg.seed, task_id);
+        let n_chunks = usize::try_from(d.div_ceil(par::CHUNK as u64))
+            .map_err(|_| IngestError::DimTooLarge)?;
+        let counts = if hi > lo { vec![0.0f64; cfg.m + 1] } else { Vec::new() };
+        let mut t = Self {
+            d,
+            s: s.max(1),
+            m: cfg.m,
+            inner: cfg.inner,
+            lo,
+            hi,
+            hist_base,
+            quant_base,
+            n_chunks,
+            slots: vec![None; n_chunks],
+            counts,
+            levels: Vec::new(),
+            echoed: Vec::new(),
+            remaining_echo: 0,
+            phase: Phase::Filling,
+            peak_bytes: 0,
+        };
+        t.note_transient(0);
+        Ok(t)
+    }
+
+    /// Bytes resident between frames: scan slots, running counts, levels,
+    /// echo markers. `O(M + d/CHUNK)` — never `O(d)`.
+    fn resident_bytes(&self) -> usize {
+        self.slots.len() * std::mem::size_of::<Option<ChunkStats>>()
+            + self.counts.len() * 8
+            + self.levels.len() * 8
+            + self.echoed.len()
+    }
+
+    fn note_transient(&mut self, transient: usize) {
+        self.peak_bytes = self.peak_bytes.max(self.resident_bytes() + transient);
+    }
+
+    /// High-water mark of bytes this task held at once (resident fold
+    /// state plus the largest single chunk's transient buffers).
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// The exact length chunk `chunk_idx` must carry: [`par::CHUNK`] for
+    /// every chunk but the last, the ragged tail for the last. Errors on
+    /// indices at/after `d / CHUNK` — including indices whose
+    /// `chunk_idx · CHUNK` would overflow (checked multiply; a wire-chosen
+    /// index never reaches unchecked arithmetic).
+    fn expect_len(&self, chunk_idx: u64) -> Result<usize, IngestError> {
+        let start = chunk_idx
+            .checked_mul(par::CHUNK as u64)
+            .ok_or(IngestError::ChunkOutOfRange)?;
+        if start >= self.d {
+            return Err(IngestError::ChunkOutOfRange);
+        }
+        Ok((self.d - start).min(par::CHUNK as u64) as usize)
+    }
+
+    /// Fold one fill-phase chunk in: store its scan partial in its slot
+    /// and add its stochastic bin counts (RNG stream keyed by the global
+    /// chunk index) into the running histogram. The coordinates are
+    /// dropped on return. Non-finite data fails fast.
+    pub fn add_chunk(&mut self, chunk_idx: u64, data: &[f32]) -> Result<(), IngestError> {
+        if self.phase != Phase::Filling {
+            return Err(IngestError::WrongPhase);
+        }
+        if data.len() != self.expect_len(chunk_idx)? {
+            return Err(IngestError::WrongChunkLen);
+        }
+        let ci = usize::try_from(chunk_idx).map_err(|_| IngestError::ChunkOutOfRange)?;
+        if self.slots[ci].is_some() {
+            return Err(IngestError::DuplicateChunk);
+        }
+        // Widen exactly as the monolithic pipeline does (f32→f64 is exact
+        // and elementwise, so per-chunk widening matches the whole-vector
+        // `par::map_elems` slice-for-slice).
+        let xs = widen(data);
+        let cs = par::scan::chunk_stats(&xs)[0];
+        // In-flight frame + widened chunk + the count pass's (M+1)-bin
+        // return — the largest the task ever holds beyond its fold state.
+        self.note_transient(data.len() * 4 + xs.len() * 8 + (self.m + 1) * 8);
+        if !cs.finite {
+            self.clear_buffers();
+            self.phase = Phase::Failed;
+            return Err(IngestError::NonFinite);
+        }
+        if self.hi > self.lo {
+            let part =
+                GridHistogram::shard_counts(&xs, self.m, self.lo, self.hi, self.hist_base, chunk_idx);
+            for (w, v) in self.counts.iter_mut().zip(&part) {
+                *w += v;
+            }
+        }
+        self.slots[ci] = Some(cs);
+        Ok(())
+    }
+
+    /// Mark the task closed (no more fill chunks; solve pending). The
+    /// solve itself runs on a solver thread via [`solve_close`].
+    ///
+    /// [`solve_close`]: Self::solve_close
+    pub fn close(&mut self) -> Result<(), IngestError> {
+        if self.phase != Phase::Filling {
+            return Err(IngestError::WrongPhase);
+        }
+        self.phase = Phase::Closing;
+        Ok(())
+    }
+
+    /// The close-time solve: fold the scan slots in global chunk order,
+    /// verify the declared range bitwise, assemble the histogram from the
+    /// running counts ([`GridHistogram::from_shards`]), and run the
+    /// weighted solve. On success the task enters the encode phase and the
+    /// solved levels are returned; on failure the task's buffers are
+    /// cleared and the error returned — a wrong declaration or missing
+    /// chunk costs the task, never produces wrong bits.
+    pub fn solve_close(&mut self) -> Result<Vec<f64>, IngestError> {
+        if self.phase != Phase::Closing {
+            return Err(IngestError::WrongPhase);
+        }
+        let r = self.solve_close_inner();
+        match &r {
+            Ok(_) => {
+                // The counts fed the histogram; only slots (echo
+                // integrity), levels, and echo markers stay resident.
+                self.counts = Vec::new();
+                self.echoed = vec![false; self.n_chunks];
+                self.remaining_echo = self.n_chunks;
+                self.phase = Phase::Encoding;
+                self.note_transient(0);
+            }
+            Err(_) => {
+                self.clear_buffers();
+                self.phase = Phase::Failed;
+            }
+        }
+        r
+    }
+
+    fn solve_close_inner(&mut self) -> Result<Vec<f64>, IngestError> {
+        if self.slots.iter().any(Option::is_none) {
+            return Err(IngestError::Incomplete);
+        }
+        let st = par::scan::fold_stats(self.slots.iter().map(|s| s.unwrap()));
+        if !st.finite {
+            return Err(IngestError::NonFinite);
+        }
+        if st.lo.to_bits() != self.lo.to_bits() || st.hi.to_bits() != self.hi.to_bits() {
+            return Err(IngestError::RangeMismatch);
+        }
+        let d = usize::try_from(self.d).map_err(|_| IngestError::DimTooLarge)?;
+        let shards: &[Vec<f64>] =
+            if self.hi > self.lo { std::slice::from_ref(&self.counts) } else { &[] };
+        let h = GridHistogram::from_shards(self.m, st, d, shards).map_err(IngestError::Solve)?;
+        let sol = solve_on(&h, self.s as usize, self.inner).map_err(IngestError::Solve)?;
+        self.levels = sol.q;
+        Ok(self.levels.clone())
+    }
+
+    /// Quantize + pack one encode-phase chunk echo against the solved
+    /// levels, RNG stream keyed by the global chunk index. The echo's scan
+    /// partial must match the fill-phase slot bitwise — a client re-sending
+    /// different bytes gets a typed error, not silently wrong bits.
+    /// Returns the chunk's byte-aligned payload window.
+    pub fn encode_chunk(&mut self, chunk_idx: u64, data: &[f32]) -> Result<Vec<u8>, IngestError> {
+        if self.phase != Phase::Encoding {
+            return Err(IngestError::WrongPhase);
+        }
+        if data.len() != self.expect_len(chunk_idx)? {
+            return Err(IngestError::WrongChunkLen);
+        }
+        let ci = usize::try_from(chunk_idx).map_err(|_| IngestError::ChunkOutOfRange)?;
+        if self.echoed[ci] {
+            return Err(IngestError::DuplicateChunk);
+        }
+        let xs = widen(data);
+        let cs = par::scan::chunk_stats(&xs)[0];
+        let stored = self.slots[ci].expect("encode phase implies complete slots");
+        if !same_stats(&cs, &stored) {
+            self.clear_buffers();
+            self.phase = Phase::Failed;
+            return Err(IngestError::EchoMismatch);
+        }
+        let idx = sq::quantize_shard(&xs, &self.levels, self.quant_base, chunk_idx);
+        let part = sq::encode(&idx, &self.levels);
+        self.note_transient(
+            data.len() * 4 + xs.len() * 8 + idx.len() * 4 + part.payload.len(),
+        );
+        self.echoed[ci] = true;
+        self.remaining_echo -= 1;
+        Ok(part.payload)
+    }
+
+    /// Solved quantization values (empty before the solve).
+    pub fn levels(&self) -> &[f64] {
+        &self.levels
+    }
+
+    /// Quantization budget the task was opened with (clamped to ≥ 1).
+    pub fn budget(&self) -> u32 {
+        self.s
+    }
+
+    /// Whether every chunk's payload window has been served.
+    pub fn done(&self) -> bool {
+        self.phase == Phase::Encoding && self.remaining_echo == 0
+    }
+
+    /// Grid intervals the task solves on.
+    pub fn grid_m(&self) -> usize {
+        self.m
+    }
+
+    /// Drop every buffer a failed task holds (the map entry may linger
+    /// until the client touches the id again or disconnects; its memory
+    /// must not).
+    fn clear_buffers(&mut self) {
+        self.slots = Vec::new();
+        self.counts = Vec::new();
+        self.levels = Vec::new();
+        self.echoed = Vec::new();
+        self.remaining_echo = 0;
+    }
+}
+
+/// Exact widening of a wire chunk, matching the monolithic pipeline's
+/// whole-vector `par::map_elems(&data, |&x| x as f64)` slice-for-slice.
+fn widen(data: &[f32]) -> Vec<f64> {
+    data.iter().map(|&x| f64::from(x)).collect()
+}
+
+/// Bitwise scan-partial equality (`PartialEq` would call `-0.0 == 0.0`
+/// and fail on NaN; the echo check wants the bytes).
+fn same_stats(a: &ChunkStats, b: &ChunkStats) -> bool {
+    a.lo.to_bits() == b.lo.to_bits()
+        && a.hi.to_bits() == b.hi.to_bits()
+        && a.norm2_sq.to_bits() == b.norm2_sq.to_bits()
+        && a.finite == b.finite
+}
+
+/// A live task shared between a connection thread (chunk arrivals) and a
+/// solver thread (the close-time solve).
+pub type SharedIngestTask = Arc<Mutex<IngestTask>>;
+
+/// How many dead task ids a connection remembers ([`IngestConn`]): one
+/// `Busy` is sent when a task dies, and later frames for a remembered
+/// dead id are dropped silently instead of answered — a pipelined client
+/// that keeps sending after a mid-stream failure reads exactly one error.
+const DEAD_IDS: usize = 32;
+
+/// Per-connection ingest state: the live-task table (capped), and the
+/// bounded dead-id set. Owned by the connection thread; individual tasks
+/// are shared with solver threads via [`SharedIngestTask`]. Dropping the
+/// connection drops every task with it — partial state never outlives its
+/// client.
+pub struct IngestConn {
+    cfg: IngestConfig,
+    // BTreeMap per contract rule C2: hash order stays out of the
+    // coordinator wholesale.
+    tasks: BTreeMap<u64, SharedIngestTask>,
+    dead: VecDeque<u64>,
+}
+
+/// What the connection thread must do after feeding one ingest frame in.
+pub enum IngestEvent {
+    /// Nothing — the frame referenced a remembered dead id.
+    Silent,
+    /// Answer `Busy { request_id: task_id }`; the typed error is for the
+    /// server log.
+    Reject(u64, IngestError),
+    /// Open accepted; no reply (the fill phase is pipelined).
+    Accepted,
+    /// Fill-phase chunk folded in; no reply.
+    Folded,
+    /// Close accepted: submit the task's solve to the scheduler with the
+    /// carried tenant class.
+    Close(SharedIngestTask),
+    /// Encode-phase echo served: reply with the chunk's payload window.
+    Payload {
+        /// Global chunk index served.
+        chunk_idx: u64,
+        /// Coordinates the window covers.
+        d: u64,
+        /// The packed bytes.
+        payload: Vec<u8>,
+    },
+}
+
+impl IngestConn {
+    /// Fresh per-connection state.
+    pub fn new(cfg: IngestConfig) -> Self {
+        Self { cfg, tasks: BTreeMap::new(), dead: VecDeque::new() }
+    }
+
+    /// Number of live tasks (tests/metrics).
+    pub fn live(&self) -> usize {
+        self.tasks.len()
+    }
+
+    fn mark_dead(&mut self, task_id: u64) {
+        if self.dead.len() >= DEAD_IDS {
+            self.dead.pop_front();
+        }
+        self.dead.push_back(task_id);
+    }
+
+    fn fail(&mut self, task_id: u64, err: IngestError) -> IngestEvent {
+        if let Some(t) = self.tasks.remove(&task_id) {
+            let mut g = t.lock().unwrap();
+            g.clear_buffers();
+            g.phase = Phase::Failed;
+        }
+        self.mark_dead(task_id);
+        IngestEvent::Reject(task_id, err)
+    }
+
+    /// Handle [`Msg::IngestOpen`](super::protocol::Msg::IngestOpen).
+    /// Reopening a remembered dead id is allowed (it un-remembers the id);
+    /// caps and shape errors reject and dead-list so the pipelined frames
+    /// that follow are dropped silently.
+    pub fn open(
+        &mut self,
+        task_id: u64,
+        d: u64,
+        s: u32,
+        lo: f64,
+        hi: f64,
+    ) -> IngestEvent {
+        if let Some(t) = self.tasks.get(&task_id) {
+            if t.lock().unwrap().phase == Phase::Failed {
+                // A task whose close-time solve failed on a solver thread
+                // lingers in the table (that thread cannot touch this map)
+                // — reopening it starts fresh rather than rejecting.
+                self.tasks.remove(&task_id);
+            } else {
+                // Do not kill the live task — rejecting the duplicate open
+                // is enough, and the original stream stays intact.
+                return IngestEvent::Reject(task_id, IngestError::DuplicateTask);
+            }
+        }
+        self.dead.retain(|&id| id != task_id);
+        if self.tasks.len() >= self.cfg.max_tasks.max(1) {
+            self.mark_dead(task_id);
+            return IngestEvent::Reject(task_id, IngestError::TaskLimit);
+        }
+        match IngestTask::new(&self.cfg, task_id, d, s, lo, hi) {
+            Ok(t) => {
+                self.tasks.insert(task_id, Arc::new(Mutex::new(t)));
+                IngestEvent::Accepted
+            }
+            Err(e) => {
+                self.mark_dead(task_id);
+                IngestEvent::Reject(task_id, e)
+            }
+        }
+    }
+
+    /// Handle [`Msg::IngestChunk`](super::protocol::Msg::IngestChunk) in
+    /// either phase (the task's state machine disambiguates fill vs
+    /// encode).
+    pub fn chunk(&mut self, task_id: u64, chunk_idx: u64, data: &[f32]) -> IngestEvent {
+        if self.dead.contains(&task_id) {
+            return IngestEvent::Silent;
+        }
+        let Some(task) = self.tasks.get(&task_id).cloned() else {
+            self.mark_dead(task_id);
+            return IngestEvent::Reject(task_id, IngestError::UnknownTask);
+        };
+        let mut t = task.lock().unwrap();
+        match t.phase {
+            Phase::Filling => match t.add_chunk(chunk_idx, data) {
+                Ok(()) => IngestEvent::Folded,
+                Err(e) => {
+                    drop(t);
+                    self.fail(task_id, e)
+                }
+            },
+            Phase::Encoding => match t.encode_chunk(chunk_idx, data) {
+                Ok(payload) => {
+                    let done = t.done();
+                    let d = data.len() as u64;
+                    drop(t);
+                    if done {
+                        self.tasks.remove(&task_id);
+                    }
+                    IngestEvent::Payload { chunk_idx, d, payload }
+                }
+                Err(e) => {
+                    drop(t);
+                    self.fail(task_id, e)
+                }
+            },
+            Phase::Closing | Phase::Failed => {
+                drop(t);
+                self.fail(task_id, IngestError::WrongPhase)
+            }
+        }
+    }
+
+    /// Handle [`Msg::IngestClose`](super::protocol::Msg::IngestClose):
+    /// transition the task to Closing and hand it back for scheduler
+    /// submission.
+    pub fn close(&mut self, task_id: u64) -> IngestEvent {
+        if self.dead.contains(&task_id) {
+            return IngestEvent::Silent;
+        }
+        let Some(task) = self.tasks.get(&task_id).cloned() else {
+            self.mark_dead(task_id);
+            return IngestEvent::Reject(task_id, IngestError::UnknownTask);
+        };
+        let r = task.lock().unwrap().close();
+        match r {
+            Ok(()) => IngestEvent::Close(task),
+            Err(e) => self.fail(task_id, e),
+        }
+    }
+
+    /// Drop a task after a failed solve (solver thread replied `Busy`;
+    /// the connection thread frees the entry).
+    pub fn forget(&mut self, task_id: u64) {
+        self.tasks.remove(&task_id);
+        self.mark_dead(task_id);
+    }
+}
+
+/// The monolithic reference pipeline chunked ingestion must reproduce
+/// **bitwise**: widen the whole vector, build the histogram with the
+/// task's histogram base, solve, quantize with the task's quantize base,
+/// bit-pack. Returns `(compressed, levels)`. This is the service's
+/// one-shot hist pipeline with the RNG bases pinned to
+/// [`ingest_bases`]`(seed, task_id)` — the equality the invariance suite
+/// and the chaos suite assert.
+pub fn monolithic_reference(
+    data: &[f32],
+    s: u32,
+    cfg: &IngestConfig,
+    task_id: u64,
+) -> Result<(CompressedVec, Vec<f64>), IngestError> {
+    let (hist_base, quant_base) = ingest_bases(cfg.seed, task_id);
+    let xs: Vec<f64> = par::map_elems(data, |&x| f64::from(x));
+    let h = GridHistogram::build_with_base(&xs, cfg.m, hist_base).map_err(IngestError::Solve)?;
+    // contract-allow(C5): budget is a caller-local u32, not wire-decoded
+    let sol = solve_on(&h, s.max(1) as usize, cfg.inner).map_err(IngestError::Solve)?;
+    let idx = sq::quantize_shard(&xs, &sol.q, quant_base, 0);
+    Ok((sq::encode(&idx, &sol.q), sol.q))
+}
+
+/// Drive a whole ingest in-process — the **trainer-resident round**: the
+/// same state machine, caps, and RNG derivation as the wire path, with
+/// chunks that never crossed the network. Feeds chunks in `order` (fill
+/// phase) and in index order (encode phase), then assembles the payload
+/// windows exactly as a remote client would. `order` is a permutation of
+/// the chunk indices; pass `None` for index order.
+pub fn ingest_local(
+    data: &[f32],
+    s: u32,
+    cfg: &IngestConfig,
+    task_id: u64,
+    order: Option<&[u64]>,
+) -> Result<(CompressedVec, Vec<f64>), IngestError> {
+    let d = data.len() as u64;
+    // Declared range: the same per-chunk scan fold the task itself runs.
+    let (lo, hi) = declared_range(data);
+    let mut task = IngestTask::new(cfg, task_id, d, s, lo, hi)?;
+    let n_chunks = task.n_chunks;
+    let default_order: Vec<u64> = (0..n_chunks as u64).collect();
+    let order = order.unwrap_or(&default_order);
+    for &ci in order {
+        task.add_chunk(ci, chunk_of(data, ci))?;
+    }
+    task.close()?;
+    let levels = task.solve_close()?;
+    let mut payload = Vec::new();
+    for ci in 0..n_chunks as u64 {
+        payload.extend_from_slice(&task.encode_chunk(ci, chunk_of(data, ci))?);
+    }
+    debug_assert!(task.done());
+    let bits = bits_for(levels.len());
+    Ok((CompressedVec { d, q: levels.clone(), bits, payload }, levels))
+}
+
+/// The `[lo, hi]` a client declares at open: fold of the per-chunk scan
+/// partials, identical bitwise to the fold the task runs at close. For
+/// empty input returns `(0, 0)` (the open is rejected server-side with
+/// [`IngestError::EmptyInput`] — the identity fold's `(+∞, −∞)` would be
+/// masked as a range error).
+pub fn declared_range(data: &[f32]) -> (f64, f64) {
+    if data.is_empty() {
+        return (0.0, 0.0);
+    }
+    let st = par::scan::fold_stats(
+        data.chunks(par::CHUNK)
+            .flat_map(|c| par::scan::chunk_stats(&widen(c))),
+    );
+    (st.lo, st.hi)
+}
+
+/// Slice chunk `ci` out of a full vector (client-side helper; the fixed
+/// [`par::CHUNK`] boundaries of DESIGN rule 1).
+pub fn chunk_of(data: &[f32], ci: u64) -> &[f32] {
+    let start = (ci as usize) * par::CHUNK;
+    &data[start..(start + par::CHUNK).min(data.len())]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    fn sample(d: usize, seed: u64) -> Vec<f32> {
+        Dist::LogNormal { mu: 0.0, sigma: 1.0 }
+            .sample_vec(d, seed)
+            .into_iter()
+            .map(|x| x as f32)
+            .collect()
+    }
+
+    fn small_cfg() -> IngestConfig {
+        IngestConfig { m: 64, ..IngestConfig::default() }
+    }
+
+    #[test]
+    fn ingest_local_matches_monolithic_for_any_arrival_order() {
+        let cfg = small_cfg();
+        let data = sample(2 * par::CHUNK + 1234, 7);
+        let (want, want_levels) = monolithic_reference(&data, 8, &cfg, 42).unwrap();
+        let n = data.len().div_ceil(par::CHUNK) as u64;
+        let forward: Vec<u64> = (0..n).collect();
+        let reversed: Vec<u64> = (0..n).rev().collect();
+        let mut shuffled: Vec<u64> = (0..n).collect();
+        Xoshiro256pp::seed_from_u64(99).shuffle(&mut shuffled);
+        for order in [forward, reversed, shuffled] {
+            let (got, levels) = ingest_local(&data, 8, &cfg, 42, Some(&order)).unwrap();
+            assert_eq!(
+                levels.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want_levels.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "levels must be bitwise-identical (order {order:?})"
+            );
+            assert_eq!(got, want, "payload must be byte-identical (order {order:?})");
+        }
+    }
+
+    #[test]
+    fn task_id_keys_the_bits() {
+        let cfg = small_cfg();
+        let data = sample(5000, 11);
+        let (a, _) = ingest_local(&data, 8, &cfg, 1, None).unwrap();
+        let (b, _) = ingest_local(&data, 8, &cfg, 2, None).unwrap();
+        assert_ne!(a.payload, b.payload, "different task ids draw different streams");
+        let (a2, _) = ingest_local(&data, 8, &cfg, 1, None).unwrap();
+        assert_eq!(a, a2, "same task id reproduces the same bits");
+    }
+
+    #[test]
+    fn tiny_and_degenerate_shapes() {
+        let cfg = small_cfg();
+        // d = 1.
+        let one = vec![2.5f32];
+        let (c, levels) = ingest_local(&one, 8, &cfg, 3, None).unwrap();
+        assert_eq!((c.d, levels.as_slice()), (1, &[2.5f64][..]));
+        let (want, _) = monolithic_reference(&one, 8, &cfg, 3).unwrap();
+        assert_eq!(c, want);
+        // Constant vector: degenerate declared range, no count pass, one
+        // level, empty payload (bits = 0).
+        let flat = vec![-7.25f32; par::CHUNK + 100];
+        let (c, levels) = ingest_local(&flat, 8, &cfg, 4, None).unwrap();
+        assert_eq!(levels, vec![-7.25]);
+        assert_eq!(c.bits, 0);
+        assert!(c.payload.is_empty());
+        let (want, _) = monolithic_reference(&flat, 8, &cfg, 4).unwrap();
+        assert_eq!(c, want);
+        // Empty input is a typed error.
+        assert_eq!(
+            ingest_local(&[], 8, &cfg, 5, None).unwrap_err(),
+            IngestError::EmptyInput
+        );
+    }
+
+    #[test]
+    fn shape_errors_are_typed() {
+        let cfg = small_cfg();
+        // Bad declared ranges at open.
+        for (lo, hi) in [(1.0, 0.0), (f64::NAN, 1.0), (0.0, f64::INFINITY)] {
+            assert_eq!(
+                IngestTask::new(&cfg, 1, 10, 4, lo, hi).unwrap_err(),
+                IngestError::BadRange
+            );
+        }
+        assert_eq!(
+            IngestTask::new(&cfg, 1, cfg.max_d + 1, 4, 0.0, 1.0).unwrap_err(),
+            IngestError::DimTooLarge
+        );
+        let mut t = IngestTask::new(&cfg, 1, 100, 4, 0.0, 1.0).unwrap();
+        // Out-of-range chunk indices, including the overflow regression:
+        // chunk_idx · CHUNK wrapping must not bypass the range check.
+        assert_eq!(
+            t.add_chunk(1, &[0.5; 10]).unwrap_err(),
+            IngestError::ChunkOutOfRange
+        );
+        for huge in [u64::MAX, u64::MAX / par::CHUNK as u64 + 1, 1 << 60] {
+            assert_eq!(
+                t.add_chunk(huge, &[0.5; 10]).unwrap_err(),
+                IngestError::ChunkOutOfRange,
+                "chunk_idx {huge:#x}"
+            );
+        }
+        // Wrong chunk length for a valid index.
+        assert_eq!(
+            t.add_chunk(0, &[0.5; 99]).unwrap_err(),
+            IngestError::WrongChunkLen
+        );
+        // Duplicate fill chunk.
+        let chunk = [0.5f32; 100];
+        t.add_chunk(0, &chunk).unwrap();
+        assert_eq!(t.add_chunk(0, &chunk).unwrap_err(), IngestError::DuplicateChunk);
+        // Close before completeness → Incomplete at solve.
+        let mut t2 = IngestTask::new(&cfg, 1, (par::CHUNK + 5) as u64, 4, 0.0, 1.0).unwrap();
+        t2.add_chunk(1, &[0.5; 5]).unwrap();
+        t2.close().unwrap();
+        assert_eq!(t2.solve_close().unwrap_err(), IngestError::Incomplete);
+        // A failed task clears its buffers.
+        assert_eq!(t2.resident_bytes(), 0, "failed task must free its fold state");
+    }
+
+    #[test]
+    fn range_mismatch_and_nonfinite_fail_cleanly() {
+        let cfg = small_cfg();
+        let data = sample(500, 13);
+        // Declared range off by one ulp: typed error at close, no bits.
+        let (lo, hi) = declared_range(&data);
+        let mut t =
+            IngestTask::new(&cfg, 9, data.len() as u64, 8, lo, f64::from_bits(hi.to_bits() + 1))
+                .unwrap();
+        t.add_chunk(0, &data).unwrap();
+        t.close().unwrap();
+        assert_eq!(t.solve_close().unwrap_err(), IngestError::RangeMismatch);
+        // Non-finite chunk fails fast at arrival.
+        let mut bad = data.clone();
+        bad[250] = f32::NAN;
+        let mut t2 = IngestTask::new(&cfg, 9, bad.len() as u64, 8, lo, hi).unwrap();
+        assert_eq!(t2.add_chunk(0, &bad).unwrap_err(), IngestError::NonFinite);
+        assert_eq!(t2.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn echo_mismatch_is_detected() {
+        let cfg = small_cfg();
+        let data = sample(300, 17);
+        let (lo, hi) = declared_range(&data);
+        let mut t = IngestTask::new(&cfg, 21, data.len() as u64, 8, lo, hi).unwrap();
+        t.add_chunk(0, &data).unwrap();
+        t.close().unwrap();
+        t.solve_close().unwrap();
+        let mut tampered = data.clone();
+        tampered[100] += 1.0;
+        assert_eq!(
+            t.encode_chunk(0, &tampered).unwrap_err(),
+            IngestError::EchoMismatch
+        );
+    }
+
+    #[test]
+    fn peak_memory_stays_near_m_plus_chunk() {
+        // The headline bound: a multi-chunk task's high-water mark is
+        // O(M + CHUNK) (+ one 32-byte slot per chunk), not O(d).
+        let cfg = small_cfg();
+        let d = 4 * par::CHUNK + 321;
+        let data = sample(d, 23);
+        let (lo, hi) = declared_range(&data);
+        let mut t = IngestTask::new(&cfg, 31, d as u64, 8, lo, hi).unwrap();
+        let n = d.div_ceil(par::CHUNK) as u64;
+        for ci in 0..n {
+            t.add_chunk(ci, chunk_of(&data, ci)).unwrap();
+        }
+        t.close().unwrap();
+        t.solve_close().unwrap();
+        for ci in 0..n {
+            t.encode_chunk(ci, chunk_of(&data, ci)).unwrap();
+        }
+        let budget = (cfg.m + 1) * 8 * 2       // counts + count-pass return
+            + par::CHUNK * (4 + 8 + 4)          // frame + widened + indices
+            + n as usize * 40                   // scan slots + echo markers
+            + par::CHUNK * 4                    // packed window (≤ 4B/coord)
+            + 4096; // levels + slack
+        assert!(
+            t.peak_bytes() <= budget,
+            "peak {} exceeds O(M + CHUNK) budget {} (d = {d} would be {})",
+            t.peak_bytes(),
+            budget,
+            d * 8
+        );
+        // And the bound is far below materializing the vector.
+        assert!(t.peak_bytes() < d * 4, "peak must be well under O(d)");
+    }
+
+    #[test]
+    fn conn_caps_dead_ids_and_reopen() {
+        let cfg = IngestConfig { max_tasks: 2, ..small_cfg() };
+        let mut conn = IngestConn::new(cfg);
+        assert!(matches!(conn.open(1, 100, 4, 0.0, 1.0), IngestEvent::Accepted));
+        assert!(matches!(conn.open(2, 100, 4, 0.0, 1.0), IngestEvent::Accepted));
+        // Cap: third task rejected and dead-listed → its chunks are silent.
+        assert!(matches!(
+            conn.open(3, 100, 4, 0.0, 1.0),
+            IngestEvent::Reject(3, IngestError::TaskLimit)
+        ));
+        assert!(matches!(conn.chunk(3, 0, &[0.0; 100]), IngestEvent::Silent));
+        // Duplicate open does not kill the live task.
+        assert!(matches!(
+            conn.open(1, 100, 4, 0.0, 1.0),
+            IngestEvent::Reject(1, IngestError::DuplicateTask)
+        ));
+        assert_eq!(conn.live(), 2);
+        // Unknown id: one Busy, then silence.
+        assert!(matches!(
+            conn.chunk(77, 0, &[0.0; 100]),
+            IngestEvent::Reject(77, IngestError::UnknownTask)
+        ));
+        assert!(matches!(conn.chunk(77, 1, &[0.0; 100]), IngestEvent::Silent));
+        // A bad chunk kills its task, frees the slot, and later frames for
+        // the dead id are silent.
+        assert!(matches!(
+            conn.chunk(1, 5, &[0.0; 100]),
+            IngestEvent::Reject(1, IngestError::ChunkOutOfRange)
+        ));
+        assert_eq!(conn.live(), 1);
+        assert!(matches!(conn.chunk(1, 0, &[0.0; 100]), IngestEvent::Silent));
+        assert!(matches!(conn.close(1), IngestEvent::Silent));
+        // Reopening the dead id starts a fresh task.
+        assert!(matches!(conn.open(1, 100, 4, 0.0, 1.0), IngestEvent::Accepted));
+        assert_eq!(conn.live(), 2);
+    }
+
+    #[test]
+    fn conn_full_lifecycle_matches_reference() {
+        let cfg = small_cfg();
+        let data = sample(par::CHUNK + 777, 29);
+        let (lo, hi) = declared_range(&data);
+        let mut conn = IngestConn::new(cfg);
+        assert!(matches!(
+            conn.open(8, data.len() as u64, 8, lo, hi),
+            IngestEvent::Accepted
+        ));
+        // Fill out of order.
+        assert!(matches!(conn.chunk(8, 1, chunk_of(&data, 1)), IngestEvent::Folded));
+        assert!(matches!(conn.chunk(8, 0, chunk_of(&data, 0)), IngestEvent::Folded));
+        let task = match conn.close(8) {
+            IngestEvent::Close(t) => t,
+            _ => panic!("close must hand the task back"),
+        };
+        let levels = task.lock().unwrap().solve_close().unwrap();
+        // Encode phase, reversed order; concat in index order afterwards.
+        let mut windows: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+        for ci in [1u64, 0] {
+            match conn.chunk(8, ci, chunk_of(&data, ci)) {
+                IngestEvent::Payload { chunk_idx, d, payload } => {
+                    assert_eq!(chunk_idx, ci);
+                    assert_eq!(d, chunk_of(&data, ci).len() as u64);
+                    windows.insert(ci, payload);
+                }
+                _ => panic!("encode echo must yield a payload"),
+            }
+        }
+        assert_eq!(conn.live(), 0, "finished task is freed");
+        let payload: Vec<u8> = windows.into_values().flatten().collect();
+        let got = CompressedVec {
+            d: data.len() as u64,
+            q: levels.clone(),
+            bits: bits_for(levels.len()),
+            payload,
+        };
+        let (want, _) = monolithic_reference(&data, 8, &cfg, 8).unwrap();
+        assert_eq!(got, want);
+    }
+}

@@ -81,6 +81,13 @@ pub struct Metrics {
     pub stream_warm: AtomicU64,
     /// Streaming rounds fully re-solved.
     pub stream_resolved: AtomicU64,
+    /// Chunked-ingest tasks opened (`IngestOpen` accepted).
+    pub ingest_opened: AtomicU64,
+    /// Chunked-ingest tasks that reached a successful close-time solve.
+    pub ingest_completed: AtomicU64,
+    /// Chunked-ingest tasks that died with a typed error (caps, shape,
+    /// range mismatch, mid-stream fault, failed solve).
+    pub ingest_failed: AtomicU64,
     /// Raw input bytes received.
     pub bytes_in: AtomicU64,
     /// Compressed bytes produced.
@@ -135,6 +142,15 @@ impl Metrics {
         if c + r + w + f > 0 {
             line.push_str(&format!(" stream=c{c}/r{r}/w{w}/s{f}"));
         }
+        // Ingest segment, same on-demand rendering as stream=.
+        let (io, ic, ife) = (
+            self.ingest_opened.load(Ordering::Relaxed),
+            self.ingest_completed.load(Ordering::Relaxed),
+            self.ingest_failed.load(Ordering::Relaxed),
+        );
+        if io + ic + ife > 0 {
+            line.push_str(&format!(" ingest=o{io}/c{ic}/f{ife}"));
+        }
         // The fault segment appears once the fault layer has seen action,
         // mirroring the stream segment's on-demand rendering.
         let (faults, retries, breaker, fallbacks) = self.fleet.snapshot();
@@ -183,6 +199,12 @@ mod tests {
         m.add(&m.stream_reused, 3);
         m.add(&m.stream_resolved, 1);
         assert!(m.summary().contains("stream=c0/r3/w0/s1"));
+        // Same for the ingest segment.
+        assert!(!m.summary().contains("ingest="));
+        m.add(&m.ingest_opened, 2);
+        m.add(&m.ingest_completed, 1);
+        m.add(&m.ingest_failed, 1);
+        assert!(m.summary().contains("ingest=o2/c1/f1"));
         // Same for the fault segment: absent while clean, rendered once
         // the fault layer sees action.
         assert!(!m.summary().contains("fault="));

@@ -18,16 +18,19 @@
 //!   results bitwise-identical to a single node for any shard count.
 //!
 //! Shared plumbing: binary [`codec`], framed [`protocol`], [`metrics`],
-//! and the fault-tolerance layer ([`fault`]: typed fault taxonomy,
-//! deadlines on every socket, deterministic retry/re-plan policy;
-//! [`faultnet`]: the deterministic fault-injection proxy the chaos suite
-//! drives).
+//! the chunked streaming-ingestion layer ([`ingest`]: vectors arrive one
+//! chunk at a time and are folded away on arrival — the coordinator never
+//! materializes them), and the fault-tolerance layer ([`fault`]: typed
+//! fault taxonomy, deadlines on every socket, deterministic retry/re-plan
+//! policy; [`faultnet`]: the deterministic fault-injection proxy the
+//! chaos suite drives).
 
 pub mod aggregator;
 pub mod batcher;
 pub mod codec;
 pub mod fault;
 pub mod faultnet;
+pub mod ingest;
 pub mod metrics;
 pub mod protocol;
 pub mod router;

@@ -181,6 +181,87 @@ pub enum Msg {
         /// Decision + solve wall time in microseconds.
         solve_us: u64,
     },
+    /// Client → compression service: open a **chunked-ingest task**
+    /// ([`crate::coordinator::ingest`]). The vector then arrives
+    /// chunk-by-chunk as [`Msg::IngestChunk`] frames — the service folds
+    /// scan partials and histogram counts as chunks land and never holds
+    /// the whole vector, so the declared range `[lo, hi]` (which the grid
+    /// needs before the first count) must be supplied up front. The
+    /// service re-derives the true range from the chunk scan partials at
+    /// close and rejects the task on any bitwise mismatch — a wrong
+    /// declaration costs the task, never wrong bits.
+    IngestOpen {
+        /// Client-chosen task id; keys every later frame of the task and
+        /// the task's derived RNG streams.
+        task_id: u64,
+        /// Total dimension of the vector the chunks will assemble.
+        d: u64,
+        /// Quantization budget (number of values).
+        s: u32,
+        /// Tenant priority class (as in [`Msg::CompressRequest`]),
+        /// applied to the close-time solve.
+        class: u8,
+        /// Deadline budget in milliseconds (as in
+        /// [`Msg::CompressRequest`]), applied to the close-time solve.
+        deadline_ms: u32,
+        /// Declared global minimum (must equal the folded scan minimum
+        /// bitwise at close).
+        lo: f64,
+        /// Declared global maximum (same contract as `lo`).
+        hi: f64,
+    },
+    /// Client → compression service: one [`crate::par::CHUNK`]-aligned
+    /// chunk of an ingest task. `chunk_idx` is the *global* chunk index
+    /// (offset ÷ CHUNK) — the RNG streams of DESIGN rules 2/4 are keyed by
+    /// it, so chunks may arrive in any order. Sent twice per chunk: once
+    /// while the task is filling (counted into the running histogram) and
+    /// once after [`Msg::IngestSolved`] (quantized + packed, answered by
+    /// [`Msg::IngestPayloadChunk`]).
+    IngestChunk {
+        /// Task id from [`Msg::IngestOpen`].
+        task_id: u64,
+        /// Global chunk index of this chunk.
+        chunk_idx: u64,
+        /// The chunk's coordinates — exactly [`crate::par::CHUNK`] of
+        /// them, except the last chunk which carries the ragged tail. The
+        /// decoder rejects anything longer before allocating.
+        data: Vec<f32>,
+    },
+    /// Client → compression service: all fill-phase chunks are sent. The
+    /// service folds the scan partials in global chunk order, verifies the
+    /// declared range, assembles the histogram, and solves once via the
+    /// scheduler — answering [`Msg::IngestSolved`] (or [`Msg::Busy`]).
+    IngestClose {
+        /// Task id from [`Msg::IngestOpen`].
+        task_id: u64,
+    },
+    /// Compression service → client: the close-time solve finished; the
+    /// client now re-sends each chunk to receive its packed payload
+    /// window.
+    IngestSolved {
+        /// Echoed task id.
+        task_id: u64,
+        /// The solved quantization values (sorted ascending).
+        levels: Vec<f64>,
+        /// Route label of the solve.
+        solver: String,
+        /// Solve wall time in microseconds.
+        solve_us: u64,
+    },
+    /// Compression service → client: one chunk's bit-packed payload
+    /// window. Chunk-aligned windows are byte-aligned for every bit width
+    /// (see [`crate::sq::assemble`]), so concatenating the windows in
+    /// chunk order is byte-for-byte the monolithic payload.
+    IngestPayloadChunk {
+        /// Echoed task id.
+        task_id: u64,
+        /// Echoed global chunk index.
+        chunk_idx: u64,
+        /// Number of coordinates this window covers.
+        d: u64,
+        /// The chunk's packed index bytes.
+        payload: Vec<u8>,
+    },
 }
 
 impl Msg {
@@ -206,6 +287,11 @@ impl Msg {
             Msg::ShardPayload { .. } => "ShardPayload",
             Msg::StreamCompressRequest { .. } => "StreamCompressRequest",
             Msg::StreamCompressReply { .. } => "StreamCompressReply",
+            Msg::IngestOpen { .. } => "IngestOpen",
+            Msg::IngestChunk { .. } => "IngestChunk",
+            Msg::IngestClose { .. } => "IngestClose",
+            Msg::IngestSolved { .. } => "IngestSolved",
+            Msg::IngestPayloadChunk { .. } => "IngestPayloadChunk",
         }
     }
 
@@ -228,6 +314,11 @@ impl Msg {
             Msg::ShardPayload { .. } => 15,
             Msg::StreamCompressRequest { .. } => 16,
             Msg::StreamCompressReply { .. } => 17,
+            Msg::IngestOpen { .. } => 18,
+            Msg::IngestChunk { .. } => 19,
+            Msg::IngestClose { .. } => 20,
+            Msg::IngestSolved { .. } => 21,
+            Msg::IngestPayloadChunk { .. } => 22,
         }
     }
 
@@ -323,6 +414,21 @@ impl Msg {
                     .bytes(&compressed.to_bytes())
                     .string(solver)
                     .u64(*solve_us);
+            }
+            Msg::IngestOpen { task_id, d, s, class, deadline_ms, lo, hi } => {
+                w.u64(*task_id).u64(*d).u32(*s).u8(*class).u32(*deadline_ms).f64(*lo).f64(*hi);
+            }
+            Msg::IngestChunk { task_id, chunk_idx, data } => {
+                w.u64(*task_id).u64(*chunk_idx).f32s(data);
+            }
+            Msg::IngestClose { task_id } => {
+                w.u64(*task_id);
+            }
+            Msg::IngestSolved { task_id, levels, solver, solve_us } => {
+                w.u64(*task_id).f64s(levels).string(solver).u64(*solve_us);
+            }
+            Msg::IngestPayloadChunk { task_id, chunk_idx, d, payload } => {
+                w.u64(*task_id).u64(*chunk_idx).u64(*d).bytes(payload);
             }
         }
         let body = w.finish();
@@ -443,6 +549,37 @@ impl Msg {
                     solve_us,
                 }
             }
+            18 => Msg::IngestOpen {
+                task_id: r.u64()?,
+                d: r.u64()?,
+                s: r.u32()?,
+                class: r.u8()?,
+                deadline_ms: r.u32()?,
+                lo: r.f64()?,
+                hi: r.f64()?,
+            },
+            19 => Msg::IngestChunk {
+                task_id: r.u64()?,
+                chunk_idx: r.u64()?,
+                // Per-message cap: a chunk frame may never carry more than
+                // one executor chunk of coordinates — the whole-frame
+                // MAX_FRAME bound alone would still admit a ~1 GiB chunk,
+                // defeating the ingest layer's O(CHUNK) memory promise.
+                data: r.f32s_max(crate::par::CHUNK)?,
+            },
+            20 => Msg::IngestClose { task_id: r.u64()? },
+            21 => Msg::IngestSolved {
+                task_id: r.u64()?,
+                levels: r.f64s()?,
+                solver: r.string()?,
+                solve_us: r.u64()?,
+            },
+            22 => Msg::IngestPayloadChunk {
+                task_id: r.u64()?,
+                chunk_idx: r.u64()?,
+                d: r.u64()?,
+                payload: r.bytes()?,
+            },
             _ => return Err(DecodeError("unknown message tag")),
         };
         r.expect_end()?;
@@ -580,6 +717,52 @@ mod tests {
             solver: "quiver-stream(M=400)".into(),
             solve_us: 77,
         });
+        roundtrip(Msg::IngestOpen {
+            task_id: 12,
+            d: 200_000,
+            s: 16,
+            class: 1,
+            deadline_ms: 500,
+            lo: -3.5,
+            hi: 9.25,
+        });
+        roundtrip(Msg::IngestChunk {
+            task_id: 12,
+            chunk_idx: 3,
+            data: vec![0.5; 100],
+        });
+        roundtrip(Msg::IngestClose { task_id: 12 });
+        roundtrip(Msg::IngestSolved {
+            task_id: 12,
+            levels: vec![-3.5, 0.0, 9.25],
+            solver: "quiver-ingest(M=400)".into(),
+            solve_us: 456,
+        });
+        roundtrip(Msg::IngestPayloadChunk {
+            task_id: 12,
+            chunk_idx: 3,
+            d: 100,
+            payload: vec![0xAB; 50],
+        });
+    }
+
+    #[test]
+    fn ingest_chunk_over_one_executor_chunk_is_rejected() {
+        // A full-CHUNK chunk is the largest legal frame …
+        roundtrip(Msg::IngestChunk {
+            task_id: 1,
+            chunk_idx: 0,
+            data: vec![1.0; crate::par::CHUNK],
+        });
+        // … one more coordinate must fail to decode (the per-message cap,
+        // not the frame limit — the frame itself is well-formed).
+        let big = Msg::IngestChunk {
+            task_id: 1,
+            chunk_idx: 0,
+            data: vec![1.0; crate::par::CHUNK + 1],
+        };
+        let frame = big.to_frame();
+        assert!(Msg::from_body(&frame[4..]).is_err(), "oversized chunk must not decode");
     }
 
     #[test]

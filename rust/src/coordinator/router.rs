@@ -61,6 +61,17 @@ pub enum Route {
         /// Histogram bins.
         m: usize,
     },
+    /// A chunked-ingest task served by [`super::ingest`]: the histogram
+    /// is folded incrementally as chunks land, solved once at stream
+    /// close. Always histogram-based (the fold *is* the histogram build)
+    /// regardless of dimension — an exact solve would require the
+    /// materialized vector the ingest path exists to avoid. Taken only
+    /// for `IngestOpen` traffic; one-shot requests keep the size-based
+    /// routes above.
+    Ingest {
+        /// Histogram bins.
+        m: usize,
+    },
 }
 
 impl Route {
@@ -71,6 +82,7 @@ impl Route {
             Route::Hist { m } => format!("quiver-hist(M={m})"),
             Route::ShardedHist { m, shards } => format!("quiver-hist(M={m})x{shards}shards"),
             Route::Streaming { m } => format!("quiver-stream(M={m})"),
+            Route::Ingest { m } => format!("quiver-ingest(M={m})"),
         }
     }
 }
@@ -93,6 +105,13 @@ impl Router {
     /// never inferred from the dimension.
     pub fn route_streaming(&self) -> Route {
         Route::Streaming { m: self.cfg.hist_m }
+    }
+
+    /// The route a chunked-ingest task takes ([`Route::Ingest`] at the
+    /// configured M) — requested explicitly by `IngestOpen` traffic,
+    /// never inferred from the dimension.
+    pub fn route_ingest(&self) -> Route {
+        Route::Ingest { m: self.cfg.hist_m }
     }
 
     /// Decide the route for a `d`-dimensional request.
@@ -125,10 +144,11 @@ impl Router {
                 let cfg = HistConfig { m, inner: SolverKind::QuiverAccel, seed: self.cfg.seed };
                 shard::solve_hist_sharded(xs, s, &cfg, shards)?
             }
-            // `route()` never returns Streaming — incremental rounds carry
-            // their own state and go through `stream::StreamSolver` (the
-            // service's streaming handler), not the stateless solve.
+            // `route()` never returns Streaming or Ingest — those carry
+            // their own state (stream::StreamSolver / ingest::IngestTask)
+            // and never reach the stateless solve.
             Route::Streaming { .. } => unreachable!("streaming rounds use stream::StreamSolver"),
+            Route::Ingest { .. } => unreachable!("ingest tasks use ingest::IngestTask"),
         };
         Ok((sol, route))
     }
@@ -200,10 +220,13 @@ mod tests {
             "quiver-hist(M=400)x8shards"
         );
         assert_eq!(Route::Streaming { m: 400 }.label(), "quiver-stream(M=400)");
+        assert_eq!(Route::Ingest { m: 400 }.label(), "quiver-ingest(M=400)");
         let r = Router::new(RouterConfig { hist_m: 128, ..Default::default() });
         assert_eq!(r.route_streaming(), Route::Streaming { m: 128 });
-        // Streaming is never inferred from the dimension.
+        assert_eq!(r.route_ingest(), Route::Ingest { m: 128 });
+        // Streaming/ingest are never inferred from the dimension.
         assert_ne!(r.route(1 << 20), Route::Streaming { m: 128 });
+        assert_ne!(r.route(1 << 20), Route::Ingest { m: 128 });
     }
 
     #[test]

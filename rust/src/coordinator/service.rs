@@ -68,6 +68,7 @@ use anyhow::{Context, Result};
 
 use super::batcher::{Scheduler, TenantClass};
 use super::fault::{self, FleetConfig};
+use super::ingest::{self, IngestConfig, IngestConn, IngestEvent, SharedIngestTask};
 use super::metrics::Metrics;
 use super::protocol::{recv, send, Msg};
 use super::router::Router;
@@ -133,6 +134,13 @@ pub struct ServiceConfig {
     /// disconnected and counted as a `fault=` — bounded resource hold,
     /// never a hung reader thread (DESIGN.md rule 7).
     pub io_timeout: Duration,
+    /// Chunked streaming-ingestion knobs ([`super::ingest`]): always on —
+    /// `IngestOpen` traffic is served by every service — with its
+    /// per-connection task cap and dimension cap here (CLI:
+    /// `--ingest-max-tasks`/`--ingest-max-d`). The grid size `m` is
+    /// overridden at start-up with the router's `hist_m`, so ingested and
+    /// monolithic solves share one grid policy.
+    pub ingest: IngestConfig,
 }
 
 /// Streaming-mode knobs ([`ServiceConfig::stream`]).
@@ -229,6 +237,7 @@ impl Default for ServiceConfig {
             stream: None,
             shed_expired: false,
             io_timeout: Duration::from_secs(120),
+            ingest: IngestConfig::default(),
         }
     }
 }
@@ -241,6 +250,10 @@ struct Job {
     reply: Arc<Mutex<TcpStream>>,
     /// `Some((stream_id, round))` for incremental-session rounds.
     stream: Option<(u64, u64)>,
+    /// `Some(task)` for a chunked-ingest close-time solve (`data` is
+    /// empty — the whole point is that the vector was never
+    /// materialized; the task holds the folded statistics).
+    ingest: Option<SharedIngestTask>,
 }
 
 /// Handle to a running service.
@@ -328,6 +341,10 @@ impl Service {
             let sched = sched.clone();
             let metrics = metrics.clone();
             let io_timeout = cfg.io_timeout;
+            // Ingest shares the router's grid policy: same M as the
+            // monolithic hist route, so the invariance contract compares
+            // like with like.
+            let ingest_cfg = IngestConfig { m: cfg.router.cfg.hist_m, ..cfg.ingest };
             joins.push(
                 std::thread::Builder::new()
                     .name("avq-accept".into())
@@ -337,7 +354,7 @@ impl Service {
                             let metrics = metrics.clone();
                             let stop = stop.clone();
                             std::thread::spawn(move || {
-                                handle_conn(stream, io_timeout, &sched, &metrics, &stop);
+                                handle_conn(stream, io_timeout, ingest_cfg, &sched, &metrics, &stop);
                             });
                         });
                     })
@@ -363,9 +380,26 @@ impl Service {
     }
 }
 
+/// Answer one failed ingest frame: count it, log the typed error, send
+/// exactly one `Busy` carrying the task id. (The [`IngestConn`] dead-id
+/// set guarantees later frames of the same dead task are dropped
+/// silently, so a pipelined client reads one error, not one per frame.)
+fn ingest_reject(
+    reply: &Arc<Mutex<TcpStream>>,
+    metrics: &Metrics,
+    task_id: u64,
+    err: &ingest::IngestError,
+) {
+    metrics.add(&metrics.ingest_failed, 1);
+    eprintln!("compression service: ingest task {task_id} failed: {err}");
+    let mut w = reply.lock().unwrap();
+    let _ = send(&mut *w, &Msg::Busy { request_id: task_id });
+}
+
 fn handle_conn(
     stream: TcpStream,
     io_timeout: Duration,
+    ingest_cfg: IngestConfig,
     sched: &Scheduler<Job>,
     metrics: &Metrics,
     stop: &AtomicBool,
@@ -379,6 +413,12 @@ fn handle_conn(
         Ok(s) => s,
         Err(_) => return,
     }));
+    // Per-connection ingest state: the capped live-task table plus each
+    // task's tenant class (class/deadline ride IngestOpen but are only
+    // needed at close-time scheduling). Dropping the connection drops
+    // both — a client that vanishes mid-ingest frees its partial state.
+    let mut ingest_conn = IngestConn::new(ingest_cfg);
+    let mut ingest_class: BTreeMap<u64, (u8, u32)> = BTreeMap::new();
     let mut rd = std::io::BufReader::new(stream);
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -399,6 +439,94 @@ fn handle_conn(
                 deadline_ms,
                 data,
             })) => (request_id, s, class, deadline_ms, data, Some((stream_id, round))),
+            // Ingest frames are folded on the connection thread (cheap:
+            // one chunk scan + count pass) and never enter the scheduler
+            // until close; the fill phase is pipelined, so accepted
+            // opens/chunks send no reply.
+            Ok(Some(Msg::IngestOpen { task_id, d, s, class, deadline_ms, lo, hi })) => {
+                match ingest_conn.open(task_id, d, s, lo, hi) {
+                    IngestEvent::Accepted => {
+                        ingest_class.insert(task_id, (class, deadline_ms));
+                        metrics.add(&metrics.ingest_opened, 1);
+                    }
+                    IngestEvent::Reject(id, e) => ingest_reject(&reply, metrics, id, &e),
+                    _ => {}
+                }
+                continue;
+            }
+            Ok(Some(Msg::IngestChunk { task_id, chunk_idx, data })) => {
+                metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
+                match ingest_conn.chunk(task_id, chunk_idx, &data) {
+                    IngestEvent::Folded | IngestEvent::Silent => {}
+                    IngestEvent::Payload { chunk_idx, d, payload } => {
+                        metrics.add(&metrics.bytes_out, payload.len() as u64);
+                        let mut w = reply.lock().unwrap();
+                        let _ = send(
+                            &mut *w,
+                            &Msg::IngestPayloadChunk { task_id, chunk_idx, d, payload },
+                        );
+                    }
+                    IngestEvent::Reject(id, e) => {
+                        ingest_class.remove(&id);
+                        ingest_reject(&reply, metrics, id, &e);
+                    }
+                    _ => {}
+                }
+                continue;
+            }
+            Ok(Some(Msg::IngestClose { task_id })) => {
+                match ingest_conn.close(task_id) {
+                    IngestEvent::Close(task) => {
+                        let (class, deadline_ms) =
+                            ingest_class.remove(&task_id).unwrap_or((0, 0));
+                        let s = task.lock().unwrap().budget();
+                        let job = Job {
+                            request_id: task_id,
+                            s,
+                            data: Vec::new(),
+                            accepted_at: Instant::now(),
+                            reply: reply.clone(),
+                            stream: None,
+                            ingest: Some(task),
+                        };
+                        let tclass = TenantClass {
+                            priority: class,
+                            ..if deadline_ms > 0 {
+                                TenantClass::with_deadline_in(Duration::from_millis(u64::from(
+                                    deadline_ms,
+                                )))
+                            } else {
+                                TenantClass::best_effort()
+                            }
+                        };
+                        metrics.add(&metrics.accepted, 1);
+                        match sched.try_submit(job, tclass) {
+                            Ok(()) => {}
+                            Err(job) => {
+                                metrics
+                                    .accepted
+                                    .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                                metrics.add(&metrics.rejected, 1);
+                                metrics.add(&metrics.ingest_failed, 1);
+                                ingest_conn.forget(job.request_id);
+                                eprintln!(
+                                    "compression service: ingest task {} rejected: queue full",
+                                    job.request_id
+                                );
+                                let mut w = job.reply.lock().unwrap();
+                                let _ =
+                                    send(&mut *w, &Msg::Busy { request_id: job.request_id });
+                            }
+                        }
+                    }
+                    IngestEvent::Reject(id, e) => {
+                        ingest_class.remove(&id);
+                        ingest_reject(&reply, metrics, id, &e);
+                    }
+                    _ => {}
+                }
+                continue;
+            }
             Ok(Some(other)) => {
                 eprintln!("compression service: unexpected {}", other.kind());
                 continue;
@@ -424,6 +552,7 @@ fn handle_conn(
             accepted_at: Instant::now(),
             reply: reply.clone(),
             stream: stream_key,
+            ingest: None,
         };
         let tclass = TenantClass {
             priority: class,
@@ -495,7 +624,7 @@ fn serve_groups(
         }
         let base = rng.next_u64();
         for (tenant, job) in group.into_iter().enumerate() {
-            if job.stream.is_none() && job.data.len() <= batch_small_d {
+            if job.stream.is_none() && job.ingest.is_none() && job.data.len() <= batch_small_d {
                 small.push((base, tenant, job));
             } else {
                 large.push((base, tenant, job));
@@ -510,7 +639,15 @@ fn serve_groups(
             (job, reply)
         });
     for (base, tenant, job) in large {
-        let reply = if let Some((stream_id, round)) = job.stream {
+        let reply = if let Some(task) = job.ingest.clone() {
+            // Ingest close-time solves compute inline for the same reason
+            // stream rounds do: they lock task state, and a pool worker
+            // must never block on (or re-enter) that mutex inside a wave.
+            // Note no base/tenant stream is consumed: an ingest task's
+            // randomness derives from (ingest seed, task id) only, so its
+            // bits cannot depend on batching or scheduling.
+            compute_ingest_reply(&job, &task, router, metrics)
+        } else if let Some((stream_id, round)) = job.stream {
             compute_stream_reply(&job, stream_id, round, router, metrics, streams)
         } else {
             let mut trng = Xoshiro256pp::stream(base, tenant as u64);
@@ -567,6 +704,41 @@ fn compute_stream_reply(
             }
         }
         Err(_) => Msg::Busy { request_id: job.request_id },
+    }
+}
+
+/// Serve one ingest close-time solve: fold the task's chunk-slot scan
+/// partials, verify the declared range, assemble + solve the histogram,
+/// install the levels for the encode phase
+/// ([`ingest::IngestTask::solve_close`]). Runs inline on the solver
+/// thread (see [`serve_groups`]). A failed solve answers `Busy`; the
+/// connection thread's dead-id set handles the cleanup when the client
+/// touches the task again.
+fn compute_ingest_reply(
+    job: &Job,
+    task: &SharedIngestTask,
+    router: &Router,
+    metrics: &Metrics,
+) -> Msg {
+    let t0 = Instant::now();
+    let mut t = task.lock().unwrap();
+    match t.solve_close() {
+        Ok(levels) => {
+            let solve_us = t0.elapsed().as_micros() as u64;
+            metrics.solve_latency.record_us(solve_us.max(1));
+            metrics.add(&metrics.ingest_completed, 1);
+            Msg::IngestSolved {
+                task_id: job.request_id,
+                levels,
+                solver: router.route_ingest().label(),
+                solve_us,
+            }
+        }
+        Err(e) => {
+            metrics.add(&metrics.ingest_failed, 1);
+            eprintln!("compression service: ingest task {} solve failed: {e}", job.request_id);
+            Msg::Busy { request_id: job.request_id }
+        }
     }
 }
 
@@ -754,6 +926,77 @@ pub fn compress_remote_stream_retry(
     request_retry(addr, &msg, net)
 }
 
+/// Blocking client helper for chunked ingestion: stream `data` to the
+/// service one [`crate::par::CHUNK`]-aligned chunk at a time, read back
+/// the solved levels and the per-chunk payload windows, and assemble the
+/// final [`sq::CompressedVec`] client-side. The *client* holds the
+/// vector throughout (it owns it anyway); the coordinator only ever sees
+/// one chunk at a time.
+///
+/// Wire choreography (see [`super::ingest`] module docs): `IngestOpen`
+/// with the chunk-fold declared range, all fill chunks + `IngestClose`
+/// pipelined, one `IngestSolved` (or `Busy`) back; then lock-step echo —
+/// one `IngestChunk` per `IngestPayloadChunk` — concatenated in chunk
+/// order into the byte-exact monolithic payload.
+///
+/// Returns `(compressed, solver_label, solve_us)`. Any server-side
+/// failure surfaces as one `Busy`, which this helper maps to an error.
+pub fn ingest_remote(
+    addr: &str,
+    task_id: u64,
+    s: u32,
+    class: u8,
+    deadline_ms: u32,
+    data: &[f32],
+) -> Result<(sq::CompressedVec, String, u64)> {
+    let net = FleetConfig::default();
+    let mut stream = fault::connect(addr, &net).map_err(anyhow::Error::new)?;
+    let (lo, hi) = ingest::declared_range(data);
+    send(
+        &mut stream,
+        &Msg::IngestOpen { task_id, d: data.len() as u64, s, class, deadline_ms, lo, hi },
+    )?;
+    let n_chunks = data.len().div_ceil(crate::par::CHUNK) as u64;
+    for ci in 0..n_chunks {
+        let chunk = ingest::chunk_of(data, ci).to_vec();
+        send(&mut stream, &Msg::IngestChunk { task_id, chunk_idx: ci, data: chunk })?;
+    }
+    send(&mut stream, &Msg::IngestClose { task_id })?;
+    let mut rd = std::io::BufReader::new(stream.try_clone()?);
+    let (levels, solver, solve_us) = match recv(&mut rd)?.context("service closed the connection")?
+    {
+        Msg::IngestSolved { task_id: tid, levels, solver, solve_us } => {
+            anyhow::ensure!(tid == task_id, "ingest: reply for wrong task");
+            (levels, solver, solve_us)
+        }
+        Msg::Busy { .. } => anyhow::bail!("ingest task {task_id} rejected (Busy)"),
+        other => anyhow::bail!("ingest: unexpected {}", other.kind()),
+    };
+    // Encode phase: lock-step, windows concatenated in chunk order.
+    let mut payload = Vec::new();
+    for ci in 0..n_chunks {
+        let chunk = ingest::chunk_of(data, ci).to_vec();
+        send(&mut stream, &Msg::IngestChunk { task_id, chunk_idx: ci, data: chunk })?;
+        match recv(&mut rd)?.context("service closed the connection")? {
+            Msg::IngestPayloadChunk { task_id: tid, chunk_idx, payload: part, .. } => {
+                anyhow::ensure!(
+                    tid == task_id && chunk_idx == ci,
+                    "ingest: out-of-step payload window"
+                );
+                payload.extend_from_slice(&part);
+            }
+            Msg::Busy { .. } => anyhow::bail!("ingest task {task_id} failed mid-encode (Busy)"),
+            other => anyhow::bail!("ingest: unexpected {}", other.kind()),
+        }
+    }
+    let bits = sq::codec::bits_for(levels.len());
+    Ok((
+        sq::CompressedVec { d: data.len() as u64, q: levels, bits, payload },
+        solver,
+        solve_us,
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -772,6 +1015,8 @@ mod tests {
         assert!(sc.tuning.drift_reuse_max <= sc.tuning.drift_warm_max);
         assert!(sc.tuning.cache_cap > 0);
         assert!(sc.max_streams > 0, "the stream map must be bounded");
+        assert!(c.ingest.max_tasks > 0, "the ingest task table must be bounded");
+        assert!(c.ingest.max_d <= sq::codec::MAX_D, "ingest dimensions respect the codec cap");
     }
 
     #[test]

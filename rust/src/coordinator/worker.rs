@@ -162,6 +162,32 @@ pub fn compress_gradient_stream(
     Ok(compressed)
 }
 
+/// The trainer-resident ingest sibling of [`compress_gradient`]: run the
+/// gradient through the chunked-ingest state machine
+/// ([`super::ingest::ingest_local`]) instead of the monolithic pipeline —
+/// the same fold a coordinator performs on wire chunks, with chunks that
+/// never crossed the network. This is the memory-bounded path for hosts
+/// where the *quantization working set* must stay `O(M + CHUNK)` even
+/// though the trainer holds the gradient (e.g. the gradient lives in
+/// accelerator-pinned memory and host scratch is scarce).
+///
+/// Randomness derives from `(seed, task_id)` via
+/// [`super::ingest::ingest_bases`] — reproducible per task, independent
+/// of arrival order and scheduling — so the output is bitwise-identical
+/// to [`super::ingest::monolithic_reference`] with the same keys, and to
+/// a remote [`super::service::ingest_remote`] of the same data.
+pub fn compress_gradient_ingest(
+    grad: &[f32],
+    s: usize,
+    cfg: &super::ingest::IngestConfig,
+    task_id: u64,
+) -> Result<sq::CompressedVec> {
+    let (compressed, _levels) =
+        super::ingest::ingest_local(grad, s.min(u32::MAX as usize) as u32, cfg, task_id, None)
+            .map_err(|e| anyhow!("ingest AVQ task {task_id}: {e}"))?;
+    Ok(compressed)
+}
+
 /// Compress many small tenant gradients as **one** batched dispatch — the
 /// multi-tenant sibling of [`compress_gradient`] (per-head KV-cache
 /// blocks, per-layer gradient shards, per-client uplinks).
@@ -252,6 +278,21 @@ mod tests {
         let a = compress_gradient(&grad, 8, &plain, &mut r1).unwrap();
         let b = compress_gradient(&grad, 8, &sharded, &mut r2).unwrap();
         assert_eq!(a, b, "sharding must be invisible in the uplink bytes");
+    }
+
+    #[test]
+    fn ingest_compression_matches_monolithic_reference() {
+        use crate::coordinator::ingest::{monolithic_reference, IngestConfig};
+        // A chunk-crossing gradient: the trainer-resident ingest round
+        // must produce the monolithic pipeline's exact bytes while
+        // holding only O(M + CHUNK) quantization scratch.
+        let d = crate::par::CHUNK + 901;
+        let grad: Vec<f32> =
+            (0..d).map(|i| ((i as f32 * 0.007).sin() * 0.8).exp() - 1.0).collect();
+        let cfg = IngestConfig { m: 128, ..IngestConfig::default() };
+        let got = compress_gradient_ingest(&grad, 8, &cfg, 5).unwrap();
+        let (want, _) = monolithic_reference(&grad, 8, &cfg, 5).unwrap();
+        assert_eq!(got, want, "ingest uplink bytes must match the monolithic pipeline");
     }
 
     #[test]

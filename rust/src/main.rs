@@ -7,8 +7,10 @@
 //! quiver serve      [--addr 127.0.0.1:7071] [--threads 2] [--exact-max-d 65536]
 //!                   [--shards N] [--admission N] [--shed-expired true]
 //!                   [--stream true] [--drift-threshold T] [--drift-reuse T] [--drift-warm T]
+//!                   [--ingest-max-tasks N] [--ingest-max-d D]
 //! quiver client     --addr HOST:PORT --d 100000 --s 16 [--tenant-class N] [--deadline-ms MS]
 //!                   [--stream-id ID [--round R | --stream-rounds K]]
+//!                   [--ingest-chunk true [--task-id ID]]
 //!                   [--retries N] [--retry-backoff-ms MS]
 //! quiver shard-node [--addr 127.0.0.1:7171] [--io-timeout-ms MS]
 //! quiver train      [--workers 4] [--rounds 50] [--s 16] [--lr 0.05]
@@ -63,6 +65,16 @@
 //! round ids, `--start-round R` resumes a checkpointed job's round
 //! numbering, and `--shards N` makes workers shard each gradient's
 //! histogram solve (bit-identical to unsharded).
+//!
+//! Chunked ingestion (`quiver::coordinator::ingest`): `client
+//! --ingest-chunk true` streams the vector to the service one 64K chunk
+//! at a time instead of one monolithic request — the coordinator folds
+//! each chunk away on arrival and never materializes the vector (peak
+//! O(M + CHUNK) instead of O(d)), yet the compressed bytes are identical
+//! to the monolithic path. `--task-id ID` keys the task's RNG streams.
+//! `serve --ingest-max-tasks N` caps live ingest tasks per connection and
+//! `--ingest-max-d D` caps the task dimension (both bound what
+//! wire-supplied ids can allocate).
 
 use std::time::Duration;
 
@@ -72,8 +84,9 @@ use quiver::config::Config;
 use quiver::coordinator::fault::{FleetConfig, FleetState};
 use quiver::coordinator::router::{Router, RouterConfig};
 use quiver::coordinator::server::{Server, ServerConfig};
+use quiver::coordinator::ingest::IngestConfig;
 use quiver::coordinator::service::{
-    compress_remote_retry, compress_remote_stream_retry, Service, ServiceConfig,
+    compress_remote_retry, compress_remote_stream_retry, ingest_remote, Service, ServiceConfig,
     StreamServiceConfig,
 };
 use quiver::coordinator::shard::{ShardConfig, ShardCoordinator, ShardNode};
@@ -354,6 +367,15 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         stream,
         shed_expired: cfg.bool_or("shed_expired", false)?,
         io_timeout: parse_fleet(cfg)?.io_timeout,
+        ingest: {
+            let di = IngestConfig::default();
+            IngestConfig {
+                max_tasks: cfg.usize_or("ingest_max_tasks", di.max_tasks)?,
+                max_d: cfg.u64_or("ingest_max_d", di.max_d)?,
+                seed: cfg.u64_or("ingest_seed", di.seed)?,
+                ..di
+            }
+        },
     })?;
     println!("quiver compression service listening on {}", service.addr());
     let period = cfg.u64_or("stats_secs", 10)?;
@@ -379,6 +401,27 @@ fn cmd_client(cfg: &Config) -> Result<()> {
     // Bounded retry on Busy/transport faults: `--retries N
     // --retry-backoff-ms MS` (plus the connect/io deadline flags).
     let net = parse_fleet(cfg)?;
+    // Chunked ingestion: stream the vector one 64K chunk at a time; the
+    // service folds each chunk on arrival and never materializes the
+    // vector, yet the assembled bytes match the monolithic path exactly.
+    if cfg.bool_or("ingest_chunk", false)? {
+        let task_id = cfg.u64_or("task_id", 1)?;
+        let data: Vec<f32> = dist.sample_vec(d, seed).into_iter().map(|x| x as f32).collect();
+        let n_chunks = d.div_ceil(quiver::par::CHUNK);
+        let t0 = std::time::Instant::now();
+        let (compressed, solver, solve_us) =
+            ingest_remote(&addr, task_id, s, class, deadline_ms, &data)?;
+        let rtt = t0.elapsed();
+        println!(
+            "ingested d={d} in {n_chunks} chunk(s) as task {task_id} with {solver}: \
+             {} -> {} bytes ({:.2}x), solve {solve_us}µs, rtt {}",
+            d * 4,
+            compressed.wire_size(),
+            compressed.ratio_vs_f32(),
+            quiver::benchfw::fmt_duration(rtt)
+        );
+        return Ok(());
+    }
     // Streaming session: send round(s) keyed by --stream-id.
     if let Some(stream_id) = cfg.get("stream_id") {
         let stream_id: u64 =

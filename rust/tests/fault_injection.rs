@@ -1,5 +1,7 @@
 //! Chaos suite: every [`FaultAction`] driven against a live shard fleet
-//! through the deterministic fault proxy (`coordinator::faultnet`).
+//! through the deterministic fault proxy (`coordinator::faultnet`), plus
+//! mid-ingest request-direction faults against a live compression service
+//! (drop/truncate/stall during a chunked `coordinator::ingest` upload).
 //!
 //! The contract under test (DESIGN.md rule 7): whatever the failure —
 //! refused connect, mid-phase kill, stall, truncated frame, corrupt
@@ -14,6 +16,10 @@ use std::time::{Duration, Instant};
 
 use quiver::coordinator::fault::{FleetConfig, FleetState};
 use quiver::coordinator::faultnet::{FaultAction, FaultProxy, FaultSchedule};
+use quiver::coordinator::ingest::{self, IngestConfig};
+use quiver::coordinator::protocol::{recv, send, Msg};
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::service::{ingest_remote, Service, ServiceConfig};
 use quiver::coordinator::shard::{ShardConfig, ShardCoordinator, ShardNode};
 use quiver::dist::Dist;
 use quiver::util::rng::Xoshiro256pp;
@@ -289,4 +295,220 @@ fn non_finite_input_is_a_fast_typed_error_not_a_node_fault() {
     assert!(err.to_string().contains("non-finite"), "typed cause: {err:#}");
     assert_eq!(state.stats.snapshot(), (0, 0, 0, 0), "hard errors charge no node");
     fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Mid-ingest chaos: faults injected on the *request* direction, where the
+// chunked uploads of `coordinator::ingest` live. The contract extends rule 7
+// to ingestion — a faulted upload fails cleanly (typed error or EOF, partial
+// state freed with the connection), and every later tenant is bit-identical
+// to the healthy monolithic reference.
+// ---------------------------------------------------------------------------
+
+const INGEST_M: usize = 96;
+
+/// A ragged two-chunk ingest input (mirrors `sample()` but f32, the wire
+/// element type of ingestion).
+fn fsample(seed: u64) -> Vec<f32> {
+    Dist::LogNormal { mu: 0.0, sigma: 0.8 }
+        .sample_vec(2 * quiver::par::CHUNK + 345, seed)
+        .into_iter()
+        .map(|x| x as f32)
+        .collect()
+}
+
+/// A service whose ingest grid matches [`INGEST_M`] (the router's `hist_m`
+/// overrides the ingest grid at start-up), behind one fault proxy.
+fn ingest_rig(schedule: FaultSchedule) -> (Service, FaultProxy) {
+    let service = Service::start(ServiceConfig {
+        threads: 2,
+        router: Router::new(RouterConfig {
+            exact_max_d: 4096,
+            hist_m: INGEST_M,
+            seed: 7,
+            shards: 1,
+        }),
+        io_timeout: Duration::from_millis(800),
+        ..Default::default()
+    })
+    .unwrap();
+    let proxy = FaultProxy::start(service.addr(), schedule).unwrap();
+    (service, proxy)
+}
+
+/// The bits every post-fault tenant must reproduce.
+fn ingest_reference(data: &[f32], task_id: u64) -> quiver::sq::CompressedVec {
+    let cfg = IngestConfig { m: INGEST_M, ..Default::default() };
+    ingest::monolithic_reference(data, S as u32, &cfg, task_id).unwrap().0
+}
+
+/// Run a healthy ingest over `addr` and assert bitwise identity with the
+/// monolithic reference for this task id.
+fn assert_ingest_bitwise(addr: &str, data: &[f32], task_id: u64) {
+    let (cv, _, _) = ingest_remote(addr, task_id, S as u32, 0, 0, data)
+        .expect("healthy ingest must succeed");
+    assert_eq!(cv, ingest_reference(data, task_id), "ingest bits must match monolithic");
+}
+
+#[test]
+fn ingest_drop_after_n_chunks_fails_cleanly_then_next_tenant_matches() {
+    // Conn 0 dies after IngestOpen + one chunk frame: the close never
+    // arrives, the service frees the half-filled task with the connection,
+    // and the client gets a clean EOF/error — never a hang, never bits.
+    let (service, proxy) = ingest_rig(
+        FaultSchedule::transparent()
+            .with_conn(0, FaultAction::DropAfterFrames(2))
+            .on_requests(),
+    );
+    let data = fsample(31);
+    let t0 = Instant::now();
+    ingest_remote(proxy.addr(), 1, S as u32, 0, 0, &data)
+        .expect_err("dropped upload must fail");
+    assert!(t0.elapsed() < Duration::from_secs(10), "drop must fail fast");
+    // Conn 1 (same proxy, transparent) and the same task id: bit-identical.
+    assert_ingest_bitwise(proxy.addr(), &data, 1);
+    proxy.shutdown();
+    service.shutdown();
+}
+
+#[test]
+fn ingest_truncated_chunk_frame_fails_cleanly_then_next_tenant_matches() {
+    // Conn 0's first IngestChunk frame (request frame 1) is cut mid-body:
+    // the service's codec sees UnexpectedEof and drops the connection.
+    let (service, proxy) = ingest_rig(
+        FaultSchedule::transparent()
+            .with_conn(0, FaultAction::TruncateFrame(1))
+            .on_requests(),
+    );
+    let data = fsample(32);
+    let t0 = Instant::now();
+    ingest_remote(proxy.addr(), 4, S as u32, 0, 0, &data)
+        .expect_err("truncated chunk upload must fail");
+    assert!(t0.elapsed() < Duration::from_secs(10), "truncation must fail fast");
+    assert_ingest_bitwise(proxy.addr(), &data, 4);
+    proxy.shutdown();
+    service.shutdown();
+}
+
+#[test]
+fn ingest_stall_past_deadline_is_unblocked_by_the_service_io_timeout() {
+    // Conn 0 stalls after IngestOpen, holding the socket open: only the
+    // service-side io deadline can break the wedge. It must — the reader
+    // thread disconnects, frees the opened task, and the client observes
+    // a bounded EOF, not a hang (DESIGN.md rule 7 for ingestion).
+    let (service, proxy) = ingest_rig(
+        FaultSchedule::transparent()
+            .with_conn(0, FaultAction::StallAfterFrames(1))
+            .on_requests(),
+    );
+    let data = fsample(33);
+    let t0 = Instant::now();
+    ingest_remote(proxy.addr(), 9, S as u32, 0, 0, &data)
+        .expect_err("stalled upload must time out server-side");
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "stall must be bounded by the io deadline, took {:?}",
+        t0.elapsed()
+    );
+    assert_ingest_bitwise(proxy.addr(), &data, 9);
+    proxy.shutdown();
+    service.shutdown();
+}
+
+#[test]
+fn ingest_bad_chunk_ids_get_one_busy_and_leave_other_tenants_intact() {
+    // Protocol abuse straight at the service (no proxy): an out-of-range
+    // chunk index and a duplicate chunk each kill their task with exactly
+    // one Busy; the connection survives, and a clean task on the *same*
+    // connection afterwards still produces monolithic bits.
+    let service = Service::start(ServiceConfig {
+        threads: 2,
+        router: Router::new(RouterConfig {
+            exact_max_d: 4096,
+            hist_m: INGEST_M,
+            seed: 7,
+            shards: 1,
+        }),
+        ..Default::default()
+    })
+    .unwrap();
+    let data = fsample(34);
+    let (lo, hi) = ingest::declared_range(&data);
+    let d = data.len() as u64;
+    let n_chunks = data.len().div_ceil(quiver::par::CHUNK) as u64;
+
+    let stream = std::net::TcpStream::connect(service.addr()).unwrap();
+    let mut wr = stream.try_clone().unwrap();
+    let mut rd = std::io::BufReader::new(stream);
+    let open = |task_id: u64| Msg::IngestOpen {
+        task_id,
+        d,
+        s: S as u32,
+        class: 0,
+        deadline_ms: 0,
+        lo,
+        hi,
+    };
+
+    // Task 1: out-of-range chunk index (start = 9·CHUNK ≥ d) → one Busy.
+    send(&mut wr, &open(1)).unwrap();
+    send(&mut wr, &Msg::IngestChunk { task_id: 1, chunk_idx: 9, data: vec![0.0; 16] }).unwrap();
+    match recv(&mut rd).unwrap() {
+        Some(Msg::Busy { request_id: 1 }) => {}
+        other => panic!("out-of-range chunk: {other:?}"),
+    }
+    // The dead task answers nothing further — not even to a close.
+    send(&mut wr, &Msg::IngestChunk {
+        task_id: 1,
+        chunk_idx: 0,
+        data: ingest::chunk_of(&data, 0).to_vec(),
+    })
+    .unwrap();
+    send(&mut wr, &Msg::IngestClose { task_id: 1 }).unwrap();
+
+    // Task 2: the same chunk twice → one Busy.
+    send(&mut wr, &open(2)).unwrap();
+    let c0 = ingest::chunk_of(&data, 0).to_vec();
+    send(&mut wr, &Msg::IngestChunk { task_id: 2, chunk_idx: 0, data: c0.clone() }).unwrap();
+    send(&mut wr, &Msg::IngestChunk { task_id: 2, chunk_idx: 0, data: c0 }).unwrap();
+    match recv(&mut rd).unwrap() {
+        Some(Msg::Busy { request_id: 2 }) => {}
+        other => panic!("duplicate chunk: {other:?}"),
+    }
+
+    // Task 3 on the same connection: full clean lifecycle, monolithic bits.
+    send(&mut wr, &open(3)).unwrap();
+    for ci in 0..n_chunks {
+        send(&mut wr, &Msg::IngestChunk {
+            task_id: 3,
+            chunk_idx: ci,
+            data: ingest::chunk_of(&data, ci).to_vec(),
+        })
+        .unwrap();
+    }
+    send(&mut wr, &Msg::IngestClose { task_id: 3 }).unwrap();
+    let levels = match recv(&mut rd).unwrap() {
+        Some(Msg::IngestSolved { task_id: 3, levels, .. }) => levels,
+        other => panic!("clean task must solve (exactly one Busy per dead task): {other:?}"),
+    };
+    let mut payload = Vec::new();
+    for ci in 0..n_chunks {
+        send(&mut wr, &Msg::IngestChunk {
+            task_id: 3,
+            chunk_idx: ci,
+            data: ingest::chunk_of(&data, ci).to_vec(),
+        })
+        .unwrap();
+        match recv(&mut rd).unwrap() {
+            Some(Msg::IngestPayloadChunk { task_id: 3, chunk_idx, payload: part, .. }) => {
+                assert_eq!(chunk_idx, ci, "payload windows arrive in lock-step order");
+                payload.extend_from_slice(&part);
+            }
+            other => panic!("payload window: {other:?}"),
+        }
+    }
+    let bits = quiver::sq::codec::bits_for(levels.len());
+    let got = quiver::sq::CompressedVec { d, q: levels, bits, payload };
+    assert_eq!(got, ingest_reference(&data, 3), "post-abuse tenant must match monolithic");
+    service.shutdown();
 }

@@ -1,0 +1,164 @@
+//! Gating suite for chunked streaming ingestion (`coordinator::ingest`).
+//!
+//! The headline contract: a vector ingested one chunk at a time — in ANY
+//! arrival order, interleaved with other tenants, on any thread count,
+//! backend, or SIMD mode — produces levels and packed payload **bitwise
+//! identical** to the monolithic single-buffer pipeline. This is a
+//! corollary of DESIGN.md rules 2 and 4 (chunk identity, not arrival
+//! order, keys every partial; merges are order-fixed and exact), and this
+//! suite is the machine check of that corollary: paper-suite
+//! distributions × {forward, reversed, shuffled} arrival × the full
+//! execution matrix, plus interleaved multi-tenant arrival through the
+//! real per-connection state machine and a live TCP round-trip.
+//!
+//! The references are computed ONCE at the ambient configuration and
+//! compared against every cell, so a pass certifies both arrival-order
+//! invariance and cross-configuration invariance in one sweep.
+
+use std::collections::BTreeMap;
+
+use quiver::coordinator::ingest::{self, IngestConfig, IngestConn, IngestEvent};
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::service::{ingest_remote, Service, ServiceConfig};
+use quiver::dist::Dist;
+use quiver::par;
+use quiver::sq;
+use quiver::testutil::for_each_exec_cell;
+use quiver::util::rng::Xoshiro256pp;
+
+/// Quantization budget for every task in this suite.
+const S: u32 = 12;
+/// Grid intervals — small enough to keep the matrix sweep fast, and the
+/// value the TCP service below is configured with (`hist_m`).
+const M: usize = 64;
+
+fn cfg() -> IngestConfig {
+    IngestConfig { m: M, ..Default::default() }
+}
+
+/// Sample a distribution into the f32 wire element type.
+fn fsample(dist: &Dist, d: usize, seed: u64) -> Vec<f32> {
+    dist.sample_vec(d, seed).into_iter().map(|x| x as f32).collect()
+}
+
+#[test]
+fn chunked_ingest_is_arrival_order_invariant_across_the_matrix() {
+    // Three chunks (two full + ragged tail): enough for 6 distinct
+    // arrival permutations, of which we drive forward, reversed, and a
+    // seeded shuffle per distribution.
+    let d = 2 * par::CHUNK + 777;
+    let n_chunks = d.div_ceil(par::CHUNK) as u64;
+
+    // References at the ambient configuration, one per (dist, task id).
+    let cases: Vec<_> = Dist::paper_suite()
+        .into_iter()
+        .enumerate()
+        .map(|(i, (name, dist))| {
+            let data = fsample(&dist, d, 0xA11 + i as u64);
+            let task_id = 10 + i as u64;
+            let (want, want_levels) =
+                ingest::monolithic_reference(&data, S, &cfg(), task_id).unwrap();
+            (name, data, task_id, want, want_levels)
+        })
+        .collect();
+
+    let forward: Vec<u64> = (0..n_chunks).collect();
+    let reversed: Vec<u64> = (0..n_chunks).rev().collect();
+
+    for_each_exec_cell(&[1, 3], |cell| {
+        for (i, (name, data, task_id, want, want_levels)) in cases.iter().enumerate() {
+            let mut shuffled = forward.clone();
+            Xoshiro256pp::seed_from_u64(0xC0FFE + i as u64).shuffle(&mut shuffled);
+            for (oname, order) in
+                [("forward", &forward), ("reversed", &reversed), ("shuffled", &shuffled)]
+            {
+                let (got, levels) =
+                    ingest::ingest_local(data, S, &cfg(), *task_id, Some(order)).unwrap();
+                assert_eq!(
+                    &levels, want_levels,
+                    "[{cell}] {name}/{oname}: levels must match monolithic"
+                );
+                assert_eq!(&got, want, "[{cell}] {name}/{oname}: bits must match monolithic");
+            }
+        }
+    });
+}
+
+#[test]
+fn interleaved_multi_tenant_arrival_matches_monolithic_per_tenant() {
+    // Two tenants on ONE connection state machine, their chunks
+    // interleaved out of order in both the fill and the echo phase: each
+    // tenant's bits must match its own monolithic run exactly, keyed by
+    // its task id alone.
+    let d = par::CHUNK + 901; // two chunks per tenant
+    let suite = Dist::paper_suite();
+    let a = fsample(&suite[0].1, d, 51);
+    let b = fsample(&suite[1].1, d, 52);
+    let want_a = ingest::monolithic_reference(&a, S, &cfg(), 1).unwrap().0;
+    let want_b = ingest::monolithic_reference(&b, S, &cfg(), 2).unwrap().0;
+
+    for_each_exec_cell(&[1, 2], |cell| {
+        let mut conn = IngestConn::new(cfg());
+        for (tid, data) in [(1u64, &a), (2u64, &b)] {
+            let (lo, hi) = ingest::declared_range(data);
+            let ev = conn.open(tid, d as u64, S, lo, hi);
+            assert!(matches!(ev, IngestEvent::Accepted), "[{cell}] open {tid}: {ev:?}");
+        }
+        // Fill phase: tenants and chunk indices interleaved arbitrarily.
+        for (tid, ci, data) in [(2u64, 1u64, &b), (1, 1, &a), (2, 0, &b), (1, 0, &a)] {
+            let ev = conn.chunk(tid, ci, ingest::chunk_of(data, ci));
+            assert!(matches!(ev, IngestEvent::Folded), "[{cell}] fill {tid}/{ci}: {ev:?}");
+        }
+        let mut levels = BTreeMap::new();
+        for tid in [1u64, 2] {
+            match conn.close(tid) {
+                IngestEvent::Close(task) => {
+                    levels.insert(tid, task.lock().unwrap().solve_close().unwrap());
+                }
+                other => panic!("[{cell}] close {tid}: {other:?}"),
+            }
+        }
+        // Echo phase: interleaved again; windows re-ordered client-side.
+        let mut windows: BTreeMap<(u64, u64), Vec<u8>> = BTreeMap::new();
+        for (tid, ci, data) in [(2u64, 0u64, &b), (1, 1, &a), (2, 1, &b), (1, 0, &a)] {
+            match conn.chunk(tid, ci, ingest::chunk_of(data, ci)) {
+                IngestEvent::Payload { chunk_idx, payload, .. } => {
+                    assert_eq!(chunk_idx, ci);
+                    windows.insert((tid, ci), payload);
+                }
+                other => panic!("[{cell}] echo {tid}/{ci}: {other:?}"),
+            }
+        }
+        for (tid, want) in [(1u64, &want_a), (2u64, &want_b)] {
+            let q = levels.remove(&tid).unwrap();
+            let mut payload = Vec::new();
+            for ci in 0..2u64 {
+                payload.extend_from_slice(&windows[&(tid, ci)]);
+            }
+            let bits = sq::codec::bits_for(q.len());
+            let got = sq::CompressedVec { d: d as u64, q, bits, payload };
+            assert_eq!(&got, want, "[{cell}] tenant {tid} must match its monolithic run");
+        }
+    });
+}
+
+#[test]
+fn remote_ingest_over_tcp_matches_monolithic() {
+    // End-to-end over loopback TCP: the wire choreography (pipelined fill,
+    // one IngestSolved, lock-step echo) reassembles the exact monolithic
+    // bytes. The service's ingest grid is the router's hist_m = M, so the
+    // local reference compares like with like.
+    let service = Service::start(ServiceConfig {
+        threads: 2,
+        router: Router::new(RouterConfig { exact_max_d: 4096, hist_m: M, seed: 3, shards: 1 }),
+        ..Default::default()
+    })
+    .unwrap();
+    let d = 2 * par::CHUNK + 777;
+    let data = fsample(&Dist::paper_suite()[0].1, d, 9);
+    let (want, _) = ingest::monolithic_reference(&data, S, &cfg(), 42).unwrap();
+    let (cv, solver, _) = ingest_remote(service.addr(), 42, S, 0, 0, &data).unwrap();
+    assert_eq!(cv, want, "TCP ingest must reproduce the monolithic bits");
+    assert_eq!(solver, format!("quiver-ingest(M={M})"));
+    service.shutdown();
+}

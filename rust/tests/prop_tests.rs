@@ -469,6 +469,125 @@ fn fuzz_solvers_vs_exhaustive_structured() {
     });
 }
 
+/// Differential fuzz, ingestion half: a structure-aware draw of ingest
+/// shape — the chunk-boundary edge dimensions 1, CHUNK−1, CHUNK, CHUNK+1,
+/// a random single-chunk stream, or a ragged multi-chunk stream — with a
+/// random distribution, grid size, budget, task id, and a seeded random
+/// chunk arrival permutation, checked bitwise against the monolithic
+/// reference. Failures print the case seed for replay.
+#[test]
+fn fuzz_ingest_shapes_and_arrival_orders_match_monolithic() {
+    use quiver::coordinator::ingest::{self, IngestConfig};
+    use quiver::util::rng::Xoshiro256pp;
+    let chunk = quiver::par::CHUNK;
+    forall(fuzz_iters(24), 0xF2, |g: &mut Gen, case| {
+        let cfg = IngestConfig { m: g.usize_in(8..128), ..Default::default() };
+        let d = match g.usize_in(0..6) {
+            0 => 1,
+            1 => chunk - 1,
+            2 => chunk,
+            3 => chunk + 1,
+            4 => g.usize_in(1..chunk),                    // single chunk
+            _ => g.usize_in(chunk + 1..2 * chunk + 1000), // ragged multi-chunk
+        };
+        let suite = Dist::paper_suite();
+        let (_, dist) = suite[g.usize_in(0..suite.len())];
+        let data: Vec<f32> =
+            dist.sample_vec(d, g.u64()).into_iter().map(|x| x as f32).collect();
+        let task_id = g.u64();
+        let s = g.usize_in(1..40) as u32;
+        let (want, _) =
+            ingest::monolithic_reference(&data, s, &cfg, task_id).map_err(|e| e.to_string())?;
+        let mut order: Vec<u64> = (0..d.div_ceil(chunk) as u64).collect();
+        Xoshiro256pp::seed_from_u64(case).shuffle(&mut order);
+        let (got, _) = ingest::ingest_local(&data, s, &cfg, task_id, Some(&order))
+            .map_err(|e| e.to_string())?;
+        if got != want {
+            return Err(format!("ingest mismatch d={d} order={order:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Ingest protocol abuse: empty streams are a typed open-time rejection,
+/// and a chunk split at any point other than the fixed CHUNK grid is a
+/// typed `WrongChunkLen` rejection — chunk boundaries are part of the
+/// determinism contract (DESIGN.md rule 2), so a misaligned split must
+/// never fold.
+#[test]
+fn fuzz_ingest_misaligned_splits_are_rejected_typed() {
+    use quiver::coordinator::ingest::{IngestConfig, IngestConn, IngestError, IngestEvent};
+    let chunk = quiver::par::CHUNK;
+    forall(fuzz_iters(40), 0xF3, |g: &mut Gen, _| {
+        let mut conn = IngestConn::new(IngestConfig { m: 32, ..Default::default() });
+        match conn.open(7, 0, 4, 0.0, 1.0) {
+            IngestEvent::Reject(7, IngestError::EmptyInput) => {}
+            other => return Err(format!("empty open: {other:?}")),
+        }
+        // A multi-chunk task: chunk 0 must carry exactly CHUNK elements.
+        let d = g.usize_in(chunk + 1..2 * chunk) as u64;
+        match conn.open(8, d, 4, 0.0, 1.0) {
+            IngestEvent::Accepted => {}
+            other => return Err(format!("open: {other:?}")),
+        }
+        let mut wrong = g.usize_in(1..2 * chunk);
+        if wrong == chunk {
+            wrong += 1;
+        }
+        match conn.chunk(8, 0, &vec![0.5f32; wrong]) {
+            IngestEvent::Reject(8, IngestError::WrongChunkLen) => {}
+            other => return Err(format!("misaligned split ({wrong}): {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+/// The five ingest wire messages survive the real codec: random payloads
+/// through `to_frame` → `from_body` are identity.
+#[test]
+fn fuzz_ingest_wire_frames_roundtrip() {
+    use quiver::coordinator::protocol::Msg;
+    forall(fuzz_iters(80), 0xF4, |g: &mut Gen, _| {
+        let msgs = [
+            Msg::IngestOpen {
+                task_id: g.u64(),
+                d: g.u64() >> 12,
+                s: g.usize_in(1..300) as u32,
+                class: g.usize_in(0..256) as u8,
+                deadline_ms: g.usize_in(0..60_000) as u32,
+                lo: g.f64_in(-5.0..0.0),
+                hi: g.f64_in(0.0..5.0),
+            },
+            Msg::IngestChunk {
+                task_id: g.u64(),
+                chunk_idx: g.usize_in(0..1 << 20) as u64,
+                data: (0..g.usize_in(0..300)).map(|i| i as f32 * 0.5).collect(),
+            },
+            Msg::IngestClose { task_id: g.u64() },
+            Msg::IngestSolved {
+                task_id: g.u64(),
+                levels: g.vec_f64(1..50, -4.0..4.0),
+                solver: "quiver-ingest(M=64)".into(),
+                solve_us: g.u64() >> 20,
+            },
+            Msg::IngestPayloadChunk {
+                task_id: g.u64(),
+                chunk_idx: g.usize_in(0..1 << 20) as u64,
+                d: g.u64() >> 40,
+                payload: (0..g.usize_in(0..200)).map(|i| i as u8).collect(),
+            },
+        ];
+        for msg in msgs {
+            let frame = msg.to_frame();
+            let back = Msg::from_body(&frame[4..]).map_err(|e| e.to_string())?;
+            if back != msg {
+                return Err(format!("wire roundtrip changed {}", msg.kind()));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Bit-flip corruption of valid frames: decode either fails or yields a
 /// structurally valid message — never panics, never over-allocates.
 #[test]

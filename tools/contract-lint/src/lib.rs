@@ -224,6 +224,7 @@ pub const C5_FILES: &[&str] = &[
     "coordinator/protocol.rs",
     "coordinator/codec.rs",
     "coordinator/faultnet.rs",
+    "coordinator/ingest.rs",
     "coordinator/shard.rs",
     "sq/codec.rs",
 ];
