@@ -3,7 +3,7 @@
 # manifest + golden dumps under rust/artifacts/ (requires jax; see
 # python/compile/aot.py).
 
-.PHONY: artifacts build test bench bench-smoke chaos lint-contract sanitize clean
+.PHONY: artifacts build test bench bench-smoke bench-serve chaos lint-contract sanitize clean
 
 artifacts:
 	cd python/compile && python3 aot.py --out ../../rust/artifacts
@@ -25,6 +25,14 @@ bench-smoke:
 	cd rust && QUIVER_MAX_POW=13 cargo bench --bench bench_solvers
 	cd rust && QUIVER_SMOKE=1 cargo bench --bench bench_pipeline
 	cd rust && QUIVER_SMOKE=1 cargo bench --bench bench_ingest
+
+# Seconds-long smoke of the serving front-end load generator (threads vs
+# epoll at small connection counts) — what the CI perf-smoke job runs.
+# Leaves BENCH_serve.json at the repo root. The full sweep (64/512/4096
+# connections, acceptance asserts) is `cd rust && cargo bench --bench
+# bench_serve` after `ulimit -n 32768` — see EXPERIMENTS.md.
+bench-serve:
+	cd rust && QUIVER_SMOKE=1 cargo bench --bench bench_serve
 
 # Gating fault-injection chaos suite: every faultnet::FaultAction driven
 # against a live shard fleet through the deterministic fault proxy,

@@ -1,0 +1,270 @@
+//! `cargo bench --bench bench_serve` — serving front-end load test:
+//! thread-per-connection (`--frontend threads`) vs the epoll event loop
+//! (`--frontend epoll`) under the same open-loop workload.
+//!
+//! The load generator models a multi-tenant front-end population:
+//!
+//! * **Open-loop arrivals**: each connection schedules its requests on a
+//!   seeded exponential (Poisson-ish) clock and never waits for the
+//!   previous reply to fall due — a slow server makes the client *late*,
+//!   not idle, so queueing shows up in the tail instead of hiding in the
+//!   arrival rate. The aggregate offered rate is held constant across
+//!   connection counts (per-connection gaps scale with the population).
+//! * **Heavy-tailed tenant sizes**: request dimension is Pareto-ish
+//!   (most requests small, rare requests ~100× larger), the shape that
+//!   makes per-connection threads block unfairly.
+//! * **Deadline-class mix**: 70% best-effort, 20% class 1 with a 100 ms
+//!   deadline, 10% class 2 with a 20 ms deadline — exercising the
+//!   scheduler's class ordering under load.
+//!
+//! Each (front-end × connection count) cell reports completed/s, Busy
+//! sheds, and client-observed p50/p99/p999 end-to-end latency; the
+//! server's own `StatsRequest` snapshot (queue-wait/solve/e2e quantiles)
+//! is fetched over the wire at the end of every cell. Machine-readable
+//! results land in `BENCH_serve.json` at the repo root.
+//!
+//! Full mode sweeps 64/512/4096 concurrent connections and asserts the
+//! acceptance bar at 4096: the epoll front-end sustains at least the
+//! threaded throughput with a lower p999. 4096 connections need ~9000
+//! file descriptors in this process plus the server's — raise the limit
+//! first (`ulimit -n 32768`). Set `QUIVER_SMOKE=1` for a
+//! seconds-long 16/64-connection sweep with no acceptance assert (the CI
+//! perf-smoke job and `make bench-serve` use this).
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use quiver::benchfw::{write_bench_json, BenchRecord, Stats, Table};
+use quiver::coordinator::protocol::{recv, send, Msg};
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::service::{stats_remote, Frontend, Service, ServiceConfig};
+use quiver::util::rng::Xoshiro256pp;
+
+/// Pareto-ish request dimension: xm=512, alpha≈1.1, capped at 48k.
+fn heavy_tail_d(rng: &mut Xoshiro256pp) -> usize {
+    let u = rng.next_f64_open();
+    ((512.0 * u.powf(-1.0 / 1.1)) as usize).clamp(512, 48 * 1024)
+}
+
+/// Deadline-class mix: (class, deadline_ms).
+fn class_mix(rng: &mut Xoshiro256pp) -> (u8, u32) {
+    let roll = rng.next_f64();
+    if roll < 0.10 {
+        (2, 20)
+    } else if roll < 0.30 {
+        (1, 100)
+    } else {
+        (0, 0)
+    }
+}
+
+/// One cell's client-side outcome.
+struct RunResult {
+    completed: u64,
+    busy: u64,
+    wall: Duration,
+    /// Sorted client-observed end-to-end latencies, µs.
+    lat_us: Vec<u64>,
+}
+
+impl RunResult {
+    fn quantile_us(&self, q: f64) -> u64 {
+        if self.lat_us.is_empty() {
+            return 0;
+        }
+        let idx = ((self.lat_us.len() - 1) as f64 * q).round() as usize;
+        self.lat_us[idx]
+    }
+
+    fn per_sec(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Drive `conns` persistent connections of `reqs` open-loop requests each
+/// against a fresh service running `frontend`.
+fn run_cell(frontend: Frontend, conns: usize, reqs: usize, mean_gap_us: u64) -> RunResult {
+    let service = Service::start(ServiceConfig {
+        threads: 4,
+        queue_capacity: 512,
+        frontend,
+        // Open-loop gaps at large populations stretch past the default
+        // idle deadline; a generous one keeps connections alive without
+        // disabling the slow-client sweeps under test elsewhere.
+        io_timeout: Duration::from_secs(120),
+        router: Router::new(RouterConfig { exact_max_d: 4096, hist_m: 400, seed: 3, shards: 1 }),
+        ..Default::default()
+    })
+    .expect("service");
+    let addr = service.addr().to_string();
+    // Shared request payload pool: slicing one base vector keeps client
+    // CPU out of the measurement (values are irrelevant to serving cost).
+    let base: Arc<Vec<f32>> = {
+        let mut rng = Xoshiro256pp::stream(0x5E44E, 0);
+        Arc::new((0..48 * 1024).map(|_| rng.next_f64() as f32).collect())
+    };
+    let t0 = Instant::now();
+    let mut joins = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let addr = addr.clone();
+        let base = base.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .stack_size(256 << 10)
+                .name(format!("load-{i}"))
+                .spawn(move || client_conn(&addr, &base, i as u64, reqs, mean_gap_us))
+                .expect("spawn load thread"),
+        );
+    }
+    let mut completed = 0u64;
+    let mut busy = 0u64;
+    let mut lat_us: Vec<u64> = Vec::new();
+    for j in joins {
+        let (lats, b) = j.join().expect("load thread");
+        completed += lats.len() as u64;
+        busy += b;
+        lat_us.extend(lats);
+    }
+    let wall = t0.elapsed();
+    lat_us.sort_unstable();
+    // Server-side stats over the wire: exercises StatsRequest/StatsReply
+    // on whichever front-end this cell runs.
+    let snap = stats_remote(&addr, 0xBE7C4).expect("stats over the wire");
+    println!(
+        "  server: accepted={} completed={} shed={} conns={} queue p99={}µs solve p99={}µs \
+         e2e p99={}µs",
+        snap.accepted,
+        snap.completed,
+        snap.shed,
+        snap.conns_accepted,
+        snap.queue_p99_us,
+        snap.solve_p99_us,
+        snap.e2e_p99_us
+    );
+    service.shutdown();
+    RunResult { completed, busy, wall, lat_us }
+}
+
+/// One persistent connection: `reqs` requests on an exponential arrival
+/// clock, returning (latencies µs, busy count).
+fn client_conn(addr: &str, base: &[f32], idx: u64, reqs: usize, mean_gap_us: u64) -> (Vec<u64>, u64) {
+    let mut rng = Xoshiro256pp::stream(0x10AD, idx);
+    let sock = TcpStream::connect(addr).expect("connect");
+    sock.set_nodelay(true).ok();
+    sock.set_read_timeout(Some(Duration::from_secs(60))).ok();
+    sock.set_write_timeout(Some(Duration::from_secs(60))).ok();
+    let mut rd = std::io::BufReader::new(sock.try_clone().expect("clone"));
+    let mut wr = sock;
+    let mut lats = Vec::with_capacity(reqs);
+    let mut busy = 0u64;
+    let mut next_at = Instant::now();
+    for r in 0..reqs {
+        let gap = (-rng.next_f64_open().ln() * mean_gap_us as f64) as u64;
+        next_at += Duration::from_micros(gap);
+        let now = Instant::now();
+        if next_at > now {
+            std::thread::sleep(next_at - now);
+        }
+        let d = heavy_tail_d(&mut rng);
+        let (class, deadline_ms) = class_mix(&mut rng);
+        let req = Msg::CompressRequest {
+            request_id: r as u64,
+            s: 16,
+            class,
+            deadline_ms,
+            data: base[..d].to_vec(),
+        };
+        let t0 = Instant::now();
+        send(&mut wr, &req).expect("send");
+        match recv(&mut rd).expect("recv") {
+            Some(Msg::CompressReply { request_id, .. }) => {
+                assert_eq!(request_id, r as u64, "reply order on one connection");
+                lats.push(t0.elapsed().as_micros().max(1) as u64);
+            }
+            Some(Msg::Busy { .. }) => busy += 1,
+            other => panic!("unexpected reply: {:?}", other.map(|m| m.kind())),
+        }
+    }
+    (lats, busy)
+}
+
+fn main() {
+    let smoke = std::env::var("QUIVER_SMOKE").is_ok();
+    let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let conn_counts: &[usize] = if smoke { &[16, 64] } else { &[64, 512, 4096] };
+    let reqs = if smoke { 4 } else { 16 };
+    // Hold the aggregate offered rate roughly constant across population
+    // sizes: per-connection mean gap grows with the connection count.
+    let offered_per_sec: u64 = if smoke { 1_000 } else { 3_000 };
+
+    let mut records: Vec<BenchRecord> = vec![];
+    let mut t = Table::new(
+        format!("serving front-ends, open-loop load ({reqs} reqs/conn)"),
+        &["frontend", "conns", "done/s", "busy", "p50µs", "p99µs", "p999µs"],
+    );
+    // (conns, threaded result, epoll result) per sweep point.
+    let mut cells: Vec<(usize, RunResult, RunResult)> = vec![];
+    for &c in conn_counts {
+        let mean_gap_us = (c as u64).saturating_mul(1_000_000) / offered_per_sec.max(1);
+        let mut pair: Vec<RunResult> = vec![];
+        for fe in [Frontend::Threads, Frontend::Epoll] {
+            let label = match fe {
+                Frontend::Threads => "threads",
+                Frontend::Epoll => "epoll",
+            };
+            println!("== {label} front-end, {c} connections ==");
+            let res = run_cell(fe, c, reqs, mean_gap_us);
+            t.row(vec![
+                label.into(),
+                format!("{c}"),
+                format!("{:.0}", res.per_sec()),
+                format!("{}", res.busy),
+                format!("{}", res.quantile_us(0.5)),
+                format!("{}", res.quantile_us(0.99)),
+                format!("{}", res.quantile_us(0.999)),
+            ]);
+            // Throughput record: d = completed requests over one wall
+            // sample, so elems_per_s is completed/s.
+            let wall = Stats { name: format!("serve/{label}/c{c}"), samples: vec![res.wall] };
+            records.push(BenchRecord::from_stats(&wall, res.completed as usize, 16));
+            for (q, qname) in [(0.5, "p50"), (0.99, "p99"), (0.999, "p999")] {
+                let st = Stats {
+                    name: format!("serve/{label}/c{c}/{qname}"),
+                    samples: vec![Duration::from_micros(res.quantile_us(q))],
+                };
+                records.push(BenchRecord::from_stats(&st, 0, 0));
+            }
+            pair.push(res);
+        }
+        let epoll = pair.pop().unwrap();
+        let threaded = pair.pop().unwrap();
+        cells.push((c, threaded, epoll));
+    }
+    t.print();
+
+    // Acceptance bar (full mode only — smoke sizes are noise-dominated):
+    // at the largest population the event loop must sustain at least the
+    // threaded front-end's throughput with a lower p999.
+    if !smoke {
+        let (c, threaded, epoll) = cells.last().expect("at least one sweep point");
+        let (tput_t, tput_e) = (threaded.per_sec(), epoll.per_sec());
+        let (p999_t, p999_e) = (threaded.quantile_us(0.999), epoll.quantile_us(0.999));
+        println!(
+            "acceptance @ {c} conns: throughput epoll {tput_e:.0}/s vs threads {tput_t:.0}/s, \
+             p999 epoll {p999_e}µs vs threads {p999_t}µs"
+        );
+        assert!(
+            tput_e >= tput_t * 0.95,
+            "epoll throughput {tput_e:.0}/s fell below threaded {tput_t:.0}/s at {c} conns"
+        );
+        assert!(
+            p999_e <= p999_t,
+            "epoll p999 {p999_e}µs above threaded {p999_t}µs at {c} conns"
+        );
+    }
+
+    let json = write_bench_json(&repo_root.join("BENCH_serve.json"), &records)
+        .expect("write BENCH_serve.json");
+    println!("wrote {} records to {}", records.len(), json.display());
+}

@@ -1,0 +1,1143 @@
+//! Readiness-driven epoll serving front-end: every client socket
+//! multiplexed onto a small fixed set of I/O threads.
+//!
+//! The thread-per-connection front-end (`coordinator::service`'s
+//! [`Frontend::Threads`](super::service::Frontend)) spends one OS thread
+//! per client — fine for a shard fleet, wrong for front-end scale. This
+//! module is the [`Frontend::Epoll`](super::service::Frontend)
+//! alternative: a dependency-free event loop on raw `epoll` syscalls
+//! (Linux-only, the platform CI runs), speaking the *identical* framed
+//! protocol and handing completed requests to the *identical*
+//! [`Scheduler`] + solver pool.
+//!
+//! ```text
+//! accept ──round-robin──▶ I/O loop 0..k ──complete frames──▶ ConnCore ──▶ Scheduler
+//!                              ▲   │ per-conn read/write buffers              │
+//!                              │   └── EPOLLIN off when over budget           ▼
+//!                              └────────── reply frames ◀──── ReplySink ◀─ solvers
+//! ```
+//!
+//! # Connection state machine
+//!
+//! Each connection owns a partial-read buffer and an outbound buffer:
+//!
+//! * **Read**: on `EPOLLIN` the loop drains the socket, then parses
+//!   every complete `len:u32 tag:u8 payload` frame and dispatches it
+//!   through the shared `ConnCore` — the same per-message semantics
+//!   the threaded front-end runs, so replies are bit-identical by
+//!   construction. A partial frame simply stays buffered.
+//! * **Write**: solver threads never touch the socket; a
+//!   `ReplySink::Event` serializes the
+//!   reply into the connection's outbound buffer and wakes the loop,
+//!   which flushes nonblocking and subscribes `EPOLLOUT` only while a
+//!   backlog remains. A slow client therefore costs its own buffer,
+//!   never a solver thread.
+//!
+//! # Backpressure ([`BudgetConfig`])
+//!
+//! In-flight work is budgeted per connection *and* globally, in both
+//! requests and bytes. Each scheduler-bound request reserves a
+//! `BudgetTicket` that releases on job drop (reply sent, shed, or
+//! queue-full rollback alike). A connection over any budget has
+//! `EPOLLIN` unsubscribed — TCP flow control then pushes back on the
+//! client — and resumes when tickets drain. Budgets are soft high-water
+//! marks enforced at frame granularity: the frame that was already
+//! parsed is always admitted, so the overshoot is bounded by one frame
+//! per connection. A connection whose *outbound* backlog exceeds its cap
+//! (a client that stopped reading replies) is disconnected and counted
+//! by the `slow_clients` metric; a connection wedged mid-frame past the
+//! io timeout (slow-loris) is likewise disconnected, and an idle or
+//! half-open connection past the timeout is dropped as a classified
+//! fault — exactly the bounded-resource-hold rule the threaded
+//! front-end enforces with socket deadlines (DESIGN.md rule 7).
+//!
+//! # Determinism (DESIGN.md rule 5)
+//!
+//! The event loop draws no randomness and reorders nothing a client can
+//! observe: frames of one connection are parsed and submitted in wire
+//! order on one I/O thread, the scheduler pulls batches exactly as
+//! under the threaded front-end, and all RNG streams remain keyed by
+//! pull order and tenant index ([`super::service`]). Swapping front-ends
+//! is therefore invisible in the reply bits
+//! (`tests/eventloop_compat.rs` asserts it end to end).
+
+use std::collections::BTreeSet;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::batcher::Scheduler;
+use super::ingest::IngestConfig;
+use super::metrics::Metrics;
+use super::protocol::{Msg, MAX_FRAME};
+use super::service::Job;
+
+/// In-flight budget knobs for the epoll front-end's connection-level
+/// backpressure (CLI: `serve --max-conn-inflight` and friends; see the
+/// [module docs](self) for the enforcement model).
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetConfig {
+    /// Per-connection in-flight request cap (requests submitted to the
+    /// scheduler whose reply has not been enqueued yet).
+    pub max_conn_requests: u64,
+    /// Per-connection in-flight byte cap (sum of the raw payload bytes
+    /// of those requests).
+    pub max_conn_bytes: u64,
+    /// Global in-flight request cap across all connections of the
+    /// front-end.
+    pub max_global_requests: u64,
+    /// Global in-flight byte cap.
+    pub max_global_bytes: u64,
+    /// Per-connection outbound-buffer cap: a connection whose un-drained
+    /// reply backlog exceeds this is a slow client and is disconnected
+    /// (one frame may always enqueue, so a single large reply never
+    /// trips it).
+    pub max_outbound_bytes: u64,
+}
+
+impl Default for BudgetConfig {
+    fn default() -> Self {
+        Self {
+            max_conn_requests: 64,
+            max_conn_bytes: 32 << 20,
+            max_global_requests: 4096,
+            max_global_bytes: 256 << 20,
+            max_outbound_bytes: 64 << 20,
+        }
+    }
+}
+
+/// Global in-flight counters shared by every connection of a front-end.
+#[derive(Debug, Default)]
+struct GlobalBudget {
+    requests: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// A connection's outbound buffer. `start` marks the drained prefix so
+/// flushing never memmoves per write; the buffer compacts when the
+/// prefix grows past a threshold.
+#[derive(Debug, Default)]
+struct OutBuf {
+    buf: Vec<u8>,
+    start: usize,
+    /// No more writes accepted: the loop closed the connection, or the
+    /// backlog tripped the slow-client cap.
+    dead: bool,
+    /// `dead` because of the slow-client cap specifically (the loop
+    /// counts these into `slow_clients`).
+    overflow: bool,
+}
+
+/// Cross-thread wakeup sender: writing one byte makes the owning loop's
+/// `epoll_pwait` return so it processes its pending set. Unix: one half
+/// of a nonblocking socketpair. Elsewhere a no-op stub — the event loop
+/// itself refuses to start off Linux ([`start`]).
+#[derive(Debug)]
+struct WakeTx(#[cfg(unix)] std::os::unix::net::UnixStream);
+
+impl WakeTx {
+    fn wake(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Write;
+            // A full pipe is fine: the loop is already due to wake.
+            let _ = (&self.0).write(&[1u8]);
+        }
+    }
+}
+
+/// How a solver thread (or a budget-ticket drop) tells a loop that a
+/// connection needs attention: push the token into the shared pending
+/// set, then kick the wake pipe.
+#[derive(Debug, Clone)]
+struct Notifier {
+    pending: Arc<Mutex<BTreeSet<u64>>>,
+    wake: Arc<WakeTx>,
+}
+
+impl Notifier {
+    fn notify(&self, token: u64) {
+        self.pending.lock().unwrap().insert(token);
+        self.wake.wake();
+    }
+}
+
+/// The solver-visible half of one event-loop connection: outbound
+/// buffer, in-flight budget counters, and the owning loop's notifier.
+/// Solver threads hold it through [`ConnHandle`] inside a
+/// [`ReplySink::Event`](super::service::ReplySink); the loop holds it
+/// next to the socket. Either side outliving the other is safe — writes
+/// to a dead connection are dropped silently.
+#[derive(Debug)]
+pub(crate) struct ConnShared {
+    token: u64,
+    out: Mutex<OutBuf>,
+    inflight_requests: AtomicU64,
+    inflight_bytes: AtomicU64,
+    max_outbound: u64,
+    global: Arc<GlobalBudget>,
+    notify: Notifier,
+}
+
+impl ConnShared {
+    /// Serialize `msg` into the outbound buffer and wake the loop.
+    /// Mirrors [`protocol::send`](super::protocol::send)'s `MAX_FRAME`
+    /// refusal; errors are absorbed (a dead client costs itself only).
+    fn enqueue_frame(&self, msg: &Msg) {
+        let frame = msg.to_frame();
+        if frame.len().saturating_sub(4) > MAX_FRAME as usize {
+            return;
+        }
+        let mut out = self.out.lock().unwrap();
+        if out.dead {
+            return;
+        }
+        // Slow-client cap on the *pre-existing* backlog: any single
+        // frame may enqueue, so one large reply never trips it.
+        let backlog = (out.buf.len() - out.start) as u64;
+        if backlog > self.max_outbound {
+            out.dead = true;
+            out.overflow = true;
+            out.buf = Vec::new();
+            out.start = 0;
+        } else {
+            out.buf.extend_from_slice(&frame);
+        }
+        drop(out);
+        self.notify.notify(self.token);
+    }
+
+    /// Whether any in-flight budget (per-conn or global) is exhausted.
+    fn over_budget(&self, b: &BudgetConfig) -> bool {
+        self.inflight_requests.load(Ordering::Relaxed) >= b.max_conn_requests
+            || self.inflight_bytes.load(Ordering::Relaxed) >= b.max_conn_bytes
+            || self.global.requests.load(Ordering::Relaxed) >= b.max_global_requests
+            || self.global.bytes.load(Ordering::Relaxed) >= b.max_global_bytes
+    }
+
+    /// Stop accepting outbound writes (loop-side close).
+    fn mark_dead(&self) {
+        let mut out = self.out.lock().unwrap();
+        out.dead = true;
+        out.buf = Vec::new();
+        out.start = 0;
+    }
+}
+
+/// Cloneable solver-side handle to one event-loop connection (the
+/// payload of [`ReplySink::Event`](super::service::ReplySink)).
+#[derive(Debug, Clone)]
+pub(crate) struct ConnHandle(Arc<ConnShared>);
+
+impl ConnHandle {
+    /// Enqueue one reply frame and wake the connection's I/O loop.
+    pub(crate) fn enqueue(&self, msg: &Msg) {
+        self.0.enqueue_frame(msg);
+    }
+
+    /// Reserve one request + `bytes` of the in-flight budgets. The
+    /// reservation releases when the returned ticket drops.
+    pub(crate) fn ticket(&self, bytes: u64) -> BudgetTicket {
+        self.0.inflight_requests.fetch_add(1, Ordering::Relaxed);
+        self.0.inflight_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.0.global.requests.fetch_add(1, Ordering::Relaxed);
+        self.0.global.bytes.fetch_add(bytes, Ordering::Relaxed);
+        BudgetTicket { shared: self.0.clone(), bytes }
+    }
+}
+
+/// One request's in-flight budget reservation. Dropping it releases the
+/// reservation and pokes the loop so a paused connection can resume —
+/// and since the ticket rides inside the [`Job`], every exit path
+/// (reply sent, deadline shed, queue-full rollback) releases exactly
+/// once, with no bookkeeping at the call sites.
+#[derive(Debug)]
+pub(crate) struct BudgetTicket {
+    shared: Arc<ConnShared>,
+    bytes: u64,
+}
+
+impl Drop for BudgetTicket {
+    fn drop(&mut self) {
+        self.shared.inflight_requests.fetch_sub(1, Ordering::Relaxed);
+        self.shared.inflight_bytes.fetch_sub(self.bytes, Ordering::Relaxed);
+        self.shared.global.requests.fetch_sub(1, Ordering::Relaxed);
+        self.shared.global.bytes.fetch_sub(self.bytes, Ordering::Relaxed);
+        self.shared.notify.notify(self.shared.token);
+    }
+}
+
+/// Everything [`start`] needs to run a front-end: the bound listener,
+/// sizing + budget knobs, and the shared serving state (scheduler,
+/// metrics, stop flag) the solver pool already uses.
+pub(crate) struct EventLoopConfig {
+    /// The bound, nonblocking listener to accept from.
+    pub(crate) listener: TcpListener,
+    /// Number of I/O loops to spread connections across.
+    pub(crate) io_threads: usize,
+    /// Connection-level backpressure budgets.
+    pub(crate) budgets: BudgetConfig,
+    /// Idle / mid-frame deadline per connection (`Duration::ZERO`
+    /// disables, like the threaded front-end's socket deadlines).
+    pub(crate) io_timeout: Duration,
+    /// Per-connection ingest state-machine knobs.
+    pub(crate) ingest: IngestConfig,
+    /// The shared scheduler the solver pool drains.
+    pub(crate) sched: Arc<Scheduler<Job>>,
+    /// Live service counters.
+    pub(crate) metrics: Arc<Metrics>,
+    /// Cooperative shutdown flag.
+    pub(crate) stop: Arc<AtomicBool>,
+}
+
+/// Start the accept thread + I/O loop threads. Fails with a clean error
+/// on platforms without epoll (use `--frontend threads` there).
+pub(crate) fn start(cfg: EventLoopConfig) -> Result<Vec<std::thread::JoinHandle<()>>> {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        imp::start(cfg)
+    }
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        let _ = cfg;
+        anyhow::bail!(
+            "the epoll front-end requires Linux on x86-64/aarch64; use `--frontend threads`"
+        )
+    }
+}
+
+/// Raw epoll syscall shims — the crate is dependency-free, so the three
+/// syscalls are invoked directly. `epoll_pwait` is used on both
+/// architectures because aarch64 has no plain `epoll_wait` syscall.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod sys {
+    use std::arch::asm;
+
+    pub const SYS_EPOLL_CREATE1: usize = 291;
+    pub const SYS_EPOLL_CTL: usize = 233;
+    pub const SYS_EPOLL_PWAIT: usize = 281;
+
+    /// Raw 6-argument Linux syscall, returning the kernel's raw result
+    /// (negative errno on failure).
+    ///
+    /// # Safety
+    /// The caller must pass a valid syscall number and arguments whose
+    /// pointees (if any) are live and correctly sized for that syscall.
+    // SAFETY: the asm block only clobbers the registers the x86-64
+    // syscall ABI defines (rax in/out, rcx/r11 scratch) and derefs
+    // nothing itself; all pointer validity obligations are forwarded to
+    // the caller by the `# Safety` contract above.
+    pub unsafe fn syscall6(
+        nr: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        asm!(
+            "syscall",
+            inlateout("rax") nr => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+}
+
+/// Raw epoll syscall shims (aarch64 numbers; see the x86-64 twin).
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+mod sys {
+    use std::arch::asm;
+
+    pub const SYS_EPOLL_CREATE1: usize = 20;
+    pub const SYS_EPOLL_CTL: usize = 21;
+    pub const SYS_EPOLL_PWAIT: usize = 22;
+
+    /// Raw 6-argument Linux syscall, returning the kernel's raw result
+    /// (negative errno on failure).
+    ///
+    /// # Safety
+    /// The caller must pass a valid syscall number and arguments whose
+    /// pointees (if any) are live and correctly sized for that syscall.
+    // SAFETY: the asm block only uses the aarch64 syscall ABI registers
+    // (x8 number, x0-x5 arguments, x0 result) and derefs nothing
+    // itself; pointer validity is the caller's obligation per the
+    // `# Safety` contract above.
+    pub unsafe fn syscall6(
+        nr: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack),
+        );
+        ret
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use std::collections::{BTreeMap, BTreeSet};
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+    use std::os::unix::net::UnixStream;
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    use anyhow::{Context, Result};
+
+    use super::super::fault;
+    use super::super::metrics::Metrics;
+    use super::super::protocol::{Msg, MAX_FRAME};
+    use super::super::service::{ConnCore, ReplySink};
+    use super::sys;
+    use super::{
+        BudgetConfig, ConnHandle, ConnShared, EventLoopConfig, GlobalBudget, Notifier, OutBuf,
+        WakeTx,
+    };
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: usize = 1;
+    const EPOLL_CTL_DEL: usize = 2;
+    const EPOLL_CTL_MOD: usize = 3;
+    /// `EPOLL_CLOEXEC` == `O_CLOEXEC`.
+    const EPOLL_CLOEXEC: usize = 0o2000000;
+    /// Reserved token for the wake pipe's read half.
+    const WAKE_TOKEN: u64 = u64::MAX;
+    /// Bytes read from a socket per `read` call.
+    const READ_CHUNK: usize = 64 << 10;
+    /// `epoll_pwait` timeout — bounds stop-flag and sweep latency.
+    const WAIT_MS: usize = 50;
+    /// How often the idle/slow-loris sweep runs.
+    const SWEEP_EVERY: Duration = Duration::from_millis(250);
+
+    /// The kernel's epoll event record. x86-64 uses the packed 12-byte
+    /// layout; every other architecture the naturally aligned one.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    fn epoll_create1() -> std::io::Result<OwnedFd> {
+        // SAFETY: epoll_create1 takes one integer flag and derefs
+        // nothing; unused argument slots are zero.
+        let r = unsafe { sys::syscall6(sys::SYS_EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0) };
+        if r < 0 {
+            return Err(std::io::Error::from_raw_os_error(-r as i32));
+        }
+        // SAFETY: the kernel just returned a fresh descriptor that
+        // nothing else owns; OwnedFd takes over closing it.
+        Ok(unsafe { OwnedFd::from_raw_fd(r as RawFd) })
+    }
+
+    fn epoll_ctl(epfd: RawFd, op: usize, fd: RawFd, mut ev: Option<EpollEvent>) -> std::io::Result<()> {
+        debug_assert!(epfd >= 0 && fd >= 0, "descriptors are non-negative");
+        let ptr = ev.as_mut().map_or(0usize, |e| e as *mut EpollEvent as usize);
+        // SAFETY: `ptr` is either null (DEL — permitted since Linux
+        // 2.6.9) or points at the live stack-local `ev`, which outlives
+        // the call; epoll_ctl reads at most one epoll_event from it.
+        let r = unsafe {
+            sys::syscall6(sys::SYS_EPOLL_CTL, epfd as usize, op, fd as usize, ptr, 0, 0)
+        };
+        if r < 0 {
+            return Err(std::io::Error::from_raw_os_error(-r as i32));
+        }
+        Ok(())
+    }
+
+    fn epoll_pwait(epfd: RawFd, events: &mut [EpollEvent], timeout_ms: usize) -> usize {
+        let max = events.len().min(1024);
+        let buf = events.as_mut_ptr() as usize;
+        debug_assert!(epfd >= 0, "descriptors are non-negative");
+        // SAFETY: `buf` points at a live mutable slice of `max`
+        // EpollEvent records the kernel fills; the sigmask argument is
+        // null (its size argument is then ignored by the kernel).
+        let r = unsafe {
+            sys::syscall6(sys::SYS_EPOLL_PWAIT, epfd as usize, buf, max, timeout_ms, 0, 8)
+        };
+        // EINTR (or any transient error) counts as an empty wait: the
+        // outer loop re-polls immediately.
+        usize::try_from(r).unwrap_or(0)
+    }
+
+    /// One connection as the loop sees it.
+    struct Conn {
+        sock: TcpStream,
+        shared: Arc<ConnShared>,
+        core: ConnCore,
+        /// Partial inbound bytes; `rdstart` marks the parsed prefix.
+        rdbuf: Vec<u8>,
+        rdstart: usize,
+        /// Currently registered epoll interest mask.
+        interest: u32,
+        /// `EPOLLIN` unsubscribed because a budget is exhausted.
+        paused: bool,
+        /// Last byte-level activity (read or successful flush).
+        last_activity: Instant,
+        /// When the currently buffered partial frame started arriving
+        /// (`None` while the read buffer is fully parsed) — the
+        /// slow-loris detector.
+        frame_since: Option<Instant>,
+    }
+
+    /// Why a connection is being torn down (selects the counter).
+    enum CloseReason {
+        /// Clean client EOF at a frame boundary.
+        Clean,
+        /// Transport/decode fault (counted like the threaded path).
+        Fault(&'static str),
+        /// Outbound backlog or mid-frame stall: slow client.
+        Slow(&'static str),
+    }
+
+    /// One I/O loop: its epoll instance plus everything the accept
+    /// thread and solver threads share with it.
+    struct IoLoop {
+        epfd: OwnedFd,
+        wake_rx: UnixStream,
+        notifier: Notifier,
+        inbox: Arc<Mutex<Vec<TcpStream>>>,
+        conns: BTreeMap<u64, Conn>,
+        next_token: u64,
+        global: Arc<GlobalBudget>,
+        cfg: LoopCfg,
+    }
+
+    /// The per-loop copy of the front-end configuration.
+    #[derive(Clone)]
+    struct LoopCfg {
+        budgets: BudgetConfig,
+        io_timeout: Duration,
+        ingest: super::super::ingest::IngestConfig,
+        sched: Arc<super::super::batcher::Scheduler<super::super::service::Job>>,
+        metrics: Arc<Metrics>,
+        stop: Arc<std::sync::atomic::AtomicBool>,
+    }
+
+    /// Handle the accept thread keeps per loop.
+    struct LoopHandle {
+        inbox: Arc<Mutex<Vec<TcpStream>>>,
+        wake: Arc<WakeTx>,
+    }
+
+    pub(crate) fn start(cfg: EventLoopConfig) -> Result<Vec<std::thread::JoinHandle<()>>> {
+        let EventLoopConfig { listener, io_threads, budgets, io_timeout, ingest, sched, metrics, stop } =
+            cfg;
+        let global = Arc::new(GlobalBudget::default());
+        let lcfg = LoopCfg { budgets, io_timeout, ingest, sched, metrics: metrics.clone(), stop: stop.clone() };
+        let mut joins = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..io_threads.max(1) {
+            let epfd = epoll_create1().context("epoll_create1")?;
+            let (wake_tx, wake_rx) = UnixStream::pair().context("wake pipe")?;
+            wake_tx.set_nonblocking(true)?;
+            wake_rx.set_nonblocking(true)?;
+            epoll_ctl(
+                epfd.as_raw_fd(),
+                EPOLL_CTL_ADD,
+                wake_rx.as_raw_fd(),
+                Some(EpollEvent { events: EPOLLIN, data: WAKE_TOKEN }),
+            )
+            .context("register wake pipe")?;
+            let wake = Arc::new(WakeTx(wake_tx));
+            let notifier =
+                Notifier { pending: Arc::new(Mutex::new(BTreeSet::new())), wake: wake.clone() };
+            let inbox = Arc::new(Mutex::new(Vec::new()));
+            handles.push(LoopHandle { inbox: inbox.clone(), wake });
+            let mut lp = IoLoop {
+                epfd,
+                wake_rx,
+                notifier,
+                inbox,
+                conns: BTreeMap::new(),
+                next_token: 0,
+                global: global.clone(),
+                cfg: lcfg.clone(),
+            };
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("avq-io-{i}"))
+                    .spawn(move || lp.run())
+                    .context("spawn io loop")?,
+            );
+        }
+        joins.push(
+            std::thread::Builder::new()
+                .name("avq-epoll-accept".into())
+                .spawn(move || accept_loop(&listener, &stop, &metrics, &handles))
+                .context("spawn accept loop")?,
+        );
+        Ok(joins)
+    }
+
+    /// Accept loop: nonblocking poll (prompt shutdown), round-robin
+    /// handoff to the I/O loops, counted accept errors — EMFILE/ENFILE
+    /// descriptor exhaustion backs off instead of spinning or dying.
+    fn accept_loop(
+        listener: &TcpListener,
+        stop: &std::sync::atomic::AtomicBool,
+        metrics: &Metrics,
+        loops: &[LoopHandle],
+    ) {
+        let mut next = 0usize;
+        let mut backoff = Duration::from_millis(10);
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match listener.accept() {
+                Ok((sock, _)) => {
+                    backoff = Duration::from_millis(10);
+                    metrics.add(&metrics.conns_accepted, 1);
+                    let _ = sock.set_nodelay(true);
+                    if sock.set_nonblocking(true).is_err() {
+                        metrics.add(&metrics.accept_errors, 1);
+                        continue;
+                    }
+                    let h = &loops[next % loops.len()];
+                    next = next.wrapping_add(1);
+                    h.inbox.lock().unwrap().push(sock);
+                    h.wake.wake();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    // EMFILE/ENFILE and friends: count, log, back off —
+                    // the listener survives descriptor exhaustion.
+                    metrics.add(&metrics.accept_errors, 1);
+                    eprintln!("epoll front-end: accept error: {e}");
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_secs(1));
+                }
+            }
+        }
+    }
+
+    /// Result of a frame-parse pass over one connection's read buffer.
+    enum ParseOutcome {
+        /// All complete frames dispatched; remainder (if any) partial.
+        Drained,
+        /// A budget is exhausted — stop parsing, pause the connection.
+        OverBudget,
+        /// Corrupt framing — the connection must die.
+        Corrupt(&'static str),
+    }
+
+    impl IoLoop {
+        fn run(&mut self) {
+            let mut events = vec![EpollEvent { events: 0, data: 0 }; 256];
+            let mut last_sweep = Instant::now();
+            loop {
+                if self.cfg.stop.load(Ordering::Relaxed) {
+                    for c in std::mem::take(&mut self.conns).into_values() {
+                        c.shared.mark_dead();
+                    }
+                    return;
+                }
+                let n = epoll_pwait(self.epfd.as_raw_fd(), &mut events, WAIT_MS);
+                let mut woke = false;
+                for ev in events.iter().take(n) {
+                    // Copy out of the (possibly packed) record first.
+                    let token = ev.data;
+                    let bits = ev.events;
+                    if token == WAKE_TOKEN {
+                        woke = true;
+                        continue;
+                    }
+                    self.handle_ready(token, bits);
+                }
+                if woke {
+                    self.drain_wake_pipe();
+                }
+                self.adopt_new_conns();
+                self.process_pending();
+                if last_sweep.elapsed() >= SWEEP_EVERY {
+                    last_sweep = Instant::now();
+                    self.sweep_deadlines();
+                }
+            }
+        }
+
+        fn drain_wake_pipe(&mut self) {
+            let mut scratch = [0u8; 64];
+            loop {
+                match (&self.wake_rx).read(&mut scratch) {
+                    Ok(0) => return,
+                    Ok(_) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => return,
+                }
+            }
+        }
+
+        /// Register connections the accept thread handed over.
+        fn adopt_new_conns(&mut self) {
+            let fresh: Vec<TcpStream> = std::mem::take(&mut *self.inbox.lock().unwrap());
+            for sock in fresh {
+                let token = self.next_token;
+                self.next_token += 1;
+                let shared = Arc::new(ConnShared {
+                    token,
+                    out: Mutex::new(OutBuf::default()),
+                    inflight_requests: std::sync::atomic::AtomicU64::new(0),
+                    inflight_bytes: std::sync::atomic::AtomicU64::new(0),
+                    max_outbound: self.cfg.budgets.max_outbound_bytes,
+                    global: self.global.clone(),
+                    notify: self.notifier.clone(),
+                });
+                let interest = EPOLLIN | EPOLLRDHUP;
+                if epoll_ctl(
+                    self.epfd.as_raw_fd(),
+                    EPOLL_CTL_ADD,
+                    sock.as_raw_fd(),
+                    Some(EpollEvent { events: interest, data: token }),
+                )
+                .is_err()
+                {
+                    self.cfg.metrics.add(&self.cfg.metrics.accept_errors, 1);
+                    continue;
+                }
+                self.conns.insert(
+                    token,
+                    Conn {
+                        sock,
+                        shared,
+                        core: ConnCore::new(self.cfg.ingest),
+                        rdbuf: Vec::new(),
+                        rdstart: 0,
+                        interest,
+                        paused: false,
+                        last_activity: Instant::now(),
+                        frame_since: None,
+                    },
+                );
+            }
+        }
+
+        /// Handle one readiness report for a client socket.
+        fn handle_ready(&mut self, token: u64, bits: u32) {
+            if !self.conns.contains_key(&token) {
+                return;
+            }
+            if bits & EPOLLERR != 0 {
+                self.close(token, CloseReason::Fault("socket error"));
+                return;
+            }
+            if bits & EPOLLOUT != 0 && !self.flush_conn(token) {
+                return;
+            }
+            if bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
+                self.pump_read(token);
+            }
+        }
+
+        /// Flush the outbound backlog. Returns false when the
+        /// connection died (and was closed) during the flush.
+        fn flush_conn(&mut self, token: u64) -> bool {
+            let Some(conn) = self.conns.get_mut(&token) else { return false };
+            let mut dead = false;
+            let mut wrote = false;
+            {
+                let mut out = conn.shared.out.lock().unwrap();
+                while out.start < out.buf.len() {
+                    match (&conn.sock).write(&out.buf[out.start..]) {
+                        Ok(0) => {
+                            dead = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            out.start += n;
+                            wrote = true;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            dead = true;
+                            break;
+                        }
+                    }
+                }
+                if out.start == out.buf.len() && out.start > 0 {
+                    out.buf.clear();
+                    out.start = 0;
+                }
+            }
+            if wrote {
+                conn.last_activity = Instant::now();
+            }
+            if dead {
+                self.close(token, CloseReason::Fault("write failed"));
+                return false;
+            }
+            self.update_interest(token);
+            true
+        }
+
+        /// Drain the socket and dispatch every complete frame. Pauses
+        /// the connection instead when a budget is exhausted.
+        fn pump_read(&mut self, token: u64) {
+            loop {
+                match self.parse_frames(token) {
+                    ParseOutcome::Drained => {}
+                    ParseOutcome::OverBudget => {
+                        self.pause(token);
+                        return;
+                    }
+                    ParseOutcome::Corrupt(what) => {
+                        self.close(token, CloseReason::Fault(what));
+                        return;
+                    }
+                }
+                let Some(conn) = self.conns.get_mut(&token) else { return };
+                let old = conn.rdbuf.len();
+                conn.rdbuf.resize(old + READ_CHUNK, 0);
+                match (&conn.sock).read(&mut conn.rdbuf[old..]) {
+                    Ok(0) => {
+                        conn.rdbuf.truncate(old);
+                        let mid_frame = conn.rdbuf.len() > conn.rdstart;
+                        let reason = if mid_frame {
+                            CloseReason::Fault("eof mid-frame")
+                        } else {
+                            CloseReason::Clean
+                        };
+                        self.close(token, reason);
+                        return;
+                    }
+                    Ok(n) => {
+                        conn.rdbuf.truncate(old + n);
+                        conn.last_activity = Instant::now();
+                        if conn.frame_since.is_none() {
+                            conn.frame_since = Some(Instant::now());
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        conn.rdbuf.truncate(old);
+                        self.update_interest(token);
+                        return;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                        conn.rdbuf.truncate(old);
+                    }
+                    Err(e) => {
+                        conn.rdbuf.truncate(old);
+                        let _ = fault::classify_io(&e);
+                        self.close(token, CloseReason::Fault("read failed"));
+                        return;
+                    }
+                }
+            }
+        }
+
+        /// Dispatch every complete buffered frame through [`ConnCore`].
+        fn parse_frames(&mut self, token: u64) -> ParseOutcome {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return ParseOutcome::Drained;
+            };
+            let sink = ReplySink::Event(ConnHandle(conn.shared.clone()));
+            let mut outcome = ParseOutcome::Drained;
+            loop {
+                if conn.shared.over_budget(&self.cfg.budgets) {
+                    outcome = ParseOutcome::OverBudget;
+                    break;
+                }
+                let avail = conn.rdbuf.len() - conn.rdstart;
+                if avail < 4 {
+                    break;
+                }
+                let mut len_bytes = [0u8; 4];
+                len_bytes.copy_from_slice(&conn.rdbuf[conn.rdstart..conn.rdstart + 4]);
+                let len = u32::from_le_bytes(len_bytes);
+                if len == 0 || len > MAX_FRAME {
+                    return ParseOutcome::Corrupt("bad frame length");
+                }
+                // len ≤ MAX_FRAME (1 GiB) was just enforced, so the cast
+                // and the additions below cannot overflow usize.
+                let flen = 4 + len as usize;
+                if avail < flen {
+                    break;
+                }
+                let body = &conn.rdbuf[conn.rdstart + 4..conn.rdstart + flen];
+                let msg = match Msg::from_body(body) {
+                    Ok(m) => m,
+                    Err(_) => return ParseOutcome::Corrupt("undecodable frame"),
+                };
+                conn.rdstart += flen;
+                conn.core.handle_msg(msg, &sink, &self.cfg.sched, &self.cfg.metrics);
+            }
+            // Compact the parsed prefix (wholesale when fully drained,
+            // spill-threshold otherwise).
+            if conn.rdstart > 0 && conn.rdstart == conn.rdbuf.len() {
+                conn.rdbuf.clear();
+                conn.rdstart = 0;
+            } else if conn.rdstart >= READ_CHUNK {
+                conn.rdbuf.drain(..conn.rdstart);
+                conn.rdstart = 0;
+            }
+            conn.frame_since =
+                if conn.rdbuf.len() > conn.rdstart { conn.frame_since.or_else(|| Some(Instant::now())) } else { None };
+            outcome
+        }
+
+        /// Unsubscribe `EPOLLIN` (budget exhausted). TCP flow control
+        /// takes over from here; [`process_pending`](Self::process_pending)
+        /// resumes the connection when tickets drain.
+        fn pause(&mut self, token: u64) {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if !conn.paused {
+                conn.paused = true;
+                self.cfg.metrics.add(&self.cfg.metrics.backpressured, 1);
+            }
+            self.update_interest(token);
+        }
+
+        /// Re-examine every connection a notifier flagged: flush fresh
+        /// replies, kill slow clients, resume paused connections whose
+        /// budgets recovered.
+        fn process_pending(&mut self) {
+            let pending: Vec<u64> = {
+                let mut p = self.notifier.pending.lock().unwrap();
+                let drained: Vec<u64> = p.iter().copied().collect();
+                p.clear();
+                drained
+            };
+            for token in pending {
+                let Some(conn) = self.conns.get(&token) else { continue };
+                let overflow = {
+                    let out = conn.shared.out.lock().unwrap();
+                    out.dead && out.overflow
+                };
+                if overflow {
+                    self.close(token, CloseReason::Slow("outbound backlog over budget"));
+                    continue;
+                }
+                if !self.flush_conn(token) {
+                    continue;
+                }
+                let resume = {
+                    let conn = &self.conns[&token];
+                    conn.paused && !conn.shared.over_budget(&self.cfg.budgets)
+                };
+                if resume {
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        conn.paused = false;
+                    }
+                    self.cfg
+                        .metrics
+                        .backpressured
+                        .fetch_sub(1, Ordering::Relaxed);
+                    // Buffered frames may be waiting behind the pause —
+                    // parse them before relying on fresh readiness.
+                    self.pump_read(token);
+                }
+            }
+        }
+
+        /// Disconnect idle, half-open, and slow-loris connections past
+        /// the io deadline (no-op when the timeout is zero).
+        fn sweep_deadlines(&mut self) {
+            if self.cfg.io_timeout.is_zero() {
+                return;
+            }
+            let doomed: Vec<(u64, bool)> = self
+                .conns
+                .iter()
+                .filter_map(|(&token, conn)| {
+                    // A connection with work in flight or replies still
+                    // draining is alive by definition.
+                    if conn.shared.inflight_requests.load(Ordering::Relaxed) > 0 {
+                        return None;
+                    }
+                    if let Some(t0) = conn.frame_since {
+                        // Mid-frame stall: slow-loris.
+                        (t0.elapsed() > self.cfg.io_timeout).then_some((token, true))
+                    } else {
+                        // Fully idle (covers vanished half-open peers).
+                        (conn.last_activity.elapsed() > self.cfg.io_timeout)
+                            .then_some((token, false))
+                    }
+                })
+                .collect();
+            for (token, loris) in doomed {
+                let reason = if loris {
+                    CloseReason::Slow("stalled mid-frame past io timeout")
+                } else {
+                    CloseReason::Fault("idle past io timeout")
+                };
+                self.close(token, reason);
+            }
+        }
+
+        /// Recompute and apply the epoll interest mask.
+        fn update_interest(&mut self, token: u64) {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            let backlog = {
+                let out = conn.shared.out.lock().unwrap();
+                out.start < out.buf.len()
+            };
+            let mut want = 0u32;
+            if !conn.paused {
+                want |= EPOLLIN | EPOLLRDHUP;
+            }
+            if backlog {
+                want |= EPOLLOUT;
+            }
+            if want != conn.interest
+                && epoll_ctl(
+                    self.epfd.as_raw_fd(),
+                    EPOLL_CTL_MOD,
+                    conn.sock.as_raw_fd(),
+                    Some(EpollEvent { events: want, data: token }),
+                )
+                .is_ok()
+            {
+                conn.interest = want;
+            }
+        }
+
+        /// Tear one connection down and settle its counters.
+        fn close(&mut self, token: u64, reason: CloseReason) {
+            let Some(conn) = self.conns.remove(&token) else { return };
+            let _ = epoll_ctl(self.epfd.as_raw_fd(), EPOLL_CTL_DEL, conn.sock.as_raw_fd(), None);
+            conn.shared.mark_dead();
+            if conn.paused {
+                self.cfg.metrics.backpressured.fetch_sub(1, Ordering::Relaxed);
+            }
+            match reason {
+                CloseReason::Clean => {}
+                CloseReason::Fault(what) => {
+                    self.cfg.metrics.add(&self.cfg.metrics.fleet.faults, 1);
+                    eprintln!("epoll front-end: dropping client: {what}");
+                }
+                CloseReason::Slow(what) => {
+                    self.cfg.metrics.add(&self.cfg.metrics.slow_clients, 1);
+                    eprintln!("epoll front-end: dropping slow client: {what}");
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_budgets_are_sane() {
+        let b = BudgetConfig::default();
+        assert!(b.max_conn_requests >= 1);
+        assert!(b.max_global_requests >= b.max_conn_requests);
+        assert!(b.max_global_bytes >= b.max_conn_bytes);
+        assert!(b.max_outbound_bytes >= 1);
+    }
+
+    #[test]
+    fn tickets_reserve_and_release() {
+        let global = Arc::new(GlobalBudget::default());
+        let shared = Arc::new(ConnShared {
+            token: 7,
+            out: Mutex::new(OutBuf::default()),
+            inflight_requests: AtomicU64::new(0),
+            inflight_bytes: AtomicU64::new(0),
+            max_outbound: 1 << 20,
+            global: global.clone(),
+            notify: Notifier {
+                pending: Arc::new(Mutex::new(BTreeSet::new())),
+                wake: Arc::new(wake_stub()),
+            },
+        });
+        let h = ConnHandle(shared.clone());
+        let budgets = BudgetConfig { max_conn_requests: 2, ..BudgetConfig::default() };
+        assert!(!shared.over_budget(&budgets));
+        let t1 = h.ticket(100);
+        let t2 = h.ticket(50);
+        assert!(shared.over_budget(&budgets), "request cap reached");
+        assert_eq!(global.bytes.load(Ordering::Relaxed), 150);
+        drop(t1);
+        assert!(!shared.over_budget(&budgets));
+        drop(t2);
+        assert_eq!(global.requests.load(Ordering::Relaxed), 0);
+        assert_eq!(global.bytes.load(Ordering::Relaxed), 0);
+        // Dropping a ticket flags the connection for re-examination.
+        assert!(shared.notify.pending.lock().unwrap().contains(&7));
+    }
+
+    #[test]
+    fn outbound_overflow_kills_after_backlog_not_on_one_frame() {
+        let shared = Arc::new(ConnShared {
+            token: 1,
+            out: Mutex::new(OutBuf::default()),
+            inflight_requests: AtomicU64::new(0),
+            inflight_bytes: AtomicU64::new(0),
+            // Tiny cap: the first frame enqueues (empty backlog), the
+            // second sees a backlog over the cap and trips the kill.
+            max_outbound: 4,
+            global: Arc::new(GlobalBudget::default()),
+            notify: Notifier {
+                pending: Arc::new(Mutex::new(BTreeSet::new())),
+                wake: Arc::new(wake_stub()),
+            },
+        });
+        let msg = Msg::Busy { request_id: 42 };
+        shared.enqueue_frame(&msg);
+        {
+            let out = shared.out.lock().unwrap();
+            assert!(!out.dead, "a single frame always fits");
+            assert!(out.buf.len() > 4, "frame landed in the buffer");
+        }
+        shared.enqueue_frame(&msg);
+        let out = shared.out.lock().unwrap();
+        assert!(out.dead && out.overflow, "backlog over cap kills the connection");
+        assert!(out.buf.is_empty(), "buffer released on kill");
+    }
+
+    #[cfg(unix)]
+    fn wake_stub() -> WakeTx {
+        let (a, _b) = std::os::unix::net::UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        // Leak the read half: the stub only needs a writable fd.
+        std::mem::forget(_b);
+        WakeTx(a)
+    }
+
+    #[cfg(not(unix))]
+    fn wake_stub() -> WakeTx {
+        WakeTx()
+    }
+}

@@ -56,6 +56,51 @@ impl LatencyHisto {
     }
 }
 
+/// A point-in-time snapshot of the serving counters and latency
+/// quantiles, carried on the wire by
+/// [`Msg::StatsReply`](super::protocol::Msg::StatsReply) so operators
+/// and load generators can scrape tail latency without parsing the
+/// human [`Metrics::summary`] line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StatsSnapshot {
+    /// Requests accepted into the queue.
+    pub accepted: u64,
+    /// Requests rejected with `Busy` (backpressure).
+    pub rejected: u64,
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests shed at pop time (expired deadlines).
+    pub shed: u64,
+    /// Raw input bytes received.
+    pub bytes_in: u64,
+    /// Compressed bytes produced.
+    pub bytes_out: u64,
+    /// Connections accepted by the front-end.
+    pub conns_accepted: u64,
+    /// Accept-loop errors (EMFILE and friends).
+    pub accept_errors: u64,
+    /// Slow-client disconnects (write budget exceeded).
+    pub slow_clients: u64,
+    /// End-to-end p50 (µs, bucket upper bound).
+    pub e2e_p50_us: u64,
+    /// End-to-end p99 (µs).
+    pub e2e_p99_us: u64,
+    /// End-to-end p999 (µs).
+    pub e2e_p999_us: u64,
+    /// Queue-wait p50 (µs).
+    pub queue_p50_us: u64,
+    /// Queue-wait p99 (µs).
+    pub queue_p99_us: u64,
+    /// Queue-wait p999 (µs).
+    pub queue_p999_us: u64,
+    /// Solve p50 (µs).
+    pub solve_p50_us: u64,
+    /// Solve p99 (µs).
+    pub solve_p99_us: u64,
+    /// Solve p999 (µs).
+    pub solve_p999_us: u64,
+}
+
 /// Service-wide counters.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -92,8 +137,25 @@ pub struct Metrics {
     pub bytes_in: AtomicU64,
     /// Compressed bytes produced.
     pub bytes_out: AtomicU64,
+    /// Connections accepted by the serving front-end (either frontend).
+    pub conns_accepted: AtomicU64,
+    /// Accept-loop errors (EMFILE/ENFILE descriptor exhaustion and
+    /// other failed `accept` calls — the connection was never served).
+    pub accept_errors: AtomicU64,
+    /// Slow-client disconnects: connections dropped by the event loop
+    /// because their outbound buffer exceeded the per-connection write
+    /// budget (the client stopped draining replies).
+    pub slow_clients: AtomicU64,
+    /// Connections currently paused for backpressure (EPOLLIN
+    /// unsubscribed because a per-conn or global in-flight budget is
+    /// exhausted). Gauge: incremented on pause, decremented on resume.
+    pub backpressured: AtomicU64,
     /// End-to-end service latency.
     pub latency: LatencyHisto,
+    /// Queue-wait latency: accept-to-dispatch time spent in the
+    /// [`Scheduler`](super::batcher::Scheduler) before a solver picked
+    /// the request up.
+    pub queue_latency: LatencyHisto,
     /// Solver-only latency.
     pub solve_latency: LatencyHisto,
     /// Fault-layer counters (classified wire faults, retries, breaker
@@ -117,11 +179,35 @@ impl Metrics {
         }
     }
 
+    /// Point-in-time [`StatsSnapshot`] for the wire stats reply.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
+            accept_errors: self.accept_errors.load(Ordering::Relaxed),
+            slow_clients: self.slow_clients.load(Ordering::Relaxed),
+            e2e_p50_us: self.latency.quantile_us(0.5),
+            e2e_p99_us: self.latency.quantile_us(0.99),
+            e2e_p999_us: self.latency.quantile_us(0.999),
+            queue_p50_us: self.queue_latency.quantile_us(0.5),
+            queue_p99_us: self.queue_latency.quantile_us(0.99),
+            queue_p999_us: self.queue_latency.quantile_us(0.999),
+            solve_p50_us: self.solve_latency.quantile_us(0.5),
+            solve_p99_us: self.solve_latency.quantile_us(0.99),
+            solve_p999_us: self.solve_latency.quantile_us(0.999),
+        }
+    }
+
     /// One-line human summary. The `stream=` segment appears once any
     /// streaming round has been served (cached/reused/warm/resolved).
     pub fn summary(&self) -> String {
         let mut line = format!(
-            "accepted={} rejected={} completed={} packed={} shed={} ratio={:.2}x mean={:.0}µs p50={}µs p99={}µs solve_mean={:.0}µs",
+            "accepted={} rejected={} completed={} packed={} shed={} ratio={:.2}x mean={:.0}µs p50={}µs p99={}µs p999={}µs queue=p50:{}/p99:{}/p999:{}µs solve_mean={:.0}µs solve=p50:{}/p99:{}/p999:{}µs",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -131,8 +217,26 @@ impl Metrics {
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
+            self.latency.quantile_us(0.999),
+            self.queue_latency.quantile_us(0.5),
+            self.queue_latency.quantile_us(0.99),
+            self.queue_latency.quantile_us(0.999),
             self.solve_latency.mean_us(),
+            self.solve_latency.quantile_us(0.5),
+            self.solve_latency.quantile_us(0.99),
+            self.solve_latency.quantile_us(0.999),
         );
+        // Front-end connection segment, rendered once the front-end has
+        // seen action (same on-demand style as the segments below).
+        let (ca, ae, sc, bp) = (
+            self.conns_accepted.load(Ordering::Relaxed),
+            self.accept_errors.load(Ordering::Relaxed),
+            self.slow_clients.load(Ordering::Relaxed),
+            self.backpressured.load(Ordering::Relaxed),
+        );
+        if ca + ae + sc + bp > 0 {
+            line.push_str(&format!(" conns=a{ca}/e{ae}/slow{sc}/paused{bp}"));
+        }
         let (c, r, w, f) = (
             self.stream_cached.load(Ordering::Relaxed),
             self.stream_reused.load(Ordering::Relaxed),
@@ -211,6 +315,22 @@ mod tests {
         m.add(&m.fleet.faults, 2);
         m.add(&m.fleet.retries, 1);
         assert!(m.summary().contains("fault=2 retry=1 breaker=0 fallback=0"));
+    }
+
+    #[test]
+    fn summary_renders_tail_quantiles_and_conn_segment() {
+        let m = Metrics::default();
+        assert!(m.summary().contains("p999=0µs"));
+        assert!(m.summary().contains("queue=p50:0/p99:0/p999:0µs"));
+        assert!(m.summary().contains("solve=p50:0/p99:0/p999:0µs"));
+        // The conn segment only appears once the front-end saw action.
+        assert!(!m.summary().contains("conns="));
+        m.queue_latency.record_us(10);
+        m.add(&m.conns_accepted, 3);
+        m.add(&m.accept_errors, 1);
+        m.add(&m.slow_clients, 2);
+        assert!(m.summary().contains("conns=a3/e1/slow2/paused0"));
+        assert!(m.summary().contains("queue=p50:16/p99:16/p999:16µs"));
     }
 
     #[test]

@@ -20,14 +20,18 @@
 //! Shared plumbing: binary [`codec`], framed [`protocol`], [`metrics`],
 //! the chunked streaming-ingestion layer ([`ingest`]: vectors arrive one
 //! chunk at a time and are folded away on arrival — the coordinator never
-//! materializes them), and the fault-tolerance layer ([`fault`]: typed
+//! materializes them), the fault-tolerance layer ([`fault`]: typed
 //! fault taxonomy, deadlines on every socket, deterministic retry/re-plan
 //! policy; [`faultnet`]: the deterministic fault-injection proxy the
-//! chaos suite drives).
+//! chaos suite drives), and the [`eventloop`] serving front-end (epoll
+//! multiplexing of all client sockets onto a few I/O threads, with
+//! connection-level backpressure budgets — the compression service runs
+//! either front-end behind the identical wire protocol).
 
 pub mod aggregator;
 pub mod batcher;
 pub mod codec;
+pub mod eventloop;
 pub mod fault;
 pub mod faultnet;
 pub mod ingest;

@@ -262,6 +262,22 @@ pub enum Msg {
         /// The chunk's packed index bytes.
         payload: Vec<u8>,
     },
+    /// Client → compression service: request a
+    /// [`StatsSnapshot`](super::metrics::StatsSnapshot) of the serving
+    /// counters and latency quantiles. Answered out of band of the
+    /// solver pool (no queueing), so it stays cheap under load.
+    StatsRequest {
+        /// Client-chosen id echoed in the reply.
+        request_id: u64,
+    },
+    /// Compression service → client: the counters + tail-latency
+    /// quantiles at the moment [`Msg::StatsRequest`] was served.
+    StatsReply {
+        /// Echoed request id.
+        request_id: u64,
+        /// The snapshot (all fields serialized as `u64` in field order).
+        stats: super::metrics::StatsSnapshot,
+    },
 }
 
 impl Msg {
@@ -292,6 +308,8 @@ impl Msg {
             Msg::IngestClose { .. } => "IngestClose",
             Msg::IngestSolved { .. } => "IngestSolved",
             Msg::IngestPayloadChunk { .. } => "IngestPayloadChunk",
+            Msg::StatsRequest { .. } => "StatsRequest",
+            Msg::StatsReply { .. } => "StatsReply",
         }
     }
 
@@ -319,6 +337,8 @@ impl Msg {
             Msg::IngestClose { .. } => 20,
             Msg::IngestSolved { .. } => 21,
             Msg::IngestPayloadChunk { .. } => 22,
+            Msg::StatsRequest { .. } => 23,
+            Msg::StatsReply { .. } => 24,
         }
     }
 
@@ -429,6 +449,30 @@ impl Msg {
             }
             Msg::IngestPayloadChunk { task_id, chunk_idx, d, payload } => {
                 w.u64(*task_id).u64(*chunk_idx).u64(*d).bytes(payload);
+            }
+            Msg::StatsRequest { request_id } => {
+                w.u64(*request_id);
+            }
+            Msg::StatsReply { request_id, stats } => {
+                w.u64(*request_id)
+                    .u64(stats.accepted)
+                    .u64(stats.rejected)
+                    .u64(stats.completed)
+                    .u64(stats.shed)
+                    .u64(stats.bytes_in)
+                    .u64(stats.bytes_out)
+                    .u64(stats.conns_accepted)
+                    .u64(stats.accept_errors)
+                    .u64(stats.slow_clients)
+                    .u64(stats.e2e_p50_us)
+                    .u64(stats.e2e_p99_us)
+                    .u64(stats.e2e_p999_us)
+                    .u64(stats.queue_p50_us)
+                    .u64(stats.queue_p99_us)
+                    .u64(stats.queue_p999_us)
+                    .u64(stats.solve_p50_us)
+                    .u64(stats.solve_p99_us)
+                    .u64(stats.solve_p999_us);
             }
         }
         let body = w.finish();
@@ -579,6 +623,30 @@ impl Msg {
                 chunk_idx: r.u64()?,
                 d: r.u64()?,
                 payload: r.bytes()?,
+            },
+            23 => Msg::StatsRequest { request_id: r.u64()? },
+            24 => Msg::StatsReply {
+                request_id: r.u64()?,
+                stats: super::metrics::StatsSnapshot {
+                    accepted: r.u64()?,
+                    rejected: r.u64()?,
+                    completed: r.u64()?,
+                    shed: r.u64()?,
+                    bytes_in: r.u64()?,
+                    bytes_out: r.u64()?,
+                    conns_accepted: r.u64()?,
+                    accept_errors: r.u64()?,
+                    slow_clients: r.u64()?,
+                    e2e_p50_us: r.u64()?,
+                    e2e_p99_us: r.u64()?,
+                    e2e_p999_us: r.u64()?,
+                    queue_p50_us: r.u64()?,
+                    queue_p99_us: r.u64()?,
+                    queue_p999_us: r.u64()?,
+                    solve_p50_us: r.u64()?,
+                    solve_p99_us: r.u64()?,
+                    solve_p999_us: r.u64()?,
+                },
             },
             _ => return Err(DecodeError("unknown message tag")),
         };
@@ -743,6 +811,30 @@ mod tests {
             chunk_idx: 3,
             d: 100,
             payload: vec![0xAB; 50],
+        });
+        roundtrip(Msg::StatsRequest { request_id: 99 });
+        roundtrip(Msg::StatsReply {
+            request_id: 99,
+            stats: crate::coordinator::metrics::StatsSnapshot {
+                accepted: 10,
+                rejected: 1,
+                completed: 9,
+                shed: 0,
+                bytes_in: 4096,
+                bytes_out: 512,
+                conns_accepted: 7,
+                accept_errors: 1,
+                slow_clients: 2,
+                e2e_p50_us: 128,
+                e2e_p99_us: 1024,
+                e2e_p999_us: 4096,
+                queue_p50_us: 16,
+                queue_p99_us: 64,
+                queue_p999_us: 256,
+                solve_p50_us: 32,
+                solve_p99_us: 512,
+                solve_p999_us: 2048,
+            },
         });
     }
 

@@ -57,6 +57,14 @@
 //!   derived RNG stream per tenant — while *large* jobs keep whole-vector
 //!   data parallelism. A batch of 1K-element tenant vectors thus costs
 //!   one pool handoff rather than 1K per-pass spawn waves.
+//! * Front-ends ([`ServiceConfig::frontend`], `serve --frontend`): the
+//!   default thread-per-connection blocking front-end, or the
+//!   readiness-driven epoll event loop ([`super::eventloop`], Linux)
+//!   that multiplexes every client socket onto a few I/O threads with
+//!   connection-level backpressure budgets. Both speak the identical
+//!   framed protocol and hand completed requests to the same scheduler
+//!   + solver pool, so the front-end is invisible in the reply bits
+//!   (DESIGN.md rule 5; `tests/coordinator_integration.rs` asserts it).
 
 use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
@@ -67,6 +75,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::batcher::{Scheduler, TenantClass};
+use super::eventloop::{self, BudgetConfig, BudgetTicket, ConnHandle};
 use super::fault::{self, FleetConfig};
 use super::ingest::{self, IngestConfig, IngestConn, IngestEvent, SharedIngestTask};
 use super::metrics::Metrics;
@@ -75,6 +84,43 @@ use super::router::Router;
 use crate::sq;
 use crate::stream::{Decision, StreamConfig, StreamSolver, StreamTuning};
 use crate::util::rng::Xoshiro256pp;
+
+/// Which serving front-end accepts and reads client connections. The
+/// choice is pure plumbing: both front-ends speak the identical framed
+/// protocol and submit to the identical scheduler + solver pool, so
+/// replies are bit-identical either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Frontend {
+    /// Thread-per-connection blocking I/O — one reader thread per client
+    /// socket. Simple and fine for a shard fleet's worth of peers.
+    Threads,
+    /// Readiness-driven epoll event loop ([`super::eventloop`],
+    /// Linux-only): all client sockets multiplexed onto
+    /// [`ServiceConfig::io_threads`] I/O threads, with per-connection
+    /// and global in-flight budgets ([`ServiceConfig::budgets`]).
+    Epoll,
+}
+
+impl Frontend {
+    /// Resolve the default front-end from the `QUIVER_FRONTEND`
+    /// environment variable (`epoll` | `threads`), falling back to
+    /// [`Frontend::Threads`]. This is how CI runs the existing
+    /// integration and invariance suites unmodified under the event
+    /// loop.
+    pub fn from_env() -> Self {
+        match std::env::var("QUIVER_FRONTEND").ok().as_deref() {
+            Some("epoll") => Frontend::Epoll,
+            Some("threads") | None => Frontend::Threads,
+            Some(other) => {
+                eprintln!(
+                    "warning: QUIVER_FRONTEND={other:?} not recognized \
+                     (expected `epoll` or `threads`); using the threaded front-end"
+                );
+                Frontend::Threads
+            }
+        }
+    }
+}
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -141,6 +187,20 @@ pub struct ServiceConfig {
     /// overridden at start-up with the router's `hist_m`, so ingested and
     /// monolithic solves share one grid policy.
     pub ingest: IngestConfig,
+    /// Which front-end serves client sockets (CLI: `serve --frontend`;
+    /// default resolves from `QUIVER_FRONTEND`, else
+    /// [`Frontend::Threads`]).
+    pub frontend: Frontend,
+    /// Event-loop I/O threads ([`Frontend::Epoll`] only): how many epoll
+    /// loops client sockets are spread across, round-robin. Unrelated to
+    /// `threads` (the solver pool) and [`crate::par`] width.
+    pub io_threads: usize,
+    /// Connection-level backpressure budgets ([`Frontend::Epoll`] only):
+    /// per-connection / global in-flight request + byte caps and the
+    /// per-connection outbound-buffer cap (CLI: `serve
+    /// --max-conn-inflight/--max-conn-bytes/--max-global-inflight/`
+    /// `--max-global-bytes/--max-outbound-bytes`).
+    pub budgets: BudgetConfig,
 }
 
 /// Streaming-mode knobs ([`ServiceConfig::stream`]).
@@ -238,22 +298,72 @@ impl Default for ServiceConfig {
             shed_expired: false,
             io_timeout: Duration::from_secs(120),
             ingest: IngestConfig::default(),
+            frontend: Frontend::from_env(),
+            io_threads: 2,
+            budgets: BudgetConfig::default(),
         }
     }
 }
 
-struct Job {
+/// Where a job's reply goes. Solver threads call [`ReplySink::send_msg`]
+/// after computing; the variants hide whether the connection lives on
+/// the thread-per-connection front-end (a shared blocking socket) or on
+/// the event loop (a nonblocking outbound buffer drained by an I/O
+/// thread). Either way a slow client can stall at most its own
+/// connection — the blocking variant blocks only the one solver thread
+/// doing the send, the event variant never blocks at all.
+#[derive(Clone)]
+pub(crate) enum ReplySink {
+    /// Threaded front-end: write the frame through the connection's
+    /// shared blocking socket on the calling (solver) thread.
+    Blocking(Arc<Mutex<TcpStream>>),
+    /// Event-loop front-end: serialize the frame into the connection's
+    /// outbound buffer and wake its I/O loop.
+    Event(ConnHandle),
+}
+
+impl ReplySink {
+    /// Serialize + deliver one message. Errors are absorbed: a vanished
+    /// or wedged client costs its own connection, never the server.
+    pub(crate) fn send_msg(&self, msg: &Msg) {
+        match self {
+            ReplySink::Blocking(w) => {
+                let mut w = w.lock().unwrap();
+                let _ = send(&mut *w, msg);
+            }
+            ReplySink::Event(h) => h.enqueue(msg),
+        }
+    }
+
+    /// Reserve one request + `bytes` of the connection's in-flight
+    /// budget. `None` on the threaded front-end (its backpressure is the
+    /// bounded scheduler queue alone); on the event loop the returned
+    /// ticket releases the reservation when the job is dropped — after
+    /// the reply was enqueued, on shed, and on queue-full rollback
+    /// alike.
+    pub(crate) fn ticket(&self, bytes: u64) -> Option<BudgetTicket> {
+        match self {
+            ReplySink::Blocking(_) => None,
+            ReplySink::Event(h) => Some(h.ticket(bytes)),
+        }
+    }
+}
+
+pub(crate) struct Job {
     request_id: u64,
     s: u32,
     data: Vec<f32>,
     accepted_at: Instant,
-    reply: Arc<Mutex<TcpStream>>,
+    reply: ReplySink,
     /// `Some((stream_id, round))` for incremental-session rounds.
     stream: Option<(u64, u64)>,
     /// `Some(task)` for a chunked-ingest close-time solve (`data` is
     /// empty — the whole point is that the vector was never
     /// materialized; the task holds the folded statistics).
     ingest: Option<SharedIngestTask>,
+    /// Event-loop budget reservation; releasing on drop covers every
+    /// exit path (reply sent, shed, rollback) without bookkeeping.
+    _ticket: Option<BudgetTicket>,
 }
 
 /// Handle to a running service.
@@ -315,9 +425,7 @@ impl Service {
                             if !shed.is_empty() {
                                 metrics.add(&metrics.shed, shed.len() as u64);
                                 for job in shed {
-                                    let mut w = job.reply.lock().unwrap();
-                                    let _ =
-                                        send(&mut *w, &Msg::Busy { request_id: job.request_id });
+                                    job.reply.send_msg(&Msg::Busy { request_id: job.request_id });
                                 }
                             }
                             serve_groups(
@@ -334,32 +442,51 @@ impl Service {
             );
         }
 
-        // Accept loop (shared nonblocking poll so shutdown is prompt and
-        // transient accept errors never kill the server).
-        {
-            let stop = stop.clone();
-            let sched = sched.clone();
-            let metrics = metrics.clone();
-            let io_timeout = cfg.io_timeout;
-            // Ingest shares the router's grid policy: same M as the
-            // monolithic hist route, so the invariance contract compares
-            // like with like.
-            let ingest_cfg = IngestConfig { m: cfg.router.cfg.hist_m, ..cfg.ingest };
-            joins.push(
-                std::thread::Builder::new()
-                    .name("avq-accept".into())
-                    .spawn(move || {
-                        super::run_accept_loop(&listener, &stop, |stream| {
-                            let sched = sched.clone();
-                            let metrics = metrics.clone();
-                            let stop = stop.clone();
-                            std::thread::spawn(move || {
-                                handle_conn(stream, io_timeout, ingest_cfg, &sched, &metrics, &stop);
+        // Front-end. Ingest shares the router's grid policy either way:
+        // same M as the monolithic hist route, so the invariance
+        // contract compares like with like.
+        let ingest_cfg = IngestConfig { m: cfg.router.cfg.hist_m, ..cfg.ingest };
+        match cfg.frontend {
+            Frontend::Threads => {
+                // Accept loop (shared nonblocking poll so shutdown is
+                // prompt and transient accept errors never kill the
+                // server), one reader thread per accepted connection.
+                let stop = stop.clone();
+                let sched = sched.clone();
+                let metrics = metrics.clone();
+                let io_timeout = cfg.io_timeout;
+                joins.push(
+                    std::thread::Builder::new()
+                        .name("avq-accept".into())
+                        .spawn(move || {
+                            super::run_accept_loop(&listener, &stop, |stream| {
+                                metrics.add(&metrics.conns_accepted, 1);
+                                let sched = sched.clone();
+                                let metrics = metrics.clone();
+                                let stop = stop.clone();
+                                std::thread::spawn(move || {
+                                    handle_conn(
+                                        stream, io_timeout, ingest_cfg, &sched, &metrics, &stop,
+                                    );
+                                });
                             });
-                        });
-                    })
-                    .expect("spawn accept"),
-            );
+                        })
+                        .expect("spawn accept"),
+                );
+            }
+            Frontend::Epoll => {
+                let mut io_joins = eventloop::start(eventloop::EventLoopConfig {
+                    listener,
+                    io_threads: cfg.io_threads,
+                    budgets: cfg.budgets,
+                    io_timeout: cfg.io_timeout,
+                    ingest: ingest_cfg,
+                    sched: sched.clone(),
+                    metrics: metrics.clone(),
+                    stop: stop.clone(),
+                })?;
+                joins.append(&mut io_joins);
+            }
         }
 
         Ok(Self { addr, stop, metrics, joins, sched })
@@ -384,16 +511,187 @@ impl Service {
 /// exactly one `Busy` carrying the task id. (The [`IngestConn`] dead-id
 /// set guarantees later frames of the same dead task are dropped
 /// silently, so a pipelined client reads one error, not one per frame.)
-fn ingest_reject(
-    reply: &Arc<Mutex<TcpStream>>,
-    metrics: &Metrics,
-    task_id: u64,
-    err: &ingest::IngestError,
-) {
+fn ingest_reject(reply: &ReplySink, metrics: &Metrics, task_id: u64, err: &ingest::IngestError) {
     metrics.add(&metrics.ingest_failed, 1);
     eprintln!("compression service: ingest task {task_id} failed: {err}");
-    let mut w = reply.lock().unwrap();
-    let _ = send(&mut *w, &Msg::Busy { request_id: task_id });
+    reply.send_msg(&Msg::Busy { request_id: task_id });
+}
+
+/// The front-end-independent half of a connection: the per-connection
+/// ingest state machine plus the dispatch of one decoded message into
+/// the scheduler (or an inline reply). The threaded front-end drives it
+/// from a blocking `recv` loop ([`handle_conn`]); the event loop drives
+/// it from buffered complete frames ([`super::eventloop`]). Keeping the
+/// message semantics in one place is what makes the two front-ends
+/// bit-identical by construction.
+pub(crate) struct ConnCore {
+    /// Capped live-task table ([`IngestConn`]). Dropping the connection
+    /// drops it — a client that vanishes mid-ingest frees its partial
+    /// state.
+    ingest_conn: IngestConn,
+    /// Each ingest task's tenant class (class/deadline ride IngestOpen
+    /// but are only needed at close-time scheduling).
+    ingest_class: BTreeMap<u64, (u8, u32)>,
+}
+
+impl ConnCore {
+    /// Fresh per-connection state.
+    pub(crate) fn new(ingest_cfg: IngestConfig) -> Self {
+        Self { ingest_conn: IngestConn::new(ingest_cfg), ingest_class: BTreeMap::new() }
+    }
+
+    /// Handle one decoded client message: fold ingest frames inline,
+    /// answer stats inline, submit compressible work to the scheduler
+    /// (typed `Busy` when the queue is full).
+    pub(crate) fn handle_msg(
+        &mut self,
+        msg: Msg,
+        reply: &ReplySink,
+        sched: &Scheduler<Job>,
+        metrics: &Metrics,
+    ) {
+        // Plain and streaming requests share the whole admission path;
+        // only the `stream` tag differs.
+        let (request_id, s, class, deadline_ms, data, stream_key) = match msg {
+            Msg::CompressRequest { request_id, s, class, deadline_ms, data } => {
+                (request_id, s, class, deadline_ms, data, None)
+            }
+            Msg::StreamCompressRequest {
+                request_id,
+                stream_id,
+                round,
+                s,
+                class,
+                deadline_ms,
+                data,
+            } => (request_id, s, class, deadline_ms, data, Some((stream_id, round))),
+            // Ingest frames are folded on the calling (connection / I/O)
+            // thread — cheap: one chunk scan + count pass — and never
+            // enter the scheduler until close; the fill phase is
+            // pipelined, so accepted opens/chunks send no reply.
+            Msg::IngestOpen { task_id, d, s, class, deadline_ms, lo, hi } => {
+                match self.ingest_conn.open(task_id, d, s, lo, hi) {
+                    IngestEvent::Accepted => {
+                        self.ingest_class.insert(task_id, (class, deadline_ms));
+                        metrics.add(&metrics.ingest_opened, 1);
+                    }
+                    IngestEvent::Reject(id, e) => ingest_reject(reply, metrics, id, &e),
+                    _ => {}
+                }
+                return;
+            }
+            Msg::IngestChunk { task_id, chunk_idx, data } => {
+                metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
+                match self.ingest_conn.chunk(task_id, chunk_idx, &data) {
+                    IngestEvent::Folded | IngestEvent::Silent => {}
+                    IngestEvent::Payload { chunk_idx, d, payload } => {
+                        metrics.add(&metrics.bytes_out, payload.len() as u64);
+                        reply.send_msg(&Msg::IngestPayloadChunk {
+                            task_id,
+                            chunk_idx,
+                            d,
+                            payload,
+                        });
+                    }
+                    IngestEvent::Reject(id, e) => {
+                        self.ingest_class.remove(&id);
+                        ingest_reject(reply, metrics, id, &e);
+                    }
+                    _ => {}
+                }
+                return;
+            }
+            Msg::IngestClose { task_id } => {
+                match self.ingest_conn.close(task_id) {
+                    IngestEvent::Close(task) => {
+                        let (class, deadline_ms) =
+                            self.ingest_class.remove(&task_id).unwrap_or((0, 0));
+                        let s = task.lock().unwrap().budget();
+                        let job = Job {
+                            request_id: task_id,
+                            s,
+                            data: Vec::new(),
+                            accepted_at: Instant::now(),
+                            reply: reply.clone(),
+                            stream: None,
+                            ingest: Some(task),
+                            _ticket: reply.ticket(0),
+                        };
+                        let tclass = tenant_class(class, deadline_ms);
+                        metrics.add(&metrics.accepted, 1);
+                        match sched.try_submit(job, tclass) {
+                            Ok(()) => {}
+                            Err(job) => {
+                                metrics
+                                    .accepted
+                                    .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                                metrics.add(&metrics.rejected, 1);
+                                metrics.add(&metrics.ingest_failed, 1);
+                                self.ingest_conn.forget(job.request_id);
+                                eprintln!(
+                                    "compression service: ingest task {} rejected: queue full",
+                                    job.request_id
+                                );
+                                job.reply.send_msg(&Msg::Busy { request_id: job.request_id });
+                            }
+                        }
+                    }
+                    IngestEvent::Reject(id, e) => {
+                        self.ingest_class.remove(&id);
+                        ingest_reject(reply, metrics, id, &e);
+                    }
+                    _ => {}
+                }
+                return;
+            }
+            // Stats are answered inline off the fast path — no queueing,
+            // so they stay cheap under load.
+            Msg::StatsRequest { request_id } => {
+                reply.send_msg(&Msg::StatsReply { request_id, stats: metrics.snapshot() });
+                return;
+            }
+            other => {
+                eprintln!("compression service: unexpected {}", other.kind());
+                return;
+            }
+        };
+        metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
+        let job = Job {
+            request_id,
+            s,
+            accepted_at: Instant::now(),
+            reply: reply.clone(),
+            stream: stream_key,
+            ingest: None,
+            _ticket: reply.ticket((data.len() * 4) as u64),
+            data,
+        };
+        let tclass = tenant_class(class, deadline_ms);
+        // Count *before* submitting: once queued, a solver thread
+        // may reply (and the client observe metrics) before this
+        // thread runs again.
+        metrics.add(&metrics.accepted, 1);
+        match sched.try_submit(job, tclass) {
+            Ok(()) => {}
+            Err(job) => {
+                metrics.accepted.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.add(&metrics.rejected, 1);
+                job.reply.send_msg(&Msg::Busy { request_id: job.request_id });
+            }
+        }
+    }
+}
+
+/// Build a [`TenantClass`] from the wire fields (deadline 0 = none).
+fn tenant_class(class: u8, deadline_ms: u32) -> TenantClass {
+    TenantClass {
+        priority: class,
+        ..if deadline_ms > 0 {
+            TenantClass::with_deadline_in(Duration::from_millis(u64::from(deadline_ms)))
+        } else {
+            TenantClass::best_effort()
+        }
+    }
 }
 
 fn handle_conn(
@@ -409,128 +707,18 @@ fn handle_conn(
     if fault::io_timeouts(&stream, io_timeout).is_err() {
         return;
     }
-    let reply = Arc::new(Mutex::new(match stream.try_clone() {
+    let reply = ReplySink::Blocking(Arc::new(Mutex::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
-    }));
-    // Per-connection ingest state: the capped live-task table plus each
-    // task's tenant class (class/deadline ride IngestOpen but are only
-    // needed at close-time scheduling). Dropping the connection drops
-    // both — a client that vanishes mid-ingest frees its partial state.
-    let mut ingest_conn = IngestConn::new(ingest_cfg);
-    let mut ingest_class: BTreeMap<u64, (u8, u32)> = BTreeMap::new();
+    })));
+    let mut core = ConnCore::new(ingest_cfg);
     let mut rd = std::io::BufReader::new(stream);
     loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        // Plain and streaming requests share the whole admission path;
-        // only the `stream` tag differs.
-        let (request_id, s, class, deadline_ms, data, stream_key) = match recv(&mut rd) {
-            Ok(Some(Msg::CompressRequest { request_id, s, class, deadline_ms, data })) => {
-                (request_id, s, class, deadline_ms, data, None)
-            }
-            Ok(Some(Msg::StreamCompressRequest {
-                request_id,
-                stream_id,
-                round,
-                s,
-                class,
-                deadline_ms,
-                data,
-            })) => (request_id, s, class, deadline_ms, data, Some((stream_id, round))),
-            // Ingest frames are folded on the connection thread (cheap:
-            // one chunk scan + count pass) and never enter the scheduler
-            // until close; the fill phase is pipelined, so accepted
-            // opens/chunks send no reply.
-            Ok(Some(Msg::IngestOpen { task_id, d, s, class, deadline_ms, lo, hi })) => {
-                match ingest_conn.open(task_id, d, s, lo, hi) {
-                    IngestEvent::Accepted => {
-                        ingest_class.insert(task_id, (class, deadline_ms));
-                        metrics.add(&metrics.ingest_opened, 1);
-                    }
-                    IngestEvent::Reject(id, e) => ingest_reject(&reply, metrics, id, &e),
-                    _ => {}
-                }
-                continue;
-            }
-            Ok(Some(Msg::IngestChunk { task_id, chunk_idx, data })) => {
-                metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
-                match ingest_conn.chunk(task_id, chunk_idx, &data) {
-                    IngestEvent::Folded | IngestEvent::Silent => {}
-                    IngestEvent::Payload { chunk_idx, d, payload } => {
-                        metrics.add(&metrics.bytes_out, payload.len() as u64);
-                        let mut w = reply.lock().unwrap();
-                        let _ = send(
-                            &mut *w,
-                            &Msg::IngestPayloadChunk { task_id, chunk_idx, d, payload },
-                        );
-                    }
-                    IngestEvent::Reject(id, e) => {
-                        ingest_class.remove(&id);
-                        ingest_reject(&reply, metrics, id, &e);
-                    }
-                    _ => {}
-                }
-                continue;
-            }
-            Ok(Some(Msg::IngestClose { task_id })) => {
-                match ingest_conn.close(task_id) {
-                    IngestEvent::Close(task) => {
-                        let (class, deadline_ms) =
-                            ingest_class.remove(&task_id).unwrap_or((0, 0));
-                        let s = task.lock().unwrap().budget();
-                        let job = Job {
-                            request_id: task_id,
-                            s,
-                            data: Vec::new(),
-                            accepted_at: Instant::now(),
-                            reply: reply.clone(),
-                            stream: None,
-                            ingest: Some(task),
-                        };
-                        let tclass = TenantClass {
-                            priority: class,
-                            ..if deadline_ms > 0 {
-                                TenantClass::with_deadline_in(Duration::from_millis(u64::from(
-                                    deadline_ms,
-                                )))
-                            } else {
-                                TenantClass::best_effort()
-                            }
-                        };
-                        metrics.add(&metrics.accepted, 1);
-                        match sched.try_submit(job, tclass) {
-                            Ok(()) => {}
-                            Err(job) => {
-                                metrics
-                                    .accepted
-                                    .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
-                                metrics.add(&metrics.rejected, 1);
-                                metrics.add(&metrics.ingest_failed, 1);
-                                ingest_conn.forget(job.request_id);
-                                eprintln!(
-                                    "compression service: ingest task {} rejected: queue full",
-                                    job.request_id
-                                );
-                                let mut w = job.reply.lock().unwrap();
-                                let _ =
-                                    send(&mut *w, &Msg::Busy { request_id: job.request_id });
-                            }
-                        }
-                    }
-                    IngestEvent::Reject(id, e) => {
-                        ingest_class.remove(&id);
-                        ingest_reject(&reply, metrics, id, &e);
-                    }
-                    _ => {}
-                }
-                continue;
-            }
-            Ok(Some(other)) => {
-                eprintln!("compression service: unexpected {}", other.kind());
-                continue;
-            }
+        match recv(&mut rd) {
+            Ok(Some(msg)) => core.handle_msg(msg, &reply, sched, metrics),
             Ok(None) => break,
             Err(e) => {
                 // Clean EOF is the `Ok(None)` arm above; anything else —
@@ -542,37 +730,6 @@ fn handle_conn(
                     fault::classify_io(&e)
                 );
                 break;
-            }
-        };
-        metrics.add(&metrics.bytes_in, (data.len() * 4) as u64);
-        let job = Job {
-            request_id,
-            s,
-            data,
-            accepted_at: Instant::now(),
-            reply: reply.clone(),
-            stream: stream_key,
-            ingest: None,
-        };
-        let tclass = TenantClass {
-            priority: class,
-            ..if deadline_ms > 0 {
-                TenantClass::with_deadline_in(Duration::from_millis(u64::from(deadline_ms)))
-            } else {
-                TenantClass::best_effort()
-            }
-        };
-        // Count *before* submitting: once queued, a solver thread
-        // may reply (and the client observe metrics) before this
-        // thread runs again.
-        metrics.add(&metrics.accepted, 1);
-        match sched.try_submit(job, tclass) {
-            Ok(()) => {}
-            Err(job) => {
-                metrics.accepted.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
-                metrics.add(&metrics.rejected, 1);
-                let mut w = job.reply.lock().unwrap();
-                let _ = send(&mut *w, &Msg::Busy { request_id: job.request_id });
             }
         }
     }
@@ -624,6 +781,11 @@ fn serve_groups(
         }
         let base = rng.next_u64();
         for (tenant, job) in group.into_iter().enumerate() {
+            // Queue wait = accept-to-pop; recorded at pop so the
+            // histogram sees shed-free, served work only.
+            metrics
+                .queue_latency
+                .record_us(job.accepted_at.elapsed().as_micros().max(1) as u64);
             if job.stream.is_none() && job.ingest.is_none() && job.data.len() <= batch_small_d {
                 small.push((base, tenant, job));
             } else {
@@ -767,12 +929,11 @@ fn compute_reply(job: &Job, router: &Router, metrics: &Metrics, rng: &mut Xoshir
 }
 
 /// Write one computed reply back to its connection and settle the
-/// completion metrics. Runs on the solver thread only (blocking TCP
-/// send; see [`serve_groups`]).
+/// completion metrics. Runs on the solver thread only; the blocking
+/// sink sends on this thread, the event sink enqueues and wakes the
+/// connection's I/O loop (see [`serve_groups`] and [`ReplySink`]).
 fn send_reply(job: Job, reply: Msg, metrics: &Metrics) {
-    let mut w = job.reply.lock().unwrap();
-    let _ = send(&mut *w, &reply);
-    drop(w);
+    job.reply.send_msg(&reply);
     metrics.add(&metrics.completed, 1);
     metrics
         .latency
@@ -997,6 +1158,21 @@ pub fn ingest_remote(
     ))
 }
 
+/// Blocking client helper: fetch the service's live counters and
+/// tail-latency quantiles
+/// ([`StatsSnapshot`](super::metrics::StatsSnapshot)). Served inline by
+/// the front-end — never queued — so it works even when the solver
+/// queue is saturated.
+pub fn stats_remote(addr: &str, request_id: u64) -> Result<super::metrics::StatsSnapshot> {
+    match request_once(addr, &Msg::StatsRequest { request_id }, &FleetConfig::default())? {
+        Msg::StatsReply { request_id: rid, stats } => {
+            anyhow::ensure!(rid == request_id, "stats: reply for wrong request");
+            Ok(stats)
+        }
+        other => anyhow::bail!("stats: unexpected {}", other.kind()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1017,6 +1193,14 @@ mod tests {
         assert!(sc.max_streams > 0, "the stream map must be bounded");
         assert!(c.ingest.max_tasks > 0, "the ingest task table must be bounded");
         assert!(c.ingest.max_d <= sq::codec::MAX_D, "ingest dimensions respect the codec cap");
+        // Front-end knobs (the frontend itself resolves from
+        // QUIVER_FRONTEND, so its value is environment-dependent here).
+        assert!(c.io_threads >= 1, "the event loop needs at least one I/O thread");
+        assert!(c.budgets.max_conn_requests >= 1);
+        assert!(c.budgets.max_conn_bytes >= 1);
+        assert!(c.budgets.max_global_requests >= c.budgets.max_conn_requests);
+        assert!(c.budgets.max_global_bytes >= c.budgets.max_conn_bytes);
+        assert!(c.budgets.max_outbound_bytes >= 1);
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //!                   [--shards N] [--admission N] [--shed-expired true]
 //!                   [--stream true] [--drift-threshold T] [--drift-reuse T] [--drift-warm T]
 //!                   [--ingest-max-tasks N] [--ingest-max-d D]
+//!                   [--frontend epoll|threads] [--io-threads 2]
+//!                   [--max-conn-inflight N] [--max-conn-bytes B] [--max-outbound-bytes B]
+//!                   [--max-global-inflight N] [--max-global-bytes B]
 //! quiver client     --addr HOST:PORT --d 100000 --s 16 [--tenant-class N] [--deadline-ms MS]
 //!                   [--stream-id ID [--round R | --stream-rounds K]]
 //!                   [--ingest-chunk true [--task-id ID]]
@@ -75,6 +78,19 @@
 //! `serve --ingest-max-tasks N` caps live ingest tasks per connection and
 //! `--ingest-max-d D` caps the task dimension (both bound what
 //! wire-supplied ids can allocate).
+//!
+//! Serving front-end (`quiver::coordinator::eventloop`): `serve
+//! --frontend epoll` multiplexes every client socket onto `--io-threads
+//! N` event-loop threads instead of one thread per connection (same wire
+//! protocol, bit-identical replies; `QUIVER_FRONTEND=epoll` selects it
+//! when the flag is absent). Connection-level backpressure budgets —
+//! `--max-conn-inflight` / `--max-conn-bytes` per connection,
+//! `--max-global-inflight` / `--max-global-bytes` across all connections
+//! — pause reading from over-budget clients instead of queueing
+//! unboundedly, and `--max-outbound-bytes` disconnects clients that stop
+//! draining replies. The periodic stats line (and the `StatsRequest`
+//! wire message) reports p50/p99/p999 latency histograms for queue-wait,
+//! solve, and end-to-end time plus accept/slow-client counters.
 
 use std::time::Duration;
 
@@ -85,9 +101,10 @@ use quiver::coordinator::fault::{FleetConfig, FleetState};
 use quiver::coordinator::router::{Router, RouterConfig};
 use quiver::coordinator::server::{Server, ServerConfig};
 use quiver::coordinator::ingest::IngestConfig;
+use quiver::coordinator::eventloop::BudgetConfig;
 use quiver::coordinator::service::{
-    compress_remote_retry, compress_remote_stream_retry, ingest_remote, Service, ServiceConfig,
-    StreamServiceConfig,
+    compress_remote_retry, compress_remote_stream_retry, ingest_remote, Frontend, Service,
+    ServiceConfig, StreamServiceConfig,
 };
 use quiver::coordinator::shard::{ShardConfig, ShardCoordinator, ShardNode};
 use quiver::coordinator::tasks::{RuntimeGradSource, MODEL_DIM};
@@ -349,9 +366,28 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     } else {
         None
     };
+    // Serving front-end: thread-per-connection (default) or the epoll
+    // event loop (`--frontend epoll`, or the QUIVER_FRONTEND env var when
+    // the flag is absent). Replies are bit-identical either way.
+    let frontend = match cfg.get("frontend") {
+        None => Frontend::from_env(),
+        Some("threads") => Frontend::Threads,
+        Some("epoll") => Frontend::Epoll,
+        Some(other) => bail!("unknown --frontend {other:?} (use epoll|threads)"),
+    };
+    let db = BudgetConfig::default();
     let service = Service::start(ServiceConfig {
         addr: cfg.get_or("addr", "127.0.0.1:7071"),
         threads: cfg.usize_or("threads", 2)?,
+        frontend,
+        io_threads: cfg.usize_or("io_threads", 2)?,
+        budgets: BudgetConfig {
+            max_conn_requests: cfg.u64_or("max_conn_inflight", db.max_conn_requests)?,
+            max_conn_bytes: cfg.u64_or("max_conn_bytes", db.max_conn_bytes)?,
+            max_global_requests: cfg.u64_or("max_global_inflight", db.max_global_requests)?,
+            max_global_bytes: cfg.u64_or("max_global_bytes", db.max_global_bytes)?,
+            max_outbound_bytes: cfg.u64_or("max_outbound_bytes", db.max_outbound_bytes)?,
+        },
         queue_capacity: cfg.usize_or("queue_capacity", 256)?,
         max_batch: cfg.usize_or("max_batch", 8)?,
         max_wait: Duration::from_millis(cfg.u64_or("max_wait_ms", 2)?),

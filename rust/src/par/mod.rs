@@ -27,11 +27,14 @@
 //!    where grouping may vary (histogram shard counts), so the reduction
 //!    tree never depends on scheduling.
 //!
-//! Work assignment under the scoped backend is static: the chunk list is
-//! split into contiguous ranges, one per worker. Under the pool backend,
-//! jobs are pulled dynamically from a shared queue. Both satisfy the
-//! contract because a chunk's *result* never depends on which thread ran
-//! it — only the wall-clock schedule differs.
+//! Work assignment is granular and order-merged: the item list is split
+//! into contiguous parts — size-adaptively oversplit (a few parts per
+//! worker, with a minimum part size) so non-uniform items load-balance —
+//! and per-part results are concatenated in part order. Under the scoped
+//! backend each part is its own thread; under the pool backend parts are
+//! pulled dynamically from a shared queue. Both satisfy the contract
+//! because a chunk's *result* never depends on which thread ran it —
+//! only the wall-clock schedule differs.
 //!
 //! Within a chunk, the hot kernel bodies are vectorized ([`simd`]):
 //! AVX2 on x86-64 CPUs that have it, a scalar fallback otherwise, both
@@ -194,6 +197,40 @@ pub fn set_backend(b: Backend) {
     BACKEND.store(enc, Ordering::Relaxed);
 }
 
+/// Oversplit factor for the item-level helpers ([`map_vec`] and the
+/// chunked wrappers built on it): up to this many parts per worker, so
+/// non-uniform items load-balance across the pool's dynamic queue (or
+/// the OS scheduler, under the scoped backend) instead of riding one
+/// static per-thread slab. Part boundaries affect scheduling only —
+/// results are concatenated in part order, so the factor is invisible
+/// in the output bits (`tests/par_invariance.rs` asserts this).
+const PART_FACTOR: usize = 4;
+
+/// Minimum items per part when oversplitting. One "item" at the chunked
+/// call sites is a fixed-size [`CHUNK`] slice, so this is a minimum part
+/// size in units of elements there; splitting finer buys no balance and
+/// costs per-part dispatch overhead.
+const MIN_PART_ITEMS: usize = 8;
+
+/// Part count for the item-level helpers: size-adaptive oversplit.
+///
+/// `threads()` parts is optimal for uniform items, but `map_vec` loads
+/// are not always uniform (mixed-size tenants, ragged tail chunks). Use
+/// up to [`PART_FACTOR`] parts per worker — bounded below by
+/// [`MIN_PART_ITEMS`] items per part and above by the item count — so a
+/// slow part stalls at most `1/PART_FACTOR` of a worker's share.
+fn fine_width(n: usize) -> usize {
+    let w = threads().min(n).max(1);
+    if w == 1 {
+        return 1;
+    }
+    // The minimum part size only tempers the oversplit — it never drops
+    // the part count below part-per-thread (small inputs keep today's
+    // granularity; they were already at ≤ MIN_PART_ITEMS per part).
+    let max_parts = (n / MIN_PART_ITEMS).max(w);
+    (w * PART_FACTOR).min(max_parts).min(n)
+}
+
 /// Split `0..n` into `w` contiguous ranges whose sizes differ by ≤ 1.
 fn split_ranges(n: usize, w: usize) -> Vec<(usize, usize)> {
     debug_assert!(w >= 1);
@@ -209,19 +246,27 @@ fn split_ranges(n: usize, w: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// Run `g` over contiguous parts of `items` (one part per worker) and
-/// return the per-part results **in part order**. The building block for
-/// the typed helpers below; callers never observe which thread ran what.
+/// Run `g` over `w` contiguous parts of `items` and return the per-part
+/// results **in part order**. The building block for the typed helpers
+/// below; callers never observe which thread ran what.
 ///
 /// Dispatches to the active [`Backend`]: one wave on the persistent
 /// [`pool`], or a scoped spawn per part. Part boundaries (and therefore
 /// results) are identical either way.
-fn map_parts<A: Send, R: Send>(mut items: Vec<A>, g: impl Fn(Vec<A>) -> R + Sync) -> Vec<R> {
+///
+/// [`fold_chunks`] calls with `w = threads()` (its shard count is part
+/// of its API); the item-level helpers call with the size-adaptive
+/// [`fine_width`] so non-uniform items load-balance.
+fn map_parts<A: Send, R: Send>(
+    mut items: Vec<A>,
+    w: usize,
+    g: impl Fn(Vec<A>) -> R + Sync,
+) -> Vec<R> {
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let w = threads().min(n).max(1);
+    let w = w.min(n).max(1);
     if w == 1 {
         return vec![g(items)];
     }
@@ -345,9 +390,15 @@ pub fn dispatch_batch<A: Send, R: Send>(
 
 /// Map `f` over `items`, preserving order. Parallel across contiguous
 /// partitions; equivalent to `items.into_iter().map(f).collect()`.
+///
+/// Partition granularity is size-adaptive ([`fine_width`]): up to
+/// [`PART_FACTOR`] parts per worker with a minimum part size, so
+/// non-uniform items (ragged tail chunks, mixed-size tenants) spread
+/// across workers instead of serializing behind the largest part.
 pub fn map_vec<A: Send, R: Send>(items: Vec<A>, f: impl Fn(A) -> R + Sync) -> Vec<R> {
     let total = items.len();
-    let parts = map_parts(items, |part| part.into_iter().map(&f).collect::<Vec<R>>());
+    let w = fine_width(total);
+    let parts = map_parts(items, w, |part| part.into_iter().map(&f).collect::<Vec<R>>());
     let mut out = Vec::with_capacity(total);
     for p in parts {
         out.extend(p);
@@ -401,7 +452,7 @@ pub fn fold_chunks<T: Sync, Acc: Send>(
     fold: impl Fn(&mut Acc, usize, &[T]) + Sync,
 ) -> Vec<Acc> {
     let items: Vec<(usize, &[T])> = xs.chunks(chunk.max(1)).enumerate().collect();
-    map_parts(items, |part| {
+    map_parts(items, threads(), |part| {
         let mut acc = init();
         for (i, c) in part {
             fold(&mut acc, i, c);
@@ -640,5 +691,51 @@ mod tests {
     #[test]
     fn dispatch_batch_empty() {
         assert!(dispatch_batch(Vec::<u8>::new(), |_, b| b).is_empty());
+    }
+
+    #[test]
+    fn fine_width_bounds() {
+        with_threads(8, || {
+            // Plenty of items: oversplit to PART_FACTOR per worker.
+            assert_eq!(fine_width(1000), 8 * PART_FACTOR);
+            // Minimum part size tempers the oversplit but never drops
+            // below part-per-thread.
+            assert_eq!(fine_width(64), 8);
+            assert_eq!(fine_width(3), 3);
+            assert_eq!(fine_width(1), 1);
+            assert_eq!(fine_width(0), 1);
+            // Between the bounds: 100 items / 8-minimum = 12 parts.
+            assert_eq!(fine_width(100), 12);
+        });
+        with_threads(1, || {
+            assert_eq!(fine_width(1000), 1);
+        });
+    }
+
+    #[test]
+    fn map_vec_nonuniform_items_bit_identical_across_widths() {
+        // Heavily skewed per-item cost (item i sums i³ RNG draws): the
+        // size-adaptive split must stay invisible in the output bits
+        // across thread counts and backends, including vs sequential.
+        use crate::util::rng::Xoshiro256pp;
+        let job = |i: u64| {
+            let mut rng = Xoshiro256pp::stream(0xAB5E, i);
+            let n = (i * i * i) % 10_000 + 1;
+            (0..n).map(|_| rng.next_u64()).fold(0u64, u64::wrapping_add)
+        };
+        let items: Vec<u64> = (0..300).collect();
+        let want: Vec<u64> = items.iter().map(|&i| job(i)).collect();
+        for t in [1usize, 2, 4, 8] {
+            for b in [Backend::Pool, Backend::Scoped] {
+                let got = with_threads(t, || {
+                    let prev = backend();
+                    set_backend(b);
+                    let r = map_vec(items.clone(), job);
+                    set_backend(prev);
+                    r
+                });
+                assert_eq!(got, want, "t={t} backend={b:?}");
+            }
+        }
     }
 }

@@ -1,0 +1,180 @@
+//! Wire-compatibility regression: the epoll front-end speaks the
+//! *identical* framed protocol, so every existing blocking client helper
+//! (`compress_remote_retry`, `compress_remote_stream`, `ingest_remote`,
+//! the `quiver client` CLI built on them) runs unmodified against it —
+//! and gets bit-identical reply payloads vs the threaded front-end.
+//!
+//! Each test stands up one service per front-end with identical seeds
+//! and compares the deterministic reply fields (compressed bytes, solver
+//! label); `solve_us` is wall time and is the only field allowed to
+//! differ. Linux-only like the event loop itself.
+#![cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+
+use quiver::coordinator::fault::FleetConfig;
+use quiver::coordinator::protocol::Msg;
+use quiver::coordinator::router::{Router, RouterConfig};
+use quiver::coordinator::service::{
+    compress_remote_retry, compress_remote_stream, ingest_remote, stats_remote, Frontend, Service,
+    ServiceConfig, StreamServiceConfig,
+};
+use quiver::dist::Dist;
+use quiver::stream::StreamTuning;
+
+fn start(frontend: Frontend) -> Service {
+    Service::start(ServiceConfig {
+        threads: 2,
+        frontend,
+        router: Router::new(RouterConfig { exact_max_d: 2048, hist_m: 128, seed: 7, shards: 1 }),
+        stream: Some(StreamServiceConfig {
+            tuning: StreamTuning::default(),
+            seed: 0x57A3A,
+            max_streams: 8,
+        }),
+        ..Default::default()
+    })
+    .expect("service")
+}
+
+fn sample(d: usize, seed: u64) -> Vec<f32> {
+    Dist::LogNormal { mu: 0.0, sigma: 1.0 }
+        .sample_vec(d, seed)
+        .into_iter()
+        .map(|x| x as f32)
+        .collect()
+}
+
+/// The deterministic part of a compress reply: (compressed, solver).
+fn reply_bits(msg: Msg) -> (quiver::sq::CompressedVec, String) {
+    match msg {
+        Msg::CompressReply { compressed, solver, .. } => (compressed, solver),
+        other => panic!("expected CompressReply, got {}", other.kind()),
+    }
+}
+
+/// One-shot requests through the unmodified blocking retry client: both
+/// router paths (exact ≤ 2048, histogram above) must produce the same
+/// bytes under either front-end.
+#[test]
+fn one_shot_replies_bit_identical_across_frontends() {
+    let threaded = start(Frontend::Threads);
+    let epoll = start(Frontend::Epoll);
+    let net = FleetConfig::default();
+    for (rid, d) in [(1u64, 100usize), (2, 1000), (3, 3000)] {
+        let data = sample(d, 0xC0117 + rid);
+        let ra = compress_remote_retry(threaded.addr(), rid, 16, 1, 0, &data, &net).expect("threads");
+        let rb = compress_remote_retry(epoll.addr(), rid, 16, 1, 0, &data, &net).expect("epoll");
+        let (ca, sa) = reply_bits(ra);
+        let (cb, sb) = reply_bits(rb);
+        assert_eq!(sa, sb, "solver route must not depend on the front-end (d={d})");
+        assert_eq!(ca, cb, "compressed bytes must not depend on the front-end (d={d})");
+    }
+    threaded.shutdown();
+    epoll.shutdown();
+}
+
+/// The deterministic part of a streaming reply: everything except
+/// `solve_us` (the drift measurement is a pure function of the data, so
+/// it must match bit-for-bit too).
+fn stream_reply_bits(msg: Msg) -> (quiver::sq::CompressedVec, String, u8, u64) {
+    match msg {
+        Msg::StreamCompressReply { compressed, solver, decision, drift, .. } => {
+            (compressed, solver, decision, drift.to_bits())
+        }
+        other => panic!("expected StreamCompressReply, got {}", other.kind()),
+    }
+}
+
+/// Incremental streaming sessions (PR 8's client, unmodified): rounds of
+/// one stream id produce byte-identical payloads under either front-end.
+#[test]
+fn streaming_rounds_bit_identical_across_frontends() {
+    let threaded = start(Frontend::Threads);
+    let epoll = start(Frontend::Epoll);
+    for round in 0..3u64 {
+        let data = sample(1500, 0x5EED0 + round);
+        let ra =
+            compress_remote_stream(threaded.addr(), round, 9, round, 16, &data).expect("threads");
+        let rb = compress_remote_stream(epoll.addr(), round, 9, round, 16, &data).expect("epoll");
+        assert_eq!(
+            stream_reply_bits(ra),
+            stream_reply_bits(rb),
+            "stream round {round} diverged across front-ends"
+        );
+    }
+    threaded.shutdown();
+    epoll.shutdown();
+}
+
+/// Chunked ingestion (PR 9's client, unmodified): the multi-frame ingest
+/// state machine rides the event loop's partial-read buffers and still
+/// produces the monolithic path's exact bytes.
+#[test]
+fn chunked_ingest_bit_identical_across_frontends() {
+    let threaded = start(Frontend::Threads);
+    let epoll = start(Frontend::Epoll);
+    // Multi-chunk: past one 64K-coordinate chunk boundary.
+    let data = sample(70_000, 0x1A57);
+    let (ca, sa, _) = ingest_remote(threaded.addr(), 4, 16, 0, 0, &data).expect("threads");
+    let (cb, sb, _) = ingest_remote(epoll.addr(), 4, 16, 0, 0, &data).expect("epoll");
+    assert_eq!(sa, sb);
+    assert_eq!(ca, cb, "ingested bytes diverged across front-ends");
+    threaded.shutdown();
+    epoll.shutdown();
+}
+
+/// Concurrent mixed tenants against the epoll front-end: every reply
+/// matches the one the threaded front-end gives for the same request.
+#[test]
+fn concurrent_mixed_load_bit_identical() {
+    let threaded = start(Frontend::Threads);
+    let epoll = start(Frontend::Epoll);
+    let ta = threaded.addr().to_string();
+    let ea = epoll.addr().to_string();
+    let mut joins = vec![];
+    for t in 0..8u64 {
+        let (ta, ea) = (ta.clone(), ea.clone());
+        joins.push(std::thread::spawn(move || {
+            let net = FleetConfig::default();
+            for r in 0..4u64 {
+                let rid = t * 100 + r;
+                let d = 200 + (rid as usize * 37) % 2600;
+                let class = (t % 3) as u8;
+                let deadline = if t % 2 == 0 { 0 } else { 10_000 };
+                let data = sample(d, 0xABCD ^ rid);
+                let ra = compress_remote_retry(&ta, rid, 16, class, deadline, &data, &net)
+                    .expect("threads");
+                let rb =
+                    compress_remote_retry(&ea, rid, 16, class, deadline, &data, &net).expect("epoll");
+                assert_eq!(reply_bits(ra), reply_bits(rb), "tenant {t} round {r} diverged");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("tenant thread");
+    }
+    threaded.shutdown();
+    epoll.shutdown();
+}
+
+/// The stats wire message works on both front-ends, and the epoll
+/// front-end's connection counters move.
+#[test]
+fn stats_reply_served_on_both_frontends() {
+    let threaded = start(Frontend::Threads);
+    let epoll = start(Frontend::Epoll);
+    let data = sample(600, 5);
+    let net = FleetConfig::default();
+    for (svc, label) in [(&threaded, "threads"), (&epoll, "epoll")] {
+        let _ = compress_remote_retry(svc.addr(), 11, 16, 0, 0, &data, &net).expect(label);
+        let snap = stats_remote(svc.addr(), 99).expect(label);
+        assert!(snap.accepted >= 1, "{label}: accepted moved");
+        assert!(snap.completed >= 1, "{label}: completed moved");
+        assert!(snap.conns_accepted >= 1, "{label}: connection counter moved");
+        // One completed request implies non-zero latency quantiles (the
+        // histogram's smallest reported bucket edge is 2µs).
+        assert!(snap.e2e_p50_us >= 2, "{label}: e2e histogram recorded");
+        assert!(snap.e2e_p999_us >= snap.e2e_p50_us, "{label}: quantiles ordered");
+    }
+    threaded.shutdown();
+    epoll.shutdown();
+}

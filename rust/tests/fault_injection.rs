@@ -1,7 +1,10 @@
 //! Chaos suite: every [`FaultAction`] driven against a live shard fleet
 //! through the deterministic fault proxy (`coordinator::faultnet`), plus
 //! mid-ingest request-direction faults against a live compression service
-//! (drop/truncate/stall during a chunked `coordinator::ingest` upload).
+//! (drop/truncate/stall during a chunked `coordinator::ingest` upload),
+//! plus client-misbehaviour chaos against the epoll serving front-end
+//! (slow-loris, half-open idle connections, over-budget floods — see the
+//! `epoll_chaos` module at the bottom).
 //!
 //! The contract under test (DESIGN.md rule 7): whatever the failure —
 //! refused connect, mid-phase kill, stall, truncated frame, corrupt
@@ -511,4 +514,220 @@ fn ingest_bad_chunk_ids_get_one_busy_and_leave_other_tenants_intact() {
     let got = quiver::sq::CompressedVec { d, q: levels, bits, payload };
     assert_eq!(got, ingest_reference(&data, 3), "post-abuse tenant must match monolithic");
     service.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Epoll front-end chaos: misbehaving *clients* against the event loop.
+// The contract extends rule 7 to the serving front-end — a slow-loris
+// writer, a half-open idle connection, or an over-budget flood is shed or
+// timed out with a typed outcome (disconnect or `Busy`, counted in the
+// stats), and healthy tenants sharing the same I/O threads keep getting
+// replies bit-identical to an undisturbed threaded-front-end control.
+// Linux-only, like the event loop itself.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod epoll_chaos {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    use quiver::coordinator::eventloop::BudgetConfig;
+    use quiver::coordinator::service::{compress_remote, stats_remote, Frontend};
+
+    fn router() -> Router {
+        Router::new(RouterConfig { exact_max_d: 4096, hist_m: INGEST_M, seed: 7, shards: 1 })
+    }
+
+    /// The undisturbed threaded-front-end control every healthy tenant's
+    /// reply is compared against, bit for bit.
+    fn control() -> Service {
+        Service::start(ServiceConfig {
+            threads: 2,
+            frontend: Frontend::Threads,
+            router: router(),
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn epoll_service(io_timeout: Duration, queue_capacity: usize, budgets: BudgetConfig) -> Service {
+        Service::start(ServiceConfig {
+            threads: 2,
+            queue_capacity,
+            frontend: Frontend::Epoll,
+            io_timeout,
+            budgets,
+            router: router(),
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn fvec(d: usize, seed: u64) -> Vec<f32> {
+        Dist::LogNormal { mu: 0.0, sigma: 0.8 }
+            .sample_vec(d, seed)
+            .into_iter()
+            .map(|x| x as f32)
+            .collect()
+    }
+
+    /// The deterministic reply fields (`solve_us` is wall time).
+    fn reply_bits(msg: Msg) -> (quiver::sq::CompressedVec, String) {
+        match msg {
+            Msg::CompressReply { compressed, solver, .. } => (compressed, solver),
+            other => panic!("expected CompressReply, got {}", other.kind()),
+        }
+    }
+
+    /// Wait (bounded) for the server to close `sock`: a clean FIN reads
+    /// as `Ok(0)`, a reset as `ConnectionReset` — either is a typed
+    /// disconnect; anything else (data, hang) fails the test.
+    fn expect_server_close(sock: &mut TcpStream, within: Duration) {
+        sock.set_read_timeout(Some(within)).unwrap();
+        let t0 = Instant::now();
+        let mut buf = [0u8; 16];
+        match sock.read(&mut buf) {
+            Ok(0) => {}
+            Ok(n) => panic!("server sent {n} unexpected bytes instead of closing"),
+            Err(e) => assert!(
+                matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionReset | std::io::ErrorKind::BrokenPipe
+                ),
+                "expected a bounded disconnect, got: {e}"
+            ),
+        }
+        assert!(t0.elapsed() < within, "close must beat the read deadline");
+    }
+
+    #[test]
+    fn slow_loris_is_reaped_and_healthy_tenant_unaffected() {
+        let control = control();
+        let epoll = epoll_service(Duration::from_millis(300), 64, BudgetConfig::default());
+        // The loris announces a 1000-byte frame, delivers 3 bytes, then
+        // goes silent holding the socket open — the classic attack shape
+        // that pins one thread forever under thread-per-connection.
+        let mut loris = TcpStream::connect(epoll.addr()).unwrap();
+        loris.write_all(&1000u32.to_le_bytes()).unwrap();
+        loris.write_all(&[10, 0, 0]).unwrap();
+        // A healthy tenant *during* the stall: served immediately (the
+        // loris pins no thread) and bit-identical to the control.
+        let data = fvec(700, 41);
+        let got = reply_bits(compress_remote(epoll.addr(), 5, S as u32, &data).unwrap());
+        let want = reply_bits(compress_remote(control.addr(), 5, S as u32, &data).unwrap());
+        assert_eq!(got, want, "healthy tenant diverged during a loris stall");
+        // The mid-frame sweep disconnects the loris once the partial
+        // frame outlives the io deadline — bounded, typed, counted.
+        expect_server_close(&mut loris, Duration::from_secs(8));
+        let snap = stats_remote(epoll.addr(), 77).unwrap();
+        assert!(snap.slow_clients >= 1, "the loris must be counted as a slow client");
+        control.shutdown();
+        epoll.shutdown();
+    }
+
+    #[test]
+    fn half_open_idle_conn_is_reaped_within_deadline() {
+        let epoll = epoll_service(Duration::from_millis(300), 64, BudgetConfig::default());
+        // Connect and never send a byte: a half-open peer (pulled cable,
+        // dead NAT entry). Only the idle sweep can reclaim the slot.
+        let mut idle = TcpStream::connect(epoll.addr()).unwrap();
+        expect_server_close(&mut idle, Duration::from_secs(8));
+        // An idle reap is a connection *fault*, not a slow client: the
+        // slow-client counter stays untouched.
+        let snap = stats_remote(epoll.addr(), 78).unwrap();
+        assert_eq!(snap.slow_clients, 0, "idle reap must not be misclassified as slow");
+        epoll.shutdown();
+    }
+
+    #[test]
+    fn over_budget_flood_pauses_reads_without_losing_requests() {
+        let control = control();
+        // A 2-request in-flight budget: the flood crosses it immediately,
+        // the loop parks the connection's EPOLLIN subscription, and
+        // resumes as replies retire tickets — throttled, never dropped.
+        let budgets = BudgetConfig { max_conn_requests: 2, ..Default::default() };
+        let epoll = epoll_service(Duration::from_secs(30), 64, budgets);
+        const N: u64 = 24;
+        let sock = TcpStream::connect(epoll.addr()).unwrap();
+        let mut wr = sock.try_clone().unwrap();
+        let mut rd = std::io::BufReader::new(sock);
+        for rid in 0..N {
+            let req = Msg::CompressRequest {
+                request_id: rid,
+                s: S as u32,
+                class: 0,
+                deadline_ms: 0,
+                data: fvec(400, 0xF100D + rid),
+            };
+            send(&mut wr, &req).unwrap();
+        }
+        let mut got = std::collections::BTreeMap::new();
+        for _ in 0..N {
+            match recv(&mut rd).unwrap() {
+                Some(Msg::CompressReply { request_id, compressed, solver, .. }) => {
+                    got.insert(request_id, (compressed, solver));
+                }
+                other => panic!("flood under budget pause must not shed: {other:?}"),
+            }
+        }
+        // Every request answered exactly once, bit-identical to the
+        // control given the same request id and bytes.
+        for rid in 0..N {
+            let want =
+                reply_bits(compress_remote(control.addr(), rid, S as u32, &fvec(400, 0xF100D + rid)).unwrap());
+            assert_eq!(got[&rid], want, "request {rid} diverged under backpressure");
+        }
+        control.shutdown();
+        epoll.shutdown();
+    }
+
+    #[test]
+    fn queue_full_flood_sheds_typed_busy_and_spares_later_tenants() {
+        let control = control();
+        // A one-slot scheduler queue: a pipelined burst outruns the
+        // solver pool, and the overflow comes back as *typed* `Busy`
+        // (correlated by request id) — never a dropped or reordered reply.
+        let epoll = epoll_service(Duration::from_secs(30), 1, BudgetConfig::default());
+        const N: u64 = 16;
+        let sock = TcpStream::connect(epoll.addr()).unwrap();
+        let mut wr = sock.try_clone().unwrap();
+        let mut rd = std::io::BufReader::new(sock);
+        for rid in 0..N {
+            let req = Msg::CompressRequest {
+                request_id: rid,
+                s: S as u32,
+                class: 0,
+                deadline_ms: 0,
+                data: fvec(3000, 0xB0257 + rid),
+            };
+            send(&mut wr, &req).unwrap();
+        }
+        let (mut solved, mut busy) = (std::collections::BTreeMap::new(), 0u64);
+        for _ in 0..N {
+            match recv(&mut rd).unwrap() {
+                Some(Msg::CompressReply { request_id, compressed, solver, .. }) => {
+                    solved.insert(request_id, (compressed, solver));
+                }
+                Some(Msg::Busy { .. }) => busy += 1,
+                other => panic!("unexpected reply: {other:?}"),
+            }
+        }
+        assert!(busy >= 1, "a one-slot queue under a {N}-deep burst must shed");
+        assert_eq!(solved.len() as u64 + busy, N, "every request answered exactly once");
+        // The requests that did get through are bit-identical to the
+        // control, and a fresh tenant after the flood is too.
+        for (rid, bits) in &solved {
+            let want = reply_bits(
+                compress_remote(control.addr(), *rid, S as u32, &fvec(3000, 0xB0257 + rid)).unwrap(),
+            );
+            assert_eq!(*bits, want, "request {rid} diverged under a shedding flood");
+        }
+        let data = fvec(900, 91);
+        let got = reply_bits(compress_remote(epoll.addr(), 777, S as u32, &data).unwrap());
+        let want = reply_bits(compress_remote(control.addr(), 777, S as u32, &data).unwrap());
+        assert_eq!(got, want, "post-flood tenant diverged");
+        control.shutdown();
+        epoll.shutdown();
+    }
 }

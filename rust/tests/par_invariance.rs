@@ -313,6 +313,56 @@ fn sort_scratch_reuse_bit_identical_across_widths() {
     }
 }
 
+/// The size-adaptive part granularity behind [`par::map_vec`] (up to
+/// `PART_FACTOR` parts per worker, bounded below by a minimum part size)
+/// must be invisible in results: a map over items with wildly
+/// non-uniform per-item cost — the skew the finer parts exist to absorb
+/// — returns outputs in item order, bit-identical to the sequential
+/// reference, at every width × backend × SIMD cell; and the ragged
+/// `map_chunks` wrapper built on it likewise.
+#[test]
+fn non_uniform_map_vec_bit_identical_across_widths() {
+    let _guard = WIDTH_LOCK.lock().unwrap();
+    let _restore = ParGuard::pin();
+    // Per-item cost spans ~4 orders of magnitude (a few stragglers
+    // dominate) — the shape where a coarse part-per-thread split stalls
+    // one worker and tempts dynamic stealing, which would reorder.
+    let works: Vec<(u64, usize)> = (0..203u64)
+        .map(|j| (j, if j % 67 == 0 { 40_000 } else { 5 + (j as usize % 29) }))
+        .collect();
+    let eval = |(seed, iters): (u64, usize)| {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut acc = 0.0f64;
+        for _ in 0..iters {
+            acc += rng.next_f64().sqrt();
+        }
+        acc.to_bits()
+    };
+    let xs = Dist::LogNormal { mu: 0.0, sigma: 1.0 }.sample_vec(D, 0xFEED);
+    par::set_backend(par::Backend::Scoped);
+    par::set_threads(1);
+    par::simd::set_simd(par::simd::SimdMode::Scalar);
+    let reference = par::map_vec(works.clone(), eval);
+    assert_eq!(
+        reference,
+        works.iter().copied().map(eval).collect::<Vec<_>>(),
+        "width 1 must equal the plain sequential map"
+    );
+    let chunk_ref: Vec<u64> = xs.chunks(1000).map(|c| c.iter().sum::<f64>().to_bits()).collect();
+    for_each_exec_cell(&[1, 2, 4, 8], |cell| {
+        assert_eq!(
+            par::map_vec(works.clone(), eval),
+            reference,
+            "non-uniform map_vec diverged at cell [{cell}]"
+        );
+        assert_eq!(
+            par::map_chunks(&xs, 1000, |_, c| c.iter().sum::<f64>().to_bits()),
+            chunk_ref,
+            "ragged map_chunks diverged at cell [{cell}]"
+        );
+    });
+}
+
 /// Decode is the inverse of encode under any width, and dequantize
 /// round-trips through the parallel paths.
 #[test]

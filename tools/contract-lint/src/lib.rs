@@ -223,6 +223,7 @@ pub const C3_THREAD_EXEMPT: &[&str] = &["par/mod.rs", "par/pool.rs"];
 pub const C5_FILES: &[&str] = &[
     "coordinator/protocol.rs",
     "coordinator/codec.rs",
+    "coordinator/eventloop.rs",
     "coordinator/faultnet.rs",
     "coordinator/ingest.rs",
     "coordinator/shard.rs",

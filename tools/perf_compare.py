@@ -1,7 +1,15 @@
 #!/usr/bin/env python3
-"""Compare two directories of BENCH_*.json records and emit a Markdown report.
+"""Compare BENCH_*.json records across runs and emit a Markdown report.
 
 Usage: perf_compare.py BASELINE_DIR CURRENT_DIR [--threshold PCT]
+
+``BASELINE_DIR`` is either a flat directory of BENCH_*.json files (one
+prior run — the original two-way compare) or a directory of *per-run
+subdirectories*, each holding that run's BENCH_*.json files, named so
+lexicographic order is chronological (the CI perf-smoke job downloads up
+to the last six runs as ``run-NN-<run_id>/``). With a history the newest
+run is the regression baseline and an additional trend table tracks each
+benchmark's median across the whole window, oldest to current.
 
 Each BENCH_*.json is a flat array of
 ``{name, d, s, median_ns, mad_ns, elems_per_s}`` records (see
@@ -27,10 +35,58 @@ def load(dirpath: pathlib.Path):
         except (OSError, json.JSONDecodeError) as e:
             print(f"<!-- skipping {f.name}: {e} -->")
             continue
+        if not isinstance(data, list):
+            print(f"<!-- skipping {f.name}: not a record array -->")
+            continue
         for r in data:
+            if not isinstance(r, dict):
+                continue
             key = (f.name, r.get("name"), r.get("d"), r.get("s"))
             records[key] = r
     return records
+
+
+def history_runs(dirpath: pathlib.Path):
+    """Per-run subdirectories of ``dirpath`` holding BENCH_*.json records,
+    oldest to newest (lexicographic subdirectory order). Empty when
+    ``dirpath`` is a plain single-run directory (or missing)."""
+    if not dirpath.is_dir():
+        return []
+    runs = []
+    for sub in sorted(p for p in dirpath.iterdir() if p.is_dir()):
+        recs = load(sub)
+        if recs:
+            runs.append((sub.name, recs))
+    return runs
+
+
+def trend_table(runs, cur, max_rows=40):
+    """Markdown trend of median_ns across the history window + current."""
+    print(f"#### Trend across the last {len(runs)} runs (oldest → newest → current)\n")
+    keys = sorted(cur)
+    print("| file | benchmark | " + " | ".join(n for n, _ in runs) + " | current | Δ window |")
+    print("|---|---|" + "---:|" * (len(runs) + 2))
+    shown = 0
+    for key in keys:
+        if shown >= max_rows:
+            break
+        cells, first_ns = [], None
+        for _, recs in runs:
+            ns = recs.get(key, {}).get("median_ns")
+            cells.append(f"{ns / 1e6:.3f}" if ns else "–")
+            if first_ns is None and ns:
+                first_ns = ns
+        c_ns = cur[key].get("median_ns")
+        if not c_ns:
+            continue
+        delta = f"{(c_ns - first_ns) / first_ns * 100.0:+.1f}%" if first_ns else "new"
+        fname, name, _d, _s = key
+        print(f"| {fname} | {name} | " + " | ".join(cells) + f" | {c_ns / 1e6:.3f} | {delta} |")
+        shown += 1
+    dropped = len(keys) - shown
+    note = f" ({dropped} further records elided)" if dropped > 0 else ""
+    print(f"\nCells are medians in ms; Δ window is current vs the oldest run "
+          f"carrying the record{note}.\n")
 
 
 def main():
@@ -41,7 +97,9 @@ def main():
                     help="percent change considered signal (default 15)")
     args = ap.parse_args()
 
-    base = load(args.baseline)
+    runs = history_runs(args.baseline)
+    # With a history of prior runs, the newest is the regression baseline.
+    base = runs[-1][1] if runs else load(args.baseline)
     cur = load(args.current)
     if not base:
         print("### Perf comparison\n\nNo baseline BENCH_*.json found "
@@ -96,6 +154,8 @@ def main():
     if only_cur:
         names = ", ".join(f"`{n}`" for (_f, n, _d, _s) in only_cur[:20])
         print(f"New benchmarks: {names}\n")
+    if len(runs) >= 2:
+        trend_table(runs, cur)
     return 0
 
 
